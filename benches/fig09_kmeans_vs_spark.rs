@@ -1,0 +1,21 @@
+//! Bench: regenerate the paper's Fig9 (see DESIGN.md §5).
+//! Quick sizes by default; set BLAZE_BENCH_FULL=1 for the EXPERIMENTS.md
+//! sweep. Prints the figure's series and saves JSON to target/figures/.
+
+use blaze_rs::bench_harness::{run_figure, FigureId};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BLAZE_BENCH_FULL").is_err();
+    if quick {
+        println!(
+            "(quick sizes: latency-floor regime — EXPERIMENTS.md tables use \
+             BLAZE_BENCH_FULL=1 sweeps)"
+        );
+    }
+    let report = run_figure(FigureId::Fig9, quick)?;
+    println!("{}", report.to_table());
+    let path = std::path::Path::new("target/figures/fig09_kmeans_vs_spark.json");
+    report.save_json(path)?;
+    println!("(saved {})", path.display());
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Micro-benchmarks of the framework's hot paths (the §Perf targets in
+//! EXPERIMENTS.md): serialization (the "faster serialization" claim vs a
+//! JSON-shaped baseline), the shard router, shuffle partition+exchange,
+//! eager combine, and the collectives layer.
+//!
+//! ```bash
+//! cargo bench --bench micro_hot_paths
+//! ```
+
+use std::collections::HashMap;
+
+use blaze_rs::dist::ShardRouter;
+use blaze_rs::mpi::{run_ranks, Universe};
+use blaze_rs::serial::{from_bytes, to_bytes, Encoder, FastSerialize};
+use blaze_rs::util::bench::{bench, black_box};
+use blaze_rs::util::rng::Rng;
+use blaze_rs::util::Json;
+
+fn shuffle_records(n: usize) -> Vec<(String, u64)> {
+    let mut rng = Rng::new(1);
+    (0..n).map(|_| (format!("w{}", rng.below(10_000)), rng.below(1000))).collect()
+}
+
+fn main() {
+    let records = shuffle_records(10_000);
+    let mut results = Vec::new();
+
+    // --- serialization: FastSerialize vs JSON-shaped baseline ----------
+    results.push(bench("serial/encode 10k records (fast codec)", 3, 30, || {
+        to_bytes(&records)
+    }));
+    let encoded = to_bytes(&records);
+    results.push(bench("serial/decode 10k records (fast codec)", 3, 30, || {
+        from_bytes::<Vec<(String, u64)>>(&encoded).unwrap()
+    }));
+    results.push(bench("serial/encode 10k records (json baseline)", 3, 10, || {
+        Json::arr(
+            records
+                .iter()
+                .map(|(k, v)| Json::arr([Json::str(k.clone()), Json::num(*v as f64)])),
+        )
+        .to_string_compact()
+    }));
+    let json_text = Json::arr(
+        records
+            .iter()
+            .map(|(k, v)| Json::arr([Json::str(k.clone()), Json::num(*v as f64)])),
+    )
+    .to_string_compact();
+    results.push(bench("serial/decode 10k records (json baseline)", 3, 10, || {
+        Json::parse(&json_text).unwrap()
+    }));
+    results.push(bench("serial/varint u64 x1k", 3, 100, || {
+        let mut e = Encoder::with_capacity(10_000);
+        for i in 0..1000u64 {
+            e.put_varint(i.wrapping_mul(2654435761));
+        }
+        e
+    }));
+
+    // --- routing --------------------------------------------------------
+    let router = ShardRouter::new(16, 42);
+    results.push(bench("router/owner 10k string keys", 3, 50, || {
+        records.iter().map(|(k, _)| router.owner(k).0).sum::<usize>()
+    }));
+
+    // --- eager combine (thread-local cache) ------------------------------
+    results.push(bench("eager/combine 10k into cache", 3, 30, || {
+        let mut cache: HashMap<&str, u64> = HashMap::with_capacity(4096);
+        for (k, v) in &records {
+            *cache.entry(k.as_str()).or_insert(0) += v;
+        }
+        cache.len()
+    }));
+
+    // --- shuffle partition + encode (the map-side hot loop) -------------
+    results.push(bench("shuffle/partition+encode 10k -> 8 ranks", 3, 30, || {
+        let mut encoders: Vec<Encoder> = (0..8).map(|_| Encoder::with_capacity(4096)).collect();
+        for (k, v) in &records {
+            let dst = router.owner(k).0 % 8;
+            k.encode(&mut encoders[dst]);
+            v.encode(&mut encoders[dst]);
+        }
+        encoders.iter().map(Encoder::len).sum::<usize>()
+    }));
+
+    // --- collectives (4-rank in-proc universe) ---------------------------
+    results.push(bench("mpi/alltoallv 4 ranks x 64KiB", 1, 10, || {
+        run_ranks(Universe::local(4), |c| {
+            let bufs: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; 64 << 10]).collect();
+            c.alltoallv(bufs).unwrap().len()
+        })
+    }));
+    results.push(bench("mpi/allreduce_sum 4 ranks x100", 1, 10, || {
+        run_ranks(Universe::local(4), |c| {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc += c.allreduce_sum_u64(i).unwrap();
+            }
+            acc
+        })
+    }));
+
+    // --- end-to-end tiny job (engine overhead floor) ---------------------
+    let corpus = blaze_rs::apps::wordcount::generate_corpus(1_000, 8, 200, 3);
+    let cluster = blaze_rs::cluster::ClusterConfig::builder().ranks(4).build();
+    results.push(bench("engine/wordcount 1k lines eager (host wall)", 1, 10, || {
+        blaze_rs::apps::wordcount::run(&cluster, &corpus, blaze_rs::core::ReductionMode::Eager)
+            .unwrap()
+            .result
+            .len()
+    }));
+
+    println!("\n== micro_hot_paths ==");
+    for r in &results {
+        println!("{}", r.line());
+    }
+
+    // Headline ratio for the paper's "faster serialization" claim.
+    let fast = results[0].mean_ns + results[1].mean_ns;
+    let json = results[2].mean_ns + results[3].mean_ns;
+    println!("\nfast-codec vs json roundtrip ratio: {:.1}x faster", json / fast);
+    black_box(results);
+}

@@ -1,0 +1,85 @@
+//! The paper's §III.D contribution, demonstrated directly: Delayed
+//! Reduction restores `(K, Iterable<V>)` semantics that Eager Reduction
+//! cannot express, with laziness ("can be called immediately or later").
+//!
+//! ```bash
+//! cargo run --release --example delayed_reduction
+//! ```
+
+use blaze_rs::cluster::ClusterConfig;
+use blaze_rs::core::scheduler::TaskFeed;
+use blaze_rs::core::{delayed, MapReduceJob, Scheduling};
+use blaze_rs::dist::{DistHashMap, DistVector};
+use blaze_rs::metrics::PeakTracker;
+use blaze_rs::mpi::{run_ranks, Universe};
+
+fn main() -> anyhow::Result<()> {
+    let cluster = ClusterConfig::builder().ranks(4).seed(3).build();
+
+    // ---- 1. A reduction eager mode CANNOT express: the median. --------
+    // Median needs the full value multiset per key; an eager (V, V) -> V
+    // combine destroys it. Delayed reduction's final reducer sees the
+    // iterable.
+    let readings: Vec<(String, u32)> = (0..1000)
+        .map(|i| (format!("sensor{}", i % 5), ((i * 37) % 100) as u32))
+        .collect();
+    let out = MapReduceJob::new(&cluster, &readings).run_delayed(
+        |(k, v): &(String, u32), emit: &mut dyn FnMut(String, u32)| emit(k.clone(), *v),
+        |_k, mut vs: Vec<u32>| {
+            vs.sort_unstable();
+            vs[vs.len() / 2] // median — needs the whole iterable
+        },
+    )?;
+    let mut medians: Vec<_> = out.result.iter().collect();
+    medians.sort();
+    println!("per-sensor medians (iterable reduce — impossible eagerly):");
+    for (sensor, median) in medians {
+        println!("  {sensor}: {median}");
+    }
+
+    // ---- 2. Laziness: group now, reduce later. -------------------------
+    // delayed_rank_groups returns the paper's (K, Iterable<V>) container;
+    // the final reducer can run at any later point ("Laziness of
+    // Reduction is displayed" — §III.D step 5).
+    let items: Vec<u32> = (0..64).collect();
+    let feed = TaskFeed::new(&items, 2, 2, Scheduling::Static, None);
+    let inspected = run_ranks(Universe::local(2), |comm| {
+        let tracker = PeakTracker::new();
+        let groups = delayed::delayed_rank_groups(
+            comm,
+            &feed,
+            &|&i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 4, i),
+            0,
+            &tracker,
+        )
+        .unwrap();
+        // "later": inspect the iterable first...
+        let sizes: Vec<usize> = groups.iter_groups().map(|(_, vs)| vs.len()).collect();
+        // ...then reduce.
+        let reduced = groups.reduce_now(|_, vs| vs.into_iter().sum::<u32>());
+        (sizes, reduced.len())
+    });
+    println!("\nlazy groups per rank (sizes, then reduced): {inspected:?}");
+
+    // ---- 3. The DistVector/DistHashMap containers under the hood. -----
+    let summary = run_ranks(Universe::local(4), |comm| {
+        // Every rank pushes its own data into the distributed vector...
+        let mut dv: DistVector<u64> = DistVector::new(comm);
+        dv.extend((0..comm.rank().0 as u64 + 1).map(|x| x * 10));
+        let before = dv.len_local();
+        dv.rebalance().unwrap(); // ...and the cluster levels it.
+        let after = dv.len_local();
+
+        // DistHashMap: stage anywhere, flush routes to owners.
+        let mut dm: DistHashMap<String, u64> = DistHashMap::new(comm, 0);
+        dm.stage("shared-key".into(), 1);
+        dm.flush(|acc, v| *acc += v).unwrap();
+        let owned = dm.get_local(&"shared-key".to_string()).copied();
+        (before, after, owned)
+    });
+    println!("\nDistVector rebalance (local len before→after) + DistHashMap owner:");
+    for (rank, (b, a, owned)) in summary.iter().enumerate() {
+        println!("  rank{rank}: {b} → {a} | shared-key = {owned:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! End-to-end driver: proves all layers compose on a real small workload.
+//!
+//! Pipeline: L3 Rust coordinator (ranks, collectives, engines) →
+//! PJRT runtime → AOT JAX/Pallas kernels (L2/L1, built by `make
+//! artifacts`), plus the Spark-sim baseline for the paper's headline
+//! comparison. Run:
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! Output is the EXPERIMENTS.md "end-to-end validation" record: per
+//! workload, the framework (native + kernel paths) vs Spark-sim, with
+//! the paper's headline metrics (speedup, memory ratio, scaling).
+
+use blaze_rs::apps::{kmeans, pi, wordcount};
+use blaze_rs::baseline::SparkContext;
+use blaze_rs::cluster::{ClusterConfig, DeploymentKind};
+use blaze_rs::core::ReductionMode;
+use blaze_rs::runtime::ComputeService;
+
+fn main() -> anyhow::Result<()> {
+    let cluster = ClusterConfig::builder()
+        .deployment(DeploymentKind::Vm) // the paper's §IV.B testbed
+        .nodes(4)
+        .slots_per_node(1)
+        .seed(1332)
+        .build();
+    println!("== end-to-end: 4-node simulated VM cluster (paper §IV.B) ==\n");
+
+    let service = match ComputeService::start_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("NOTE: PJRT kernels unavailable ({e:#}); native paths only.\n");
+            None
+        }
+    };
+    let handle = service.as_ref().map(|s| s.handle());
+
+    // ---------- WordCount (Fig 10/11) ----------
+    let corpus = wordcount::generate_corpus(20_000, 8, 1_000, 7);
+    let bl = wordcount::run(&cluster, &corpus, ReductionMode::Eager)?;
+    let (spark_counts, spark) = SparkContext::new(&cluster).wordcount(&corpus);
+    assert_eq!(bl.result, spark_counts, "frameworks disagree!");
+    println!("[wordcount] 20k lines, vocab 1000");
+    println!("  blaze-rs eager : {:>10.1} ms | peak {:>10} B", bl.stats.modeled_ms, bl.stats.peak_mem_bytes);
+    if let Some(h) = &handle {
+        let kr = wordcount::run_segsum_kernel(&cluster, &corpus, h)?;
+        assert_eq!(kr.result, bl.result);
+        println!("  blaze-rs kernel: {:>10.1} ms | segsum Pallas reduce ✓ (same counts)", kr.stats.modeled_ms);
+    }
+    println!("  spark-sim      : {:>10.1} ms | peak {:>10} B", spark.modeled_ms, spark.peak_mem_bytes);
+    println!(
+        "  -> speedup {:.1}x, memory ratio {:.1}x\n",
+        spark.modeled_ms / bl.stats.modeled_ms,
+        spark.peak_mem_bytes as f64 / bl.stats.peak_mem_bytes.max(1) as f64
+    );
+
+    // ---------- K-means (Fig 8/9) ----------
+    let points = kmeans::generate_points(50_000, 8, kmeans::KERNEL_K, 7);
+    let native = kmeans::run(&cluster, &points, kmeans::KERNEL_K, 10, kmeans::ComputePath::Native, None)?;
+    println!("[kmeans] 50k points, d=8, k=16, 10 iters");
+    println!(
+        "  blaze-rs native: {:>10.1} ms | inertia {:.2}",
+        native.stats.modeled_ms, native.inertia
+    );
+    if let Some(h) = &handle {
+        let kernel = kmeans::run(
+            &cluster,
+            &points,
+            kmeans::KERNEL_K,
+            10,
+            kmeans::ComputePath::Kernel,
+            Some(h),
+        )?;
+        println!(
+            "  blaze-rs kernel: {:>10.1} ms | inertia {:.2} (Δ {:.2e}) — Pallas kmeans_step ✓",
+            kernel.stats.modeled_ms,
+            kernel.inertia,
+            (kernel.inertia - native.inertia).abs()
+        );
+    }
+    let (_, spark_km) = SparkContext::new(&cluster).kmeans(&points, kmeans::KERNEL_K, 10);
+    println!("  spark-sim      : {:>10.1} ms | peak {:>10} B", spark_km.modeled_ms, spark_km.peak_mem_bytes);
+    println!(
+        "  -> speedup {:.1}x, memory ratio {:.1}x\n",
+        spark_km.modeled_ms / native.stats.modeled_ms,
+        spark_km.peak_mem_bytes as f64 / native.stats.peak_mem_bytes.max(1) as f64
+    );
+
+    // ---------- Pi (Fig 12) ----------
+    let chunks = pi::make_chunks(2_000_000, 32, 7);
+    let bp = pi::run_eager_batched(&cluster, &chunks)?;
+    println!("[pi] 2M samples");
+    println!("  blaze-rs eager : {:>10.1} ms | pi ≈ {:.6}", bp.stats.modeled_ms, bp.result);
+    if let Some(h) = &handle {
+        let kp = pi::run_kernel(&cluster, &chunks, h)?;
+        println!("  blaze-rs kernel: {:>10.1} ms | pi ≈ {:.6} — Pallas pi_count ✓", kp.stats.modeled_ms, kp.result);
+    }
+    let (sp_pi, sp) = SparkContext::new(&cluster).pi(&chunks);
+    println!("  spark-sim      : {:>10.1} ms | pi ≈ {sp_pi:.6}", sp.modeled_ms);
+    println!("  -> speedup {:.1}x\n", sp.modeled_ms / bp.stats.modeled_ms);
+
+    // ---------- scaling headline (Fig 9 shape) ----------
+    println!("[scaling] kmeans modeled_ms vs nodes:");
+    for nodes in [1usize, 2, 4, 8] {
+        let c = ClusterConfig::builder()
+            .deployment(DeploymentKind::Vm)
+            .nodes(nodes)
+            .slots_per_node(1)
+            .seed(1332)
+            .build();
+        let r = kmeans::run(&c, &points, kmeans::KERNEL_K, 5, kmeans::ComputePath::Native, None)?;
+        println!("  {nodes} node(s): {:>9.1} ms", r.stats.modeled_ms);
+    }
+    println!("\nend_to_end OK — all layers composed (L3 rust ⇄ PJRT ⇄ Pallas kernels)");
+    Ok(())
+}

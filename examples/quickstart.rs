@@ -1,0 +1,58 @@
+//! Quickstart: wordcount in ~20 lines on the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use blaze_rs::apps::wordcount;
+use blaze_rs::cluster::{ClusterConfig, DeploymentKind};
+use blaze_rs::core::{MapReduceJob, ReductionMode};
+
+fn main() -> anyhow::Result<()> {
+    // A 4-rank simulated container cluster (paper §III.C architecture).
+    let cluster = ClusterConfig::builder()
+        .deployment(DeploymentKind::Container)
+        .nodes(4)
+        .slots_per_node(1)
+        .seed(42)
+        .build();
+
+    // Any Vec of items works as input; here, lines of text.
+    let lines: Vec<String> = [
+        "the quick brown fox jumps over the lazy dog",
+        "the dog barks and the fox runs",
+        "mapreduce counts the words the fast way",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+
+    // Eager reduction (Blaze Fig 2): combine at emit time, shuffle one
+    // value per distinct key.
+    let job = MapReduceJob::new(&cluster, &lines).with_mode(ReductionMode::Eager);
+    let out = job.run_monoid(
+        |line: &String, emit: &mut dyn FnMut(String, u64)| {
+            for word in line.split_whitespace() {
+                emit(word.to_string(), 1);
+            }
+        },
+        |a: u64, b: u64| a + b,
+    )?;
+
+    let mut counts: Vec<(&String, &u64)> = out.result.iter().collect();
+    counts.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+    println!("top words:");
+    for (word, count) in counts.iter().take(5) {
+        println!("  {count:>3}  {word}");
+    }
+    println!(
+        "\nstats: modeled {:.2} ms | {} msgs, {} shuffle bytes | peak mem {} B",
+        out.stats.modeled_ms, out.stats.messages, out.stats.shuffle_bytes, out.stats.peak_mem_bytes
+    );
+
+    // Same job, helper wrapper:
+    let again = wordcount::run(&cluster, &lines, ReductionMode::Delayed)?;
+    assert_eq!(again.result, out.result);
+    println!("delayed reduction agrees ✓");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""blaze-rs build-time compile package (L1 Pallas kernels + L2 JAX graphs)."""

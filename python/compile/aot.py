@@ -1,0 +1,129 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* + a manifest.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the Rust
+coordinator loads the text with ``HloModuleProto::from_text_file`` and
+compiles it on the PJRT CPU client. Python never runs on the request path.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Every artifact is described in ``artifacts/manifest.json`` (shapes, dtypes,
+tuple arity) so the Rust side can type-check its Literals at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Canonical AOT shapes. PJRT executables are monomorphic; the Rust
+# coordinator tiles every shard into these shapes (padding the tail —
+# padding contracts live in model.py docstrings).
+KMEANS_N = 4096
+KMEANS_K = 16
+KMEANS_DIMS = (2, 8, 32)  # Fig 8 sweeps dimensionality
+WORDCOUNT_N = 8192
+WORDCOUNT_KEYS = 1024
+PI_N = 8192
+LINREG_N = 4096
+LINREG_D = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": jnp.dtype(s.dtype).name}
+
+
+def build_artifacts():
+    """Yield (name, jitted_fn, example_args) for every artifact."""
+    f32, i32 = jnp.float32, jnp.int32
+
+    for d in KMEANS_DIMS:
+        yield (
+            f"kmeans_step_d{d}",
+            jax.jit(model.kmeans_shard_step),
+            (_spec((KMEANS_N, d), f32), _spec((KMEANS_K, d), f32)),
+        )
+    yield (
+        "wordcount_segsum",
+        jax.jit(functools.partial(model.wordcount_shard_reduce, num_keys=WORDCOUNT_KEYS)),
+        (_spec((WORDCOUNT_N,), i32), _spec((WORDCOUNT_N,), f32)),
+    )
+    yield (
+        "pi_count",
+        jax.jit(model.pi_shard_count),
+        (_spec((PI_N, 2), f32),),
+    )
+    yield (
+        f"linreg_d{LINREG_D}",
+        jax.jit(model.linreg_shard_step),
+        (
+            _spec((LINREG_N, LINREG_D), f32),
+            _spec((LINREG_N,), f32),
+            _spec((LINREG_D,), f32),
+        ),
+    )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/model.hlo.txt",
+                        help="path of the sentinel artifact (its directory "
+                        "receives all artifacts + manifest.json)")
+    args = parser.parse_args()
+
+    sentinel = pathlib.Path(args.out)
+    outdir = sentinel.parent
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, specs in build_artifacts():
+        lowered = fn.lower(*specs)
+        text = to_hlo_text(lowered)
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_shapes = jax.eval_shape(fn, *specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": path.name,
+                "inputs": [_shape_entry(s) for s in specs],
+                "outputs": [_shape_entry(s) for s in out_shapes],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Makefile sentinel: the "main model" (kmeans d=8) under the fixed name.
+    shutil.copyfile(outdir / "kmeans_step_d8.hlo.txt", sentinel)
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {outdir / 'manifest.json'} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pallas kernels (L1) + pure-jnp oracles for the blaze-rs compute path."""
+
+from . import kmeans, pi, ref, segsum  # noqa: F401

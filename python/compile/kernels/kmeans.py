@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: one K-means map+combine step (the Fig 8/9 hot spot).
+
+The paper's C++ mapper walks points one at a time, computes K distances,
+and eagerly reduces (point-sum, count) into a thread-local cache keyed by
+centroid id. That is exactly an *eager reduction* (Blaze §Fig 2) fused into
+the map loop. On a matrix unit the same insight becomes:
+
+  * distance evaluation is a dense contraction —
+    ``argmin_k ||x - c_k||^2 == argmin_k (||c_k||^2 - 2 x·c_k)``
+    (the ``||x||^2`` term is row-constant), so one (BN,D)x(D,K) matmul per
+    tile feeds the argmin;
+  * the eager combine is a second contraction —
+    ``sums += onehot(assign)^T @ x``, ``counts += colsum(onehot)`` —
+    accumulated across grid steps into a revisited output block.
+
+BlockSpec tiles N into BN-row blocks that fit VMEM alongside the full
+centroid table (K and D are small in the paper's workloads: K<=64, D<=32);
+the HBM<->VMEM schedule the C++ code expressed with OpenMP threads is the
+Pallas grid here. ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+run Mosaic custom-calls; on a real TPU the same BlockSpecs lower to MXU
+matmuls (see DESIGN.md §Hardware-Adaptation for the VMEM/MXU estimate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _kmeans_kernel(x_ref, c_ref, sums_ref, counts_ref, assign_ref):
+    """One grid step: assign a BN-row tile and fold it into sums/counts."""
+    x = x_ref[...]  # (BN, D)
+    c = c_ref[...]  # (K, D)
+    k = c.shape[0]
+
+    # argmin_k ||x - c_k||^2 without the row-constant ||x||^2 term.
+    dots = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # (BN, K)
+    c_sq = jnp.sum(c * c, axis=1)  # (K,)
+    scores = c_sq[None, :] - 2.0 * dots  # (BN, K)
+    assign = jnp.argmin(scores, axis=1).astype(jnp.int32)  # (BN,)
+    assign_ref[...] = assign
+
+    # Eager combine: accumulate partial sums/counts across grid steps.
+    # The output blocks are revisited every step (index_map -> 0), so we
+    # zero them on the first step and += afterwards.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    ks = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    onehot = (assign[:, None] == ks).astype(jnp.float32)  # (BN, K)
+    sums_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def kmeans_step(points: jnp.ndarray, centroids: jnp.ndarray, *, block_n: int = DEFAULT_BLOCK_N):
+    """Fused assign+combine. Returns (sums (K,D) f32, counts (K,) f32, assign (N,) i32).
+
+    N must be a multiple of ``block_n``; the Rust coordinator pads the last
+    shard with +inf-distance sentinel points it then subtracts (see
+    rust/src/apps/kmeans.rs).
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kmeans_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),  # points: tile rows
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # centroids: whole table
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # sums: revisited
+            pl.BlockSpec((k,), lambda i: (0,)),  # counts: revisited
+            pl.BlockSpec((block_n,), lambda i: (i,)),  # assign: tiled
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(points, centroids)
+
+
+def vmem_footprint_bytes(block_n: int, d: int, k: int) -> int:
+    """Estimated VMEM bytes resident per grid step (f32 everywhere).
+
+    x tile + centroid table + dots/scores/onehot temporaries + outputs.
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to size block_n against the
+    ~16 MiB/core VMEM budget.
+    """
+    f32 = 4
+    x = block_n * d * f32
+    c = k * d * f32
+    tmp = 3 * block_n * k * f32  # dots, scores, onehot
+    outs = k * d * f32 + k * f32 + block_n * 4
+    return x + c + tmp + outs

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: Monte-Carlo in-circle counter (Fig 12's Pi job).
+
+The paper's mapper emits (key, 1) when a random (x, y) lands inside the
+unit quarter-circle and (key, 0) otherwise; the reducer sums. Counting
+inside the kernel *is* the eager-reduction form of that job — the map and
+the combine fuse into one pass, and only a single scalar per shard crosses
+the network (the Rust coordinator allreduces shard counts).
+
+Tiled reduction: each grid step folds a (BN, 2) tile of coordinates into a
+revisited (1,) accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 1024
+
+
+def _pi_kernel(xy_ref, out_ref):
+    xy = xy_ref[...]  # (BN, 2)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    inside = (xy[:, 0] * xy[:, 0] + xy[:, 1] * xy[:, 1]) <= 1.0
+    out_ref[...] += jnp.sum(inside.astype(jnp.float32))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pi_count(xy: jnp.ndarray, *, block_n: int = DEFAULT_BLOCK_N):
+    """Count of rows of ``xy`` (N, 2) f32 inside the unit quarter-circle, (1,) f32."""
+    n = xy.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _pi_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, 2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(xy)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contracts: every Pallas kernel in this package
+must match its oracle here to float tolerance (see python/tests/). The
+oracles are deliberately written in the most obvious form — no tiling, no
+matmul tricks — so they are easy to audit against the paper's algorithms:
+
+* ``kmeans_assign`` — step 1 of the iterative MapReduce K-means of
+  Zhao/Ma/He (CloudCom'09), the algorithm the paper benchmarks in Fig 8/9.
+* ``kmeans_step`` — assignment + per-centroid partial sums/counts: the
+  map+combine body of one K-means iteration (the reduce across shards
+  happens in the Rust coordinator via allreduce).
+* ``segment_sum`` — the WordCount reduce on integer-coded keys (Fig 10/11):
+  histogram of ``values`` bucketed by ``keys``.
+* ``pi_count`` — the Monte-Carlo in-circle counter of Fig 12's Pi job.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances, shape (N, K). Naive broadcast form."""
+    diff = points[:, None, :] - centroids[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-centroid index per point, shape (N,), int32."""
+    return jnp.argmin(pairwise_sq_dists(points, centroids), axis=1).astype(jnp.int32)
+
+
+def kmeans_step(points: jnp.ndarray, centroids: jnp.ndarray):
+    """One K-means map+combine: (sums (K,D), counts (K,), assign (N,)).
+
+    ``sums[k]`` is the sum of points assigned to centroid k, ``counts[k]``
+    the number of such points. The caller (Rust L3) allreduces sums/counts
+    across shards and divides to get the new centroids.
+    """
+    assign = kmeans_assign(points, centroids)
+    k = centroids.shape[0]
+    onehot = jnp.equal(assign[:, None], jnp.arange(k)[None, :]).astype(points.dtype)
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts, assign
+
+
+def segment_sum(keys: jnp.ndarray, values: jnp.ndarray, num_keys: int) -> jnp.ndarray:
+    """Histogram reduce: out[k] = sum(values[i] for keys[i] == k), f32 (num_keys,)."""
+    onehot = jnp.equal(keys[:, None], jnp.arange(num_keys)[None, :]).astype(values.dtype)
+    return onehot.T @ values
+
+
+def pi_count(xy: jnp.ndarray) -> jnp.ndarray:
+    """Count of rows of ``xy`` (N, 2) inside the unit quarter-circle.
+
+    Returns shape (1,) f32 so it composes with the allreduce path (the
+    paper's reducer sums (key, 1)/(key, 0) emissions; counting inside the
+    kernel is the eager-reduction form of the same job).
+    """
+    inside = (xy[:, 0] * xy[:, 0] + xy[:, 1] * xy[:, 1]) <= 1.0
+    return jnp.sum(inside.astype(jnp.float32))[None]

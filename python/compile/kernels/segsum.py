@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: segment-sum histogram — the WordCount reduce (Fig 10/11).
+
+WordCount's reduce phase, once keys are integer-coded by the Rust shuffle
+(each reducer rank owns a contiguous key range), is a histogram:
+``out[k] = sum(values[i] for keys[i] == k)``. The paper's C++ reducer walks
+a hash map; the TPU-shaped equivalent is a one-hot contraction
+``out += onehot(keys)^T @ values`` accumulated tile by tile, which is a
+(K,BN)x(BN,) matvec on the MXU per grid step.
+
+The kernel is the *delayed reduction* final stage at L1: it consumes a
+(key, value)-sorted run the coordinator produced and reduces an entire
+iterable per key in one pass — contrast with kmeans.py, which is the eager
+form. Both are exercised by python/tests/ against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 1024
+
+
+def _segsum_kernel(keys_ref, vals_ref, out_ref):
+    keys = keys_ref[...]  # (BN,) int32
+    vals = vals_ref[...]  # (BN,) f32
+    k = out_ref.shape[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ks = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], k), 1)
+    onehot = (keys[:, None] == ks).astype(jnp.float32)  # (BN, K)
+    out_ref[...] += jnp.dot(vals, onehot, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "block_n"))
+def segment_sum(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    num_keys: int,
+    block_n: int = DEFAULT_BLOCK_N,
+):
+    """Histogram of ``values`` bucketed by ``keys`` in [0, num_keys).
+
+    Out-of-range keys (the coordinator's padding sentinel is -1) match no
+    one-hot column and are dropped — exactly the padding semantics the
+    Rust shuffle relies on.
+    """
+    (n,) = keys.shape
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_keys,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_keys,), jnp.float32),
+        interpret=True,
+    )(keys, values)

@@ -1,0 +1,67 @@
+"""L2: JAX compute graphs the Rust coordinator executes per shard.
+
+Each function here is the *per-shard* body of one of the paper's workloads;
+the cross-shard reduce (MPI allreduce in the paper, ``mpi::collectives`` in
+our Rust L3) happens outside. All graphs call the L1 Pallas kernels so the
+kernel lowers into the same HLO module the coordinator loads.
+
+Shapes are fixed at AOT time (PJRT executables are monomorphic); the
+coordinator pads the last tile of a shard and strips the padding's
+contribution (see each docstring for the padding contract).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import kmeans as kmeans_kernel
+from .kernels import pi as pi_kernel
+from .kernels import segsum as segsum_kernel
+
+
+def kmeans_shard_step(points: jnp.ndarray, centroids: jnp.ndarray):
+    """One K-means iteration over one shard: (sums, counts, assign).
+
+    Padding contract: pad points with copies of ``centroids[K-1]``-distant
+    sentinels is unnecessary — the coordinator instead pads with the *first
+    real point* of the shard and decrements ``sums``/``counts`` for the
+    pad rows using the returned ``assign`` tail. Everything stays exact
+    because the combine is a plain sum.
+    """
+    return kmeans_kernel.kmeans_step(points, centroids)
+
+
+def wordcount_shard_reduce(keys: jnp.ndarray, values: jnp.ndarray, *, num_keys: int):
+    """Delayed-reduction final stage for one reducer rank's key range.
+
+    Padding contract: pad ``keys`` with -1 (matches no bucket), ``values``
+    with anything.
+    """
+    return segsum_kernel.segment_sum(keys, values, num_keys=num_keys)
+
+
+def pi_shard_count(xy: jnp.ndarray):
+    """In-circle count for one shard of Monte-Carlo samples.
+
+    Padding contract: pad with (2.0, 2.0) — outside the circle, counts 0.
+    """
+    return pi_kernel.pi_count(xy)
+
+
+def linreg_shard_step(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray):
+    """Linear-regression gradient map+combine over one shard (§V.D workload).
+
+    The paper cites linear regression as a job eager reduction could not
+    express in Blaze (motivating Delayed Reduction); as a *kernel* it is a
+    plain fused gradient: grad = X^T (Xw - y) / N_shard, plus the shard's
+    squared-error sum. Returns (grad (D,), sse (1,)).
+
+    Padding contract: pad rows of ``x`` and entries of ``y`` with zeros —
+    zero rows contribute zero gradient and zero error (caller fixes the 1/N
+    normalization using true counts).
+    """
+    n = x.shape[0]
+    resid = x @ w - y  # (N,)
+    grad = (x.T @ resid) / float(n)  # (D,)
+    sse = jnp.sum(resid * resid)[None]  # (1,)
+    return grad, sse

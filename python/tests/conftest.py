@@ -1,0 +1,7 @@
+"""Shared fixtures: make `compile.*` importable when pytest runs from
+python/ (the Makefile does `cd python && pytest tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

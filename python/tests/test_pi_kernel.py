@@ -1,0 +1,54 @@
+"""L1 correctness: pi_count (Monte-Carlo in-circle counter) vs the oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import pi, ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+@hypothesis.given(
+    n_blocks=st.integers(1, 6),
+    block_n=st.sampled_from([128, 512, 1024]),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_ref_swept(n_blocks, block_n, seed):
+    rng = np.random.default_rng(seed)
+    xy = jnp.asarray(rng.random(size=(n_blocks * block_n, 2)).astype(np.float32))
+    got = pi.pi_count(xy, block_n=block_n)
+    want = ref.pi_count(xy)
+    np.testing.assert_allclose(np.array(got), np.array(want))
+
+
+def test_boundary_points_count_inside():
+    xy = jnp.asarray(np.array([[1.0, 0.0], [0.0, 1.0], [2.0, 2.0], [0.0, 0.0]] * 32, dtype=np.float32))
+    got = pi.pi_count(xy, block_n=128)
+    assert float(got[0]) == 3 * 32  # (1,0), (0,1), (0,0) inside; (2,2) out
+
+
+def test_padding_convention():
+    # The Rust coordinator pads with (2,2): must contribute zero.
+    xy = np.full((1024, 2), 2.0, dtype=np.float32)
+    got = pi.pi_count(jnp.asarray(xy), block_n=1024)
+    assert float(got[0]) == 0.0
+
+
+def test_estimate_converges():
+    rng = np.random.default_rng(7)
+    xy = jnp.asarray(rng.random(size=(64 * 1024, 2)).astype(np.float32))
+    inside = float(pi.pi_count(xy, block_n=1024)[0])
+    est = 4.0 * inside / xy.shape[0]
+    assert abs(est - np.pi) < 0.03
+
+
+def test_rejects_bad_block():
+    xy = jnp.zeros((100, 2), dtype=jnp.float32)
+    with pytest.raises(ValueError, match="multiple"):
+        pi.pi_count(xy, block_n=64)

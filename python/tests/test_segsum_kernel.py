@@ -1,0 +1,65 @@
+"""L1 correctness: segment_sum (WordCount reduce) vs the jnp oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, segsum
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def run_both(keys, vals, num_keys, block_n):
+    got = segsum.segment_sum(keys, vals, num_keys=num_keys, block_n=block_n)
+    want = ref.segment_sum(keys, vals, num_keys)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-4)
+    return got
+
+
+@hypothesis.given(
+    n_blocks=st.integers(1, 4),
+    block_n=st.sampled_from([64, 256, 1024]),
+    num_keys=st.sampled_from([4, 64, 1024]),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_ref_swept(n_blocks, block_n, num_keys, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_n
+    keys = jnp.asarray(rng.integers(0, num_keys, size=n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    run_both(keys, vals, num_keys, block_n)
+
+
+def test_aot_shape():
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.integers(0, 1024, size=8192).astype(np.int32))
+    vals = jnp.asarray(np.ones(8192, dtype=np.float32))
+    got = run_both(keys, vals, 1024, 1024)
+    assert float(jnp.sum(got)) == 8192.0
+
+
+def test_padding_sentinel_dropped():
+    # -1 keys (the Rust coordinator's padding) contribute nothing.
+    keys = jnp.asarray(np.array([0, 1, -1, -1] * 16, dtype=np.int32))
+    vals = jnp.asarray(np.ones(64, dtype=np.float32))
+    got = segsum.segment_sum(keys, vals, num_keys=4, block_n=64)
+    np.testing.assert_allclose(np.array(got), [16.0, 16.0, 0.0, 0.0])
+
+
+def test_out_of_range_high_keys_dropped():
+    keys = jnp.asarray(np.array([0, 99] * 32, dtype=np.int32))
+    vals = jnp.asarray(np.ones(64, dtype=np.float32))
+    got = segsum.segment_sum(keys, vals, num_keys=4, block_n=64)
+    np.testing.assert_allclose(np.array(got), [32.0, 0.0, 0.0, 0.0])
+
+
+def test_rejects_bad_block():
+    keys = jnp.zeros(100, dtype=jnp.int32)
+    vals = jnp.zeros(100, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="multiple"):
+        segsum.segment_sum(keys, vals, num_keys=4, block_n=64)

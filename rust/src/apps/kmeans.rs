@@ -1,0 +1,362 @@
+//! K-means clustering — the paper's §V.A workload (Figs 8-9), after the
+//! iterative-MapReduce formulation of Zhao/Ma/He [15]:
+//!
+//! each iteration is one MapReduce job —
+//!   map:     point -> (nearest centroid id, point)
+//!   combine: per-rank partial (sum, count) per centroid  (eager reduction)
+//!   reduce:  allreduce partials, new centroid = sum / count
+//!
+//! Two compute paths per iteration:
+//!  * native — scalar distance loop on the rank thread (the C++ shape);
+//!  * kernel — the `kmeans_step_d{2,8,32}` Pallas executable: the rank
+//!    tiles its shard into 4096-point blocks, PJRT computes (sums, counts,
+//!    assign) per block, padding is subtracted exactly using the returned
+//!    assignments.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::core::JobStats;
+use crate::mpi::{run_ranks_with_universe, Topology, Universe};
+use crate::runtime::{ComputeHandle, TensorArg};
+use crate::util::rng::Rng;
+
+/// AOT tile shape (python/compile/aot.py).
+pub const KERNEL_TILE: usize = 4096;
+pub const KERNEL_K: usize = 16;
+pub const KERNEL_DIMS: [usize; 3] = [2, 8, 32];
+
+/// Flat row-major point set.
+#[derive(Debug, Clone)]
+pub struct Points {
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Points {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// Gaussian blobs around `k` true centers in [-5, 5]^d.
+pub fn generate_points(n: usize, d: usize, k: usize, seed: u64) -> Points {
+    let mut rng = Rng::with_stream(seed, 0x6B6D);
+    let centers: Vec<f64> = (0..k * d).map(|_| rng.f64() * 10.0 - 5.0).collect();
+    let mut data = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let c = i % k;
+        for j in 0..d {
+            data.push((centers[c * d + j] + 0.4 * rng.normal()) as f32);
+        }
+    }
+    Points { data, n, d }
+}
+
+/// Result of a K-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    pub centroids: Vec<f32>, // k x d row-major
+    pub k: usize,
+    pub d: usize,
+    /// Sum of squared distances to assigned centroids (last iteration).
+    pub inertia: f64,
+    pub iterations: usize,
+    pub stats: JobStats,
+}
+
+/// Which per-iteration compute path ranks use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputePath {
+    Native,
+    /// Requires d in [`KERNEL_DIMS`] and k == [`KERNEL_K`].
+    Kernel,
+}
+
+/// Run distributed K-means. Points are sharded by rank; each iteration
+/// does local assign+combine then a sums/counts allreduce (the iterative
+/// MapReduce of [15] with eager reduction).
+pub fn run(
+    cluster: &ClusterConfig,
+    points: &Points,
+    k: usize,
+    iterations: usize,
+    path: ComputePath,
+    compute: Option<&ComputeHandle>,
+) -> Result<KmeansResult> {
+    anyhow::ensure!(k > 0 && k <= points.n, "k={k} out of range");
+    if path == ComputePath::Kernel {
+        if !KERNEL_DIMS.contains(&points.d) || k != KERNEL_K {
+            bail!(
+                "kernel path needs d in {KERNEL_DIMS:?} and k == {KERNEL_K} (got d={}, k={k})",
+                points.d
+            );
+        }
+        let handle = compute.context("kernel path needs a ComputeHandle")?;
+        handle.warmup(&format!("kmeans_step_d{}", points.d))?;
+    }
+
+    let topology = Topology::from_config(cluster);
+    let universe = Universe::new(topology, cluster.network_model());
+    let stats_handle = universe.stats();
+    let wall = std::time::Instant::now();
+
+    let d = points.d;
+    let ranks = cluster.ranks();
+    let chunk_pts = points.n.div_ceil(ranks.max(1)).max(1);
+
+    // Initial centroids: first k points (deterministic, standard Forgy-ish).
+    let init: Vec<f32> = points.data[..k * d].to_vec();
+
+    let (rank_results, clocks) = run_ranks_with_universe(universe, |comm| -> Result<(Vec<f32>, f64)> {
+        let me = comm.rank().0;
+        let lo = (me * chunk_pts).min(points.n);
+        let hi = ((me + 1) * chunk_pts).min(points.n);
+        let shard = &points.data[lo * d..hi * d];
+        let shard_n = hi - lo;
+
+        let mut centroids = init.clone();
+        let mut inertia = 0.0f64;
+        for _iter in 0..iterations {
+            // Map + combine on this shard.
+            let (mut sums, mut counts, local_inertia) = match path {
+                ComputePath::Native => comm.timed(|| native_step(shard, shard_n, d, k, &centroids)),
+                ComputePath::Kernel => {
+                    let handle = compute.expect("checked above");
+                    kernel_step(comm, handle, shard, shard_n, d, k, &centroids)?
+                }
+            };
+
+            // Reduce across ranks: one (k*d + k)-float allreduce.
+            sums.extend_from_slice(&counts);
+            let reduced = comm.allreduce_sum_f32(sums)?;
+            let (rsums, rcounts) = reduced.split_at(k * d);
+            counts = rcounts.to_vec();
+            inertia = comm.allreduce(local_inertia, |a, b| a + b)?;
+
+            // Update step (same on every rank — deterministic).
+            comm.timed(|| {
+                for c in 0..k {
+                    if counts[c] > 0.0 {
+                        for j in 0..d {
+                            centroids[c * d + j] = rsums[c * d + j] / counts[c];
+                        }
+                    }
+                }
+            });
+        }
+        Ok((centroids, inertia))
+    });
+
+    let mut final_centroids: Option<Vec<f32>> = None;
+    let mut inertia = 0.0;
+    for (i, r) in rank_results.into_iter().enumerate() {
+        let (c, iner) = r.with_context(|| format!("rank {i}"))?;
+        inertia = iner;
+        if let Some(prev) = &final_centroids {
+            anyhow::ensure!(prev == &c, "ranks disagree on centroids — nondeterminism bug");
+        }
+        final_centroids = Some(c);
+    }
+
+    let profile = cluster.deployment.profile();
+    let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
+    let (msgs, bytes, _, rbytes) = stats_handle.snapshot();
+    Ok(KmeansResult {
+        centroids: final_centroids.context("no ranks")?,
+        k,
+        d,
+        inertia,
+        iterations,
+        stats: JobStats {
+            modeled_ms: slowest.0 as f64 / 1e6,
+            compute_ms: slowest.1 as f64 / 1e6,
+            net_ms: slowest.2 as f64 / 1e6,
+            startup_ms: profile.startup_ms as f64,
+            shuffle_bytes: bytes,
+            messages: msgs,
+            remote_bytes: rbytes,
+            peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
+            spilled_bytes: 0,
+            host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+        },
+    })
+}
+
+/// Scalar assign+combine over one shard: returns (sums k*d, counts k,
+/// inertia).
+fn native_step(
+    shard: &[f32],
+    shard_n: usize,
+    d: usize,
+    k: usize,
+    centroids: &[f32],
+) -> (Vec<f32>, Vec<f32>, f64) {
+    let mut sums = vec![0.0f32; k * d];
+    let mut counts = vec![0.0f32; k];
+    let mut inertia = 0.0f64;
+    for i in 0..shard_n {
+        let p = &shard[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let q = &centroids[c * d..(c + 1) * d];
+            let mut dist = 0.0f32;
+            for j in 0..d {
+                let diff = p[j] - q[j];
+                dist += diff * diff;
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        inertia += best_d as f64;
+        counts[best] += 1.0;
+        for j in 0..d {
+            sums[best * d + j] += p[j];
+        }
+    }
+    (sums, counts, inertia)
+}
+
+/// Kernel assign+combine: tile the shard into 4096-point blocks, run the
+/// AOT executable, subtract the padding rows' contribution exactly.
+fn kernel_step(
+    comm: &crate::mpi::Communicator,
+    handle: &ComputeHandle,
+    shard: &[f32],
+    shard_n: usize,
+    d: usize,
+    k: usize,
+    centroids: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>, f64)> {
+    let kernel = format!("kmeans_step_d{d}");
+    let mut sums = vec![0.0f32; k * d];
+    let mut counts = vec![0.0f32; k];
+    // Inertia needs distances; kernel returns assignments only, so compute
+    // inertia from assignments (exact, one extra pass).
+    let mut inertia = 0.0f64;
+
+    if shard_n == 0 {
+        return Ok((sums, counts, inertia));
+    }
+
+    let tiles = shard_n.div_ceil(KERNEL_TILE);
+    for t in 0..tiles {
+        let lo = t * KERNEL_TILE;
+        let hi = ((t + 1) * KERNEL_TILE).min(shard_n);
+        let real = hi - lo;
+        // Pad with copies of the tile's first point.
+        let mut tile = Vec::with_capacity(KERNEL_TILE * d);
+        tile.extend_from_slice(&shard[lo * d..hi * d]);
+        let first_point: Vec<f32> = shard[lo * d..lo * d + d].to_vec();
+        for _ in real..KERNEL_TILE {
+            tile.extend_from_slice(&first_point);
+        }
+
+        let (outs, kernel_ns) = handle.run_timed(
+            &kernel,
+            vec![
+                TensorArg::f32(tile, &[KERNEL_TILE, d]),
+                TensorArg::f32(centroids.to_vec(), &[k, d]),
+            ],
+        )?;
+        comm.advance_scaled(kernel_ns);
+        let tile_sums = outs[0].as_f32()?;
+        let tile_counts = outs[1].as_f32()?;
+        let assign = outs[2].as_i32()?;
+
+        comm.timed(|| {
+            for (s, ts) in sums.iter_mut().zip(tile_sums) {
+                *s += ts;
+            }
+            for (c, tc) in counts.iter_mut().zip(tile_counts) {
+                *c += tc;
+            }
+            // Subtract the padding rows (they all carry first_point and
+            // were assigned to assign[real..]).
+            for &a in &assign[real..] {
+                let a = a as usize;
+                counts[a] -= 1.0;
+                for j in 0..d {
+                    sums[a * d + j] -= first_point[j];
+                }
+            }
+            // Inertia from assignments (real rows only).
+            for (i, &a) in assign[..real].iter().enumerate() {
+                let p = &shard[(lo + i) * d..(lo + i + 1) * d];
+                let q = &centroids[(a as usize) * d..(a as usize + 1) * d];
+                let mut dist = 0.0f32;
+                for j in 0..d {
+                    let diff = p[j] - q[j];
+                    dist += diff * diff;
+                }
+                inertia += dist as f64;
+            }
+        });
+    }
+    Ok((sums, counts, inertia))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_shapes() {
+        let p = generate_points(100, 8, 4, 1);
+        assert_eq!(p.data.len(), 800);
+        assert_eq!(p.row(99).len(), 8);
+        // Deterministic.
+        assert_eq!(generate_points(100, 8, 4, 1).data, p.data);
+    }
+
+    #[test]
+    fn native_kmeans_converges_on_blobs() {
+        let pts = generate_points(600, 2, 3, 7);
+        let cluster = ClusterConfig::builder().ranks(3).build();
+        let r1 = run(&cluster, &pts, 3, 1, ComputePath::Native, None).unwrap();
+        let r10 = run(&cluster, &pts, 3, 10, ComputePath::Native, None).unwrap();
+        assert!(r10.inertia <= r1.inertia, "{} > {}", r10.inertia, r1.inertia);
+        // Blobs have sigma 0.4 in 2-D: average sq distance should be small.
+        assert!(r10.inertia / 600.0 < 1.0, "avg inertia {}", r10.inertia / 600.0);
+    }
+
+    #[test]
+    fn results_identical_across_rank_counts() {
+        // Floating-point caveat: partial sums are reduced in rank order,
+        // so this holds only because allreduce folds in rank order — the
+        // determinism test the paper's framework can't make.
+        let pts = generate_points(400, 2, 4, 3);
+        let one = run(
+            &ClusterConfig::builder().ranks(1).build(),
+            &pts,
+            4,
+            5,
+            ComputePath::Native,
+            None,
+        )
+        .unwrap();
+        let four = run(
+            &ClusterConfig::builder().ranks(4).build(),
+            &pts,
+            4,
+            5,
+            ComputePath::Native,
+            None,
+        )
+        .unwrap();
+        for (a, b) in one.centroids.iter().zip(&four.centroids) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn kernel_path_rejects_unsupported_shapes() {
+        let pts = generate_points(100, 3, 2, 1);
+        let cluster = ClusterConfig::builder().ranks(1).build();
+        assert!(run(&cluster, &pts, 2, 1, ComputePath::Kernel, None).is_err());
+    }
+}

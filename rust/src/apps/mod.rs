@@ -1,0 +1,12 @@
+//! The paper's workloads, built on the public framework API.
+//!
+//! Each app exposes `run(...)` returning a [`crate::core::JobResult`] plus
+//! app-specific synthetic data generators (deterministic, seeded) so the
+//! benches and figures are reproducible end to end.
+
+pub mod kmeans;
+pub mod linreg;
+pub mod matmul;
+pub mod pagerank;
+pub mod pi;
+pub mod wordcount;

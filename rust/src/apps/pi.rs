@@ -1,0 +1,218 @@
+//! Monte-Carlo Pi estimation — the paper's §V.C workload (Fig 12).
+//!
+//! "Random coordinates (x,y) are generated in mappers and if they fall
+//! within a certain range the mapper emits (key,1), else emits (key,0).
+//! The reducer sums over the key and estimates pi as 4 * inside/total."
+//!
+//! Embarrassingly parallel: per-rank compute dominates, network traffic is
+//! one scalar per rank — which is why Fig 12 shows near-linear scaling.
+//! The input is a list of chunk descriptors (seeds), so the same job runs
+//! through the framework ([`run`], emitting per-sample pairs under any
+//! mode — faithful but slow) or the fast paths ([`run_eager_batched`],
+//! [`run_kernel`]) that fold counting into the mapper / the Pallas kernel.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::core::{JobConfig, JobResult, MapReduceJob, ReductionMode};
+use crate::mpi::{run_ranks_with_universe, Topology, Universe};
+use crate::runtime::{ComputeHandle, TensorArg};
+use crate::util::rng::Rng;
+
+/// AOT tile size of the `pi_count` kernel.
+pub const KERNEL_TILE: usize = 8192;
+
+/// One mapper work item: a deterministic chunk of samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Chunk {
+    pub seed: u64,
+    pub samples: usize,
+}
+
+/// Split `total` samples into `chunks` deterministic work items.
+pub fn make_chunks(total: usize, chunks: usize, seed: u64) -> Vec<Chunk> {
+    let chunks = chunks.max(1);
+    let base = total / chunks;
+    let extra = total % chunks;
+    (0..chunks)
+        .map(|i| Chunk {
+            seed: seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            samples: base + usize::from(i < extra),
+        })
+        .collect()
+}
+
+/// Estimate from (inside, total).
+pub fn estimate(inside: u64, total: u64) -> f64 {
+    4.0 * inside as f64 / total as f64
+}
+
+/// Faithful per-sample framework path: mapper emits (0, 1) or (0, 0) per
+/// sample, reducer sums — exactly the paper's description. O(samples)
+/// shuffle pairs under Classic; use for mode comparisons, not for scale.
+pub fn run(
+    cluster: &ClusterConfig,
+    chunks: &[Chunk],
+    mode: ReductionMode,
+) -> Result<JobResult<f64>> {
+    let total: u64 = chunks.iter().map(|c| c.samples as u64).sum();
+    let job = MapReduceJob::new(cluster, chunks).with_config(JobConfig::with_mode(mode));
+    let out = job.run_monoid(
+        |chunk: &Chunk, emit: &mut dyn FnMut(u8, u64)| {
+            let mut rng = Rng::with_stream(chunk.seed, 0x3141);
+            for _ in 0..chunk.samples {
+                let x = rng.f64();
+                let y = rng.f64();
+                emit(0u8, u64::from(x * x + y * y <= 1.0));
+            }
+        },
+        |a: u64, b: u64| a + b,
+    )?;
+    Ok(out.map(|m| estimate(m.get(&0).copied().unwrap_or(0), total)))
+}
+
+/// Eager-batched path: the mapper counts its whole chunk and emits one
+/// pair — the shape the paper actually benchmarks (efficient "in terms of
+/// memory, speed and scalability").
+pub fn run_eager_batched(cluster: &ClusterConfig, chunks: &[Chunk]) -> Result<JobResult<f64>> {
+    let total: u64 = chunks.iter().map(|c| c.samples as u64).sum();
+    let out = MapReduceJob::new(cluster, chunks).run_eager(
+        |chunk: &Chunk, emit: &mut dyn FnMut(u8, u64)| {
+            let mut rng = Rng::with_stream(chunk.seed, 0x3141);
+            let mut inside = 0u64;
+            for _ in 0..chunk.samples {
+                let x = rng.f64();
+                let y = rng.f64();
+                inside += u64::from(x * x + y * y <= 1.0);
+            }
+            emit(0u8, inside);
+        },
+        |acc, v| *acc += v,
+    )?;
+    Ok(out.map(|m| estimate(m.get(&0).copied().unwrap_or(0), total)))
+}
+
+/// Kernel path: ranks generate coordinate tiles and the `pi_count` Pallas
+/// executable counts in-circle points; one allreduce finishes the job.
+pub fn run_kernel(
+    cluster: &ClusterConfig,
+    chunks: &[Chunk],
+    compute: &ComputeHandle,
+) -> Result<JobResult<f64>> {
+    compute.warmup("pi_count")?;
+    let total: u64 = chunks.iter().map(|c| c.samples as u64).sum();
+    let topology = Topology::from_config(cluster);
+    let universe = Universe::new(topology, cluster.network_model());
+    let stats = universe.stats();
+    let wall = std::time::Instant::now();
+
+    let ranks = cluster.ranks();
+    let per_rank = chunks.len().div_ceil(ranks.max(1)).max(1);
+
+    let (rank_results, clocks) = run_ranks_with_universe(universe, |comm| -> Result<u64> {
+        let me = comm.rank().0;
+        let mine = chunks.chunks(per_rank).nth(me).unwrap_or(&[]);
+        let mut inside = 0u64;
+        for chunk in mine {
+            let mut rng = Rng::with_stream(chunk.seed, 0x3141);
+            let mut remaining = chunk.samples;
+            while remaining > 0 {
+                let real = remaining.min(KERNEL_TILE);
+                // Pad with (2,2): outside the circle, counts zero.
+                let mut xy = comm.timed(|| {
+                    let mut xy = Vec::with_capacity(KERNEL_TILE * 2);
+                    for _ in 0..real {
+                        xy.push(rng.f32());
+                        xy.push(rng.f32());
+                    }
+                    xy.resize(KERNEL_TILE * 2, 2.0);
+                    xy
+                });
+                debug_assert_eq!(xy.len(), KERNEL_TILE * 2);
+                let (outs, kernel_ns) = compute.run_timed(
+                    "pi_count",
+                    vec![TensorArg::f32(std::mem::take(&mut xy), &[KERNEL_TILE, 2])],
+                )?;
+                comm.advance_scaled(kernel_ns);
+                inside += outs[0].as_f32()?[0] as u64;
+                remaining -= real;
+            }
+        }
+        comm.allreduce_sum_u64(inside)
+    });
+
+    let mut inside = 0u64;
+    for (i, r) in rank_results.into_iter().enumerate() {
+        inside = r.with_context(|| format!("rank {i}"))?;
+    }
+
+    let profile = cluster.deployment.profile();
+    let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
+    let (msgs, bytes, _, rbytes) = stats.snapshot();
+    Ok(JobResult {
+        result: estimate(inside, total),
+        stats: crate::core::JobStats {
+            modeled_ms: slowest.0 as f64 / 1e6,
+            compute_ms: slowest.1 as f64 / 1e6,
+            net_ms: slowest.2 as f64 / 1e6,
+            startup_ms: profile.startup_ms as f64,
+            shuffle_bytes: bytes,
+            messages: msgs,
+            remote_bytes: rbytes,
+            peak_mem_bytes: (KERNEL_TILE * 2 * 4 * ranks) as u64,
+            spilled_bytes: 0,
+            host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_total() {
+        let chunks = make_chunks(1003, 7, 1);
+        assert_eq!(chunks.iter().map(|c| c.samples).sum::<usize>(), 1003);
+        assert_eq!(chunks.len(), 7);
+        // Distinct seeds.
+        let mut seeds: Vec<u64> = chunks.iter().map(|c| c.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 7);
+    }
+
+    #[test]
+    fn pi_converges_eager_batched() {
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let chunks = make_chunks(200_000, 16, 5);
+        let got = run_eager_batched(&cluster, &chunks).unwrap();
+        assert!((got.result - std::f64::consts::PI).abs() < 0.02, "pi = {}", got.result);
+    }
+
+    #[test]
+    fn faithful_and_batched_agree_exactly() {
+        // Same seeds -> same coordinate stream -> identical counts.
+        let cluster = ClusterConfig::builder().ranks(2).build();
+        let chunks = make_chunks(20_000, 8, 11);
+        let a = run(&cluster, &chunks, ReductionMode::Eager).unwrap();
+        let b = run_eager_batched(&cluster, &chunks).unwrap();
+        assert_eq!(a.result, b.result);
+        // Classic shuffles every (key, 0/1) pair; both eager variants
+        // collapse to one value per rank.
+        let c = run(&cluster, &chunks, ReductionMode::Classic).unwrap();
+        assert_eq!(c.result, b.result);
+        assert!(b.stats.shuffle_bytes < c.stats.shuffle_bytes);
+    }
+
+    #[test]
+    fn all_modes_agree() {
+        let cluster = ClusterConfig::builder().ranks(2).build();
+        let chunks = make_chunks(5_000, 4, 2);
+        let e = run(&cluster, &chunks, ReductionMode::Eager).unwrap().result;
+        let c = run(&cluster, &chunks, ReductionMode::Classic).unwrap().result;
+        let d = run(&cluster, &chunks, ReductionMode::Delayed).unwrap().result;
+        assert_eq!(e, c);
+        assert_eq!(c, d);
+    }
+}

@@ -1,0 +1,126 @@
+//! JVM cost model — the documented constants behind the Spark-sim
+//! baseline (DESIGN.md §3 substitution table).
+//!
+//! Every constant is an order-of-magnitude figure from public JVM/Spark
+//! literature; the *figures* only rely on their relative magnitude vs the
+//! native path, which is robust:
+//!
+//! * object header: 12-16 B on HotSpot (16 with alignment); a boxed
+//!   `(String, Long)` record costs 3 object headers + fields — the "memory
+//!   overhead is a real problem" bullet of §I.
+//! * Java serialization: ~50-150 MB/s per core vs >1 GB/s for a
+//!   memcpy-shaped binary codec — the "de-serialisation ... is very slow
+//!   due to creation and deletion of too many objects" bullet.
+//! * generational GC: young collections pause ~1-10 ms and scale with the
+//!   live set; allocation-heavy shuffles trigger them continuously.
+//! * JVM + executor startup: seconds (the paper's Spark jobs pay it per
+//!   application).
+//! * Spark shuffles write map output to disk then read it back.
+
+/// Tunable JVM/Spark cost constants (ns / bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JvmCostModel {
+    /// Bytes of header+alignment overhead per heap object.
+    pub object_header_bytes: u64,
+    /// Heap objects allocated per shuffled record (key box, value box,
+    /// tuple wrapper).
+    pub objects_per_record: u64,
+    /// Expansion factor of deserialized data vs its serialized bytes
+    /// (Strings are UTF-16 in the JVM, fields are padded, ...).
+    pub heap_expansion: f64,
+    /// ns of CPU per record crossing a serialization boundary.
+    pub ser_ns_per_record: u64,
+    /// ns per serialized byte (≈ 1/(80 MB/s) = 12.5 ns/B).
+    pub ser_ns_per_byte: f64,
+    /// ns per byte written+read through shuffle files.
+    pub shuffle_disk_ns_per_byte: f64,
+    /// Young-generation size before a minor GC fires.
+    pub young_gen_bytes: u64,
+    /// Pause per minor GC, ns.
+    pub minor_gc_pause_ns: u64,
+    /// JVM + SparkContext startup.
+    pub jvm_startup_ms: u64,
+    /// Per-executor startup (parallel across executors).
+    pub executor_startup_ms: u64,
+    /// Per-task scheduling/dispatch overhead (Spark's ~ms task launch).
+    pub task_overhead_ns: u64,
+}
+
+impl Default for JvmCostModel {
+    fn default() -> Self {
+        Self {
+            object_header_bytes: 16,
+            objects_per_record: 3,
+            heap_expansion: 3.0,
+            ser_ns_per_record: 150,
+            ser_ns_per_byte: 12.5,
+            shuffle_disk_ns_per_byte: 3.0,
+            young_gen_bytes: 64 << 20,
+            minor_gc_pause_ns: 3_000_000, // 3 ms
+            jvm_startup_ms: 3_000,
+            executor_startup_ms: 1_500,
+            task_overhead_ns: 1_000_000, // 1 ms per task
+        }
+    }
+}
+
+impl JvmCostModel {
+    /// Heap bytes a record of `payload_bytes` occupies once deserialized.
+    pub fn record_heap_bytes(&self, payload_bytes: u64) -> u64 {
+        (payload_bytes as f64 * self.heap_expansion) as u64
+            + self.object_header_bytes * self.objects_per_record
+    }
+
+    /// ns to serialize (or deserialize) `records` totalling `bytes`.
+    pub fn ser_cost_ns(&self, records: u64, bytes: u64) -> u64 {
+        records * self.ser_ns_per_record + (bytes as f64 * self.ser_ns_per_byte) as u64
+    }
+
+    /// ns of disk time for `bytes` through shuffle files (write + read).
+    pub fn shuffle_disk_ns(&self, bytes: u64) -> u64 {
+        (2.0 * bytes as f64 * self.shuffle_disk_ns_per_byte) as u64
+    }
+
+    /// ns of GC pauses induced by allocating `bytes` of short-lived data.
+    pub fn gc_pause_ns(&self, allocated_bytes: u64) -> u64 {
+        (allocated_bytes / self.young_gen_bytes.max(1)) * self.minor_gc_pause_ns
+    }
+
+    /// Startup charged to a job with `executors` executors (parallel
+    /// executor bring-up).
+    pub fn startup_ms(&self, _executors: usize) -> u64 {
+        self.jvm_startup_ms + self.executor_startup_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_overhead_dominates_small_records() {
+        let m = JvmCostModel::default();
+        // A ("word", 1L) record serializes to ~10 bytes but occupies far
+        // more heap — the Fig 13 mechanism.
+        let heap = m.record_heap_bytes(10);
+        assert!(heap >= 70, "heap {heap}");
+    }
+
+    #[test]
+    fn gc_pauses_scale_with_allocation() {
+        let m = JvmCostModel::default();
+        assert_eq!(m.gc_pause_ns(0), 0);
+        let one_gen = m.gc_pause_ns(64 << 20);
+        let ten_gen = m.gc_pause_ns(10 * (64 << 20));
+        assert_eq!(one_gen, m.minor_gc_pause_ns);
+        assert_eq!(ten_gen, 10 * m.minor_gc_pause_ns);
+    }
+
+    #[test]
+    fn serialization_slower_than_disk_model_for_small_records() {
+        let m = JvmCostModel::default();
+        // 1M tiny records: per-record cost dominates byte cost.
+        let ser = m.ser_cost_ns(1_000_000, 10_000_000);
+        assert!(ser > 150_000_000);
+    }
+}

@@ -1,0 +1,16 @@
+//! The Spark/JVM comparison baseline (Figs 9, 11, 13).
+//!
+//! We cannot ship a JVM, so this is the documented substitution: the same
+//! workloads executed through an RDD-style stage pipeline whose virtual
+//! clock and memory accounting charge the JVM costs the paper attributes
+//! to Hadoop/Spark — object headers and boxing on every record, slow
+//! serialization on the shuffle boundary, generational GC pauses, JVM +
+//! executor startup, and disk-backed shuffle files. Constants and sources
+//! live in [`jvm`].
+
+pub mod jvm;
+pub mod rdd;
+pub mod spark;
+
+pub use jvm::JvmCostModel;
+pub use spark::{SparkContext, SparkJobStats};

@@ -1,0 +1,226 @@
+//! A miniature RDD-style stage pipeline: the execution skeleton the
+//! Spark-sim baseline runs workloads through.
+//!
+//! A job is a linear DAG of stages separated by shuffle boundaries, like
+//! Spark's `rdd.map(..).reduceByKey(..).collect()`. Each stage really
+//! executes (results are correct) while the JVM cost model charges a
+//! virtual clock per partition: task dispatch, per-record boxing,
+//! serialization at stage edges, shuffle-file disk time and GC pauses.
+//! Stage time = max over partitions (executors run them in parallel).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+use super::jvm::JvmCostModel;
+
+/// Accumulated cost/trace state for one simulated job.
+#[derive(Debug, Default, Clone)]
+pub struct JobTrace {
+    /// Virtual ns per executor (parallel lanes).
+    pub lane_ns: Vec<u64>,
+    pub gc_ns: u64,
+    pub shuffle_bytes: u64,
+    pub heap_bytes_peak: u64,
+    heap_bytes_now: u64,
+    pub stages: usize,
+}
+
+impl JobTrace {
+    pub fn new(executors: usize) -> Self {
+        Self { lane_ns: vec![0; executors.max(1)], ..Default::default() }
+    }
+
+    /// Slowest lane = stage-parallel elapsed time.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.lane_ns.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Add `ns` to one executor lane.
+    pub fn charge_lane(&mut self, lane: usize, ns: u64) {
+        let n = self.lane_ns.len();
+        self.lane_ns[lane % n] += ns;
+    }
+
+    /// A stage barrier: all lanes advance to the slowest (Spark stages are
+    /// synchronized at shuffle boundaries).
+    pub fn barrier(&mut self) {
+        let max = self.elapsed_ns();
+        for l in &mut self.lane_ns {
+            *l = max;
+        }
+        self.stages += 1;
+    }
+
+    pub fn heap_alloc(&mut self, bytes: u64) {
+        self.heap_bytes_now += bytes;
+        self.heap_bytes_peak = self.heap_bytes_peak.max(self.heap_bytes_now);
+    }
+
+    pub fn heap_free(&mut self, bytes: u64) {
+        self.heap_bytes_now = self.heap_bytes_now.saturating_sub(bytes);
+    }
+}
+
+/// One partition of typed records flowing between stages.
+pub struct Partition<T> {
+    pub items: Vec<T>,
+}
+
+/// The mini-RDD: partitioned data + the trace it drags along.
+pub struct Rdd<T> {
+    pub partitions: Vec<Partition<T>>,
+}
+
+impl<T> Rdd<T> {
+    /// Spark's `parallelize`: split `items` into `n` partitions. Charges
+    /// the initial deserialization of the input into JVM objects.
+    pub fn parallelize(
+        items: Vec<T>,
+        n: usize,
+        bytes_per_item: u64,
+        jvm: &JvmCostModel,
+        trace: &mut JobTrace,
+    ) -> Self {
+        let n = n.max(1);
+        let total = items.len();
+        let mut partitions: Vec<Partition<T>> = (0..n).map(|_| Partition { items: Vec::new() }).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            partitions[i * n / total.max(1)].items.push(item);
+        }
+        for (lane, p) in partitions.iter().enumerate() {
+            let records = p.items.len() as u64;
+            let bytes = records * bytes_per_item;
+            trace.charge_lane(lane, jvm.ser_cost_ns(records, bytes) + jvm.task_overhead_ns);
+            trace.heap_alloc(records * jvm.record_heap_bytes(bytes_per_item));
+        }
+        trace.barrier();
+        Self { partitions }
+    }
+
+    /// Narrow map stage (no shuffle): `f` runs per item; `out_bytes`
+    /// estimates each output record's serialized size for heap accounting.
+    pub fn flat_map<U>(
+        self,
+        jvm: &JvmCostModel,
+        trace: &mut JobTrace,
+        out_bytes: u64,
+        mut f: impl FnMut(T, &mut Vec<U>),
+    ) -> Rdd<U> {
+        let mut out_parts = Vec::with_capacity(self.partitions.len());
+        for (lane, p) in self.partitions.into_iter().enumerate() {
+            let in_records = p.items.len() as u64;
+            let start = std::time::Instant::now();
+            let mut out = Vec::new();
+            for item in p.items {
+                f(item, &mut out);
+            }
+            let real_ns = start.elapsed().as_nanos() as u64;
+            let out_records = out.len() as u64;
+            let alloc = out_records * jvm.record_heap_bytes(out_bytes);
+            trace.heap_alloc(alloc);
+            let gc = jvm.gc_pause_ns(alloc);
+            trace.gc_ns += gc;
+            trace.charge_lane(
+                lane,
+                real_ns
+                    + gc
+                    + jvm.task_overhead_ns
+                    + in_records * jvm.object_header_bytes / 8, // per-record iterator+unboxing cost, ~2ns/B-of-header
+            );
+            out_parts.push(Partition { items: out });
+        }
+        trace.barrier();
+        Rdd { partitions: out_parts }
+    }
+
+    /// Release this RDD's heap (end of lineage / unpersist).
+    pub fn heap_bytes(&self, bytes_per_item: u64, jvm: &JvmCostModel) -> u64 {
+        self.partitions
+            .iter()
+            .map(|p| p.items.len() as u64 * jvm.record_heap_bytes(bytes_per_item))
+            .sum()
+    }
+}
+
+impl<K: Hash + Eq, V> Rdd<(K, V)> {
+    /// `reduceByKey`: shuffle boundary + combine. Charges map-side
+    /// serialization, shuffle-file disk time, reduce-side deserialization
+    /// and GC for the grouped data.
+    pub fn reduce_by_key(
+        self,
+        jvm: &JvmCostModel,
+        trace: &mut JobTrace,
+        record_bytes: u64,
+        mut combine: impl FnMut(V, V) -> V,
+    ) -> HashMap<K, V> {
+        // Map-side: serialize every record to shuffle files.
+        let mut total_records = 0u64;
+        for (lane, p) in self.partitions.iter().enumerate() {
+            let records = p.items.len() as u64;
+            total_records += records;
+            let bytes = records * record_bytes;
+            trace.charge_lane(
+                lane,
+                jvm.ser_cost_ns(records, bytes) + jvm.shuffle_disk_ns(bytes) + jvm.task_overhead_ns,
+            );
+        }
+        trace.shuffle_bytes += total_records * record_bytes;
+        trace.barrier();
+
+        // Reduce-side: deserialize from shuffle files, then combine (the
+        // combine really executes; reducers run in parallel lanes so the
+        // measured time is divided across them).
+        let lanes = trace.lane_ns.len() as u64;
+        let deser_bytes = total_records * record_bytes;
+        let deser_ns = jvm.ser_cost_ns(total_records, deser_bytes) / lanes.max(1);
+        let grouped_alloc = total_records * jvm.record_heap_bytes(record_bytes);
+        trace.heap_alloc(grouped_alloc);
+        let gc = jvm.gc_pause_ns(grouped_alloc);
+        trace.gc_ns += gc;
+
+        let start = std::time::Instant::now();
+        let mut out: HashMap<K, V> = HashMap::new();
+        for p in self.partitions {
+            for (k, v) in p.items {
+                let newv = match out.remove(&k) {
+                    Some(old) => combine(old, v),
+                    None => v,
+                };
+                out.insert(k, newv);
+            }
+        }
+        let combine_ns = (start.elapsed().as_nanos() as u64) / lanes.max(1);
+        for lane in 0..trace.lane_ns.len() {
+            trace.charge_lane(lane, deser_ns + combine_ns + gc + jvm.task_overhead_ns);
+        }
+        trace.heap_free(grouped_alloc);
+        trace.barrier();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_barrier_levels_lanes() {
+        let mut t = JobTrace::new(3);
+        t.charge_lane(0, 10);
+        t.charge_lane(1, 50);
+        t.barrier();
+        assert_eq!(t.lane_ns, vec![50, 50, 50]);
+        assert_eq!(t.stages, 1);
+    }
+
+    #[test]
+    fn parallelize_distributes_and_charges() {
+        let jvm = JvmCostModel::default();
+        let mut trace = JobTrace::new(2);
+        let rdd = Rdd::parallelize((0..100).collect::<Vec<u32>>(), 2, 8, &jvm, &mut trace);
+        assert_eq!(rdd.partitions.len(), 2);
+        assert_eq!(rdd.partitions.iter().map(|p| p.items.len()).sum::<usize>(), 100);
+        assert!(trace.elapsed_ns() > 0);
+        assert!(trace.heap_bytes_peak > 100 * 8);
+    }
+}

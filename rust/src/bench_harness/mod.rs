@@ -1,0 +1,7 @@
+//! Figure regeneration harness: one generator per paper table/figure.
+//! `blaze bench-figure <id>` and `cargo bench` both route through here so
+//! the printed series match EXPERIMENTS.md.
+
+pub mod figures;
+
+pub use figures::{run_figure, FigureId};

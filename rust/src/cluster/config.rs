@@ -1,0 +1,309 @@
+//! `ClusterConfig` — the launcher-facing configuration system.
+//!
+//! Mirrors what the paper's operator supplies to `mpirun`: a hostfile
+//! (nodes + slots), a deployment choice and job-level knobs. Built in code
+//! via [`ClusterConfigBuilder`], or loaded from TOML (`blaze run
+//! --cluster cluster.toml`), e.g.:
+//!
+//! ```toml
+//! deployment = "vm"
+//! nodes = 4
+//! slots-per-node = 2
+//! seed = 42
+//!
+//! [limits]
+//! mem-fraction = 0.6
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::toml_mini::TomlDoc;
+
+use super::deployment::DeploymentKind;
+use super::network::NetworkModel;
+use super::node::NodeSpec;
+
+/// Memory / spill limits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Limits {
+    /// Fraction of a node's memory the shuffle may hold before spilling.
+    pub mem_fraction: f64,
+    /// Hard cap on in-flight shuffle bytes per rank (0 = derive from node).
+    pub shuffle_buffer_bytes: u64,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self { mem_fraction: 0.6, shuffle_buffer_bytes: 0 }
+    }
+}
+
+/// Full cluster description: nodes, deployment, determinism seed, limits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub deployment: DeploymentKind,
+    /// Number of nodes (machines/VMs/containers).
+    pub nodes: usize,
+    /// MPI slots (ranks) per node.
+    pub slots_per_node: usize,
+    /// RNG seed for synthetic data + partition salt.
+    pub seed: u64,
+    pub limits: Limits,
+}
+
+fn default_seed() -> u64 {
+    0x1332_u64
+}
+
+impl ClusterConfig {
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder::default()
+    }
+
+    /// Load from a TOML file (see module docs for the schema).
+    pub fn from_toml_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text).context("parsing cluster TOML")?;
+        let mut cfg = ClusterConfig {
+            deployment: DeploymentKind::default(),
+            nodes: 1,
+            slots_per_node: 1,
+            seed: default_seed(),
+            limits: Limits::default(),
+        };
+        for (section, entries) in doc.sections() {
+            for (key, value) in entries {
+                let int = || -> Result<usize> {
+                    let v = value.as_int().with_context(|| format!("{key}: expected integer"))?;
+                    ensure!(v >= 0, "{key}: negative");
+                    Ok(v as usize)
+                };
+                match (section, key.as_str()) {
+                    ("", "deployment") => {
+                        cfg.deployment = value
+                            .as_str()
+                            .with_context(|| format!("{key}: expected string"))?
+                            .parse()?;
+                    }
+                    ("", "nodes") => cfg.nodes = int()?,
+                    ("", "slots-per-node") => cfg.slots_per_node = int()?,
+                    ("", "seed") => cfg.seed = int()? as u64,
+                    ("limits", "mem-fraction") => {
+                        cfg.limits.mem_fraction =
+                            value.as_float().with_context(|| format!("{key}: expected float"))?;
+                    }
+                    ("limits", "shuffle-buffer-bytes") => {
+                        cfg.limits.shuffle_buffer_bytes = int()? as u64;
+                    }
+                    (sec, key) => bail!("unknown config key [{sec}] {key}"),
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to the TOML schema `from_toml_str` accepts.
+    pub fn to_toml_string(&self) -> String {
+        format!(
+            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
+            self.deployment,
+            self.nodes,
+            self.slots_per_node,
+            self.seed,
+            self.limits.mem_fraction,
+            self.limits.shuffle_buffer_bytes,
+        )
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.nodes > 0, "cluster needs at least one node");
+        ensure!(self.slots_per_node > 0, "nodes need at least one slot");
+        ensure!(
+            (0.05..=0.95).contains(&self.limits.mem_fraction),
+            "mem-fraction {} outside [0.05, 0.95]",
+            self.limits.mem_fraction
+        );
+        Ok(())
+    }
+
+    /// Total rank count (`nodes * slots_per_node`).
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.slots_per_node
+    }
+
+    /// Node index hosting a rank (block placement, like a hostfile with
+    /// `slots=` entries).
+    pub fn node_of_rank(&self, rank: usize) -> usize {
+        rank / self.slots_per_node
+    }
+
+    /// Materialized node specs.
+    pub fn node_specs(&self) -> Vec<NodeSpec> {
+        (0..self.nodes).map(|i| NodeSpec::for_kind(self.deployment, i)).collect()
+    }
+
+    pub fn network_model(&self) -> NetworkModel {
+        NetworkModel::from_profile(&self.deployment.profile())
+    }
+
+    /// Per-rank shuffle spill threshold in bytes.
+    pub fn spill_threshold_bytes(&self) -> u64 {
+        if self.limits.shuffle_buffer_bytes > 0 {
+            return self.limits.shuffle_buffer_bytes;
+        }
+        let node = NodeSpec::for_kind(self.deployment, 0);
+        let per_rank = node.mem_bytes as f64 * self.limits.mem_fraction / self.slots_per_node as f64;
+        per_rank as u64
+    }
+}
+
+/// Builder for [`ClusterConfig`]. `ranks(n)` is shorthand for n single-slot
+/// nodes — the common benchmarking shape ("number of nodes" in the paper's
+/// figures).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterConfigBuilder {
+    deployment: Option<DeploymentKind>,
+    nodes: Option<usize>,
+    slots_per_node: Option<usize>,
+    seed: Option<u64>,
+    limits: Option<Limits>,
+}
+
+impl ClusterConfigBuilder {
+    pub fn deployment(mut self, kind: DeploymentKind) -> Self {
+        self.deployment = Some(kind);
+        self
+    }
+
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = Some(n);
+        self
+    }
+
+    pub fn slots_per_node(mut self, s: usize) -> Self {
+        self.slots_per_node = Some(s);
+        self
+    }
+
+    /// n single-slot nodes.
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.nodes = Some(n);
+        self.slots_per_node = Some(1);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn mem_fraction(mut self, f: f64) -> Self {
+        self.limits.get_or_insert_with(Limits::default).mem_fraction = f;
+        self
+    }
+
+    pub fn shuffle_buffer_bytes(mut self, b: u64) -> Self {
+        self.limits.get_or_insert_with(Limits::default).shuffle_buffer_bytes = b;
+        self
+    }
+
+    pub fn build(self) -> ClusterConfig {
+        let cfg = ClusterConfig {
+            deployment: self.deployment.unwrap_or_default(),
+            nodes: self.nodes.unwrap_or(1),
+            slots_per_node: self.slots_per_node.unwrap_or(1),
+            seed: self.seed.unwrap_or_else(default_seed),
+            limits: self.limits.unwrap_or_default(),
+        };
+        cfg.validate().expect("builder produced invalid config");
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let c = ClusterConfig::builder().build();
+        assert_eq!(c.ranks(), 1);
+        assert_eq!(c.deployment, DeploymentKind::Local);
+    }
+
+    #[test]
+    fn ranks_shorthand() {
+        let c = ClusterConfig::builder().ranks(8).build();
+        assert_eq!(c.nodes, 8);
+        assert_eq!(c.slots_per_node, 1);
+        assert_eq!(c.ranks(), 8);
+    }
+
+    #[test]
+    fn rank_placement_is_block() {
+        let c = ClusterConfig::builder().nodes(2).slots_per_node(4).build();
+        assert_eq!(c.node_of_rank(0), 0);
+        assert_eq!(c.node_of_rank(3), 0);
+        assert_eq!(c.node_of_rank(4), 1);
+        assert_eq!(c.node_of_rank(7), 1);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = ClusterConfig::builder()
+            .deployment(DeploymentKind::Vm)
+            .nodes(4)
+            .slots_per_node(2)
+            .seed(7)
+            .build();
+        let text = c.to_toml_string();
+        let back = ClusterConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn toml_minimal_uses_defaults() {
+        let cfg =
+            ClusterConfig::from_toml_str("deployment = \"vm\"\nnodes = 2\n").unwrap();
+        assert_eq!(cfg.seed, default_seed());
+        assert_eq!(cfg.slots_per_node, 1);
+        assert_eq!(cfg.limits, Limits::default());
+    }
+
+    #[test]
+    fn toml_rejects_unknown_keys() {
+        assert!(ClusterConfig::from_toml_str("wat = 1\n").is_err());
+        assert!(ClusterConfig::from_toml_str("[limits]\nwat = 1\n").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_nodes() {
+        let mut c = ClusterConfig::builder().build();
+        c.nodes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn spill_threshold_scales_with_slots() {
+        let one = ClusterConfig::builder()
+            .deployment(DeploymentKind::BareMetal)
+            .nodes(1)
+            .slots_per_node(1)
+            .build()
+            .spill_threshold_bytes();
+        let four = ClusterConfig::builder()
+            .deployment(DeploymentKind::BareMetal)
+            .nodes(1)
+            .slots_per_node(4)
+            .build()
+            .spill_threshold_bytes();
+        // Equal up to f64->u64 truncation.
+        assert!((one as i64 - (four * 4) as i64).abs() <= 4, "{one} vs {}", four * 4);
+    }
+}

@@ -1,0 +1,180 @@
+//! Deployment profiles for the paper's three substrates (§III, Figs 3-5).
+//!
+//! Constants are order-of-magnitude figures from the paper's own testbeds
+//! (§IV) and the literature it cites: Gigabit Ethernet between Raspberry
+//! Pis, VirtualBox bridged networking with hypervisor overhead, Docker
+//! overlay networking with "negligible overhead" (§III.C). Absolute values
+//! matter less than the *ordering* the paper claims:
+//! `VM startup >> container startup ≈ bare-metal`, and
+//! `VM net/compute overhead > container ≈ bare-metal`.
+
+/// Which §III architecture a node runs under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DeploymentKind {
+    /// §III.A — commodity hardware / Raspberry Pi 3B+ cluster (Fig 3).
+    BareMetal,
+    /// §III.B — VirtualBox VM cluster, Ubuntu 18.04, bridged net (Fig 4).
+    Vm,
+    /// §III.C — Docker swarm, alpine-mpich images (Fig 5).
+    Container,
+    /// Single-machine developer loop: everything at memory speed. Used by
+    /// unit tests so modeled network time doesn't drown compute signal.
+    #[default]
+    Local,
+}
+
+impl DeploymentKind {
+    pub fn profile(self) -> DeploymentProfile {
+        DeploymentProfile::preset(self)
+    }
+
+    pub const ALL: [DeploymentKind; 4] =
+        [DeploymentKind::BareMetal, DeploymentKind::Vm, DeploymentKind::Container, DeploymentKind::Local];
+}
+
+impl std::fmt::Display for DeploymentKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DeploymentKind::BareMetal => "bare-metal",
+            DeploymentKind::Vm => "vm",
+            DeploymentKind::Container => "container",
+            DeploymentKind::Local => "local",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::str::FromStr for DeploymentKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "bare-metal" | "baremetal" | "rpi" => Ok(DeploymentKind::BareMetal),
+            "vm" => Ok(DeploymentKind::Vm),
+            "container" | "docker" => Ok(DeploymentKind::Container),
+            "local" => Ok(DeploymentKind::Local),
+            other => Err(anyhow::anyhow!("unknown deployment kind {other:?}")),
+        }
+    }
+}
+
+/// Cost constants the virtual clock charges for a substrate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentProfile {
+    pub kind: DeploymentKind,
+    /// One-time per-node bring-up charged before rank 0's clock starts:
+    /// OS boot / VM boot / container start (§III.B vs §III.C).
+    pub startup_ms: u64,
+    /// One-way small-message latency between two *different* nodes, µs.
+    pub net_latency_us: u64,
+    /// Sustained point-to-point bandwidth between nodes, Mbit/s.
+    pub net_bandwidth_mbps: u64,
+    /// Multiplier on compute time (1.0 = this machine; RPi ≈ 8x slower
+    /// than a workstation core for the paper's integer/float mix).
+    pub compute_scale: f64,
+    /// Fractional overhead the virtualization layer adds to *all* work
+    /// (hypervisor trap cost §III.B; ≈0 for containers §III.C).
+    pub virt_overhead: f64,
+    /// Intra-node (rank-to-rank on the same node) latency, µs — shared
+    /// memory transport, orders faster than the NIC.
+    pub local_latency_us: u64,
+    /// Intra-node bandwidth, Mbit/s.
+    pub local_bandwidth_mbps: u64,
+    /// Sender-side per-message overhead, µs: MPI envelope handling + NIC
+    /// injection. Paid serially by the sender for every message — the
+    /// term that makes many-small-messages shuffles anti-scale (Fig 10).
+    pub msg_overhead_us: u64,
+}
+
+impl DeploymentProfile {
+    pub fn preset(kind: DeploymentKind) -> Self {
+        match kind {
+            // RPi 3B+: Gigabit NIC (USB2-limited to ~300 Mbit/s in
+            // practice), slow cores, no virtualization.
+            DeploymentKind::BareMetal => Self {
+                kind,
+                startup_ms: 0,
+                net_latency_us: 200,
+                net_bandwidth_mbps: 300,
+                compute_scale: 8.0,
+                virt_overhead: 0.0,
+                local_latency_us: 2,
+                local_bandwidth_mbps: 8_000,
+                msg_overhead_us: 90, // RPi 3B+: USB2-attached NIC, slow IRQ path
+            },
+            // VirtualBox, bridged adapter: full boot, hypervisor overhead,
+            // virtio-ish networking.
+            DeploymentKind::Vm => Self {
+                kind,
+                startup_ms: 45_000,
+                net_latency_us: 350,
+                net_bandwidth_mbps: 800,
+                compute_scale: 1.15,
+                virt_overhead: 0.08,
+                local_latency_us: 5,
+                local_bandwidth_mbps: 12_000,
+                msg_overhead_us: 80, // hypervisor trap per send on bridged vNIC
+            },
+            // Docker swarm overlay: second-scale start, near-native compute.
+            DeploymentKind::Container => Self {
+                kind,
+                startup_ms: 1_200,
+                net_latency_us: 120,
+                net_bandwidth_mbps: 940,
+                compute_scale: 1.0,
+                virt_overhead: 0.01,
+                local_latency_us: 2,
+                local_bandwidth_mbps: 16_000,
+                msg_overhead_us: 25,
+            },
+            DeploymentKind::Local => Self {
+                kind,
+                startup_ms: 0,
+                net_latency_us: 0,
+                net_bandwidth_mbps: 0, // 0 = infinite: no byte cost
+                compute_scale: 1.0,
+                virt_overhead: 0.0,
+                local_latency_us: 0,
+                local_bandwidth_mbps: 0,
+                msg_overhead_us: 0,
+            },
+        }
+    }
+
+    /// Compute-time multiplier including virtualization overhead.
+    pub fn effective_compute_scale(&self) -> f64 {
+        self.compute_scale * (1.0 + self.virt_overhead)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_claimed_orderings_hold() {
+        let bm = DeploymentKind::BareMetal.profile();
+        let vm = DeploymentKind::Vm.profile();
+        let ct = DeploymentKind::Container.profile();
+        // §III.B vs §III.C: VM startup dwarfs container startup.
+        assert!(vm.startup_ms > 10 * ct.startup_ms);
+        assert!(ct.startup_ms > bm.startup_ms);
+        // "In contrast to the VMs, containerized approach has negligible
+        // overhead."
+        assert!(vm.virt_overhead > 5.0 * ct.virt_overhead);
+        assert!(ct.virt_overhead < 0.02);
+        // Everything is slower than Local.
+        let local = DeploymentKind::Local.profile();
+        assert_eq!(local.net_latency_us, 0);
+        assert_eq!(local.effective_compute_scale(), 1.0);
+    }
+
+    #[test]
+    fn kind_string_roundtrip() {
+        for kind in DeploymentKind::ALL {
+            let parsed: DeploymentKind = kind.to_string().parse().unwrap();
+            assert_eq!(parsed, kind);
+        }
+        assert!("mainframe".parse::<DeploymentKind>().is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! DELMA-style elasticity (§II [16]): grow or shrink the worker set
+//! between job waves without restarting the session.
+//!
+//! The paper lists dynamic node membership as a property a MapReduce
+//! framework *should* have. Our ranks are threads over an in-process
+//! universe, so "adding a node" means: extend the cluster config, rebuild
+//! the topology for the next wave, and rebalance distributed containers
+//! (`dist::balance`) onto the new shard count. This module owns that
+//! lifecycle and its audit log.
+
+use super::config::ClusterConfig;
+
+/// One membership change, for the audit log / tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ElasticEvent {
+    /// Nodes added (count after).
+    Grew { added: usize, nodes: usize },
+    /// Nodes removed (count after).
+    Shrank { removed: usize, nodes: usize },
+}
+
+/// A cluster whose node count can change between waves. Each wave gets a
+/// fresh universe built from the *current* config; shard maps are
+/// recomputed so `DistHashMap` data lands on the right owner after a
+/// resize (see `dist::balance::rebalance_plan`).
+#[derive(Debug, Clone)]
+pub struct ElasticCluster {
+    config: ClusterConfig,
+    log: Vec<ElasticEvent>,
+}
+
+impl ElasticCluster {
+    pub fn new(config: ClusterConfig) -> Self {
+        Self { config, log: Vec::new() }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.config
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.config.nodes
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.config.ranks()
+    }
+
+    /// Add `n` nodes (DELMA "scale up ... without interrupting jobs":
+    /// takes effect at the next wave boundary).
+    pub fn grow(&mut self, n: usize) {
+        self.config.nodes += n;
+        self.log.push(ElasticEvent::Grew { added: n, nodes: self.config.nodes });
+    }
+
+    /// Remove `n` nodes; at least one node always survives.
+    pub fn shrink(&mut self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(n < self.config.nodes, "cannot shrink {} nodes by {n}", self.config.nodes);
+        self.config.nodes -= n;
+        self.log.push(ElasticEvent::Shrank { removed: n, nodes: self.config.nodes });
+        Ok(())
+    }
+
+    pub fn events(&self) -> &[ElasticEvent] {
+        &self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeploymentKind;
+
+    fn cluster(nodes: usize) -> ElasticCluster {
+        ElasticCluster::new(
+            ClusterConfig::builder()
+                .deployment(DeploymentKind::Container)
+                .nodes(nodes)
+                .slots_per_node(2)
+                .build(),
+        )
+    }
+
+    #[test]
+    fn grow_and_shrink_update_ranks() {
+        let mut c = cluster(2);
+        assert_eq!(c.ranks(), 4);
+        c.grow(2);
+        assert_eq!(c.ranks(), 8);
+        c.shrink(3).unwrap();
+        assert_eq!(c.nodes(), 1);
+        assert_eq!(
+            c.events(),
+            &[
+                ElasticEvent::Grew { added: 2, nodes: 4 },
+                ElasticEvent::Shrank { removed: 3, nodes: 1 }
+            ]
+        );
+    }
+
+    #[test]
+    fn cannot_shrink_to_zero() {
+        let mut c = cluster(2);
+        assert!(c.shrink(2).is_err());
+        assert_eq!(c.nodes(), 2);
+    }
+}

@@ -1,0 +1,229 @@
+//! Fault tracking — the Mariane-style `FaultTracker` (§II) grafted onto
+//! our engine, addressing the paper's headline caveat that "MPI isn't
+//! fault tolerant".
+//!
+//! A master-side task-completion table tracks every task attempt. When a
+//! rank is marked failed (fault injection in tests / benches), its
+//! incomplete tasks are reassigned to surviving ranks by *file marker*
+//! (task id), like Mariane — not by re-splitting input like Hadoop. The
+//! engine consults the tracker between waves; within a wave MPI semantics
+//! (crash = job abort) still hold, matching the paper's §VI honesty.
+
+use std::collections::HashMap;
+
+use std::sync::Mutex;
+
+use crate::mpi::Rank;
+
+/// Lifecycle of one task in the completion table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    Pending,
+    Running { on: Rank, attempt: u32 },
+    Done { by: Rank, attempts: u32 },
+    /// Permanently failed (attempt budget exhausted).
+    Failed,
+}
+
+/// One attempt record, for post-mortem reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskAttempt {
+    pub task: usize,
+    pub rank: Rank,
+    pub attempt: u32,
+    pub succeeded: bool,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    states: Vec<TaskState>,
+    attempts_of: HashMap<usize, u32>,
+    history: Vec<TaskAttempt>,
+    dead_ranks: Vec<Rank>,
+    max_attempts: u32,
+}
+
+/// Thread-safe task-completion table (the master's view).
+#[derive(Debug)]
+pub struct FaultTracker {
+    inner: Mutex<Inner>,
+}
+
+impl FaultTracker {
+    pub fn new(num_tasks: usize) -> Self {
+        Self::with_max_attempts(num_tasks, 3)
+    }
+
+    pub fn with_max_attempts(num_tasks: usize, max_attempts: u32) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                states: vec![TaskState::Pending; num_tasks],
+                max_attempts,
+                ..Default::default()
+            }),
+        }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.inner.lock().unwrap().states.len()
+    }
+
+    /// Declare a rank dead: its running tasks return to Pending for
+    /// reassignment. Returns the reclaimed task ids.
+    pub fn mark_rank_failed(&self, rank: Rank) -> Vec<usize> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.dead_ranks.contains(&rank) {
+            g.dead_ranks.push(rank);
+        }
+        let mut reclaimed = Vec::new();
+        for (task, st) in g.states.iter_mut().enumerate() {
+            if let TaskState::Running { on, .. } = *st {
+                if on == rank {
+                    *st = TaskState::Pending;
+                    reclaimed.push(task);
+                }
+            }
+        }
+        for &task in &reclaimed {
+            let attempt = *g.attempts_of.get(&task).unwrap_or(&0);
+            g.history.push(TaskAttempt { task, rank, attempt, succeeded: false });
+        }
+        reclaimed
+    }
+
+    pub fn is_rank_dead(&self, rank: Rank) -> bool {
+        self.inner.lock().unwrap().dead_ranks.contains(&rank)
+    }
+
+    /// Claim the next pending task for `rank`; `None` when the table has
+    /// no pending work (done, running elsewhere, or failed). Tasks whose
+    /// attempt budget is exhausted are tombstoned as `Failed` and skipped.
+    pub fn claim_next(&self, rank: Rank) -> Option<usize> {
+        let mut g = self.inner.lock().unwrap();
+        if g.dead_ranks.contains(&rank) {
+            return None;
+        }
+        loop {
+            let idx = g
+                .states
+                .iter()
+                .position(|s| matches!(s, TaskState::Pending))?;
+            let attempt = {
+                let e = g.attempts_of.entry(idx).or_insert(0);
+                *e += 1;
+                *e
+            };
+            if attempt > g.max_attempts {
+                g.states[idx] = TaskState::Failed;
+                continue;
+            }
+            g.states[idx] = TaskState::Running { on: rank, attempt };
+            return Some(idx);
+        }
+    }
+
+    /// Record a successful completion.
+    pub fn complete(&self, task: usize, rank: Rank) {
+        let mut g = self.inner.lock().unwrap();
+        let attempts = *g.attempts_of.get(&task).unwrap_or(&1);
+        g.states[task] = TaskState::Done { by: rank, attempts };
+        g.history.push(TaskAttempt { task, rank, attempt: attempts, succeeded: true });
+    }
+
+    pub fn state(&self, task: usize) -> TaskState {
+        self.inner.lock().unwrap().states[task]
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .states
+            .iter()
+            .all(|s| matches!(s, TaskState::Done { .. }))
+    }
+
+    pub fn any_failed(&self) -> bool {
+        self.inner.lock().unwrap().states.iter().any(|s| matches!(s, TaskState::Failed))
+    }
+
+    pub fn history(&self) -> Vec<TaskAttempt> {
+        self.inner.lock().unwrap().history.clone()
+    }
+
+    /// (done, pending, running, failed) counts — progress reporting.
+    pub fn progress(&self) -> (usize, usize, usize, usize) {
+        let g = self.inner.lock().unwrap();
+        let mut done = 0;
+        let mut pending = 0;
+        let mut running = 0;
+        let mut failed = 0;
+        for s in &g.states {
+            match s {
+                TaskState::Done { .. } => done += 1,
+                TaskState::Pending => pending += 1,
+                TaskState::Running { .. } => running += 1,
+                TaskState::Failed => failed += 1,
+            }
+        }
+        (done, pending, running, failed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_complete_cycle() {
+        let t = FaultTracker::new(2);
+        let a = t.claim_next(Rank(0)).unwrap();
+        let b = t.claim_next(Rank(1)).unwrap();
+        assert_ne!(a, b);
+        assert!(t.claim_next(Rank(0)).is_none());
+        t.complete(a, Rank(0));
+        t.complete(b, Rank(1));
+        assert!(t.all_done());
+    }
+
+    #[test]
+    fn failed_rank_tasks_are_reclaimed_and_rerun() {
+        let t = FaultTracker::new(1);
+        let task = t.claim_next(Rank(0)).unwrap();
+        let reclaimed = t.mark_rank_failed(Rank(0));
+        assert_eq!(reclaimed, vec![task]);
+        assert!(t.is_rank_dead(Rank(0)));
+        // Dead rank can't claim.
+        assert!(t.claim_next(Rank(0)).is_none());
+        // Survivor picks it up.
+        let again = t.claim_next(Rank(1)).unwrap();
+        assert_eq!(again, task);
+        t.complete(again, Rank(1));
+        assert!(t.all_done());
+        assert!(matches!(t.state(task), TaskState::Done { by: Rank(1), attempts: 2 }));
+    }
+
+    #[test]
+    fn attempt_budget_exhaustion_marks_failed() {
+        let t = FaultTracker::with_max_attempts(1, 2);
+        for i in 0..2 {
+            let rank = Rank(i);
+            let task = t.claim_next(rank).unwrap();
+            t.mark_rank_failed(rank);
+            assert_eq!(task, 0);
+        }
+        // Third claim exceeds budget -> Failed, no task handed out.
+        assert!(t.claim_next(Rank(9)).is_none());
+        assert!(t.any_failed());
+        assert!(!t.all_done());
+    }
+
+    #[test]
+    fn progress_counts() {
+        let t = FaultTracker::new(3);
+        let a = t.claim_next(Rank(0)).unwrap();
+        t.complete(a, Rank(0));
+        let _b = t.claim_next(Rank(1)).unwrap();
+        assert_eq!(t.progress(), (1, 1, 1, 0));
+    }
+}

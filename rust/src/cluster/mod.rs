@@ -1,0 +1,23 @@
+//! Cluster substrate: node specs, deployment profiles, the network cost
+//! model, fault tracking and DELMA-style elasticity.
+//!
+//! §III of the paper proposes three ways to run the HPC MapReduce stack —
+//! bare metal (Raspberry Pi), VM clusters (VirtualBox) and containers
+//! (Docker swarm) — and §IV describes each testbed. This module encodes
+//! those substrates as *profiles* (startup cost, network latency/bandwidth,
+//! compute scale, virtualization overhead) that the MPI layer's virtual
+//! clock charges, so one binary reproduces all three deployment columns.
+
+mod config;
+mod deployment;
+mod elastic;
+mod fault;
+mod network;
+mod node;
+
+pub use config::{ClusterConfig, ClusterConfigBuilder};
+pub use deployment::{DeploymentKind, DeploymentProfile};
+pub use elastic::{ElasticCluster, ElasticEvent};
+pub use fault::{FaultTracker, TaskAttempt, TaskState};
+pub use network::NetworkModel;
+pub use node::NodeSpec;

@@ -1,0 +1,108 @@
+//! Network cost model: ns charged per message given size and placement.
+
+use super::deployment::DeploymentProfile;
+
+/// Converts (bytes, same-node?) into modeled wire time. Derived entirely
+/// from the [`DeploymentProfile`]; kept separate so the MPI layer depends
+/// on one small struct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkModel {
+    remote_latency_ns: u64,
+    remote_ns_per_byte: f64,
+    local_latency_ns: u64,
+    local_ns_per_byte: f64,
+    msg_overhead_ns: u64,
+}
+
+impl NetworkModel {
+    pub fn from_profile(p: &DeploymentProfile) -> Self {
+        Self {
+            remote_latency_ns: p.net_latency_us * 1_000,
+            remote_ns_per_byte: ns_per_byte(p.net_bandwidth_mbps),
+            local_latency_ns: p.local_latency_us * 1_000,
+            local_ns_per_byte: ns_per_byte(p.local_bandwidth_mbps),
+            msg_overhead_ns: p.msg_overhead_us * 1_000,
+        }
+    }
+
+    /// A zero-cost network (unit tests, Local profile).
+    pub fn free() -> Self {
+        Self {
+            remote_latency_ns: 0,
+            remote_ns_per_byte: 0.0,
+            local_latency_ns: 0,
+            local_ns_per_byte: 0.0,
+            msg_overhead_ns: 0,
+        }
+    }
+
+    /// Sender-side cost of putting `bytes` on the wire: per-message
+    /// envelope/injection overhead + bandwidth serialization on the
+    /// sender's uplink. Paid *serially* per message by the sender.
+    #[inline]
+    pub fn injection_ns(&self, bytes: usize, same_node: bool) -> u64 {
+        let per_byte = if same_node { self.local_ns_per_byte } else { self.remote_ns_per_byte };
+        let overhead = if same_node { self.msg_overhead_ns / 8 } else { self.msg_overhead_ns };
+        overhead + (bytes as f64 * per_byte) as u64
+    }
+
+    /// Propagation delay between send completion and receive availability.
+    #[inline]
+    pub fn propagation_ns(&self, same_node: bool) -> u64 {
+        if same_node {
+            self.local_latency_ns
+        } else {
+            self.remote_latency_ns
+        }
+    }
+
+    /// Modeled one-way end-to-end transfer time for `bytes`.
+    #[inline]
+    pub fn transfer_ns(&self, bytes: usize, same_node: bool) -> u64 {
+        self.injection_ns(bytes, same_node) + self.propagation_ns(same_node)
+    }
+}
+
+/// Mbit/s -> ns/byte; 0 Mbit/s means "free" (infinite bandwidth).
+fn ns_per_byte(mbps: u64) -> f64 {
+    if mbps == 0 {
+        0.0
+    } else {
+        8_000.0 / mbps as f64 // 8 bits/byte * 1000 ns/µs / (Mbit/s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeploymentKind;
+
+    #[test]
+    fn gigabitish_bandwidth_math() {
+        // 940 Mbit/s ≈ 8.51 ns/byte -> 1 MiB ≈ 8.9 ms + latency.
+        let m = NetworkModel::from_profile(&DeploymentKind::Container.profile());
+        let t = m.transfer_ns(1 << 20, false);
+        assert!(t > 8_000_000 && t < 10_000_000, "got {t} ns");
+    }
+
+    #[test]
+    fn local_is_much_cheaper_than_remote() {
+        let m = NetworkModel::from_profile(&DeploymentKind::BareMetal.profile());
+        assert!(m.transfer_ns(4096, true) * 10 < m.transfer_ns(4096, false));
+    }
+
+    #[test]
+    fn free_network_charges_nothing() {
+        let m = NetworkModel::free();
+        assert_eq!(m.transfer_ns(usize::MAX / 2, false), 0);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let m = NetworkModel::from_profile(&DeploymentKind::BareMetal.profile());
+        let small = m.transfer_ns(8, false);
+        // 200 µs propagation + 90 µs injection overhead floor.
+        assert!(small >= 290_000);
+        assert!(small < 300_000);
+    }
+}

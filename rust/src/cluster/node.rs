@@ -1,0 +1,92 @@
+//! Node resource model: what one machine/VM/container brings to the
+//! cluster. Used by the topology (rank placement), the shuffle (spill
+//! threshold from `mem_bytes`) and Fig 13's memory accounting.
+
+use super::deployment::{DeploymentKind, DeploymentProfile};
+
+/// One cluster node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub id: usize,
+    pub hostname: String,
+    /// Worker slots (the paper's per-node OpenMP threads / MPI slots).
+    pub slots: usize,
+    /// Physical memory budget in bytes (1 GiB on the paper's RPi 3B+,
+    /// 4 GiB on its VMs). The shuffle spills to disk past a fraction of
+    /// this — the out-of-core behaviour MR-MPI §II pages through.
+    pub mem_bytes: u64,
+    pub profile: DeploymentProfile,
+}
+
+impl NodeSpec {
+    /// The paper's §IV.A testbed node: Raspberry Pi 3B+, 1 GB LPDDR2.
+    pub fn raspberry_pi(id: usize) -> Self {
+        Self {
+            id,
+            hostname: format!("rpi{id}"),
+            slots: 4, // Cortex-A53, 4 cores
+            mem_bytes: 1 << 30,
+            profile: DeploymentKind::BareMetal.profile(),
+        }
+    }
+
+    /// The paper's §IV.B testbed node: Ubuntu 18.04 VM, 4 GB RAM.
+    pub fn virtualbox_vm(id: usize) -> Self {
+        Self {
+            id,
+            hostname: format!("vm{id}"),
+            slots: 2,
+            mem_bytes: 4 << 30,
+            profile: DeploymentKind::Vm.profile(),
+        }
+    }
+
+    /// The paper's §IV.C testbed node: alpine-mpich container.
+    pub fn docker_container(id: usize) -> Self {
+        Self {
+            id,
+            hostname: format!("mpi-node-{id}"),
+            slots: 4,
+            mem_bytes: 2 << 30,
+            profile: DeploymentKind::Container.profile(),
+        }
+    }
+
+    /// Developer-loop node: all local, generous memory.
+    pub fn local(id: usize) -> Self {
+        Self {
+            id,
+            hostname: format!("local{id}"),
+            slots: 8,
+            mem_bytes: 16 << 30,
+            profile: DeploymentKind::Local.profile(),
+        }
+    }
+
+    pub fn for_kind(kind: DeploymentKind, id: usize) -> Self {
+        match kind {
+            DeploymentKind::BareMetal => Self::raspberry_pi(id),
+            DeploymentKind::Vm => Self::virtualbox_vm(id),
+            DeploymentKind::Container => Self::docker_container(id),
+            DeploymentKind::Local => Self::local(id),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_memory_sizes() {
+        assert_eq!(NodeSpec::raspberry_pi(0).mem_bytes, 1 << 30);
+        assert_eq!(NodeSpec::virtualbox_vm(0).mem_bytes, 4 << 30);
+    }
+
+    #[test]
+    fn for_kind_matches_profile() {
+        for kind in DeploymentKind::ALL {
+            assert_eq!(NodeSpec::for_kind(kind, 3).profile.kind, kind);
+        }
+    }
+}

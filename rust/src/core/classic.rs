@@ -1,0 +1,170 @@
+//! Classic MapReduce — the Hadoop pattern the paper's Fig 1 shows:
+//! map everything, shuffle *every* pair, group by key on the reducer,
+//! reduce. The baseline both Blaze modes are measured against, and the
+//! mode whose raw-pair shuffle volume makes Fig 10's small-key-range
+//! wordcount anti-scale.
+//!
+//! Map output rides a [`SpillBuffer`]: past the node memory budget pairs
+//! go to disk (MR-MPI's out-of-core pages).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::dist::ShardRouter;
+use crate::metrics::PeakTracker;
+use crate::mpi::Communicator;
+use crate::serial::FastSerialize;
+
+use super::scheduler::TaskFeed;
+use super::shuffle::{shuffle_pairs, SpillBuffer};
+
+/// SPMD rank body for one classic job. Returns (result shard, spilled
+/// bytes). `reduce` sees the full value multiset per key.
+pub fn classic_rank<I, K, V, M, R>(
+    comm: &Communicator,
+    feed: &TaskFeed<'_, I>,
+    map: &M,
+    reduce: &R,
+    salt: u64,
+    spill_threshold: u64,
+    tracker: &Arc<PeakTracker>,
+) -> Result<(HashMap<K, V>, u64)>
+where
+    I: Sync,
+    K: FastSerialize + Hash + Eq + Send,
+    V: FastSerialize + Send,
+    M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+    R: Fn(&K, Vec<V>) -> V + Sync,
+{
+    // Map phase: every pair is kept (possibly spilled), none combined.
+    let mut buffer: SpillBuffer<K, V> = SpillBuffer::new(spill_threshold, tracker.clone());
+    let mut rank_feed = feed.for_rank(comm.rank());
+    while let Some((task, chunk)) = rank_feed.next() {
+        let res: Result<()> = comm.timed(|| {
+            let mut err = None;
+            for item in chunk {
+                map(item, &mut |k, v| {
+                    if err.is_none() {
+                        if let Err(e) = buffer.push(k, v) {
+                            err = Some(e);
+                        }
+                    }
+                });
+            }
+            err.map_or(Ok(()), Err)
+        });
+        res?;
+        rank_feed.complete(task);
+    }
+
+    let spilled = buffer.spilled_bytes();
+    let pairs = comm.timed(|| buffer.drain())?;
+
+    // Shuffle every raw pair.
+    let router = ShardRouter::new(comm.size(), salt);
+    let mine = shuffle_pairs(comm, &router, pairs, tracker)?;
+
+    // Group + reduce on the owner.
+    let out = comm.timed(|| {
+        let mut groups: HashMap<K, Vec<V>> = HashMap::with_capacity(mine.len() / 2 + 1);
+        for (k, v) in mine {
+            groups.entry(k).or_default().push(v);
+        }
+        let group_bytes: u64 = groups
+            .iter()
+            .map(|(k, vs)| {
+                (k.size_hint() + vs.iter().map(FastSerialize::size_hint).sum::<usize>() + 32)
+                    as u64
+            })
+            .sum();
+        tracker.alloc(group_bytes);
+        let mut out = HashMap::with_capacity(groups.len());
+        for (k, vs) in groups {
+            let reduced = reduce(&k, vs);
+            out.insert(k, reduced);
+        }
+        tracker.free(group_bytes);
+        out
+    });
+    let out_bytes: u64 =
+        out.iter().map(|(k, v)| (k.size_hint() + v.size_hint() + 16) as u64).sum();
+    tracker.alloc(out_bytes);
+    Ok((out, spilled))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::Scheduling;
+    use crate::mpi::{run_ranks, Universe};
+
+    #[test]
+    fn classic_wordcount_matches_truth() {
+        let input: Vec<String> =
+            ["x y x", "y z y", "x"].iter().map(|s| s.to_string()).collect();
+        let feed = TaskFeed::new(&input, 3, 1, Scheduling::Static, None);
+        let results = run_ranks(Universe::local(3), |c| {
+            let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+                for w in line.split_whitespace() {
+                    emit(w.to_string(), 1);
+                }
+            };
+            let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+            let tracker = PeakTracker::new();
+            classic_rank(c, &feed, &map, &reduce, 0, u64::MAX, &tracker).unwrap().0
+        });
+        let mut merged: HashMap<String, u64> = HashMap::new();
+        for shard in results {
+            merged.extend(shard);
+        }
+        assert_eq!(merged[&"x".to_string()], 3);
+        assert_eq!(merged[&"y".to_string()], 3);
+        assert_eq!(merged[&"z".to_string()], 1);
+    }
+
+    #[test]
+    fn classic_reduce_sees_full_multiset() {
+        let input: Vec<u32> = (0..10).collect();
+        let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
+        let results = run_ranks(Universe::local(2), |c| {
+            // All items map to one key; reducer asserts it sees all 10.
+            let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit(0u8, *i);
+            let reduce = |_k: &u8, vs: Vec<u32>| {
+                assert_eq!(vs.len(), 10);
+                vs.into_iter().max().unwrap()
+            };
+            let tracker = PeakTracker::new();
+            classic_rank(c, &feed, &map, &reduce, 0, u64::MAX, &tracker).unwrap().0
+        });
+        let owner_shard: Vec<_> = results.into_iter().filter(|m| !m.is_empty()).collect();
+        assert_eq!(owner_shard.len(), 1);
+        assert_eq!(owner_shard[0][&0u8], 9);
+    }
+
+    #[test]
+    fn classic_with_tiny_spill_threshold_still_correct() {
+        let input: Vec<String> = (0..50).map(|i| format!("w{} w{}", i % 5, i % 3)).collect();
+        let feed = TaskFeed::new(&input, 2, 2, Scheduling::Static, None);
+        let results = run_ranks(Universe::local(2), |c| {
+            let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+                for w in line.split_whitespace() {
+                    emit(w.to_string(), 1);
+                }
+            };
+            let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+            let tracker = PeakTracker::new();
+            classic_rank(c, &feed, &map, &reduce, 0, 128, &tracker).unwrap()
+        });
+        let spilled: u64 = results.iter().map(|(_, s)| s).sum();
+        assert!(spilled > 0, "tiny threshold must force spilling");
+        let mut merged: HashMap<String, u64> = HashMap::new();
+        for (shard, _) in results {
+            merged.extend(shard);
+        }
+        let total: u64 = merged.values().sum();
+        assert_eq!(total, 100, "50 lines x 2 words");
+    }
+}

@@ -1,0 +1,256 @@
+//! Delayed Reduction — the paper's contribution (§III.D, Figs 6-7).
+//!
+//! Paper pseudocode, step by step:
+//!  1. a source collection feeds the mappers;
+//!  2. mappers emit `(K, V)` pairs;
+//!  3. an *intermediate reducer* combines keys into a `DistVector` of
+//!     locally-grouped runs — grouping, not reducing, so the value
+//!     multiset survives (this is what eager reduction destroys and why
+//!     matmul/linreg "felt rigidity");
+//!  4. runs are sorted with **merge sort** and shuffled across the
+//!     cluster, yielding `(K, Iterable<V>)` on the owning rank;
+//!  5. the final reducer runs over the iterable — *"immediately or later.
+//!     Laziness of Reduction is displayed"* — hence [`DelayedOutput`];
+//!  6. results land in a `DistHashMap`-shaped shard.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::dist::{DistVector, ShardRouter};
+use crate::metrics::PeakTracker;
+use crate::mpi::Communicator;
+use crate::serial::FastSerialize;
+
+use super::context::{Emitter, GroupEmitter};
+use super::scheduler::TaskFeed;
+use super::shuffle::shuffle_pairs;
+
+/// The lazily-reducible output of the delayed pipeline on one rank:
+/// key-sorted groups of `(K, Iterable<V>)`, final reduce not yet applied.
+#[derive(Debug)]
+pub struct DelayedOutput<K, V> {
+    groups: Vec<(K, Vec<V>)>,
+}
+
+impl<K: Ord + Hash + Eq, V> DelayedOutput<K, V> {
+    /// Iterate `(key, values)` groups without reducing — step 5's "later".
+    pub fn iter_groups(&self) -> impl Iterator<Item = (&K, &[V])> {
+        self.groups.iter().map(|(k, vs)| (k, vs.as_slice()))
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Apply the final reducer now — step 5's "immediately".
+    pub fn reduce_now<R: Fn(&K, Vec<V>) -> V>(self, reduce: R) -> HashMap<K, V> {
+        let mut out = HashMap::with_capacity(self.groups.len());
+        for (k, vs) in self.groups {
+            let reduced = reduce(&k, vs);
+            out.insert(k, reduced);
+        }
+        out
+    }
+}
+
+/// SPMD rank body up to (and excluding) the final reduce: map, local
+/// group, merge-sort, shuffle, merge. Returns this rank's
+/// [`DelayedOutput`] — call `reduce_now` for step 5, or iterate lazily.
+pub fn delayed_rank_groups<I, K, V, M>(
+    comm: &Communicator,
+    feed: &TaskFeed<'_, I>,
+    map: &M,
+    salt: u64,
+    tracker: &Arc<PeakTracker>,
+) -> Result<DelayedOutput<K, V>>
+where
+    I: Sync,
+    K: FastSerialize + Hash + Eq + Ord + Send,
+    V: FastSerialize + Send,
+    M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+{
+    // Steps 1-3: map + intermediate (grouping) reducer.
+    let mut emitter: GroupEmitter<K, V> = GroupEmitter::new();
+    let mut rank_feed = feed.for_rank(comm.rank());
+    while let Some((task, chunk)) = rank_feed.next() {
+        comm.timed(|| {
+            for item in chunk {
+                map(item, &mut |k, v| emitter.emit(k, v));
+            }
+        });
+        rank_feed.complete(task);
+    }
+
+    // The temporary DistVector of locally-grouped runs.
+    let mut runs: DistVector<'_, (K, Vec<V>)> =
+        DistVector::from_local(comm, comm.timed(|| emitter.groups.into_iter().collect()));
+    let run_bytes: u64 = runs
+        .local()
+        .iter()
+        .map(|(k, vs)| {
+            (k.size_hint() + vs.iter().map(FastSerialize::size_hint).sum::<usize>() + 32) as u64
+        })
+        .sum();
+    tracker.alloc(run_bytes);
+
+    // Step 4a: merge sort the local run by key. `sort_by` is a stable
+    // adaptive merge sort — literally the paper's "sorting using Merge
+    // Sort".
+    comm.timed(|| runs.local_mut().sort_by(|a, b| a.0.cmp(&b.0)));
+
+    // Step 4b: shuffle runs to key owners.
+    let router = ShardRouter::new(comm.size(), salt);
+    let incoming = shuffle_pairs(comm, &router, runs.into_local(), tracker)?;
+    tracker.free(run_bytes);
+
+    // Step 4c: merge the (per-source sorted) incoming runs into key-sorted
+    // groups. Sorting a concatenation of sorted runs is the k-way merge
+    // phase of merge sort; Rust's stable sort detects and merges the runs.
+    let groups = comm.timed(|| {
+        let mut incoming = incoming;
+        incoming.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut groups: Vec<(K, Vec<V>)> = Vec::new();
+        for (k, mut vs) in incoming {
+            match groups.last_mut() {
+                Some((lk, lvs)) if *lk == k => lvs.append(&mut vs),
+                _ => groups.push((k, vs)),
+            }
+        }
+        groups
+    });
+    let group_bytes: u64 = groups
+        .iter()
+        .map(|(k, vs)| {
+            (k.size_hint() + vs.iter().map(FastSerialize::size_hint).sum::<usize>() + 32) as u64
+        })
+        .sum();
+    tracker.alloc(group_bytes);
+    // Charge stays until the output is dropped/reduced; engine frees after
+    // reduce via its own accounting of the result map.
+    tracker.free(group_bytes);
+    Ok(DelayedOutput { groups })
+}
+
+/// Full delayed-reduction rank body: groups then reduces immediately.
+/// Returns (result shard, spilled bytes = 0; grouping happens in memory —
+/// out-of-core delayed reduction is future work, as in the paper).
+pub fn delayed_rank<I, K, V, M, R>(
+    comm: &Communicator,
+    feed: &TaskFeed<'_, I>,
+    map: &M,
+    reduce: &R,
+    salt: u64,
+    tracker: &Arc<PeakTracker>,
+) -> Result<(HashMap<K, V>, u64)>
+where
+    I: Sync,
+    K: FastSerialize + Hash + Eq + Ord + Send,
+    V: FastSerialize + Send,
+    M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+    R: Fn(&K, Vec<V>) -> V + Sync,
+{
+    let output = delayed_rank_groups(comm, feed, map, salt, tracker)?;
+    let out = comm.timed(|| output.reduce_now(reduce));
+    let out_bytes: u64 =
+        out.iter().map(|(k, v)| (k.size_hint() + v.size_hint() + 16) as u64).sum();
+    tracker.alloc(out_bytes);
+    Ok((out, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::job::Scheduling;
+    use crate::mpi::{run_ranks, Universe};
+
+    #[test]
+    fn delayed_wordcount_matches_truth() {
+        let input: Vec<String> =
+            ["a b a", "b c b", "a"].iter().map(|s| s.to_string()).collect();
+        let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
+        let results = run_ranks(Universe::local(2), |c| {
+            let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+                for w in line.split_whitespace() {
+                    emit(w.to_string(), 1);
+                }
+            };
+            let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+            let tracker = PeakTracker::new();
+            delayed_rank(c, &feed, &map, &reduce, 0, &tracker).unwrap().0
+        });
+        let mut merged: HashMap<String, u64> = HashMap::new();
+        for shard in results {
+            merged.extend(shard);
+        }
+        assert_eq!(merged[&"a".to_string()], 3);
+        assert_eq!(merged[&"b".to_string()], 3);
+        assert_eq!(merged[&"c".to_string()], 1);
+    }
+
+    #[test]
+    fn groups_are_key_sorted_and_complete() {
+        let input: Vec<u32> = (0..20).collect();
+        let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
+        let outputs = run_ranks(Universe::local(2), |c| {
+            let map = |i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 4, *i);
+            let tracker = PeakTracker::new();
+            let out = delayed_rank_groups(c, &feed, &map, 0, &tracker).unwrap();
+            let keys: Vec<u32> = out.iter_groups().map(|(k, _)| *k).collect();
+            let mut sorted = keys.clone();
+            sorted.sort_unstable();
+            assert_eq!(keys, sorted, "groups must be key-sorted");
+            out.iter_groups()
+                .map(|(k, vs)| (*k, vs.len()))
+                .collect::<Vec<_>>()
+        });
+        // Each key 0..4 appears on exactly one rank with all 5 values.
+        let mut totals: HashMap<u32, usize> = HashMap::new();
+        for groups in outputs {
+            for (k, n) in groups {
+                assert!(totals.insert(k, n).is_none(), "key {k} on two ranks");
+            }
+        }
+        assert_eq!(totals.len(), 4);
+        assert!(totals.values().all(|&n| n == 5));
+    }
+
+    #[test]
+    fn laziness_reduce_later_still_correct() {
+        // The "can be called immediately or later" property: iterate the
+        // groups first (e.g. to inspect), then reduce.
+        let input: Vec<u32> = (1..=6).collect();
+        let feed = TaskFeed::new(&input, 1, 1, Scheduling::Static, None);
+        let results = run_ranks(Universe::local(1), |c| {
+            let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit((i % 2) as u8, *i);
+            let tracker = PeakTracker::new();
+            let out = delayed_rank_groups(c, &feed, &map, 0, &tracker).unwrap();
+            let inspected: usize = out.iter_groups().map(|(_, vs)| vs.len()).sum();
+            assert_eq!(inspected, 6);
+            out.reduce_now(|_, vs| vs.into_iter().sum::<u32>())
+        });
+        assert_eq!(results[0][&0u8], 2 + 4 + 6);
+        assert_eq!(results[0][&1u8], 1 + 3 + 5);
+    }
+
+    #[test]
+    fn iterable_reduce_beyond_monoid() {
+        // Median: impossible with eager (scalar) combine, fine with the
+        // iterable reducer — the §III.D motivation in miniature.
+        let input: Vec<u32> = vec![5, 1, 9, 3, 7];
+        let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
+        let results = run_ranks(Universe::local(2), |c| {
+            let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit(0, *i);
+            let reduce = |_k: &u8, mut vs: Vec<u32>| {
+                vs.sort_unstable();
+                vs[vs.len() / 2]
+            };
+            let tracker = PeakTracker::new();
+            delayed_rank(c, &feed, &map, &reduce, 0, &tracker).unwrap().0
+        });
+        let owner: Vec<_> = results.into_iter().filter(|m| !m.is_empty()).collect();
+        assert_eq!(owner[0][&0u8], 5);
+    }
+}

@@ -1,0 +1,324 @@
+//! The job engine: universe setup, mode dispatch, metrics, result
+//! collection — what `blaze run` and the apps call.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::metrics::PeakTracker;
+use crate::mpi::{run_ranks_with_universe, Communicator, Topology, Universe};
+use crate::serial::FastSerialize;
+
+use super::classic::classic_rank;
+use super::delayed::delayed_rank;
+use super::eager::eager_rank;
+use super::job::{JobConfig, JobResult, JobStats, ReductionMode};
+use super::scheduler::{FaultPlan, TaskFeed};
+
+/// A configured MapReduce job over a borrowed input slice.
+///
+/// ```no_run
+/// use blaze_rs::prelude::*;
+/// use blaze_rs::core::MapReduceJob;
+///
+/// let cluster = ClusterConfig::builder().ranks(4).build();
+/// let lines = vec!["one fish two fish".to_string()];
+/// let result = MapReduceJob::new(&cluster, &lines)
+///     .run_eager(
+///         |line: &String, emit: &mut dyn FnMut(String, u64)| {
+///             for w in line.split_whitespace() { emit(w.to_string(), 1); }
+///         },
+///         |acc, v| *acc += v,
+///     )
+///     .unwrap();
+/// assert_eq!(result.result[&"fish".to_string()], 2);
+/// ```
+pub struct MapReduceJob<'i, I> {
+    cluster: ClusterConfig,
+    config: JobConfig,
+    input: &'i [I],
+    fault: Option<FaultPlan>,
+}
+
+impl<'i, I: Sync> MapReduceJob<'i, I> {
+    pub fn new(cluster: &ClusterConfig, input: &'i [I]) -> Self {
+        Self { cluster: cluster.clone(), config: JobConfig::default(), input, fault: None }
+    }
+
+    pub fn with_config(mut self, config: JobConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: ReductionMode) -> Self {
+        self.config.mode = mode;
+        self
+    }
+
+    /// Inject a failure (Dynamic scheduling only): see [`FaultPlan`].
+    pub fn with_fault(mut self, fault: FaultPlan) -> Self {
+        self.fault = Some(fault);
+        self
+    }
+
+    fn salt(&self) -> u64 {
+        self.cluster.seed ^ self.config.salt
+    }
+
+    /// Run with Blaze eager reduction (combine must be assoc+comm).
+    pub fn run_eager<K, V, M>(
+        &self,
+        map: M,
+        combine: impl Fn(&mut V, V) + Sync,
+    ) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: FastSerialize + Hash + Eq + Send,
+        V: FastSerialize + Send,
+        M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+    {
+        let salt = self.salt();
+        self.execute(move |comm, feed, tracker| {
+            eager_rank(comm, feed, &map, &combine, salt, tracker)
+        })
+    }
+
+    /// Run classic (Hadoop-style) MapReduce.
+    pub fn run_classic<K, V, M, R>(&self, map: M, reduce: R) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: FastSerialize + Hash + Eq + Send,
+        V: FastSerialize + Send,
+        M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+        R: Fn(&K, Vec<V>) -> V + Sync,
+    {
+        let salt = self.salt();
+        let spill = self.cluster.spill_threshold_bytes();
+        self.execute(move |comm, feed, tracker| {
+            classic_rank(comm, feed, &map, &reduce, salt, spill, tracker)
+        })
+    }
+
+    /// Run with the paper's Delayed Reduction.
+    pub fn run_delayed<K, V, M, R>(&self, map: M, reduce: R) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: FastSerialize + Hash + Eq + Ord + Send,
+        V: FastSerialize + Send,
+        M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+        R: Fn(&K, Vec<V>) -> V + Sync,
+    {
+        let salt = self.salt();
+        self.execute(move |comm, feed, tracker| {
+            delayed_rank(comm, feed, &map, &reduce, salt, tracker)
+        })
+    }
+
+    /// Mode-dispatched run for monoid reductions (`op` assoc+comm): the
+    /// same job runs under any [`ReductionMode`], which is how the benches
+    /// compare the three engines apples-to-apples.
+    pub fn run_monoid<K, V, M>(
+        &self,
+        map: M,
+        op: impl Fn(V, V) -> V + Sync + Copy,
+    ) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: FastSerialize + Hash + Eq + Ord + Send,
+        V: FastSerialize + Send + Clone,
+        M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+    {
+        match self.config.mode {
+            ReductionMode::Eager => self.run_eager(map, move |acc: &mut V, v| {
+                let cur = acc.clone();
+                *acc = op(cur, v);
+            }),
+            ReductionMode::Classic => self.run_classic(map, move |_k: &K, vs: Vec<V>| {
+                vs.into_iter().reduce(op).expect("non-empty group")
+            }),
+            ReductionMode::Delayed => self.run_delayed(map, move |_k: &K, vs: Vec<V>| {
+                vs.into_iter().reduce(op).expect("non-empty group")
+            }),
+        }
+    }
+
+    /// Shared scaffolding: build the universe, run the SPMD body on every
+    /// rank, merge shards, assemble stats.
+    fn execute<K, V, B>(&self, body: B) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: Hash + Eq + Send,
+        V: Send,
+        B: Fn(&Communicator, &TaskFeed<'_, I>, &Arc<PeakTracker>) -> Result<(HashMap<K, V>, u64)>
+            + Sync,
+    {
+        self.cluster.validate()?;
+        let wall_start = Instant::now();
+        let topology = Topology::from_config(&self.cluster);
+        let universe = Universe::new(topology, self.cluster.network_model());
+        let stats_handle = universe.stats();
+        let tracker = PeakTracker::new();
+        let feed = TaskFeed::new(
+            self.input,
+            self.cluster.ranks(),
+            self.config.tasks_per_rank,
+            self.config.scheduling,
+            self.fault,
+        );
+
+        let (rank_results, clocks) = run_ranks_with_universe(universe, |comm| {
+            body(comm, &feed, &tracker)
+        });
+
+        // Merge shards (disjoint key ownership) and surface rank errors.
+        let mut merged: HashMap<K, V> = HashMap::new();
+        let mut spilled = 0u64;
+        for (i, r) in rank_results.into_iter().enumerate() {
+            let (shard, rank_spilled) = r.map_err(|e| anyhow!("rank {i} failed: {e:#}"))?;
+            spilled += rank_spilled;
+            for (k, v) in shard {
+                if merged.insert(k, v).is_some() {
+                    return Err(anyhow!("key owned by two ranks — router desync"));
+                }
+            }
+        }
+
+        let profile = self.cluster.deployment.profile();
+        let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
+        let (msgs, bytes, _rmsgs, rbytes) = stats_handle.snapshot();
+        // Job time excludes cluster bring-up (the paper benchmarks jobs on
+        // an already-running cluster); startup is reported separately.
+        let stats = JobStats {
+            modeled_ms: slowest.0 as f64 / 1e6,
+            compute_ms: slowest.1 as f64 / 1e6,
+            net_ms: slowest.2 as f64 / 1e6,
+            startup_ms: profile.startup_ms as f64,
+            shuffle_bytes: bytes,
+            messages: msgs,
+            remote_bytes: rbytes,
+            peak_mem_bytes: tracker.peak_bytes(),
+            spilled_bytes: spilled,
+            host_wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
+        };
+        Ok(JobResult { result: merged, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeploymentKind;
+    use crate::core::job::Scheduling;
+    use crate::mpi::Rank;
+
+    fn wordcount_input(lines: usize) -> Vec<String> {
+        (0..lines).map(|i| format!("w{} w{} common", i % 7, i % 3)).collect()
+    }
+
+    fn wc_map(line: &String, emit: &mut dyn FnMut(String, u64)) {
+        for w in line.split_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    }
+
+    #[test]
+    fn all_three_modes_agree() {
+        let input = wordcount_input(100);
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let mut outputs = Vec::new();
+        for mode in ReductionMode::ALL {
+            let job = MapReduceJob::new(&cluster, &input)
+                .with_config(JobConfig { mode, ..Default::default() });
+            let out = job.run_monoid(wc_map, |a: u64, b: u64| a + b).unwrap();
+            outputs.push(out.result);
+        }
+        assert_eq!(outputs[0], outputs[1]);
+        assert_eq!(outputs[1], outputs[2]);
+        assert_eq!(outputs[0][&"common".to_string()], 100);
+    }
+
+    #[test]
+    fn dynamic_scheduling_matches_static() {
+        let input = wordcount_input(60);
+        let cluster = ClusterConfig::builder().ranks(3).build();
+        let sta = MapReduceJob::new(&cluster, &input)
+            .with_config(JobConfig { scheduling: Scheduling::Static, ..Default::default() })
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap();
+        let dyn_ = MapReduceJob::new(&cluster, &input)
+            .with_config(JobConfig { scheduling: Scheduling::Dynamic, ..Default::default() })
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap();
+        assert_eq!(sta.result, dyn_.result);
+    }
+
+    #[test]
+    fn fault_injection_job_still_completes() {
+        let input = wordcount_input(80);
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let healthy = MapReduceJob::new(&cluster, &input)
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap();
+        let faulty = MapReduceJob::new(&cluster, &input)
+            .with_fault(FaultPlan { rank: Rank(2), after_tasks: 1 })
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap();
+        assert_eq!(healthy.result, faulty.result);
+    }
+
+    #[test]
+    fn stats_populated_and_consistent() {
+        let input = wordcount_input(50);
+        let cluster = ClusterConfig::builder()
+            .deployment(DeploymentKind::Container)
+            .nodes(2)
+            .slots_per_node(2)
+            .build();
+        let out = MapReduceJob::new(&cluster, &input)
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap();
+        let s = &out.stats;
+        assert!(s.modeled_ms > 0.0);
+        assert!(s.shuffle_bytes > 0);
+        assert!(s.messages > 0);
+        assert!(s.remote_bytes <= s.shuffle_bytes);
+        assert!(s.peak_mem_bytes > 0);
+        assert!(s.host_wall_ms > 0.0);
+        // Container startup is 1.2 s in the profile — reported, not
+        // folded into modeled_ms.
+        assert!(s.startup_ms == 1_200.0);
+        assert!(s.modeled_ms < s.startup_ms);
+    }
+
+    #[test]
+    fn empty_input_produces_empty_result() {
+        let input: Vec<String> = Vec::new();
+        let cluster = ClusterConfig::builder().ranks(2).build();
+        let out = MapReduceJob::new(&cluster, &input)
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap();
+        assert!(out.result.is_empty());
+    }
+
+    #[test]
+    fn eager_moves_fewer_bytes_than_classic_on_small_keyrange() {
+        // The Fig 2 vs Fig 1 claim: eager's shuffle volume collapses when
+        // the key range is small.
+        let input = wordcount_input(400);
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let eager = MapReduceJob::new(&cluster, &input)
+            .with_mode(ReductionMode::Eager)
+            .run_monoid(wc_map, |a: u64, b| a + b)
+            .unwrap();
+        let classic = MapReduceJob::new(&cluster, &input)
+            .with_mode(ReductionMode::Classic)
+            .run_monoid(wc_map, |a: u64, b| a + b)
+            .unwrap();
+        assert_eq!(eager.result, classic.result);
+        assert!(
+            eager.stats.shuffle_bytes * 2 < classic.stats.shuffle_bytes,
+            "eager {} vs classic {}",
+            eager.stats.shuffle_bytes,
+            classic.stats.shuffle_bytes
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Job-level configuration and results.
+
+/// Which reduction strategy the engine runs (see module docs of
+/// [`crate::core`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ReductionMode {
+    /// Hadoop-style full shuffle then reduce (paper Fig 1).
+    Classic,
+    /// Blaze eager reduction: combine during map (paper Fig 2).
+    #[default]
+    Eager,
+    /// The paper's Delayed Reduction (§III.D, Figs 6-7).
+    Delayed,
+}
+
+impl ReductionMode {
+    pub const ALL: [ReductionMode; 3] =
+        [ReductionMode::Classic, ReductionMode::Eager, ReductionMode::Delayed];
+}
+
+impl std::fmt::Display for ReductionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ReductionMode::Classic => "classic",
+            ReductionMode::Eager => "eager",
+            ReductionMode::Delayed => "delayed",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::str::FromStr for ReductionMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "classic" => Ok(ReductionMode::Classic),
+            "eager" => Ok(ReductionMode::Eager),
+            "delayed" => Ok(ReductionMode::Delayed),
+            other => Err(anyhow::anyhow!("unknown reduction mode {other:?}")),
+        }
+    }
+}
+
+/// Task assignment policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Scheduling {
+    /// Even static split (MPI default; exhibits the data-skew stragglers
+    /// the paper complains about in §I).
+    Static,
+    /// Dynamic work claiming from a shared queue (skew mitigation).
+    #[default]
+    Dynamic,
+}
+
+/// Per-job knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobConfig {
+    pub mode: ReductionMode,
+    pub scheduling: Scheduling,
+    /// Input chunks per rank (dynamic scheduling granularity).
+    pub tasks_per_rank: usize,
+    /// Partition salt (combined with the cluster seed).
+    pub salt: u64,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self {
+            mode: ReductionMode::default(),
+            scheduling: Scheduling::default(),
+            tasks_per_rank: 4,
+            salt: 0,
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn with_mode(mode: ReductionMode) -> Self {
+        Self { mode, ..Default::default() }
+    }
+}
+
+/// Measured + modeled execution statistics for one job.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobStats {
+    /// Modeled wall time: slowest rank's virtual clock + cluster startup.
+    pub modeled_ms: f64,
+    /// Modeled compute part (slowest rank).
+    pub compute_ms: f64,
+    /// Modeled network part (slowest rank).
+    pub net_ms: f64,
+    /// Cluster bring-up charged by the deployment profile.
+    pub startup_ms: f64,
+    /// Total bytes crossing the (virtual) wire.
+    pub shuffle_bytes: u64,
+    /// Messages on the wire.
+    pub messages: u64,
+    /// Bytes that crossed node boundaries.
+    pub remote_bytes: u64,
+    /// Peak modeled data-path memory across the job (Fig 13).
+    pub peak_mem_bytes: u64,
+    /// Bytes spilled to disk by the shuffle (out-of-core path).
+    pub spilled_bytes: u64,
+    /// Host wall-clock of the whole job (for harness sanity only —
+    /// figures use `modeled_ms`).
+    pub host_wall_ms: f64,
+}
+
+/// A completed job: driver-side result + stats.
+#[derive(Debug, Clone)]
+pub struct JobResult<R> {
+    pub result: R,
+    pub stats: JobStats,
+}
+
+impl<R> JobResult<R> {
+    pub fn map<S>(self, f: impl FnOnce(R) -> S) -> JobResult<S> {
+        JobResult { result: f(self.result), stats: self.stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for mode in ReductionMode::ALL {
+            let parsed: ReductionMode = mode.to_string().parse().unwrap();
+            assert_eq!(parsed, mode);
+        }
+        assert!("hadoop".parse::<ReductionMode>().is_err());
+    }
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = JobConfig::default();
+        assert_eq!(c.mode, ReductionMode::Eager);
+        assert!(c.tasks_per_rank >= 1);
+    }
+
+    #[test]
+    fn job_result_map() {
+        let r = JobResult { result: 21u32, stats: JobStats::default() };
+        assert_eq!(r.map(|x| x * 2).result, 42);
+    }
+}

@@ -1,0 +1,32 @@
+//! The MapReduce core: job configuration, emit contexts, shuffle, and the
+//! three reduction engines.
+//!
+//! * [`classic`] — Hadoop-style: full map -> shuffle -> group -> reduce
+//!   (the paper's Fig 1).
+//! * [`eager`] — Blaze's Eager Reduction: combine into a thread-local
+//!   cache *during* map, shuffle only combined pairs (Fig 2).
+//! * [`delayed`] — the paper's contribution (§III.D, Figs 6-7): mappers
+//!   emit locally-grouped runs into a `DistVector`, runs are merge-sorted
+//!   and shuffled, and the final reducer sees `(K, Iterable<V>)` — lazily.
+//!
+//! [`engine`] wraps a mode dispatch + metrics + result collection around
+//! the SPMD bodies; [`scheduler`] adds dynamic task claiming (data-skew
+//! mitigation) and fault-tolerant waves on top.
+
+pub mod classic;
+pub mod context;
+pub mod delayed;
+pub mod eager;
+pub mod engine;
+pub mod job;
+pub mod partitioner;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use context::Emitter;
+pub use delayed::DelayedOutput;
+pub use engine::MapReduceJob;
+pub use job::{JobConfig, JobResult, JobStats, ReductionMode, Scheduling};
+pub use partitioner::RangePartitioner;
+pub use scheduler::{FaultPlan, TaskFeed};
+pub use shuffle::SpillBuffer;

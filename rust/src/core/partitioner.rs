@@ -1,0 +1,84 @@
+//! Partitioners: key -> reducer-rank placement beyond the default hash
+//! router.
+//!
+//! [`RangePartitioner`] assigns contiguous integer key ranges to ranks —
+//! the layout the AOT `wordcount_segsum` kernel needs (each reducer rank
+//! owns keys `[lo, hi)` and reduces them with one histogram contraction).
+
+use crate::mpi::Rank;
+
+/// Contiguous-range partitioner over integer keys `0..num_keys`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RangePartitioner {
+    num_keys: u32,
+    ranks: usize,
+}
+
+impl RangePartitioner {
+    pub fn new(num_keys: u32, ranks: usize) -> Self {
+        assert!(ranks > 0, "need at least one rank");
+        assert!(num_keys > 0, "need at least one key");
+        Self { num_keys, ranks }
+    }
+
+    pub fn num_keys(&self) -> u32 {
+        self.num_keys
+    }
+
+    /// Owning rank of a key (keys >= num_keys clamp to the last rank).
+    pub fn owner(&self, key: u32) -> Rank {
+        let key = key.min(self.num_keys - 1) as u64;
+        Rank(((key * self.ranks as u64) / self.num_keys as u64) as usize)
+    }
+
+    /// Key range `[lo, hi)` owned by a rank.
+    pub fn range_of(&self, rank: Rank) -> std::ops::Range<u32> {
+        let r = rank.0 as u64;
+        let n = self.ranks as u64;
+        let k = self.num_keys as u64;
+        let lo = (r * k).div_ceil(n) as u32;
+        let hi = ((r + 1) * k).div_ceil(n) as u32;
+        lo..hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_the_key_space() {
+        for (keys, ranks) in [(1024u32, 4usize), (10, 3), (7, 7), (5, 8)] {
+            let p = RangePartitioner::new(keys, ranks);
+            let mut covered = 0u32;
+            let mut prev_hi = 0u32;
+            for r in 0..ranks {
+                let range = p.range_of(Rank(r));
+                assert_eq!(range.start, prev_hi, "gap before rank {r}");
+                prev_hi = range.end;
+                covered += range.end - range.start;
+            }
+            assert_eq!(prev_hi, keys);
+            assert_eq!(covered, keys);
+        }
+    }
+
+    #[test]
+    fn owner_agrees_with_range() {
+        let p = RangePartitioner::new(1000, 6);
+        for key in 0..1000 {
+            let owner = p.owner(key);
+            assert!(
+                p.range_of(owner).contains(&key),
+                "key {key} owner {owner} range {:?}",
+                p.range_of(owner)
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_range_keys_clamp() {
+        let p = RangePartitioner::new(16, 4);
+        assert_eq!(p.owner(u32::MAX), Rank(3));
+    }
+}

@@ -1,0 +1,203 @@
+//! Task scheduling: how input chunks are handed to ranks.
+//!
+//! * [`Scheduling::Static`] — MPI-style even pre-split. Fast, but a skewed
+//!   chunk makes a straggler (the "data skew" problem §I pins on Hadoop).
+//! * [`Scheduling::Dynamic`] — ranks claim chunks from the shared
+//!   [`FaultTracker`] table, which doubles as the Mariane-style completion
+//!   table: kill a rank mid-job (fault injection) and survivors re-claim
+//!   its reclaimed tasks at the next wave.
+
+use std::ops::Range;
+
+use crate::cluster::FaultTracker;
+use crate::mpi::Rank;
+
+use super::job::Scheduling;
+
+/// Inject one failure: `rank` dies after completing `after_tasks` tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rank: Rank,
+    pub after_tasks: usize,
+}
+
+/// Shared, thread-safe task table over a slice of input.
+pub struct TaskFeed<'a, I> {
+    input: &'a [I],
+    ranges: Vec<Range<usize>>,
+    scheduling: Scheduling,
+    ranks: usize,
+    tracker: FaultTracker,
+    fault: Option<FaultPlan>,
+}
+
+impl<'a, I> TaskFeed<'a, I> {
+    pub fn new(
+        input: &'a [I],
+        ranks: usize,
+        tasks_per_rank: usize,
+        scheduling: Scheduling,
+        fault: Option<FaultPlan>,
+    ) -> Self {
+        let num_tasks = (ranks * tasks_per_rank.max(1)).max(1);
+        let ranges = split_ranges(input.len(), num_tasks);
+        let tracker = FaultTracker::new(ranges.len());
+        Self { input, ranges, scheduling, ranks, tracker, fault }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn tracker(&self) -> &FaultTracker {
+        &self.tracker
+    }
+
+    /// Per-rank claiming cursor.
+    pub fn for_rank(&'a self, rank: Rank) -> RankFeed<'a, I> {
+        RankFeed { feed: self, rank, static_cursor: rank.index(), claimed: 0 }
+    }
+
+    /// True when every task is Done (Dynamic) — Static mode has no global
+    /// view, callers rely on rank completion instead.
+    pub fn all_done(&self) -> bool {
+        self.tracker.all_done()
+    }
+}
+
+/// Split `len` items into `n` near-even contiguous ranges (empty ranges
+/// trimmed).
+fn split_ranges(len: usize, n: usize) -> Vec<Range<usize>> {
+    let n = n.max(1);
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let size = base + usize::from(i < extra);
+        if size == 0 {
+            continue;
+        }
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// One rank's view of the feed.
+pub struct RankFeed<'a, I> {
+    feed: &'a TaskFeed<'a, I>,
+    rank: Rank,
+    static_cursor: usize,
+    claimed: usize,
+}
+
+impl<'a, I> RankFeed<'a, I> {
+    /// Claim the next chunk, or `None` when this rank is done (or dead).
+    /// Applies the fault plan: the doomed rank silently stops claiming
+    /// after its quota and its running tasks return to the pool.
+    pub fn next(&mut self) -> Option<(usize, &'a [I])> {
+        if let Some(fault) = self.feed.fault {
+            if fault.rank == self.rank && self.claimed >= fault.after_tasks {
+                // Simulated death: reclaim anything still marked Running.
+                self.feed.tracker.mark_rank_failed(self.rank);
+                return None;
+            }
+        }
+        let task = match self.feed.scheduling {
+            Scheduling::Dynamic => self.feed.tracker.claim_next(self.rank)?,
+            Scheduling::Static => {
+                // Pure round-robin pre-assignment; the completion table is
+                // only maintained in Dynamic mode (static MPI jobs have no
+                // master to consult — that is exactly their weakness).
+                let t = self.static_cursor;
+                if t >= self.feed.ranges.len() {
+                    return None;
+                }
+                self.static_cursor += self.feed.ranks;
+                t
+            }
+        };
+        self.claimed += 1;
+        let range = self.feed.ranges[task].clone();
+        Some((task, &self.feed.input[range]))
+    }
+
+    /// Mark a claimed task complete.
+    pub fn complete(&self, task: usize) {
+        self.feed.tracker.complete(task, self.rank);
+    }
+
+    pub fn claimed(&self) -> usize {
+        self.claimed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_input_exactly() {
+        let ranges = split_ranges(10, 3);
+        assert_eq!(ranges, vec![0..4, 4..7, 7..10]);
+        let ranges = split_ranges(2, 4);
+        assert_eq!(ranges, vec![0..1, 1..2]);
+        assert!(split_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn dynamic_feed_hands_out_everything_once() {
+        let input: Vec<u32> = (0..100).collect();
+        let feed = TaskFeed::new(&input, 4, 4, Scheduling::Dynamic, None);
+        let mut seen = vec![false; feed.num_tasks()];
+        let mut total_items = 0;
+        for r in 0..4 {
+            let mut rf = feed.for_rank(Rank(r));
+            while let Some((task, chunk)) = rf.next() {
+                assert!(!seen[task], "task {task} claimed twice");
+                seen[task] = true;
+                total_items += chunk.len();
+                rf.complete(task);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(total_items, 100);
+        assert!(feed.all_done());
+    }
+
+    #[test]
+    fn static_feed_is_round_robin() {
+        let input: Vec<u32> = (0..8).collect();
+        let feed = TaskFeed::new(&input, 2, 2, Scheduling::Static, None);
+        let mut r0 = feed.for_rank(Rank(0));
+        let tasks0: Vec<usize> = std::iter::from_fn(|| r0.next().map(|(t, _)| t)).collect();
+        let mut r1 = feed.for_rank(Rank(1));
+        let tasks1: Vec<usize> = std::iter::from_fn(|| r1.next().map(|(t, _)| t)).collect();
+        assert_eq!(tasks0, vec![0, 2]);
+        assert_eq!(tasks1, vec![1, 3]);
+    }
+
+    #[test]
+    fn fault_plan_stops_claims_and_releases_tasks() {
+        let input: Vec<u32> = (0..40).collect();
+        let feed = TaskFeed::new(
+            &input,
+            2,
+            4, // 8 tasks
+            Scheduling::Dynamic,
+            Some(FaultPlan { rank: Rank(1), after_tasks: 1 }),
+        );
+        // Rank 1 claims one task, completes it, then dies.
+        let mut r1 = feed.for_rank(Rank(1));
+        let (t, _) = r1.next().unwrap();
+        r1.complete(t);
+        assert!(r1.next().is_none());
+        // Rank 0 finishes everything else.
+        let mut r0 = feed.for_rank(Rank(0));
+        while let Some((task, _)) = r0.next() {
+            r0.complete(task);
+        }
+        assert!(feed.all_done());
+    }
+}

@@ -1,0 +1,260 @@
+//! The shuffle: partition `(K, V)` pairs by key owner and exchange them
+//! with one `alltoallv`, with optional out-of-core spilling.
+//!
+//! Spilling reproduces MR-MPI's page/out-of-core behaviour the paper's
+//! related work dwells on: when staged pairs exceed the node's memory
+//! budget ([`crate::cluster::ClusterConfig::spill_threshold_bytes`]), the
+//! overflow is serialized to a temp file and re-read at exchange time. The
+//! spilled byte count feeds `JobStats::spilled_bytes` so benches can show
+//! the in-core -> out-of-core crossover.
+
+use std::hash::Hash;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::Arc;
+
+use crate::util::tmp::TempFile;
+
+use anyhow::{Context, Result};
+
+use crate::dist::ShardRouter;
+use crate::metrics::PeakTracker;
+use crate::mpi::Communicator;
+use crate::serial::{Decoder, Encoder, FastSerialize};
+
+/// Buffer for map-side pairs with a spill-to-disk overflow path.
+pub struct SpillBuffer<K, V> {
+    in_mem: Vec<(K, V)>,
+    mem_bytes: u64,
+    threshold: u64,
+    spill: Option<TempFile>,
+    spilled_bytes: u64,
+    spilled_items: u64,
+    tracker: Arc<PeakTracker>,
+}
+
+impl<K: FastSerialize, V: FastSerialize> SpillBuffer<K, V> {
+    /// `threshold` = max in-memory bytes before spilling (u64::MAX = never).
+    pub fn new(threshold: u64, tracker: Arc<PeakTracker>) -> Self {
+        Self {
+            in_mem: Vec::new(),
+            mem_bytes: 0,
+            threshold,
+            spill: None,
+            spilled_bytes: 0,
+            spilled_items: 0,
+            tracker,
+        }
+    }
+
+    pub fn push(&mut self, key: K, value: V) -> Result<()> {
+        let sz = (key.size_hint() + value.size_hint()) as u64 + 16;
+        self.mem_bytes += sz;
+        self.tracker.alloc(sz);
+        self.in_mem.push((key, value));
+        if self.mem_bytes > self.threshold {
+            self.spill_now()?;
+        }
+        Ok(())
+    }
+
+    pub fn len_in_mem(&self) -> usize {
+        self.in_mem.len()
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+    }
+
+    /// Serialize the in-memory pairs to the spill file and drop them.
+    fn spill_now(&mut self) -> Result<()> {
+        if self.in_mem.is_empty() {
+            return Ok(());
+        }
+        let tf = match &mut self.spill {
+            Some(f) => f,
+            None => {
+                let f = TempFile::new("blaze-spill").context("creating shuffle spill file")?;
+                self.spill.insert(f)
+            }
+        };
+        let file = tf.file();
+        let mut enc = Encoder::with_capacity(self.mem_bytes as usize);
+        enc.put_varint(self.in_mem.len() as u64);
+        for (k, v) in &self.in_mem {
+            k.encode(&mut enc);
+            v.encode(&mut enc);
+        }
+        let chunk = enc.into_bytes();
+        file.write_all(&(chunk.len() as u64).to_le_bytes())?;
+        file.write_all(&chunk)?;
+        self.spilled_bytes += chunk.len() as u64;
+        self.spilled_items += self.in_mem.len() as u64;
+        self.in_mem.clear();
+        self.tracker.free(self.mem_bytes);
+        self.mem_bytes = 0;
+        Ok(())
+    }
+
+    /// Drain everything (disk chunks first, then memory) into a vector.
+    pub fn drain(mut self) -> Result<Vec<(K, V)>> {
+        let mut out = Vec::with_capacity(self.in_mem.len() + self.spilled_items as usize);
+        if let Some(mut tf) = self.spill.take() {
+            let file = tf.file();
+            file.seek(SeekFrom::Start(0))?;
+            let mut raw = Vec::new();
+            file.read_to_end(&mut raw)?;
+            let mut pos = 0usize;
+            while pos < raw.len() {
+                let len =
+                    u64::from_le_bytes(raw[pos..pos + 8].try_into().unwrap()) as usize;
+                pos += 8;
+                let mut dec = Decoder::new(&raw[pos..pos + len]);
+                pos += len;
+                let count = dec.get_varint()?;
+                for _ in 0..count {
+                    let k = K::decode(&mut dec)?;
+                    let v = V::decode(&mut dec)?;
+                    out.push((k, v));
+                }
+                dec.finish()?;
+            }
+        }
+        out.append(&mut self.in_mem);
+        self.tracker.free(self.mem_bytes);
+        self.mem_bytes = 0;
+        Ok(out)
+    }
+}
+
+impl<K, V> Drop for SpillBuffer<K, V> {
+    fn drop(&mut self) {
+        self.tracker.free(self.mem_bytes);
+    }
+}
+
+/// COLLECTIVE: partition `pairs` by `router.owner(key)` and exchange.
+/// Returns the pairs this rank owns. Peak memory for the serialized
+/// buffers is charged to `tracker`.
+pub fn shuffle_pairs<K, V>(
+    comm: &Communicator,
+    router: &ShardRouter,
+    pairs: Vec<(K, V)>,
+    tracker: &Arc<PeakTracker>,
+) -> Result<Vec<(K, V)>>
+where
+    K: FastSerialize + Hash + Eq,
+    V: FastSerialize,
+{
+    let n = comm.size();
+    debug_assert_eq!(router.shards(), n, "router/communicator size mismatch");
+
+    // Serialize straight into per-destination encoders: no intermediate
+    // per-destination Vec<(K,V)> (hot-path allocation kept linear).
+    // Pre-size each encoder at the expected per-destination share — saves
+    // the doubling-regrowth memcpys in the partition loop (§Perf iter 1).
+    let est_total: usize = pairs.iter().map(|(k, v)| k.size_hint() + v.size_hint()).sum();
+    let per_dest = est_total / n + 16;
+    let mut encoders: Vec<Encoder> = (0..n).map(|_| Encoder::with_capacity(per_dest)).collect();
+    let mut counts = vec![0u64; n];
+    for (k, v) in &pairs {
+        let dst = router.owner(k).0;
+        counts[dst] += 1;
+        k.encode(&mut encoders[dst]);
+        v.encode(&mut encoders[dst]);
+    }
+    drop(pairs);
+
+    let mut bufs = Vec::with_capacity(n);
+    let mut total = 0u64;
+    for (dst, enc) in encoders.into_iter().enumerate() {
+        let mut framed = Encoder::with_capacity(enc.len() + 10);
+        framed.put_varint(counts[dst]);
+        framed.put_raw(enc.as_bytes());
+        total += framed.len() as u64;
+        bufs.push(framed.into_bytes());
+    }
+    tracker.alloc(total);
+
+    let incoming = comm.alltoallv(bufs)?;
+    tracker.free(total);
+
+    let in_total: u64 = incoming.iter().map(|b| b.len() as u64).sum();
+    tracker.alloc(in_total);
+    let mut out = Vec::new();
+    for buf in &incoming {
+        let mut dec = Decoder::new(buf);
+        let count = dec.get_varint()?;
+        out.reserve(count as usize);
+        for _ in 0..count {
+            let k = K::decode(&mut dec)?;
+            let v = V::decode(&mut dec)?;
+            out.push((k, v));
+        }
+        dec.finish()?;
+    }
+    tracker.free(in_total);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{run_ranks, Universe};
+
+    #[test]
+    fn shuffle_routes_every_pair_to_owner() {
+        let got = run_ranks(Universe::local(3), |c| {
+            let router = ShardRouter::new(3, 0);
+            let tracker = PeakTracker::new();
+            let pairs: Vec<(u32, u64)> =
+                (0..30).map(|i| (i as u32, (c.rank().0 * 100 + i) as u64)).collect();
+            let mine = shuffle_pairs(c, &router, pairs, &tracker).unwrap();
+            // Everything I received is mine; count total below.
+            assert!(mine.iter().all(|(k, _)| router.owner(k) == c.rank()));
+            assert_eq!(tracker.current_bytes(), 0, "shuffle buffers all freed");
+            mine.len() as u64
+        });
+        assert_eq!(got.iter().sum::<u64>(), 90);
+    }
+
+    #[test]
+    fn spill_buffer_roundtrip_without_spill() {
+        let t = PeakTracker::new();
+        let mut b: SpillBuffer<String, u64> = SpillBuffer::new(u64::MAX, t.clone());
+        b.push("a".into(), 1).unwrap();
+        b.push("b".into(), 2).unwrap();
+        assert_eq!(b.spilled_bytes(), 0);
+        let items = b.drain().unwrap();
+        assert_eq!(items, vec![("a".into(), 1), ("b".into(), 2)]);
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn spill_buffer_spills_past_threshold_and_preserves_order() {
+        let t = PeakTracker::new();
+        let mut b: SpillBuffer<u64, u64> = SpillBuffer::new(256, t.clone());
+        for i in 0..100u64 {
+            b.push(i, i * 2).unwrap();
+        }
+        assert!(b.spilled_bytes() > 0, "should have spilled");
+        assert!(b.len_in_mem() < 100);
+        let items = b.drain().unwrap();
+        assert_eq!(items.len(), 100);
+        // Disk chunks precede memory; within chunks order preserved.
+        let expected: Vec<(u64, u64)> = (0..100).map(|i| (i, i * 2)).collect();
+        assert_eq!(items, expected);
+    }
+
+    #[test]
+    fn spill_peak_memory_bounded() {
+        let t = PeakTracker::new();
+        let mut b: SpillBuffer<u64, u64> = SpillBuffer::new(512, t.clone());
+        for i in 0..10_000u64 {
+            b.push(i, i).unwrap();
+        }
+        // Peak stays near the threshold, not the full data size.
+        assert!(t.peak_bytes() < 2_048, "peak {}", t.peak_bytes());
+        let items = b.drain().unwrap();
+        assert_eq!(items.len(), 10_000);
+    }
+}

@@ -1,0 +1,43 @@
+//! # blaze-rs — an HPC MapReduce framework (Hadoop-JVM alternative)
+//!
+//! Rust reproduction of *"An Alternative C++ based HPC system for Hadoop
+//! MapReduce"* (cs.DC 2020): a Blaze-style, JVM-free MapReduce stack with
+//! **eager reduction**, the paper's **delayed reduction**, distributed
+//! containers (`DistVector` / `DistHashMap`), an MPI-style communication
+//! substrate, deployment-profile simulation (bare-metal / VM / container),
+//! and a Spark/JVM cost-model baseline for the paper's comparisons.
+//!
+//! The compute hot spots (K-means step, segment-sum reduce, Monte-Carlo
+//! counting) are AOT-compiled JAX/Pallas kernels executed through PJRT —
+//! Python never runs on the request path.
+//!
+//! ```no_run
+//! use blaze_rs::prelude::*;
+//!
+//! let cluster = ClusterConfig::builder().ranks(4).build();
+//! let corpus = vec!["the quick brown fox".to_string()];
+//! let counts =
+//!     blaze_rs::apps::wordcount::run(&cluster, &corpus, ReductionMode::Delayed).unwrap();
+//! assert_eq!(counts.result.get("fox"), Some(&1));
+//! ```
+
+pub mod apps;
+pub mod baseline;
+pub mod bench_harness;
+pub mod cluster;
+pub mod core;
+pub mod dist;
+pub mod metrics;
+pub mod mpi;
+pub mod runtime;
+pub mod serial;
+pub mod util;
+
+/// Most-used types, re-exported for `use blaze_rs::prelude::*`.
+pub mod prelude {
+    pub use crate::cluster::{ClusterConfig, DeploymentKind};
+    pub use crate::core::{JobConfig, JobResult, ReductionMode};
+    pub use crate::dist::{DistHashMap, DistVector};
+    pub use crate::mpi::{Communicator, Rank};
+    pub use crate::serial::{Decoder, Encoder, FastSerialize};
+}

@@ -1,0 +1,307 @@
+//! `blaze` — the launcher CLI (our `mpirun` + job driver).
+//!
+//! ```text
+//! blaze run --app wordcount [--mode eager] [--ranks 4] [--deployment vm]
+//!           [--cluster cluster.toml] [--kernel] [app-specific sizes]
+//! blaze bench-figure <fig8|fig9|fig10|fig11|fig12|fig13|
+//!                     ablation-reduction|deployment|all> [--quick]
+//!                    [--json-dir target/figures]
+//! blaze inspect-artifacts [--dir artifacts]
+//! blaze cluster-info [--cluster cluster.toml | --ranks N --deployment K]
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap in the vendored crate set) —
+//! see `Args` below.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use blaze_rs::apps::{kmeans, linreg, matmul, pi, wordcount};
+use blaze_rs::bench_harness::{run_figure, FigureId};
+use blaze_rs::cluster::{ClusterConfig, DeploymentKind};
+use blaze_rs::core::ReductionMode;
+use blaze_rs::runtime::{ArtifactManifest, ComputeService};
+
+/// Tiny flag parser: `--key value` pairs + positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // A flag followed by a value unless the next token is
+                // another flag or missing (then it's a switch).
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags, switches }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+fn cluster_from_args(args: &Args) -> Result<ClusterConfig> {
+    if let Some(path) = args.get("cluster") {
+        return ClusterConfig::from_toml_file(path);
+    }
+    let deployment: DeploymentKind = args.get_or("deployment", DeploymentKind::Local)?;
+    let nodes: usize = args.get_or("nodes", args.get_or("ranks", 4)?)?;
+    let slots: usize = args.get_or("slots-per-node", 1)?;
+    let seed: u64 = args.get_or("seed", 0x1332)?;
+    Ok(ClusterConfig::builder()
+        .deployment(deployment)
+        .nodes(nodes)
+        .slots_per_node(slots)
+        .seed(seed)
+        .build())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "bench-figure" => cmd_bench_figure(&args),
+        "inspect-artifacts" => cmd_inspect_artifacts(&args),
+        "cluster-info" => cmd_cluster_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `blaze help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "blaze — HPC MapReduce (Blaze-style) reproduction\n\n\
+         USAGE:\n  blaze run --app <wordcount|kmeans|pi|matmul|linreg> [opts]\n  \
+         blaze bench-figure <id|all> [--quick] [--json-dir DIR]\n  \
+         blaze inspect-artifacts [--dir artifacts]\n  \
+         blaze cluster-info [--cluster FILE | --ranks N --deployment KIND]\n\n\
+         COMMON OPTS:\n  --cluster FILE.toml | --ranks N --deployment \
+         <local|bare-metal|vm|container> --slots-per-node S --seed X\n  \
+         --mode <classic|eager|delayed>   reduction engine\n  --kernel  \
+         use the AOT PJRT kernels (needs `make artifacts`)\n\n\
+         APP OPTS:\n  wordcount: --lines N --vocab V\n  kmeans: --points N \
+         --dims D --k K --iters I\n  pi: --samples N\n  matmul: --size N\n  \
+         linreg: --rows N --dims D --iters I --lr F\n\n\
+         FIGURES: fig8 fig9 fig10 fig11 fig12 fig13 ablation-reduction deployment"
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cluster = cluster_from_args(args)?;
+    let app = args.get("app").context("--app is required (try `blaze help`)")?;
+    let mode: ReductionMode = args.get_or("mode", ReductionMode::Eager)?;
+    let use_kernel = args.has("kernel");
+    let service = if use_kernel {
+        Some(ComputeService::start_default().context("starting PJRT compute service")?)
+    } else {
+        None
+    };
+    let handle = service.as_ref().map(|s| s.handle());
+
+    println!(
+        "# cluster: {} nodes x {} slots, deployment={}, seed={}",
+        cluster.nodes, cluster.slots_per_node, cluster.deployment, cluster.seed
+    );
+
+    match app {
+        "wordcount" => {
+            let lines: usize = args.get_or("lines", 20_000)?;
+            let vocab: u32 = args.get_or("vocab", 1_000)?;
+            let corpus = wordcount::generate_corpus(lines, 8, vocab, cluster.seed);
+            let out = if use_kernel {
+                wordcount::run_segsum_kernel(&cluster, &corpus, handle.as_ref().unwrap())?
+            } else {
+                wordcount::run(&cluster, &corpus, mode)?
+            };
+            let total: u64 = out.result.values().sum();
+            println!("wordcount: {} distinct words, {total} total", out.result.len());
+            print_stats(&out.stats);
+        }
+        "kmeans" => {
+            let n: usize = args.get_or("points", 50_000)?;
+            let d: usize = args.get_or("dims", 8)?;
+            let k: usize = args.get_or("k", kmeans::KERNEL_K)?;
+            let iters: usize = args.get_or("iters", 10)?;
+            let points = kmeans::generate_points(n, d, k, cluster.seed);
+            let path = if use_kernel { kmeans::ComputePath::Kernel } else { kmeans::ComputePath::Native };
+            let r = kmeans::run(&cluster, &points, k, iters, path, handle.as_ref())?;
+            println!(
+                "kmeans: k={k} d={d} iters={iters} inertia={:.2} (avg {:.4}/pt)",
+                r.inertia,
+                r.inertia / n as f64
+            );
+            print_stats(&r.stats);
+        }
+        "pi" => {
+            let samples: usize = args.get_or("samples", 10_000_000)?;
+            let chunks = pi::make_chunks(samples, cluster.ranks() * 8, cluster.seed);
+            let out = if use_kernel {
+                pi::run_kernel(&cluster, &chunks, handle.as_ref().unwrap())?
+            } else {
+                pi::run_eager_batched(&cluster, &chunks)?
+            };
+            println!("pi ≈ {:.6} (error {:+.6})", out.result, out.result - std::f64::consts::PI);
+            print_stats(&out.stats);
+        }
+        "matmul" => {
+            let size: usize = args.get_or("size", 48)?;
+            let a = matmul::Matrix::random(size, size, cluster.seed);
+            let b = matmul::Matrix::random(size, size, cluster.seed + 1);
+            let out = matmul::run(&cluster, &a, &b, mode)?;
+            let truth = a.multiply(&b);
+            println!(
+                "matmul {size}x{size}: max|diff| vs serial = {:.2e}",
+                out.result.max_abs_diff(&truth)
+            );
+            print_stats(&out.stats);
+        }
+        "linreg" => {
+            let n: usize = args.get_or("rows", 50_000)?;
+            let d: usize = args.get_or("dims", 8)?;
+            let iters: usize = args.get_or("iters", 50)?;
+            let lr: f32 = args.get_or("lr", 0.3)?;
+            let data = linreg::generate(n, d, 0.05, cluster.seed);
+            let path = if use_kernel { linreg::ComputePath::Kernel } else { linreg::ComputePath::Native };
+            let r = linreg::run(&cluster, &data, iters, lr, path, handle.as_ref())?;
+            let werr: f32 = r
+                .w
+                .iter()
+                .zip(&data.true_w)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            println!("linreg: mse={:.5} max|w-w*|={werr:.4}", r.mse);
+            print_stats(&r.stats);
+        }
+        other => bail!("unknown app {other:?}"),
+    }
+    Ok(())
+}
+
+fn print_stats(s: &blaze_rs::core::JobStats) {
+    println!(
+        "  modeled {:.2} ms (compute {:.2} + net {:.2} + startup {:.0}) | \
+         shuffle {} B in {} msgs ({} B remote) | peak mem {} B | spilled {} B | host wall {:.1} ms",
+        s.modeled_ms,
+        s.compute_ms,
+        s.net_ms,
+        s.startup_ms,
+        s.shuffle_bytes,
+        s.messages,
+        s.remote_bytes,
+        s.peak_mem_bytes,
+        s.spilled_bytes,
+        s.host_wall_ms
+    );
+}
+
+fn cmd_bench_figure(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("which figure? (fig8..fig13, ablation-reduction, deployment, all)")?;
+    let quick = args.has("quick");
+    let ids: Vec<FigureId> = if which == "all" {
+        FigureId::ALL.to_vec()
+    } else {
+        vec![FigureId::parse(which).with_context(|| format!("unknown figure {which:?}"))?]
+    };
+    for id in ids {
+        let report = run_figure(id, quick)?;
+        println!("{}", report.to_table());
+        if let Some(dir) = args.get("json-dir") {
+            let path = std::path::Path::new(dir).join(format!("{}.json", id.name()));
+            report.save_json(&path)?;
+            println!("(saved {})", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect_artifacts(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ArtifactManifest::default_dir);
+    let manifest = ArtifactManifest::load(&dir)?;
+    println!("# {} artifacts in {}", manifest.len(), dir.display());
+    let mut names: Vec<&str> = manifest.names().collect();
+    names.sort_unstable();
+    for name in names {
+        let spec = manifest.get(name)?;
+        let ins: Vec<String> =
+            spec.inputs.iter().map(|t| format!("{:?}:{}", t.shape, t.dtype)).collect();
+        let outs: Vec<String> =
+            spec.outputs.iter().map(|t| format!("{:?}:{}", t.shape, t.dtype)).collect();
+        println!("{name:<24} {} -> {}", ins.join(", "), outs.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_cluster_info(args: &Args) -> Result<()> {
+    let cluster = cluster_from_args(args)?;
+    println!("{}", cluster.to_toml_string());
+    let profile = cluster.deployment.profile();
+    println!(
+        "# ranks={} | startup {} ms | net {} µs / {} Mbit/s | compute x{:.2} | spill at {} B/rank",
+        cluster.ranks(),
+        profile.startup_ms,
+        profile.net_latency_us,
+        profile.net_bandwidth_mbps,
+        profile.effective_compute_scale(),
+        cluster.spill_threshold_bytes()
+    );
+    Ok(())
+}

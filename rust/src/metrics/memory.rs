@@ -1,0 +1,161 @@
+//! Memory accounting for Fig 13 (peak memory, Blaze vs Spark).
+//!
+//! Two complementary sources:
+//!  * [`PeakTracker`] — *modeled* bytes: every buffer the framework
+//!    allocates on the data path (shuffle buffers, container shards,
+//!    grouped values) is charged/released explicitly, giving a
+//!    deterministic high-water mark per framework that is comparable
+//!    across Blaze and the Spark-sim baseline (which additionally charges
+//!    JVM object overhead — see `baseline/jvm.rs`).
+//!  * [`rss_bytes`] — the process's real VmHWM from /proc, reported for
+//!    context in EXPERIMENTS.md but not used for the figure (both
+//!    frameworks share one process here).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Atomic current/peak byte counters. Cloneable handle.
+#[derive(Debug, Default)]
+pub struct PeakTracker {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl PeakTracker {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Charge `bytes` and update the high-water mark.
+    pub fn alloc(&self, bytes: u64) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Release `bytes` (saturating — double-free tolerant for robustness).
+    pub fn free(&self, bytes: u64) {
+        let _ = self
+            .current
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| Some(c.saturating_sub(bytes)));
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+}
+
+/// RAII charge: frees on drop.
+pub struct MemoryScope {
+    tracker: Arc<PeakTracker>,
+    bytes: u64,
+}
+
+impl MemoryScope {
+    pub fn charge(tracker: &Arc<PeakTracker>, bytes: u64) -> Self {
+        tracker.alloc(bytes);
+        Self { tracker: tracker.clone(), bytes }
+    }
+
+    /// Adjust the charge (e.g. a buffer grew).
+    pub fn grow(&mut self, extra: u64) {
+        self.tracker.alloc(extra);
+        self.bytes += extra;
+    }
+}
+
+impl Drop for MemoryScope {
+    fn drop(&mut self) {
+        self.tracker.free(self.bytes);
+    }
+}
+
+/// Convenience gauge pairing a tracker with a label, used in reports.
+#[derive(Debug, Clone)]
+pub struct MemoryGauge {
+    pub label: String,
+    pub tracker: Arc<PeakTracker>,
+}
+
+impl MemoryGauge {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), tracker: PeakTracker::new() }
+    }
+}
+
+/// Real process peak RSS (VmHWM) in bytes, from /proc/self/status.
+pub fn rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_survives_free() {
+        let t = PeakTracker::new();
+        t.alloc(100);
+        t.alloc(50);
+        t.free(120);
+        assert_eq!(t.current_bytes(), 30);
+        assert_eq!(t.peak_bytes(), 150);
+    }
+
+    #[test]
+    fn scope_frees_on_drop() {
+        let t = PeakTracker::new();
+        {
+            let mut s = MemoryScope::charge(&t, 64);
+            s.grow(36);
+            assert_eq!(t.current_bytes(), 100);
+        }
+        assert_eq!(t.current_bytes(), 0);
+        assert_eq!(t.peak_bytes(), 100);
+    }
+
+    #[test]
+    fn free_is_saturating() {
+        let t = PeakTracker::new();
+        t.free(10);
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn concurrent_peaks_monotone() {
+        let t = PeakTracker::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let t = t.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        t.alloc(10);
+                        t.free(10);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.current_bytes(), 0);
+        assert!(t.peak_bytes() >= 10);
+    }
+
+    #[test]
+    fn rss_readable_on_linux() {
+        assert!(rss_bytes().unwrap_or(0) > 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Metrics: timers, memory accounting (Fig 13) and bench report tables.
+
+mod memory;
+mod report;
+mod timer;
+
+pub use memory::{rss_bytes, MemoryGauge, MemoryScope, PeakTracker};
+pub use report::{Report, Series};
+pub use timer::{ScopedTimer, Stopwatch};

@@ -1,0 +1,185 @@
+//! Bench report formatting: the tables/series the harness prints for each
+//! paper figure, plus JSON export so EXPERIMENTS.md numbers are scriptable.
+
+use crate::util::json::Json;
+
+/// One labelled series of (x, y) points — a line on a paper figure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub label: String,
+    pub x_name: String,
+    pub y_name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(
+        label: impl Into<String>,
+        x_name: impl Into<String>,
+        y_name: impl Into<String>,
+    ) -> Self {
+        Self {
+            label: label.into(),
+            x_name: x_name.into(),
+            y_name: y_name.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// y(last)/y(first): the scaling factor across the sweep.
+    pub fn end_to_end_ratio(&self) -> Option<f64> {
+        let first = self.points.first()?.1;
+        let last = self.points.last()?.1;
+        if first == 0.0 {
+            None
+        } else {
+            Some(last / first)
+        }
+    }
+}
+
+/// A figure-shaped report: title + several series + free-form notes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Report {
+    pub title: String,
+    pub series: Vec<Series>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), ..Default::default() }
+    }
+
+    pub fn add(&mut self, series: Series) {
+        self.series.push(series);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        self.notes.push(n.into());
+    }
+
+    /// Render as an aligned text table (what `blaze bench-figure` prints).
+    pub fn to_table(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        for s in &self.series {
+            let _ = writeln!(out, "-- {} ({} vs {})", s.label, s.y_name, s.x_name);
+            let _ = writeln!(out, "{:>14} {:>16}", s.x_name, s.y_name);
+            for (x, y) in &s.points {
+                let _ = writeln!(out, "{x:>14.3} {y:>16.3}");
+            }
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_json_value().to_string_pretty()
+    }
+
+    pub fn to_json_value(&self) -> Json {
+        Json::obj([
+            ("title", Json::str(self.title.clone())),
+            (
+                "series",
+                Json::arr(self.series.iter().map(|s| {
+                    Json::obj([
+                        ("label", Json::str(s.label.clone())),
+                        ("x_name", Json::str(s.x_name.clone())),
+                        ("y_name", Json::str(s.y_name.clone())),
+                        (
+                            "points",
+                            Json::arr(
+                                s.points
+                                    .iter()
+                                    .map(|&(x, y)| Json::arr([Json::num(x), Json::num(y)])),
+                            ),
+                        ),
+                    ])
+                })),
+            ),
+            ("notes", Json::arr(self.notes.iter().map(|n| Json::str(n.clone())))),
+        ])
+    }
+
+    /// Parse a report previously written by [`Report::to_json`].
+    pub fn from_json(text: &str) -> anyhow::Result<Report> {
+        let v = Json::parse(text)?;
+        let mut report = Report::new(
+            v.req("title")?.as_str().unwrap_or_default().to_string(),
+        );
+        for s in v.req("series")?.as_arr().unwrap_or(&[]) {
+            let mut series = Series::new(
+                s.req("label")?.as_str().unwrap_or_default(),
+                s.req("x_name")?.as_str().unwrap_or_default(),
+                s.req("y_name")?.as_str().unwrap_or_default(),
+            );
+            for p in s.req("points")?.as_arr().unwrap_or(&[]) {
+                let xy = p.as_arr().unwrap_or(&[]);
+                if let [x, y] = xy {
+                    series.push(x.as_f64().unwrap_or(0.0), y.as_f64().unwrap_or(0.0));
+                }
+            }
+            report.add(series);
+        }
+        for n in v.req("notes")?.as_arr().unwrap_or(&[]) {
+            report.note(n.as_str().unwrap_or_default());
+        }
+        Ok(report)
+    }
+
+    /// Write JSON next to the repo's bench outputs.
+    pub fn save_json(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_contains_all_points() {
+        let mut r = Report::new("Fig X");
+        let mut s = Series::new("blaze", "nodes", "ms");
+        s.push(1.0, 100.0);
+        s.push(2.0, 55.0);
+        r.add(s);
+        r.note("shape: halves with nodes");
+        let t = r.to_table();
+        assert!(t.contains("Fig X"));
+        assert!(t.contains("55.000"));
+        assert!(t.contains("note: shape"));
+    }
+
+    #[test]
+    fn ratio_math() {
+        let mut s = Series::new("x", "n", "t");
+        s.push(1.0, 100.0);
+        s.push(4.0, 25.0);
+        assert_eq!(s.end_to_end_ratio(), Some(0.25));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = Report::new("fig");
+        let mut s = Series::new("a", "x", "y");
+        s.push(1.0, 2.0);
+        r.add(s);
+        r.note("hello");
+        let back = Report::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+}

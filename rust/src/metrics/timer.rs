@@ -1,0 +1,98 @@
+//! Small timing helpers used by the engine and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop many times, read the total.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.total += t.elapsed();
+        }
+    }
+
+    pub fn total(&self) -> Duration {
+        match self.started {
+            Some(t) => self.total + t.elapsed(),
+            None => self.total,
+        }
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.total().as_nanos() as u64
+    }
+
+    /// Time one closure, accumulating its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// RAII timer that reports elapsed time into a callback on drop.
+pub struct ScopedTimer<F: FnMut(Duration)> {
+    start: Instant,
+    sink: F,
+}
+
+impl<F: FnMut(Duration)> ScopedTimer<F> {
+    pub fn new(sink: F) -> Self {
+        Self { start: Instant::now(), sink }
+    }
+}
+
+impl<F: FnMut(Duration)> Drop for ScopedTimer<F> {
+    fn drop(&mut self) {
+        let elapsed = self.start.elapsed();
+        (self.sink)(elapsed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(1)));
+        let first = sw.total();
+        sw.time(|| std::thread::sleep(Duration::from_millis(1)));
+        assert!(sw.total() >= first + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn stopwatch_running_total_visible() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(sw.total() >= Duration::from_millis(1));
+        sw.stop();
+    }
+
+    #[test]
+    fn scoped_timer_fires_on_drop() {
+        let mut got = Duration::ZERO;
+        {
+            let _t = ScopedTimer::new(|d| got = d);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(got >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,262 @@
+//! Collective operations over [`Communicator`], built from p2p sends so
+//! the virtual clock sees every byte and every synchronization point.
+//!
+//! Tag discipline: collectives allocate tags from a per-rank sequence
+//! counter ([`Communicator::next_collective_tag`]). Programs are SPMD —
+//! every rank executes the same collective sequence — so counters stay
+//! aligned without negotiation, the same assumption MPI makes about
+//! communicator-ordered collectives.
+//!
+//! The blocking shapes matter for the paper: `alltoallv` is the shuffle
+//! (MR-MPI's `MPI_Alltoall` §II), and `barrier`/`allreduce` are the global
+//! synchronization points Mimir blames for MR-MPI's memory retention.
+
+use anyhow::Result;
+
+use crate::serial::{from_bytes, to_bytes, FastSerialize};
+
+use super::comm::Communicator;
+use super::datatypes::Rank;
+
+impl Communicator {
+    /// Synchronize all ranks (and their virtual clocks) — gather-to-root
+    /// then broadcast, the classic two-phase tree flattened to star shape
+    /// (fine at our rank counts; cost model charges per message).
+    pub fn barrier(&self) -> Result<()> {
+        let gather_tag = self.next_collective_tag();
+        let release_tag = self.next_collective_tag();
+        if self.is_root() {
+            for _ in 1..self.size() {
+                let _ = self.recv_any(gather_tag)?;
+            }
+            for r in 1..self.size() {
+                self.send(Rank(r), release_tag, Vec::new())?;
+            }
+        } else {
+            self.send(Rank::ROOT, gather_tag, Vec::new())?;
+            self.recv(Rank::ROOT, release_tag)?;
+        }
+        Ok(())
+    }
+
+    /// Broadcast `value` from `root` to all ranks. Non-root ranks pass
+    /// their (ignored) local value too — SPMD style.
+    pub fn bcast<T: FastSerialize>(&self, root: Rank, value: T) -> Result<T> {
+        let tag = self.next_collective_tag();
+        if self.rank() == root {
+            let bytes = to_bytes(&value);
+            for r in 0..self.size() {
+                if r != root.0 {
+                    self.send(Rank(r), tag, bytes.clone())?;
+                }
+            }
+            Ok(value)
+        } else {
+            let bytes = self.recv(root, tag)?;
+            from_bytes(&bytes)
+        }
+    }
+
+    /// Gather every rank's value at `root`. Returns `Some(values)` (rank
+    /// order) at root, `None` elsewhere.
+    pub fn gather<T: FastSerialize>(&self, root: Rank, value: T) -> Result<Option<Vec<T>>> {
+        let tag = self.next_collective_tag();
+        if self.rank() == root {
+            let mut slots: Vec<Option<T>> = (0..self.size()).map(|_| None).collect();
+            slots[root.0] = Some(value);
+            for _ in 1..self.size() {
+                let (src, bytes) = self.recv_any(tag)?;
+                slots[src.0] = Some(from_bytes(&bytes)?);
+            }
+            Ok(Some(slots.into_iter().map(Option::unwrap).collect()))
+        } else {
+            self.send(root, tag, to_bytes(&value))?;
+            Ok(None)
+        }
+    }
+
+    /// Gather at root, then broadcast the vector to everyone.
+    pub fn allgather<T: FastSerialize + Clone>(&self, value: T) -> Result<Vec<T>> {
+        let gathered = self.gather(Rank::ROOT, value)?;
+        self.bcast(Rank::ROOT, gathered.unwrap_or_default())
+    }
+
+    /// The shuffle primitive: rank i's `bufs[j]` is delivered as the
+    /// return value's element i on rank j. `bufs.len()` must equal world
+    /// size; `bufs[self]` short-circuits without touching the network.
+    pub fn alltoallv(&self, mut bufs: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(
+            bufs.len() == self.size(),
+            "alltoallv needs one buffer per rank ({} != {})",
+            bufs.len(),
+            self.size()
+        );
+        let tag = self.next_collective_tag();
+        let me = self.rank().0;
+        let mut out: Vec<Vec<u8>> = (0..self.size()).map(|_| Vec::new()).collect();
+        out[me] = std::mem::take(&mut bufs[me]);
+        // Send everything first (injection serializes on the sender's
+        // uplink — realistic), then receive; arrivals settle the clock at
+        // max(sender_stamp + propagation) instead of cascading (n-1)
+        // latencies through a ring.
+        for d in 1..self.size() {
+            let dst = (me + d) % self.size();
+            self.send(Rank(dst), tag, std::mem::take(&mut bufs[dst]))?;
+        }
+        for d in 1..self.size() {
+            let src = (me + self.size() - d) % self.size();
+            out[src] = self.recv(Rank(src), tag)?;
+        }
+        Ok(out)
+    }
+
+    /// Reduce `value` across ranks with `op` (must be associative +
+    /// commutative), result on every rank.
+    pub fn allreduce<T, F>(&self, value: T, op: F) -> Result<T>
+    where
+        T: FastSerialize + Clone,
+        F: Fn(T, T) -> T,
+    {
+        // Allocate the result-distribution tag BEFORE gather so every
+        // rank's collective sequence stays aligned.
+        let tag = self.next_collective_tag();
+        let gathered = self.gather(Rank::ROOT, value)?;
+        if self.is_root() {
+            let mut it = gathered.expect("root gathers").into_iter();
+            let first = it.next().expect("gather of >=1 rank");
+            let reduced = it.fold(first, &op);
+            let bytes = to_bytes(&reduced);
+            for r in 1..self.size() {
+                self.send(Rank(r), tag, bytes.clone())?;
+            }
+            Ok(reduced)
+        } else {
+            let bytes = self.recv(Rank::ROOT, tag)?;
+            from_bytes(&bytes)
+        }
+    }
+
+    /// Exclusive prefix sum of `value` over ranks: rank i gets
+    /// `sum(values[0..i])`. Used for global indexing in `DistVector`.
+    pub fn exscan_sum(&self, value: u64) -> Result<u64> {
+        let all = self.allgather(value)?;
+        Ok(all[..self.rank().0].iter().sum())
+    }
+
+    /// Sum of `value` across all ranks, on every rank.
+    pub fn allreduce_sum_u64(&self, value: u64) -> Result<u64> {
+        self.allreduce(value, |a, b| a + b)
+    }
+
+    /// Element-wise f32 vector sum across ranks (k-means sums/counts).
+    pub fn allreduce_sum_f32(&self, value: Vec<f32>) -> Result<Vec<f32>> {
+        self.allreduce(value, |mut a, b| {
+            assert_eq!(a.len(), b.len(), "allreduce_sum_f32 length mismatch");
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += y;
+            }
+            a
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::comm::Universe;
+    use super::super::process::run_ranks;
+    use super::*;
+
+    #[test]
+    fn bcast_from_root() {
+        let got = run_ranks(Universe::local(4), |c| {
+            let v = if c.is_root() { 42u64 } else { 0 };
+            c.bcast(Rank::ROOT, v).unwrap()
+        });
+        assert_eq!(got, vec![42; 4]);
+    }
+
+    #[test]
+    fn gather_in_rank_order() {
+        let got = run_ranks(Universe::local(3), |c| c.gather(Rank::ROOT, c.rank().0 as u64).unwrap());
+        assert_eq!(got[0], Some(vec![0, 1, 2]));
+        assert_eq!(got[1], None);
+    }
+
+    #[test]
+    fn allgather_everywhere() {
+        let got = run_ranks(Universe::local(3), |c| c.allgather(c.rank().0 as u32).unwrap());
+        for v in got {
+            assert_eq!(v, vec![0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn alltoallv_transpose() {
+        let got = run_ranks(Universe::local(3), |c| {
+            let me = c.rank().0 as u8;
+            // bufs[j] = [me, j]
+            let bufs: Vec<Vec<u8>> = (0..3).map(|j| vec![me, j as u8]).collect();
+            c.alltoallv(bufs).unwrap()
+        });
+        for (j, row) in got.iter().enumerate() {
+            for (i, buf) in row.iter().enumerate() {
+                assert_eq!(buf, &vec![i as u8, j as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum() {
+        let got = run_ranks(Universe::local(4), |c| c.allreduce_sum_u64(c.rank().0 as u64 + 1).unwrap());
+        assert_eq!(got, vec![10; 4]);
+    }
+
+    #[test]
+    fn allreduce_vector_sum() {
+        let got = run_ranks(Universe::local(2), |c| {
+            c.allreduce_sum_f32(vec![1.0, 2.0]).unwrap()
+        });
+        assert_eq!(got, vec![vec![2.0, 4.0]; 2]);
+    }
+
+    #[test]
+    fn exscan_is_exclusive() {
+        let got = run_ranks(Universe::local(4), |c| c.exscan_sum(10).unwrap());
+        assert_eq!(got, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn barrier_syncs_clocks() {
+        use crate::cluster::{DeploymentKind, NetworkModel};
+        use crate::mpi::Topology;
+        let uni = Universe::new(
+            Topology::block(4, 1),
+            NetworkModel::from_profile(&DeploymentKind::BareMetal.profile()),
+        );
+        let clocks = run_ranks(uni, |c| {
+            if c.rank().0 == 2 {
+                c.advance(5_000_000); // one slow rank
+            }
+            c.barrier().unwrap();
+            c.clock_ns()
+        });
+        // After a barrier every clock is at least the slow rank's time.
+        for clk in clocks {
+            assert!(clk >= 5_000_000, "clock {clk}");
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_stay_matched() {
+        let got = run_ranks(Universe::local(3), |c| {
+            let mut acc = 0u64;
+            for i in 0..50 {
+                acc += c.allreduce_sum_u64(i).unwrap();
+                c.barrier().unwrap();
+            }
+            acc
+        });
+        let expect: u64 = (0..50u64).map(|i| i * 3).sum();
+        assert_eq!(got, vec![expect; 3]);
+    }
+}

@@ -1,0 +1,380 @@
+//! The communicator: per-rank endpoint of the in-process message-passing
+//! universe, with virtual-clock cost accounting (see module docs in
+//! `mpi/mod.rs`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use anyhow::{anyhow, ensure, Result};
+
+use crate::cluster::NetworkModel;
+
+use super::datatypes::{Message, Rank, Tag};
+use super::topology::Topology;
+
+/// Whole-universe traffic counters (atomics — written by all ranks).
+#[derive(Debug, Default)]
+pub struct TrafficStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+    pub remote_messages: AtomicU64,
+    pub remote_bytes: AtomicU64,
+}
+
+impl TrafficStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.messages.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+            self.remote_messages.load(Ordering::Relaxed),
+            self.remote_bytes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Factory for a set of connected [`Communicator`]s: the "MPI world".
+pub struct Universe {
+    topology: Topology,
+    network: NetworkModel,
+    stats: Arc<TrafficStats>,
+}
+
+impl Universe {
+    pub fn new(topology: Topology, network: NetworkModel) -> Self {
+        Self { topology, network, stats: Arc::new(TrafficStats::default()) }
+    }
+
+    /// A universe of `n` ranks on one Local-profile node — unit tests.
+    pub fn local(n: usize) -> Self {
+        Self::new(Topology::single_node(n), NetworkModel::free())
+    }
+
+    pub fn size(&self) -> usize {
+        self.topology.ranks()
+    }
+
+    pub fn stats(&self) -> Arc<TrafficStats> {
+        self.stats.clone()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Build one [`Communicator`] per rank. Consumes the universe; the
+    /// stats handle survives via [`Universe::stats`].
+    pub fn communicators(self) -> Vec<Communicator> {
+        let n = self.size();
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Message>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let senders = Arc::new(senders);
+        let topology = Arc::new(self.topology);
+        let network = Arc::new(self.network);
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| Communicator {
+                rank: Rank(i),
+                size: n,
+                senders: senders.clone(),
+                rx,
+                pending: RefCell::new(HashMap::new()),
+                topology: topology.clone(),
+                network: network.clone(),
+                stats: self.stats.clone(),
+                clock_ns: Cell::new(0),
+                compute_ns: Cell::new(0),
+                net_wait_ns: Cell::new(0),
+                collective_seq: Cell::new(0),
+            })
+            .collect()
+    }
+}
+
+/// Per-rank communication endpoint. NOT `Sync` — each rank thread owns its
+/// communicator exclusively, exactly like an MPI process owns its
+/// `MPI_COMM_WORLD` slot.
+pub struct Communicator {
+    rank: Rank,
+    size: usize,
+    senders: Arc<Vec<Sender<Message>>>,
+    rx: Receiver<Message>,
+    /// Out-of-order buffer: messages received while waiting for a
+    /// different (src, tag).
+    pending: RefCell<HashMap<(Rank, Tag), VecDeque<Message>>>,
+    topology: Arc<Topology>,
+    network: Arc<NetworkModel>,
+    stats: Arc<TrafficStats>,
+    /// Virtual time (ns): compute charged via [`Communicator::advance`] /
+    /// [`Communicator::timed`], network via message receipt.
+    clock_ns: Cell<u64>,
+    compute_ns: Cell<u64>,
+    net_wait_ns: Cell<u64>,
+    collective_seq: Cell<u64>,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.rank.is_root()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Current virtual time in ns.
+    pub fn clock_ns(&self) -> u64 {
+        self.clock_ns.get()
+    }
+
+    /// Virtual ns spent computing (vs waiting on the network).
+    pub fn compute_ns(&self) -> u64 {
+        self.compute_ns.get()
+    }
+
+    /// Virtual ns attributed to network transfer/wait.
+    pub fn net_wait_ns(&self) -> u64 {
+        self.net_wait_ns.get()
+    }
+
+    pub(crate) fn next_collective_tag(&self) -> Tag {
+        let seq = self.collective_seq.get();
+        self.collective_seq.set(seq + 1);
+        Tag::collective(seq)
+    }
+
+    /// Charge `ns` of modeled compute time to this rank's clock.
+    pub fn advance(&self, ns: u64) {
+        self.clock_ns.set(self.clock_ns.get() + ns);
+        self.compute_ns.set(self.compute_ns.get() + ns);
+    }
+
+    /// Charge `ns` of compute scaled by this rank's deployment factor
+    /// (how "an RPi is ~8x slower" enters the curves). Used for work done
+    /// on behalf of this rank elsewhere (e.g. the compute service).
+    pub fn advance_scaled(&self, ns: u64) {
+        let scale = self.topology.compute_scale(self.rank);
+        self.advance((ns as f64 * scale) as u64);
+    }
+
+    /// Run `f`, measure the *thread CPU time* it consumes, charge it
+    /// scaled by the deployment's compute factor. Thread CPU time (not
+    /// wall) keeps rank charges correct when the host has fewer cores
+    /// than simulated ranks — see util::cputime.
+    pub fn timed<T>(&self, f: impl FnOnce() -> T) -> T {
+        let start = crate::util::cputime::thread_cpu_time_ns();
+        let out = f();
+        let used = crate::util::cputime::thread_cpu_time_ns().saturating_sub(start);
+        self.advance_scaled(used);
+        out
+    }
+
+    /// Point-to-point send (non-blocking, unbounded buffering — MPI's
+    /// eager protocol for our message sizes).
+    pub fn send(&self, dst: Rank, tag: Tag, payload: Vec<u8>) -> Result<()> {
+        ensure!(dst.0 < self.size, "send to {dst} outside universe of {}", self.size);
+        let bytes = payload.len() as u64;
+        let same_node = self.topology.same_node(self.rank, dst);
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes.fetch_add(bytes, Ordering::Relaxed);
+        if !same_node {
+            self.stats.remote_messages.fetch_add(1, Ordering::Relaxed);
+            self.stats.remote_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+        // Sender pays injection serially (per-message envelope overhead +
+        // uplink bandwidth) — this is the term that makes chatty shuffles
+        // anti-scale with node count (paper Fig 10). The message is
+        // stamped post-injection; the receiver adds propagation latency.
+        let inject = self.network.injection_ns(payload.len(), same_node);
+        self.clock_ns.set(self.clock_ns.get() + inject);
+        self.net_wait_ns.set(self.net_wait_ns.get() + inject);
+        self.senders[dst.0]
+            .send(Message { src: self.rank, tag, clock_ns: self.clock_ns.get(), payload })
+            .map_err(|_| anyhow!("{dst} has hung up"))
+    }
+
+    /// Blocking receive matched on (src, tag). Advances the virtual clock
+    /// per the Lamport-with-costs rule.
+    pub fn recv(&self, src: Rank, tag: Tag) -> Result<Vec<u8>> {
+        // Already buffered?
+        if let Some(msg) = self.pop_pending(src, tag) {
+            return Ok(self.absorb(msg));
+        }
+        loop {
+            let msg = self.rx.recv().map_err(|_| anyhow!("universe torn down mid-recv"))?;
+            if msg.src == src && msg.tag == tag {
+                return Ok(self.absorb(msg));
+            }
+            self.push_pending(msg);
+        }
+    }
+
+    /// Receive from any source with the given tag; returns (src, payload).
+    pub fn recv_any(&self, tag: Tag) -> Result<(Rank, Vec<u8>)> {
+        if let Some(msg) = self.pop_pending_any(tag) {
+            let src = msg.src;
+            return Ok((src, self.absorb(msg)));
+        }
+        loop {
+            let msg = self.rx.recv().map_err(|_| anyhow!("universe torn down mid-recv"))?;
+            if msg.tag == tag {
+                let src = msg.src;
+                return Ok((src, self.absorb(msg)));
+            }
+            self.push_pending(msg);
+        }
+    }
+
+    /// Clock bookkeeping on message receipt:
+    /// `clock = max(clock, sender_clock + transfer_cost)`.
+    fn absorb(&self, msg: Message) -> Vec<u8> {
+        let same_node = self.topology.same_node(msg.src, self.rank);
+        let cost = self.network.propagation_ns(same_node);
+        let arrival = msg.clock_ns.saturating_add(cost);
+        let now = self.clock_ns.get();
+        if arrival > now {
+            self.net_wait_ns.set(self.net_wait_ns.get() + (arrival - now));
+            self.clock_ns.set(arrival);
+        }
+        msg.payload
+    }
+
+    fn push_pending(&self, msg: Message) {
+        self.pending
+            .borrow_mut()
+            .entry((msg.src, msg.tag))
+            .or_default()
+            .push_back(msg);
+    }
+
+    fn pop_pending(&self, src: Rank, tag: Tag) -> Option<Message> {
+        let mut pending = self.pending.borrow_mut();
+        let queue = pending.get_mut(&(src, tag))?;
+        let msg = queue.pop_front();
+        if queue.is_empty() {
+            pending.remove(&(src, tag));
+        }
+        msg
+    }
+
+    fn pop_pending_any(&self, tag: Tag) -> Option<Message> {
+        let mut pending = self.pending.borrow_mut();
+        let key = pending.keys().find(|(_, t)| *t == tag).copied()?;
+        let queue = pending.get_mut(&key)?;
+        let msg = queue.pop_front();
+        if queue.is_empty() {
+            pending.remove(&key);
+        }
+        msg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DeploymentKind, NetworkModel};
+
+    #[test]
+    fn p2p_roundtrip_two_ranks() {
+        let comms = Universe::local(2).communicators();
+        let [c0, c1]: [Communicator; 2] = comms.try_into().map_err(|_| ()).unwrap();
+        let t = std::thread::spawn(move || {
+            let payload = c1.recv(Rank(0), Tag::user(7)).unwrap();
+            assert_eq!(payload, b"hello");
+            c1.send(Rank(0), Tag::user(8), b"world".to_vec()).unwrap();
+        });
+        c0.send(Rank(1), Tag::user(7), b"hello".to_vec()).unwrap();
+        assert_eq!(c0.recv(Rank(1), Tag::user(8)).unwrap(), b"world");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_tags_are_buffered() {
+        let comms = Universe::local(2).communicators();
+        let [c0, c1]: [Communicator; 2] = comms.try_into().map_err(|_| ()).unwrap();
+        c0.send(Rank(1), Tag::user(1), vec![1]).unwrap();
+        c0.send(Rank(1), Tag::user(2), vec![2]).unwrap();
+        // Receive in reverse order.
+        assert_eq!(c1.recv(Rank(0), Tag::user(2)).unwrap(), vec![2]);
+        assert_eq!(c1.recv(Rank(0), Tag::user(1)).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn clock_charges_network_cost_cross_node() {
+        let topo = Topology::block(2, 1); // 2 nodes x 1 slot
+        let net = NetworkModel::from_profile(&DeploymentKind::BareMetal.profile());
+        let comms = Universe::new(topo, net).communicators();
+        let [c0, c1]: [Communicator; 2] = comms.try_into().map_err(|_| ()).unwrap();
+        c0.send(Rank(1), Tag::user(0), vec![0u8; 1024]).unwrap();
+        c1.recv(Rank(0), Tag::user(0)).unwrap();
+        // 200 µs latency + 1 KiB at ~300 Mbit/s ≈ 227 µs.
+        assert!(c1.clock_ns() >= 200_000, "clock {}", c1.clock_ns());
+        assert!(c1.net_wait_ns() > 0);
+        assert_eq!(c1.compute_ns(), 0);
+    }
+
+    #[test]
+    fn stats_count_remote_vs_local() {
+        let topo = Topology::block(2, 2); // ranks 0,1 node0; 2,3 node1
+        let uni = Universe::new(topo, NetworkModel::free());
+        let stats = uni.stats();
+        let comms = uni.communicators();
+        let mut it = comms.into_iter();
+        let c0 = it.next().unwrap();
+        let c1 = it.next().unwrap();
+        let c2 = it.next().unwrap();
+        c0.send(Rank(1), Tag::user(0), vec![0; 10]).unwrap(); // local
+        c0.send(Rank(2), Tag::user(0), vec![0; 20]).unwrap(); // remote
+        c1.recv(Rank(0), Tag::user(0)).unwrap();
+        c2.recv(Rank(0), Tag::user(0)).unwrap();
+        let (msgs, bytes, rmsgs, rbytes) = stats.snapshot();
+        assert_eq!((msgs, bytes), (2, 30));
+        assert_eq!((rmsgs, rbytes), (1, 20));
+    }
+
+    #[test]
+    fn timed_advances_compute_clock() {
+        // timed() meters thread CPU time (not wall), so burn cycles.
+        let comms = Universe::local(1).communicators();
+        let c = &comms[0];
+        c.timed(|| {
+            let mut acc = 0u64;
+            for i in 0..3_000_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(c.compute_ns() > 0, "compute {}", c.compute_ns());
+        assert_eq!(c.net_wait_ns(), 0);
+    }
+
+    #[test]
+    fn timed_does_not_charge_sleep() {
+        let comms = Universe::local(1).communicators();
+        let c = &comms[0];
+        c.timed(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(c.compute_ns() < 5_000_000, "sleep charged {}", c.compute_ns());
+    }
+
+    #[test]
+    fn send_out_of_range_is_error() {
+        let comms = Universe::local(1).communicators();
+        assert!(comms[0].send(Rank(5), Tag::user(0), vec![]).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! MPI-style communication substrate.
+//!
+//! The paper runs Blaze over MPICH/OpenMPI on three substrates (Raspberry
+//! Pi, VirtualBox VMs, Docker swarm). We cannot ship real MPI here, so this
+//! module is the substitution DESIGN.md §3 documents: **ranks are threads**
+//! inside one process, exchanging byte-accurate messages over channels,
+//! while a **virtual clock** charges every byte and every synchronization
+//! the cost the chosen deployment profile says it would have on the wire.
+//!
+//! The clock protocol is Lamport-with-costs: every message carries the
+//! sender's virtual time; on receive the destination sets
+//! `clock = max(own, sender + transfer_cost(bytes))`. Collectives are built
+//! from p2p sends, so barriers/allreduce naturally synchronize clocks to
+//! the slowest participant — exactly the global-barrier behaviour Mimir
+//! criticizes MR-MPI for, reproduced rather than hidden.
+//!
+//! Everything the framework above (shuffle, dist containers, engines) does
+//! with the network goes through [`Communicator`], so modeled time and
+//! traffic stats are complete.
+
+mod collectives;
+mod comm;
+mod datatypes;
+mod process;
+mod topology;
+
+pub use comm::{Communicator, TrafficStats, Universe};
+pub use datatypes::{Message, Rank, Tag};
+pub use process::{run_ranks, run_ranks_with_universe};
+pub use topology::{Hostfile, Topology};

@@ -1,0 +1,104 @@
+//! The rank launcher — our `mpirun`.
+//!
+//! Spawns one OS thread per rank, hands each its [`Communicator`], and
+//! joins them, propagating panics. SPMD like MPI: every rank runs the same
+//! closure, branching on `comm.rank()`.
+
+use super::comm::{Communicator, Universe};
+
+/// Run `f` on every rank of `universe`; results returned in rank order.
+///
+/// Panics in any rank abort the whole job (matching the paper's complaint
+/// that "MPI isn't fault tolerant" — controlled failure handling lives a
+/// layer up in [`crate::cluster::FaultTracker`]).
+pub fn run_ranks<T, F>(universe: Universe, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Communicator) -> T + Sync,
+{
+    run_ranks_with_universe(universe, f).0
+}
+
+/// Like [`run_ranks`], also returning the universe-wide traffic stats and
+/// the per-rank virtual clocks `(results, (clocks_ns, compute_ns, net_ns))`.
+#[allow(clippy::type_complexity)]
+pub fn run_ranks_with_universe<T, F>(
+    universe: Universe,
+    f: F,
+) -> (Vec<T>, Vec<(u64, u64, u64)>)
+where
+    T: Send,
+    F: Fn(&Communicator) -> T + Sync,
+{
+    let comms = universe.communicators();
+    let f = &f;
+    let results: Vec<(T, (u64, u64, u64))> = std::thread::scope(|scope| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                scope.spawn(move || {
+                    let out = f(&comm);
+                    (out, (comm.clock_ns(), comm.compute_ns(), comm.net_wait_ns()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(i, h)| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::panic_any(format!("rank {i} panicked: {e:?}")),
+            })
+            .collect()
+    });
+    let mut outs = Vec::with_capacity(results.len());
+    let mut clocks = Vec::with_capacity(results.len());
+    for (out, clk) in results {
+        outs.push(out);
+        clocks.push(clk);
+    }
+    (outs, clocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{Rank, Tag};
+
+    #[test]
+    fn spmd_results_in_rank_order() {
+        let got = run_ranks(Universe::local(5), |c| c.rank().0 * 10);
+        assert_eq!(got, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn ranks_communicate_inside_runner() {
+        let got = run_ranks(Universe::local(2), |c| {
+            if c.is_root() {
+                c.send(Rank(1), Tag::user(0), vec![9]).unwrap();
+                0u8
+            } else {
+                c.recv(Rank(0), Tag::user(0)).unwrap()[0]
+            }
+        });
+        assert_eq!(got, vec![0, 9]);
+    }
+
+    #[test]
+    fn clocks_are_reported() {
+        let (_, clocks) = run_ranks_with_universe(Universe::local(2), |c| {
+            c.advance(1_000);
+        });
+        assert!(clocks.iter().all(|&(clk, comp, _)| clk == 1_000 && comp == 1_000));
+    }
+
+    #[test]
+    #[should_panic(expected = "rank 1 panicked")]
+    fn rank_panic_propagates() {
+        run_ranks(Universe::local(2), |c| {
+            if c.rank().0 == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

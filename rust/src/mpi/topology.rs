@@ -1,0 +1,212 @@
+//! Rank placement: which node hosts which rank, plus hostfile parsing.
+//!
+//! The paper's §IV setups all end with "Create Hostfile with all the IP
+//! addresses of the slaves. Mpirun [...] along with hostfile each time."
+//! [`Hostfile`] parses that format (`host slots=N`, comments with `#`);
+//! [`Topology`] is the resolved placement the communicator consults for
+//! same-node vs cross-node message costs and compute scaling.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{ClusterConfig, NodeSpec};
+
+use super::datatypes::Rank;
+
+/// One hostfile line: `hostname slots=N`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostfileEntry {
+    pub host: String,
+    pub slots: usize,
+}
+
+/// Parsed MPI hostfile.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Hostfile {
+    pub entries: Vec<HostfileEntry>,
+}
+
+impl Hostfile {
+    /// Parse the OpenMPI hostfile dialect: one host per line, optional
+    /// `slots=N` (default 1), `#` comments, blank lines ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let host = parts.next().unwrap().to_string();
+            let mut slots = 1usize;
+            for opt in parts {
+                if let Some(v) = opt.strip_prefix("slots=") {
+                    slots = v.parse().map_err(|e| {
+                        anyhow::anyhow!("hostfile line {}: bad slots {v:?}: {e}", lineno + 1)
+                    })?;
+                    ensure!(slots > 0, "hostfile line {}: slots=0", lineno + 1);
+                } else {
+                    anyhow::bail!("hostfile line {}: unknown option {opt:?}", lineno + 1);
+                }
+            }
+            entries.push(HostfileEntry { host, slots });
+        }
+        ensure!(!entries.is_empty(), "hostfile has no hosts");
+        Ok(Self { entries })
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.entries.iter().map(|e| e.slots).sum()
+    }
+}
+
+/// Resolved rank -> node placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// node index per rank (block placement).
+    node_of_rank: Vec<usize>,
+    /// compute-time multiplier per rank (from the node's profile).
+    compute_scale: Vec<f64>,
+    hostnames: Vec<String>,
+}
+
+impl Topology {
+    /// All ranks on one Local node.
+    pub fn single_node(ranks: usize) -> Self {
+        Self {
+            node_of_rank: vec![0; ranks],
+            compute_scale: vec![1.0; ranks],
+            hostnames: vec!["local0".into()],
+        }
+    }
+
+    /// `nodes` x `slots` block placement with unit compute scale.
+    pub fn block(nodes: usize, slots: usize) -> Self {
+        let mut node_of_rank = Vec::with_capacity(nodes * slots);
+        for node in 0..nodes {
+            node_of_rank.extend(std::iter::repeat(node).take(slots));
+        }
+        Self {
+            node_of_rank,
+            compute_scale: vec![1.0; nodes * slots],
+            hostnames: (0..nodes).map(|i| format!("node{i}")).collect(),
+        }
+    }
+
+    /// Placement from a [`ClusterConfig`] (profile-scaled compute).
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        let specs = cfg.node_specs();
+        let mut node_of_rank = Vec::with_capacity(cfg.ranks());
+        let mut compute_scale = Vec::with_capacity(cfg.ranks());
+        for rank in 0..cfg.ranks() {
+            let node = cfg.node_of_rank(rank);
+            node_of_rank.push(node);
+            compute_scale.push(specs[node].profile.effective_compute_scale());
+        }
+        Self {
+            node_of_rank,
+            compute_scale,
+            hostnames: specs.iter().map(|s| s.hostname.clone()).collect(),
+        }
+    }
+
+    /// Placement from a hostfile + per-node specs.
+    pub fn from_hostfile(hf: &Hostfile, specs: &[NodeSpec]) -> Result<Self> {
+        ensure!(
+            hf.entries.len() == specs.len(),
+            "hostfile has {} hosts but {} node specs supplied",
+            hf.entries.len(),
+            specs.len()
+        );
+        let mut node_of_rank = Vec::new();
+        let mut compute_scale = Vec::new();
+        for (node, entry) in hf.entries.iter().enumerate() {
+            for _ in 0..entry.slots {
+                node_of_rank.push(node);
+                compute_scale.push(specs[node].profile.effective_compute_scale());
+            }
+        }
+        Ok(Self {
+            node_of_rank,
+            compute_scale,
+            hostnames: hf.entries.iter().map(|e| e.host.clone()).collect(),
+        })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.node_of_rank.len()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.hostnames.len()
+    }
+
+    pub fn node_of(&self, rank: Rank) -> usize {
+        self.node_of_rank[rank.0]
+    }
+
+    pub fn hostname_of(&self, rank: Rank) -> &str {
+        &self.hostnames[self.node_of(rank)]
+    }
+
+    pub fn same_node(&self, a: Rank, b: Rank) -> bool {
+        self.node_of_rank[a.0] == self.node_of_rank[b.0]
+    }
+
+    pub fn compute_scale(&self, rank: Rank) -> f64 {
+        self.compute_scale[rank.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterConfig, DeploymentKind};
+
+    #[test]
+    fn hostfile_parse_with_comments_and_slots() {
+        let hf = Hostfile::parse(
+            "# paper §IV.A hostfile\nrpi0 slots=4\nrpi1 slots=4 # slave 1\n\nrpi2\n",
+        )
+        .unwrap();
+        assert_eq!(hf.entries.len(), 3);
+        assert_eq!(hf.entries[0].slots, 4);
+        assert_eq!(hf.entries[2].slots, 1);
+        assert_eq!(hf.total_slots(), 9);
+    }
+
+    #[test]
+    fn hostfile_rejects_garbage() {
+        assert!(Hostfile::parse("").is_err());
+        assert!(Hostfile::parse("h slots=0").is_err());
+        assert!(Hostfile::parse("h wat=1").is_err());
+        assert!(Hostfile::parse("h slots=banana").is_err());
+    }
+
+    #[test]
+    fn block_topology_same_node() {
+        let t = Topology::block(2, 2);
+        assert!(t.same_node(Rank(0), Rank(1)));
+        assert!(!t.same_node(Rank(1), Rank(2)));
+        assert_eq!(t.nodes(), 2);
+    }
+
+    #[test]
+    fn from_config_scales_compute_for_rpi() {
+        let cfg = ClusterConfig::builder()
+            .deployment(DeploymentKind::BareMetal)
+            .nodes(2)
+            .slots_per_node(1)
+            .build();
+        let t = Topology::from_config(&cfg);
+        assert!(t.compute_scale(Rank(0)) >= 8.0);
+    }
+
+    #[test]
+    fn hostfile_topology_roundtrip() {
+        let hf = Hostfile::parse("a slots=2\nb slots=1\n").unwrap();
+        let specs = vec![NodeSpec::local(0), NodeSpec::local(1)];
+        let t = Topology::from_hostfile(&hf, &specs).unwrap();
+        assert_eq!(t.ranks(), 3);
+        assert_eq!(t.hostname_of(Rank(2)), "b");
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact discovery: parse `artifacts/manifest.json` written by
+//! `python/compile/aot.py` and expose typed shape metadata so Literals can
+//! be validated before they ever reach PJRT.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor argument/result, as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes per element for the supported dtypes.
+    pub fn elem_bytes(&self) -> usize {
+        match self.dtype.as_str() {
+            "float32" | "int32" | "uint32" => 4,
+            "float64" | "int64" => 8,
+            "bfloat16" | "float16" | "int16" => 2,
+            "int8" | "uint8" | "bool" => 1,
+            other => panic!("unknown dtype in manifest: {other}"),
+        }
+    }
+
+    /// Total byte size of the tensor.
+    pub fn byte_size(&self) -> usize {
+        self.elems() * self.elem_bytes()
+    }
+}
+
+/// One AOT artifact: an HLO-text file plus its I/O signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.json`: artifact name -> spec, rooted at the artifact dir.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    root: PathBuf,
+    by_name: HashMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let format = json.req("format")?.as_str().unwrap_or_default();
+        if format != "hlo-text" {
+            return Err(anyhow!("unsupported artifact format {format:?}"));
+        }
+        let mut by_name = HashMap::new();
+        for entry in json.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let spec = parse_artifact(entry)
+                .with_context(|| format!("bad artifact entry in {}", path.display()))?;
+            by_name.insert(spec.name.clone(), spec);
+        }
+        Ok(Self { root, by_name })
+    }
+
+    /// Default artifact directory: `$BLAZE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("BLAZE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.by_name.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.names().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.root.join(&spec.file)
+    }
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .req("shape")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim {d:?}")))
+        .collect::<Result<Vec<usize>>>()?;
+    let dtype = j
+        .req("dtype")?
+        .as_str()
+        .ok_or_else(|| anyhow!("dtype not a string"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactSpec> {
+    let name = j.req("name")?.as_str().ok_or_else(|| anyhow!("name not a string"))?.to_string();
+    let file = j.req("file")?.as_str().ok_or_else(|| anyhow!("file not a string"))?.to_string();
+    let inputs = j
+        .req("inputs")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("inputs not an array"))?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = j
+        .req("outputs")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("outputs not an array"))?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ArtifactSpec { name, file, inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("blaze-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text", "artifacts": [
+                {"name": "pi_count", "file": "pi_count.hlo.txt",
+                 "inputs": [{"shape": [8192, 2], "dtype": "float32"}],
+                 "outputs": [{"shape": [1], "dtype": "float32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        let spec = m.get("pi_count").unwrap();
+        assert_eq!(spec.inputs[0].shape, vec![8192, 2]);
+        assert_eq!(spec.inputs[0].byte_size(), 8192 * 2 * 4);
+        assert_eq!(m.path_of(spec), dir.join("pi_count.hlo.txt"));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = ArtifactManifest::load("/nonexistent-blaze-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn tensor_spec_byte_sizes() {
+        let t = TensorSpec { shape: vec![4, 3], dtype: "int32".into() };
+        assert_eq!(t.elems(), 12);
+        assert_eq!(t.byte_size(), 48);
+        let b = TensorSpec { shape: vec![7], dtype: "bfloat16".into() };
+        assert_eq!(b.byte_size(), 14);
+    }
+}

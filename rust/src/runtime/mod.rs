@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! L3 hot path.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); this
+//! module makes the resulting `artifacts/*.hlo.txt` callable from Rust via
+//! the PJRT C API (`xla` crate). One compiled executable per model variant,
+//! cached for the life of the process.
+
+mod artifacts;
+mod pjrt;
+mod service;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
+pub use pjrt::{Executable, Runtime, TensorArg, TensorOut};
+pub use service::{ComputeHandle, ComputeService};

@@ -1,0 +1,218 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so every execution yields one tuple literal that we
+//! unpack against the manifest's output signature.
+//!
+//! The `xla` crate's handles wrap raw pointers and are neither `Send` nor
+//! `Sync`; `Runtime` is therefore single-threaded by construction and is
+//! normally owned by the [`super::service::ComputeService`] thread, which
+//! models the node's single accelerator and serializes kernel launches —
+//! the same contention the paper's per-node OpenMP pool has on shared
+//! execution units.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
+
+/// An owned, typed tensor argument for an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorArg {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl TensorArg {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        TensorArg::F32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        TensorArg::I32 { data, dims: dims.to_vec() }
+    }
+
+    fn dims(&self) -> &[usize] {
+        match self {
+            TensorArg::F32 { dims, .. } | TensorArg::I32 { dims, .. } => dims,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            TensorArg::F32 { data, .. } => data.len(),
+            TensorArg::I32 { data, .. } => data.len(),
+        }
+    }
+
+    fn dtype_name(&self) -> &'static str {
+        match self {
+            TensorArg::F32 { .. } => "float32",
+            TensorArg::I32 { .. } => "int32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorArg::F32 { data, .. } => xla::Literal::vec1(data),
+            TensorArg::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims_i64)?)
+    }
+
+    /// Validate against the manifest's input spec.
+    fn check(&self, spec: &TensorSpec, pos: usize) -> Result<()> {
+        if spec.dtype != self.dtype_name() {
+            return Err(anyhow!(
+                "arg {pos}: dtype mismatch (manifest {}, got {})",
+                spec.dtype,
+                self.dtype_name()
+            ));
+        }
+        if spec.shape != self.dims() || spec.elems() != self.len() {
+            return Err(anyhow!(
+                "arg {pos}: shape mismatch (manifest {:?}, got {:?} with {} elems)",
+                spec.shape,
+                self.dims(),
+                self.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A typed tensor result from an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            TensorOut::I32(_) => Err(anyhow!("expected f32 output, got i32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorOut::I32(v) => Ok(v),
+            TensorOut::F32(_) => Err(anyhow!("expected i32 output, got f32")),
+        }
+    }
+}
+
+/// A compiled artifact bound to a PJRT client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with typed args; returns one [`TensorOut`] per manifest output.
+    pub fn run(&self, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        if args.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            ));
+        }
+        for (pos, (arg, ispec)) in args.iter().zip(&self.spec.inputs).enumerate() {
+            arg.check(ispec, pos)
+                .with_context(|| format!("artifact {}", self.spec.name))?;
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // return_tuple=True: single tuple literal wrapping all outputs.
+        let elems = result.to_tuple()?;
+        if elems.len() != self.spec.outputs.len() {
+            return Err(anyhow!(
+                "{}: manifest promises {} outputs, executable returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                elems.len()
+            ));
+        }
+        elems
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, ospec)| decode(lit, ospec))
+            .collect()
+    }
+}
+
+fn decode(lit: xla::Literal, spec: &TensorSpec) -> Result<TensorOut> {
+    let out = match spec.dtype.as_str() {
+        "float32" => TensorOut::F32(lit.to_vec::<f32>()?),
+        "int32" => TensorOut::I32(lit.to_vec::<i32>()?),
+        other => return Err(anyhow!("unsupported output dtype {other}")),
+    };
+    Ok(out)
+}
+
+/// Single-threaded PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: std::cell::RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: Default::default() })
+    }
+
+    /// Default artifact dir (`$BLAZE_ARTIFACTS` or `./artifacts`).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(ArtifactManifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling + caching on first use) an executable by name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.path_of(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT-compiling artifact {name}"))?;
+        let exe = Rc::new(Executable { exe, spec });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Convenience: compile-and-run in one call.
+    pub fn run(&self, name: &str, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        self.executable(name)?.run(args)
+    }
+}

@@ -1,0 +1,149 @@
+//! Compute service: a dedicated thread owning the (non-`Send`) PJRT
+//! [`Runtime`], fronted by cloneable, thread-safe [`ComputeHandle`]s.
+//!
+//! Rank threads submit named-kernel calls and block on the reply. This
+//! mirrors the paper's testbed shape: every node has *one* execution
+//! substrate (the OpenMP pool / the accelerator) that all local workers
+//! share, so kernel launches serialize per node while MapReduce work
+//! (parsing, hashing, shuffling) stays parallel across ranks.
+
+use std::thread::JoinHandle;
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use anyhow::{anyhow, Result};
+
+use super::pjrt::{Runtime, TensorArg, TensorOut};
+
+enum Request {
+    Run {
+        kernel: String,
+        args: Vec<TensorArg>,
+        /// Reply: (outputs, service-thread CPU ns spent executing) — the
+        /// caller charges that time to its own rank clock.
+        reply: SyncSender<Result<(Vec<TensorOut>, u64), String>>,
+    },
+    /// Pre-compile a kernel so first-use latency is off the hot path.
+    Warmup {
+        kernel: String,
+        reply: SyncSender<Result<(), String>>,
+    },
+    Shutdown,
+}
+
+/// Owner of the service thread. Dropping shuts the thread down.
+pub struct ComputeService {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Cheap, cloneable, `Send + Sync` handle for rank threads.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: Sender<Request>,
+}
+
+impl ComputeService {
+    /// Spawn the service thread over an artifact directory.
+    ///
+    /// Fails fast (in the caller's thread) if the manifest is missing or the
+    /// PJRT client cannot start.
+    pub fn start(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
+        let join = std::thread::Builder::new()
+            .name("blaze-compute".into())
+            .spawn(move || service_loop(dir, rx, ready_tx))
+            .expect("spawning compute service thread");
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Self { tx, join: Some(join) }),
+            Ok(Err(e)) => Err(anyhow!("compute service failed to start: {e}")),
+            Err(_) => Err(anyhow!("compute service thread died during startup")),
+        }
+    }
+
+    /// Spawn over the default artifact dir (`$BLAZE_ARTIFACTS` or `./artifacts`).
+    pub fn start_default() -> Result<Self> {
+        Self::start(super::artifacts::ArtifactManifest::default_dir())
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        ComputeHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl ComputeHandle {
+    /// Execute `kernel` with `args`, blocking until the result is ready.
+    pub fn run(&self, kernel: &str, args: Vec<TensorArg>) -> Result<Vec<TensorOut>> {
+        self.run_timed(kernel, args).map(|(outs, _)| outs)
+    }
+
+    /// Like [`ComputeHandle::run`], also returning the CPU ns the service
+    /// spent executing — callers charge it to their virtual clock (the
+    /// caller's own thread sleeps while blocked, so its thread-CPU meter
+    /// sees none of the kernel's work).
+    pub fn run_timed(&self, kernel: &str, args: Vec<TensorArg>) -> Result<(Vec<TensorOut>, u64)> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Request::Run { kernel: kernel.to_string(), args, reply: reply_tx })
+            .map_err(|_| anyhow!("compute service is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("compute service dropped the reply"))?
+            .map_err(|e| anyhow!("kernel {kernel}: {e}"))
+    }
+
+    /// Pre-compile a kernel (blocking) so later `run`s skip compilation.
+    pub fn warmup(&self, kernel: &str) -> Result<()> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Request::Warmup { kernel: kernel.to_string(), reply: reply_tx })
+            .map_err(|_| anyhow!("compute service is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("compute service dropped the reply"))?
+            .map_err(|e| anyhow!("warmup {kernel}: {e}"))
+    }
+}
+
+fn service_loop(
+    dir: std::path::PathBuf,
+    rx: Receiver<Request>,
+    ready: SyncSender<Result<(), String>>,
+) {
+    let runtime = match Runtime::new(&dir) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let _ = &dir; // platform/dir available for diagnostics if needed
+    for req in rx {
+        match req {
+            Request::Run { kernel, args, reply } => {
+                let start = crate::util::cputime::thread_cpu_time_ns();
+                let res = runtime.run(&kernel, &args).map_err(|e| format!("{e:#}"));
+                let used = crate::util::cputime::thread_cpu_time_ns().saturating_sub(start);
+                let _ = reply.send(res.map(|outs| (outs, used)));
+            }
+            Request::Warmup { kernel, reply } => {
+                let res = runtime.executable(&kernel).map(|_| ()).map_err(|e| format!("{e:#}"));
+                let _ = reply.send(res);
+            }
+            Request::Shutdown => break,
+        }
+    }
+}

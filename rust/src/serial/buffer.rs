@@ -1,0 +1,331 @@
+//! Byte-level encoder/decoder: little-endian fixed-width numbers, LEB128
+//! varints, zig-zag signed varints, length-prefixed bytes/strings.
+
+use anyhow::{anyhow, ensure, Result};
+
+/// Append-only byte sink. Reuse via [`Encoder::clear`] to amortize
+//  allocation in the shuffle hot loop (see core/shuffle.rs).
+#[derive(Debug, Default, Clone)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Reset length, keep capacity — buffer reuse for the hot loop.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 unsigned varint (1 byte for < 128 — most shuffle counts).
+    #[inline]
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// Zig-zag signed varint: small magnitudes stay small either sign.
+    #[inline]
+    pub fn put_varint_signed(&mut self, v: i64) {
+        self.put_varint(((v << 1) ^ (v >> 63)) as u64);
+    }
+
+    /// Length-prefixed raw bytes.
+    #[inline]
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_varint(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    #[inline]
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+
+    /// Raw bytes with NO length prefix (caller knows the length).
+    #[inline]
+    pub fn put_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Cursor over a byte slice; every read is bounds-checked.
+#[derive(Debug)]
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Error unless the buffer was fully consumed.
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.is_empty(),
+            "trailing garbage: {} of {} bytes unread",
+            self.remaining(),
+            self.buf.len()
+        );
+        Ok(())
+    }
+
+    #[inline]
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "decode underrun: need {n}, have {}", self.remaining());
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.get_u8()?;
+            ensure!(shift < 64, "varint overlong");
+            // The 10th byte may only carry one significant bit.
+            if shift == 63 {
+                ensure!(byte & 0x7e == 0, "varint overflows u64");
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    #[inline]
+    pub fn get_varint_signed(&mut self) -> Result<i64> {
+        let z = self.get_varint()?;
+        Ok(((z >> 1) as i64) ^ -((z & 1) as i64))
+    }
+
+    /// Length-prefixed raw bytes (borrowed — zero copy).
+    #[inline]
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_varint()?;
+        let n = usize::try_from(n).map_err(|_| anyhow!("byte length {n} overflows usize"))?;
+        self.take(n)
+    }
+
+    /// Length-prefixed UTF-8 string (borrowed — zero copy).
+    #[inline]
+    pub fn get_str(&mut self) -> Result<&'a str> {
+        Ok(std::str::from_utf8(self.get_bytes()?)?)
+    }
+
+    /// Raw bytes with no length prefix.
+    #[inline]
+    pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_width_roundtrip() {
+        let mut e = Encoder::new();
+        e.put_u8(7);
+        e.put_u32(0xdead_beef);
+        e.put_u64(u64::MAX);
+        e.put_i32(-42);
+        e.put_i64(i64::MIN);
+        e.put_f32(1.5);
+        e.put_f64(-2.25);
+        let mut d = Decoder::new(e.as_bytes());
+        assert_eq!(d.get_u8().unwrap(), 7);
+        assert_eq!(d.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(d.get_u64().unwrap(), u64::MAX);
+        assert_eq!(d.get_i32().unwrap(), -42);
+        assert_eq!(d.get_i64().unwrap(), i64::MIN);
+        assert_eq!(d.get_f32().unwrap(), 1.5);
+        assert_eq!(d.get_f64().unwrap(), -2.25);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut e = Encoder::new();
+            e.put_varint(v);
+            let mut d = Decoder::new(e.as_bytes());
+            assert_eq!(d.get_varint().unwrap(), v, "value {v}");
+            d.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn varint_signed_boundaries() {
+        for v in [0i64, 1, -1, 63, -64, 64, i64::MAX, i64::MIN] {
+            let mut e = Encoder::new();
+            e.put_varint_signed(v);
+            let mut d = Decoder::new(e.as_bytes());
+            assert_eq!(d.get_varint_signed().unwrap(), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn varint_small_is_one_byte() {
+        let mut e = Encoder::new();
+        e.put_varint(127);
+        assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn underrun_is_error_not_panic() {
+        let mut d = Decoder::new(&[1, 2]);
+        assert!(d.get_u32().is_err());
+    }
+
+    #[test]
+    fn overlong_varint_rejected() {
+        // 11 continuation bytes: longer than any valid u64 varint.
+        let bytes = [0x80u8; 11];
+        let mut d = Decoder::new(&bytes);
+        assert!(d.get_varint().is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_detected() {
+        let mut e = Encoder::new();
+        e.put_u8(1);
+        e.put_u8(2);
+        let mut d = Decoder::new(e.as_bytes());
+        d.get_u8().unwrap();
+        assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn str_roundtrip_zero_copy() {
+        let mut e = Encoder::new();
+        e.put_str("héllo wörld");
+        let mut d = Decoder::new(e.as_bytes());
+        assert_eq!(d.get_str().unwrap(), "héllo wörld");
+    }
+
+    #[test]
+    fn encoder_clear_keeps_capacity() {
+        let mut e = Encoder::with_capacity(1024);
+        e.put_raw(&[0u8; 512]);
+        e.clear();
+        assert_eq!(e.len(), 0);
+        assert!(e.buf.capacity() >= 1024);
+    }
+}

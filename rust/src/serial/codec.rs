@@ -1,0 +1,310 @@
+//! `FastSerialize`: the trait every key/value type implements to cross the
+//! wire. Implementations for the primitive zoo, strings, vectors, pairs,
+//! options and maps — enough to express all of the paper's workloads
+//! (wordcount: `(String, u64)`, k-means: `(u32, Vec<f32>)`, pi: `(u8, u64)`,
+//! matmul/linreg: `((u32, u32), f64)`).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hash};
+
+use anyhow::Result;
+
+use super::{Decoder, Encoder};
+
+/// Schema-less binary serialization. Contract: `decode(encode(x)) == x`
+/// and decoding consumes exactly the bytes encoding produced (verified by
+/// proptest in tests/proptest_serial.rs).
+pub trait FastSerialize: Sized {
+    fn encode(&self, enc: &mut Encoder);
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self>;
+
+    /// Size hint in bytes for buffer pre-allocation (0 = unknown).
+    fn size_hint(&self) -> usize {
+        0
+    }
+}
+
+macro_rules! impl_fixed {
+    ($ty:ty, $put:ident, $get:ident, $n:expr) => {
+        impl FastSerialize for $ty {
+            #[inline]
+            fn encode(&self, enc: &mut Encoder) {
+                enc.$put(*self);
+            }
+            #[inline]
+            fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+                dec.$get()
+            }
+            #[inline]
+            fn size_hint(&self) -> usize {
+                $n
+            }
+        }
+    };
+}
+
+impl_fixed!(u8, put_u8, get_u8, 1);
+impl_fixed!(f32, put_f32, get_f32, 4);
+impl_fixed!(f64, put_f64, get_f64, 8);
+
+// Integers ride varints: shuffle traffic is dominated by small counts.
+macro_rules! impl_varint_unsigned {
+    ($ty:ty) => {
+        impl FastSerialize for $ty {
+            #[inline]
+            fn encode(&self, enc: &mut Encoder) {
+                enc.put_varint(*self as u64);
+            }
+            #[inline]
+            fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+                let v = dec.get_varint()?;
+                Ok(<$ty>::try_from(v)?)
+            }
+            #[inline]
+            fn size_hint(&self) -> usize {
+                (64 - (*self as u64 | 1).leading_zeros() as usize).div_ceil(7)
+            }
+        }
+    };
+}
+
+macro_rules! impl_varint_signed {
+    ($ty:ty) => {
+        impl FastSerialize for $ty {
+            #[inline]
+            fn encode(&self, enc: &mut Encoder) {
+                enc.put_varint_signed(*self as i64);
+            }
+            #[inline]
+            fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+                let v = dec.get_varint_signed()?;
+                Ok(<$ty>::try_from(v)?)
+            }
+            #[inline]
+            fn size_hint(&self) -> usize {
+                10
+            }
+        }
+    };
+}
+
+impl_varint_unsigned!(u16);
+impl_varint_unsigned!(u32);
+impl_varint_unsigned!(u64);
+impl_varint_unsigned!(usize);
+impl_varint_signed!(i16);
+impl_varint_signed!(i32);
+impl_varint_signed!(i64);
+
+impl FastSerialize for bool {
+    #[inline]
+    fn encode(&self, enc: &mut Encoder) {
+        enc.put_u8(*self as u8);
+    }
+    #[inline]
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+        Ok(dec.get_u8()? != 0)
+    }
+    #[inline]
+    fn size_hint(&self) -> usize {
+        1
+    }
+}
+
+impl FastSerialize for String {
+    #[inline]
+    fn encode(&self, enc: &mut Encoder) {
+        enc.put_str(self);
+    }
+    #[inline]
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+        Ok(dec.get_str()?.to_owned())
+    }
+    #[inline]
+    fn size_hint(&self) -> usize {
+        self.len() + 5
+    }
+}
+
+impl FastSerialize for () {
+    #[inline]
+    fn encode(&self, _enc: &mut Encoder) {}
+    #[inline]
+    fn decode(_dec: &mut Decoder<'_>) -> Result<Self> {
+        Ok(())
+    }
+    #[inline]
+    fn size_hint(&self) -> usize {
+        0
+    }
+}
+
+impl<T: FastSerialize> FastSerialize for Option<T> {
+    fn encode(&self, enc: &mut Encoder) {
+        match self {
+            None => enc.put_u8(0),
+            Some(v) => {
+                enc.put_u8(1);
+                v.encode(enc);
+            }
+        }
+    }
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+        Ok(match dec.get_u8()? {
+            0 => None,
+            _ => Some(T::decode(dec)?),
+        })
+    }
+    fn size_hint(&self) -> usize {
+        1 + self.as_ref().map_or(0, FastSerialize::size_hint)
+    }
+}
+
+impl<T: FastSerialize> FastSerialize for Vec<T> {
+    fn encode(&self, enc: &mut Encoder) {
+        enc.put_varint(self.len() as u64);
+        for item in self {
+            item.encode(enc);
+        }
+    }
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+        let n = dec.get_varint()? as usize;
+        // Guard absurd lengths: never reserve more than what remains.
+        let mut v = Vec::with_capacity(n.min(dec.remaining()));
+        for _ in 0..n {
+            v.push(T::decode(dec)?);
+        }
+        Ok(v)
+    }
+    fn size_hint(&self) -> usize {
+        5 + self.iter().map(FastSerialize::size_hint).sum::<usize>()
+    }
+}
+
+impl<A: FastSerialize, B: FastSerialize> FastSerialize for (A, B) {
+    fn encode(&self, enc: &mut Encoder) {
+        self.0.encode(enc);
+        self.1.encode(enc);
+    }
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+        Ok((A::decode(dec)?, B::decode(dec)?))
+    }
+    fn size_hint(&self) -> usize {
+        self.0.size_hint() + self.1.size_hint()
+    }
+}
+
+impl<A: FastSerialize, B: FastSerialize, C: FastSerialize> FastSerialize for (A, B, C) {
+    fn encode(&self, enc: &mut Encoder) {
+        self.0.encode(enc);
+        self.1.encode(enc);
+        self.2.encode(enc);
+    }
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+        Ok((A::decode(dec)?, B::decode(dec)?, C::decode(dec)?))
+    }
+    fn size_hint(&self) -> usize {
+        self.0.size_hint() + self.1.size_hint() + self.2.size_hint()
+    }
+}
+
+impl<K, V, S> FastSerialize for HashMap<K, V, S>
+where
+    K: FastSerialize + Eq + Hash,
+    V: FastSerialize,
+    S: BuildHasher + Default,
+{
+    fn encode(&self, enc: &mut Encoder) {
+        enc.put_varint(self.len() as u64);
+        for (k, v) in self {
+            k.encode(enc);
+            v.encode(enc);
+        }
+    }
+    fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+        let n = dec.get_varint()? as usize;
+        let mut m = HashMap::with_capacity_and_hasher(n.min(dec.remaining()), S::default());
+        for _ in 0..n {
+            let k = K::decode(dec)?;
+            let v = V::decode(dec)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+    fn size_hint(&self) -> usize {
+        5 + self.iter().map(|(k, v)| k.size_hint() + v.size_hint()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{from_bytes, to_bytes};
+    use super::*;
+
+    fn roundtrip<T: FastSerialize + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = to_bytes(&v);
+        let back: T = from_bytes(&bytes).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn primitives() {
+        roundtrip(0u8);
+        roundtrip(42u32);
+        roundtrip(u64::MAX);
+        roundtrip(-7i32);
+        roundtrip(i64::MIN);
+        roundtrip(3.25f32);
+        roundtrip(true);
+        roundtrip(());
+    }
+
+    #[test]
+    fn wordcount_record() {
+        roundtrip(("brown".to_string(), 17u64));
+    }
+
+    #[test]
+    fn kmeans_record() {
+        roundtrip((3u32, vec![1.0f32, -2.5, 0.0]));
+    }
+
+    #[test]
+    fn matmul_record() {
+        roundtrip(((2u32, 9u32), 1.5f64));
+    }
+
+    #[test]
+    fn nested_containers() {
+        roundtrip(vec![Some(("k".to_string(), vec![1u64, 2, 3])), None]);
+    }
+
+    #[test]
+    fn hashmap_roundtrip() {
+        let mut m = HashMap::new();
+        m.insert("a".to_string(), 1u64);
+        m.insert("b".to_string(), 2u64);
+        roundtrip(m);
+    }
+
+    #[test]
+    fn decode_of_truncated_vec_fails() {
+        let bytes = to_bytes(&vec![1u64, 2, 3]);
+        assert!(from_bytes::<Vec<u64>>(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn absurd_length_prefix_fails_cleanly() {
+        let mut enc = Encoder::new();
+        enc.put_varint(u64::MAX); // claims 2^64 elements
+        assert!(from_bytes::<Vec<u8>>(enc.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn size_hint_is_upper_boundish() {
+        let v = ("hello".to_string(), 123u64);
+        let hint = v.size_hint();
+        let actual = to_bytes(&v).len();
+        assert!(hint >= actual, "hint {hint} < actual {actual}");
+    }
+}

@@ -1,0 +1,35 @@
+//! Fast serialization — the Blaze "no-protobuf" wire format.
+//!
+//! Blaze's pitch (and the paper's §II) is that MPI MapReduce frameworks
+//! waste time in ProtoBuf-style serialization; a schema-less, allocation-
+//! free binary codec is faster. This module is that codec: little-endian
+//! fixed-width primitives, LEB128 varints for lengths/counts, zig-zag for
+//! signed varints, and `FastSerialize` as the single trait every key/value
+//! type implements to ride the shuffle.
+//!
+//! `benches/micro_hot_paths.rs` compares this codec against `serde_json`
+//! on shuffle-shaped records (the paper's "faster serialization" claim);
+//! `tests/` + proptest round-trip every implementation.
+
+mod buffer;
+mod codec;
+
+pub use buffer::{Decoder, Encoder};
+pub use codec::FastSerialize;
+
+use anyhow::Result;
+
+/// Encode a value to a fresh byte vector.
+pub fn to_bytes<T: FastSerialize>(value: &T) -> Vec<u8> {
+    let mut enc = Encoder::new();
+    value.encode(&mut enc);
+    enc.into_bytes()
+}
+
+/// Decode a value from a byte slice, requiring full consumption.
+pub fn from_bytes<T: FastSerialize>(bytes: &[u8]) -> Result<T> {
+    let mut dec = Decoder::new(bytes);
+    let value = T::decode(&mut dec)?;
+    dec.finish()?;
+    Ok(value)
+}

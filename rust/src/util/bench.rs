@@ -1,0 +1,126 @@
+//! Micro-benchmark harness (replaces criterion): warmup, N timed
+//! iterations, robust stats, aligned printing. Used by `benches/*.rs`
+//! (built with `harness = false`) and `blaze bench-figure`.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one benchmark.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// criterion-ish one-liner.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}  median {:>12}  ±{:>10}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.stddev_ns),
+            self.iters
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+/// The closure's return value is black-boxed so work isn't optimized out.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let median = samples[iters / 2];
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: samples[0],
+        max_ns: samples[iters - 1],
+        stddev_ns: var.sqrt(),
+    }
+}
+
+/// Time one run of `f` (for expensive end-to-end jobs where modeled time,
+/// not host time, is the figure's y-axis).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = black_box(f());
+    (out, t.elapsed())
+}
+
+/// Optimization barrier (std::hint::black_box re-export point so benches
+/// don't depend on the unstable-history directly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let r = bench("noop-ish", 2, 25, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.max_ns);
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 25);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = bench("fmt", 0, 3, || 1 + 1);
+        let line = r.line();
+        assert!(line.contains("fmt"));
+        assert!(line.contains("iters"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Per-thread CPU time — the simulator's compute meter.
+//!
+//! The host may have fewer cores than simulated ranks (CI runs this on a
+//! single core), so *wall* time on a rank thread includes time spent
+//! descheduled while sibling ranks run. `CLOCK_THREAD_CPUTIME_ID` charges
+//! each rank exactly the cycles it consumed, which is what the virtual
+//! clock wants: N ranks splitting a job N ways each accrue ~1/N the
+//! compute, independent of host core count.
+
+/// Nanoseconds of CPU time consumed by the calling thread.
+pub fn thread_cpu_time_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0, "clock_gettime failed");
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_advances_under_load() {
+        let a = thread_cpu_time_ns();
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(std::hint::black_box(i));
+        }
+        std::hint::black_box(acc);
+        let b = thread_cpu_time_ns();
+        assert!(b > a, "{a} -> {b}");
+    }
+
+    #[test]
+    fn sleep_consumes_almost_no_cpu_time() {
+        let a = thread_cpu_time_ns();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let b = thread_cpu_time_ns();
+        assert!(b - a < 10_000_000, "sleep charged {} ns of CPU", b - a);
+    }
+}

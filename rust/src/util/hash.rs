@@ -1,0 +1,153 @@
+//! Seeded, deterministic hashing (replaces ahash).
+//!
+//! Every rank must route a key to the same shard, so the hasher state is a
+//! pure function of the seed — never of process-random state. Core is an
+//! FxHash-style multiply-rotate over 8-byte chunks with a SplitMix64
+//! finalizer for avalanche (consecutive integer keys must still spread
+//! across shards — see tests).
+
+use std::hash::{BuildHasher, Hasher};
+
+const K: u64 = 0x517C_C1B7_2722_0A95; // fxhash multiplier
+
+/// Streaming hasher with a seed-derived initial state.
+#[derive(Debug, Clone)]
+pub struct StableHasher {
+    state: u64,
+}
+
+impl StableHasher {
+    #[inline]
+    pub fn with_seed(seed: u64) -> Self {
+        Self { state: seed ^ 0xcbf2_9ce4_8422_2325 }
+    }
+
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        self.state = (self.state.rotate_left(26) ^ word).wrapping_mul(K);
+    }
+}
+
+impl Hasher for StableHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.mix(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            // Fold the length in so "ab" != "ab\0".
+            self.mix(u64::from_le_bytes(tail) ^ ((rem.len() as u64) << 56));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.mix(v);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.mix(v as u64);
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.mix(v as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.mix(v as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        // SplitMix64 finalizer: full avalanche.
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// `BuildHasher` whose hashers depend only on the stored seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeededState {
+    seed: u64,
+}
+
+impl SeededState {
+    pub const fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// Convenience one-shot hash.
+    pub fn hash_one<T: std::hash::Hash>(&self, value: &T) -> u64 {
+        let mut h = self.build_hasher();
+        value.hash(&mut h);
+        h.finish()
+    }
+}
+
+impl BuildHasher for SeededState {
+    type Hasher = StableHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> StableHasher {
+        StableHasher::with_seed(self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_across_instances() {
+        let a = SeededState::new(9);
+        let b = SeededState::new(9);
+        for s in ["alpha", "beta", "gamma", ""] {
+            assert_eq!(a.hash_one(&s), b.hash_one(&s));
+        }
+    }
+
+    #[test]
+    fn seed_changes_hash() {
+        let a = SeededState::new(1);
+        let b = SeededState::new(2);
+        let differing = (0u64..100).filter(|i| a.hash_one(i) != b.hash_one(i)).count();
+        assert!(differing > 90);
+    }
+
+    #[test]
+    fn sequential_ints_spread_over_buckets() {
+        let s = SeededState::new(0);
+        let n = 16u64;
+        let mut hist = vec![0usize; n as usize];
+        for i in 0u64..16_000 {
+            hist[(s.hash_one(&i) % n) as usize] += 1;
+        }
+        for (b, h) in hist.iter().enumerate() {
+            assert!((700..1300).contains(h), "bucket {b}: {h} ({hist:?})");
+        }
+    }
+
+    #[test]
+    fn prefix_strings_differ() {
+        let s = SeededState::new(0);
+        assert_ne!(s.hash_one(&"ab"), s.hash_one(&"ab\0"));
+        assert_ne!(s.hash_one(&"a"), s.hash_one(&"aa"));
+    }
+
+    #[test]
+    fn usable_in_std_hashmap() {
+        let mut m: std::collections::HashMap<String, u32, SeededState> =
+            std::collections::HashMap::with_hasher(SeededState::new(4));
+        m.insert("k".into(), 1);
+        assert_eq!(m["k"], 1);
+    }
+}

@@ -1,0 +1,23 @@
+//! In-tree substrate utilities.
+//!
+//! The build environment vendors only the `xla` PJRT bindings (and
+//! `anyhow`), so everything a framework usually pulls from crates.io is
+//! implemented here from scratch: deterministic RNG, seeded hashing, a
+//! JSON value type + parser, a TOML-subset config parser, self-deleting
+//! temp files, a micro-benchmark harness, and a property-test runner.
+
+pub mod bench;
+pub mod cputime;
+pub mod hash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tmp;
+pub mod toml_mini;
+
+pub use bench::{bench, BenchResult};
+pub use hash::{SeededState, StableHasher};
+pub use json::Json;
+pub use rng::Rng;
+pub use tmp::TempFile;
+pub use toml_mini::TomlDoc;

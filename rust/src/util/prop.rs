@@ -1,0 +1,88 @@
+//! Mini property-test runner (replaces proptest): seeded generators +
+//! a `for_all` driver that reports the failing seed for reproduction.
+//!
+//! No shrinking — cases are generated small-biased instead (sizes drawn
+//! log-uniform), which keeps counterexamples readable in practice.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `BLAZE_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("BLAZE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the failing seed.
+pub fn for_all<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let cases = default_cases();
+    for case in 0..cases as u64 {
+        let mut rng = Rng::with_stream(0xB1A2_E000 ^ case, case);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed stream {case}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Log-uniform size in [0, max] — biases toward small cases.
+pub fn size(rng: &mut Rng, max: usize) -> usize {
+    if max == 0 {
+        return 0;
+    }
+    let bits = 64 - (max as u64).leading_zeros() as u64;
+    let b = rng.below(bits + 1);
+    let cap = ((1u64 << b).min(max as u64)).max(1);
+    rng.below(cap + 1) as usize
+}
+
+/// Random ASCII-ish string (identifier alphabet + some unicode).
+pub fn string(rng: &mut Rng, max_len: usize) -> String {
+    const ALPHA: &[char] =
+        &['a', 'b', 'c', 'x', 'y', 'z', '0', '7', '_', ' ', 'é', '雪', '\u{1F600}'];
+    let len = size(rng, max_len);
+    (0..len).map(|_| ALPHA[rng.below(ALPHA.len() as u64) as usize]).collect()
+}
+
+/// Vec of T.
+pub fn vec_of<T>(rng: &mut Rng, max_len: usize, item: impl Fn(&mut Rng) -> T) -> Vec<T> {
+    let len = size(rng, max_len);
+    (0..len).map(|_| item(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        for_all("reverse-twice", |r| vec_of(r, 50, |r| r.next_u32()), |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-false\" failed")]
+    fn failing_property_reports_seed() {
+        for_all("always-false", |r| r.next_u32(), |_| false);
+    }
+
+    #[test]
+    fn sizes_cover_small_and_large() {
+        let mut rng = Rng::new(1);
+        let sizes: Vec<usize> = (0..500).map(|_| size(&mut rng, 1000)).collect();
+        assert!(sizes.iter().any(|&s| s == 0));
+        assert!(sizes.iter().any(|&s| s > 100));
+        assert!(sizes.iter().all(|&s| s <= 1000));
+    }
+}

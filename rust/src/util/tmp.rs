@@ -1,0 +1,89 @@
+//! Self-deleting temp files (replaces the `tempfile` crate) — used by the
+//! shuffle's out-of-core spill path.
+
+use std::fs::{File, OpenOptions};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// An open read/write file that unlinks itself on drop.
+#[derive(Debug)]
+pub struct TempFile {
+    file: Option<File>,
+    path: PathBuf,
+}
+
+impl TempFile {
+    pub fn new(prefix: &str) -> Result<Self> {
+        let dir = std::env::temp_dir();
+        let unique = format!(
+            "{prefix}-{}-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed),
+            // Wall-clock entropy so parallel test binaries don't collide.
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0),
+        );
+        let path = dir.join(unique);
+        let file = OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("creating temp file {}", path.display()))?;
+        Ok(Self { file: Some(file), path })
+    }
+
+    pub fn file(&mut self) -> &mut File {
+        self.file.as_mut().expect("file present until drop")
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempFile {
+    fn drop(&mut self) {
+        drop(self.file.take());
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Seek, SeekFrom, Write};
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut t = TempFile::new("blaze-test").unwrap();
+        t.file().write_all(b"hello spill").unwrap();
+        t.file().seek(SeekFrom::Start(0)).unwrap();
+        let mut buf = String::new();
+        t.file().read_to_string(&mut buf).unwrap();
+        assert_eq!(buf, "hello spill");
+    }
+
+    #[test]
+    fn unlinked_on_drop() {
+        let path = {
+            let t = TempFile::new("blaze-drop").unwrap();
+            assert!(t.path().exists());
+            t.path().to_path_buf()
+        };
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn unique_names() {
+        let a = TempFile::new("blaze-uniq").unwrap();
+        let b = TempFile::new("blaze-uniq").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

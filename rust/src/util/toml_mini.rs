@@ -1,0 +1,197 @@
+//! TOML-subset parser for cluster/job config files.
+//!
+//! Supports what `blaze run --cluster cluster.toml` needs: top-level and
+//! `[section]` tables, `key = value` with strings, integers, floats,
+//! booleans, and `#` comments. No arrays-of-tables, no multi-line strings
+//! — config files here are flat.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`; top-level keys live under
+/// the empty-string section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("line {}", lineno + 1);
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').with_context(ctx)?.trim();
+                ensure!(!name.is_empty(), "empty section header at line {}", lineno + 1);
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            ensure!(!key.is_empty(), "empty key at line {}", lineno + 1);
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            let prev = doc
+                .sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+            ensure!(prev.is_none(), "duplicate key {key:?} at line {}", lineno + 1);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Top-level key.
+    pub fn top(&self, key: &str) -> Option<&TomlValue> {
+        self.get("", key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = (&str, &BTreeMap<String, TomlValue>)> {
+        self.sections.iter().map(|(k, v)| (k.as_str(), v))
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    ensure!(!text.is_empty(), "empty value");
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').context("unterminated string")?;
+        ensure!(!inner.contains('"'), "embedded quote in string");
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unparseable value {text:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_cluster_config_shape() {
+        let doc = TomlDoc::parse(
+            r#"
+# paper §IV.B testbed
+deployment = "vm"
+nodes = 4
+slots-per-node = 2
+seed = 42
+
+[limits]
+mem-fraction = 0.6
+spill = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.top("deployment").unwrap().as_str(), Some("vm"));
+        assert_eq!(doc.top("nodes").unwrap().as_int(), Some(4));
+        assert_eq!(doc.get("limits", "mem-fraction").unwrap().as_float(), Some(0.6));
+        assert_eq!(doc.get("limits", "spill").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let doc = TomlDoc::parse("name = \"a # b\" # real comment\n").unwrap();
+        assert_eq!(doc.top("name").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1_000\n").unwrap();
+        assert_eq!(doc.top("a").unwrap().as_int(), Some(3));
+        assert_eq!(doc.top("b").unwrap().as_int(), None);
+        assert_eq!(doc.top("b").unwrap().as_float(), Some(3.0));
+        assert_eq!(doc.top("c").unwrap().as_int(), Some(1000));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("keyonly\n").is_err());
+        assert!(TomlDoc::parse("a = \n").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+        assert!(TomlDoc::parse("a = \"x\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_ok() {
+        let doc = TomlDoc::parse("\n# nothing\n").unwrap();
+        assert!(doc.top("x").is_none());
+    }
+}

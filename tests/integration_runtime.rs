@@ -1,0 +1,201 @@
+//! PJRT runtime integration: Rust loads the AOT Pallas kernels and the
+//! results match the native implementations exactly.
+//!
+//! These tests need `make artifacts`; they skip (with a loud message)
+//! when the artifact directory is absent so `cargo test` stays runnable
+//! on a fresh checkout.
+
+use blaze_rs::apps::{kmeans, linreg, pi, wordcount};
+use blaze_rs::cluster::ClusterConfig;
+use blaze_rs::core::ReductionMode;
+use blaze_rs::runtime::{ArtifactManifest, ComputeService, Runtime, TensorArg};
+
+fn artifacts_ready() -> bool {
+    let dir = ArtifactManifest::default_dir();
+    if ArtifactManifest::load(&dir).is_ok() {
+        true
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        false
+    }
+}
+
+#[test]
+fn manifest_lists_all_kernels() {
+    if !artifacts_ready() {
+        return;
+    }
+    let m = ArtifactManifest::load(ArtifactManifest::default_dir()).unwrap();
+    for name in ["kmeans_step_d2", "kmeans_step_d8", "kmeans_step_d32", "wordcount_segsum", "pi_count", "linreg_d8"] {
+        assert!(m.get(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_shapes_before_pjrt() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::from_default_dir().unwrap();
+    let err = rt
+        .run("pi_count", &[TensorArg::f32(vec![0.0; 10], &[5, 2])])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape mismatch"), "{err:#}");
+    let err = rt
+        .run("pi_count", &[TensorArg::i32(vec![0; 8192 * 2], &[8192, 2])])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dtype mismatch"), "{err:#}");
+}
+
+#[test]
+fn pi_kernel_counts_exactly() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::from_default_dir().unwrap();
+    // Deterministic pattern: first 1000 points inside, rest outside.
+    let mut xy = Vec::with_capacity(8192 * 2);
+    for i in 0..8192 {
+        if i < 1000 {
+            xy.extend_from_slice(&[0.1, 0.1]);
+        } else {
+            xy.extend_from_slice(&[2.0, 2.0]);
+        }
+    }
+    let out = rt.run("pi_count", &[TensorArg::f32(xy, &[8192, 2])]).unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &[1000.0]);
+}
+
+#[test]
+fn segsum_kernel_matches_scalar_histogram() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::from_default_dir().unwrap();
+    let mut keys = vec![0i32; 8192];
+    let mut vals = vec![0f32; 8192];
+    let mut want = vec![0f32; 1024];
+    for i in 0..8192 {
+        let k = ((i * 37) % 1024) as i32;
+        keys[i] = k;
+        vals[i] = (i % 5) as f32;
+        want[k as usize] += (i % 5) as f32;
+    }
+    let out = rt
+        .run(
+            "wordcount_segsum",
+            &[TensorArg::i32(keys, &[8192]), TensorArg::f32(vals, &[8192])],
+        )
+        .unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), want.as_slice());
+}
+
+#[test]
+fn compute_service_is_shareable_across_threads() {
+    if !artifacts_ready() {
+        return;
+    }
+    let service = ComputeService::start_default().unwrap();
+    let handle = service.handle();
+    handle.warmup("pi_count").unwrap();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let h = handle.clone();
+            s.spawn(move || {
+                let xy = vec![0.1f32; 8192 * 2];
+                let out = h.run("pi_count", vec![TensorArg::f32(xy, &[8192, 2])]).unwrap();
+                assert_eq!(out[0].as_f32().unwrap(), &[8192.0], "thread {t}");
+            });
+        }
+    });
+}
+
+#[test]
+fn unknown_kernel_is_clean_error() {
+    if !artifacts_ready() {
+        return;
+    }
+    let service = ComputeService::start_default().unwrap();
+    let err = service.handle().run("not_a_kernel", vec![]).unwrap_err();
+    assert!(format!("{err:#}").contains("not in manifest"), "{err:#}");
+}
+
+#[test]
+fn kmeans_kernel_equals_native_end_to_end() {
+    if !artifacts_ready() {
+        return;
+    }
+    let service = ComputeService::start_default().unwrap();
+    let handle = service.handle();
+    let cluster = ClusterConfig::builder().ranks(2).seed(5).build();
+    for d in kmeans::KERNEL_DIMS {
+        // 5000 points: exercises padding (not a multiple of 4096).
+        let pts = kmeans::generate_points(5_000, d, kmeans::KERNEL_K, 5);
+        let native =
+            kmeans::run(&cluster, &pts, kmeans::KERNEL_K, 4, kmeans::ComputePath::Native, None)
+                .unwrap();
+        let kernel = kmeans::run(
+            &cluster,
+            &pts,
+            kmeans::KERNEL_K,
+            4,
+            kmeans::ComputePath::Kernel,
+            Some(&handle),
+        )
+        .unwrap();
+        for (a, b) in native.centroids.iter().zip(&kernel.centroids) {
+            assert!((a - b).abs() < 1e-3, "d={d}: {a} vs {b}");
+        }
+        assert!(
+            (native.inertia - kernel.inertia).abs() / native.inertia.max(1e-9) < 1e-3,
+            "d={d}: inertia {} vs {}",
+            native.inertia,
+            kernel.inertia
+        );
+    }
+}
+
+#[test]
+fn wordcount_kernel_equals_framework() {
+    if !artifacts_ready() {
+        return;
+    }
+    let service = ComputeService::start_default().unwrap();
+    let handle = service.handle();
+    let cluster = ClusterConfig::builder().ranks(3).seed(6).build();
+    let corpus = wordcount::generate_corpus(3_000, 7, wordcount::SEGSUM_KEYS, 6);
+    let framework = wordcount::run(&cluster, &corpus, ReductionMode::Delayed).unwrap();
+    let kernel = wordcount::run_segsum_kernel(&cluster, &corpus, &handle).unwrap();
+    assert_eq!(framework.result, kernel.result);
+}
+
+#[test]
+fn pi_kernel_path_matches_batched_estimate_closely() {
+    if !artifacts_ready() {
+        return;
+    }
+    let service = ComputeService::start_default().unwrap();
+    let handle = service.handle();
+    let cluster = ClusterConfig::builder().ranks(2).build();
+    let chunks = pi::make_chunks(200_000, 8, 7);
+    let kernel = pi::run_kernel(&cluster, &chunks, &handle).unwrap();
+    assert!((kernel.result - std::f64::consts::PI).abs() < 0.02, "pi {}", kernel.result);
+}
+
+#[test]
+fn linreg_kernel_matches_native_gradient_descent() {
+    if !artifacts_ready() {
+        return;
+    }
+    let service = ComputeService::start_default().unwrap();
+    let handle = service.handle();
+    let cluster = ClusterConfig::builder().ranks(2).build();
+    let data = linreg::generate(6_000, linreg::KERNEL_D, 0.02, 8);
+    let native = linreg::run(&cluster, &data, 60, 0.4, linreg::ComputePath::Native, None).unwrap();
+    let kernel =
+        linreg::run(&cluster, &data, 60, 0.4, linreg::ComputePath::Kernel, Some(&handle)).unwrap();
+    for (a, b) in native.w.iter().zip(&kernel.w) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+    assert!((native.mse - kernel.mse).abs() < 1e-4);
+}

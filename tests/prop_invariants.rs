@@ -1,0 +1,237 @@
+//! Property-based tests (in-tree runner: `blaze_rs::util::prop`) on the
+//! framework's core invariants: codec roundtrips, router determinism,
+//! rebalance leveling, partitioner tiling, JSON/TOML roundtrips, and
+//! engine-vs-serial equivalence on random inputs.
+
+use std::collections::HashMap;
+
+use blaze_rs::cluster::ClusterConfig;
+use blaze_rs::core::ReductionMode;
+use blaze_rs::dist::{rebalance_plan, ShardRouter};
+use blaze_rs::serial::{from_bytes, to_bytes, FastSerialize};
+use blaze_rs::util::prop::{for_all, string, vec_of};
+use blaze_rs::util::rng::Rng;
+use blaze_rs::util::Json;
+
+fn roundtrips<T: FastSerialize + PartialEq + std::fmt::Debug>(v: &T) -> bool {
+    match from_bytes::<T>(&to_bytes(v)) {
+        Ok(back) => back == *v,
+        Err(_) => false,
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip_u64() {
+    for_all("u64 roundtrip", |r| r.next_u64(), roundtrips);
+}
+
+#[test]
+fn prop_codec_roundtrip_i64_zigzag() {
+    for_all("i64 roundtrip", |r| r.next_u64() as i64, roundtrips);
+}
+
+#[test]
+fn prop_codec_roundtrip_strings() {
+    for_all("string roundtrip", |r| string(r, 200), roundtrips);
+}
+
+#[test]
+fn prop_codec_roundtrip_wordcount_records() {
+    for_all(
+        "(String, u64) vec roundtrip",
+        |r| vec_of(r, 60, |r| (string(r, 20), r.next_u64())),
+        roundtrips,
+    );
+}
+
+#[test]
+fn prop_codec_roundtrip_kmeans_records() {
+    for_all(
+        "(u32, Vec<f32>) roundtrip",
+        |r| {
+            let d = 1 + r.below(16) as usize;
+            (
+                r.next_u32(),
+                (0..d).map(|_| f32::from_bits(r.next_u32())).collect::<Vec<f32>>(),
+            )
+        },
+        |v| {
+            // NaN != NaN: compare bit patterns.
+            let bytes = to_bytes(v);
+            let back: (u32, Vec<f32>) = from_bytes(&bytes).unwrap();
+            back.0 == v.0
+                && back.1.len() == v.1.len()
+                && back.1.iter().zip(&v.1).all(|(a, b)| a.to_bits() == b.to_bits())
+        },
+    );
+}
+
+#[test]
+fn prop_codec_decode_never_panics_on_garbage() {
+    for_all(
+        "decode garbage is Err not panic",
+        |r| vec_of(r, 64, |r| r.next_u64() as u8),
+        |bytes| {
+            // Any of these may fail, none may panic.
+            let _ = from_bytes::<Vec<(String, u64)>>(bytes);
+            let _ = from_bytes::<HashMap<String, u64>>(bytes);
+            let _ = from_bytes::<(u32, Vec<f32>)>(bytes);
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_router_total_and_deterministic() {
+    for_all(
+        "router: owner < n, deterministic",
+        |r| (1 + r.below(32) as usize, r.next_u64(), vec_of(r, 50, |r| string(r, 12))),
+        |(n, salt, keys)| {
+            let a = ShardRouter::new(*n, *salt);
+            let b = ShardRouter::new(*n, *salt);
+            keys.iter().all(|k| {
+                let o = a.owner(k);
+                o.0 < *n && o == b.owner(k)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_rebalance_levels_and_conserves() {
+    for_all(
+        "rebalance: level within 1, conserves mass, no self-moves",
+        |r| vec_of(r, 16, |r| r.below(1000) as usize),
+        |counts| {
+            if counts.is_empty() {
+                return true;
+            }
+            let total: usize = counts.iter().sum();
+            let plan = rebalance_plan(counts);
+            let mut after = counts.clone();
+            for m in &plan {
+                if m.from == m.to || m.count == 0 {
+                    return false;
+                }
+                after[m.from] -= m.count;
+                after[m.to] += m.count;
+            }
+            let max = *after.iter().max().unwrap();
+            let min = *after.iter().min().unwrap();
+            after.iter().sum::<usize>() == total && max - min <= 1
+        },
+    );
+}
+
+#[test]
+fn prop_range_partitioner_tiles() {
+    use blaze_rs::core::RangePartitioner;
+    for_all(
+        "range partitioner tiles the key space",
+        |r| (1 + r.below(64) as u32 * 16 + 1, 1 + r.below(12) as usize),
+        |(keys, ranks)| {
+            let p = RangePartitioner::new(*keys, *ranks);
+            let mut covered = 0u32;
+            for rank in 0..*ranks {
+                let range = p.range_of(blaze_rs::mpi::Rank(rank));
+                covered += range.end - range.start;
+                for key in range.clone() {
+                    if p.owner(key).0 != rank {
+                        return false;
+                    }
+                }
+            }
+            covered == *keys
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.below(2) == 1),
+            2 => Json::Num((r.next_u32() as f64) / 8.0),
+            3 => Json::Str(string(r, 24)),
+            4 => Json::Arr((0..r.below(5)).map(|_| gen_json(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.below(5))
+                    .map(|i| (format!("k{i}"), gen_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_all(
+        "json parse(to_string(v)) == v",
+        |r| gen_json(r, 3),
+        |v| {
+            Json::parse(&v.to_string_pretty()).ok().as_ref() == Some(v)
+                && Json::parse(&v.to_string_compact()).ok().as_ref() == Some(v)
+        },
+    );
+}
+
+#[test]
+fn prop_engine_equals_serial_wordcount() {
+    // Random small corpora, random rank counts, every mode: the engine's
+    // result must equal the single-threaded truth.
+    for_all(
+        "engine == serial wordcount",
+        |r| {
+            let lines = vec_of(r, 40, |r| {
+                (0..1 + r.below(8)).map(|_| format!("w{}", r.below(12))).collect::<Vec<_>>().join(" ")
+            });
+            let ranks = 1 + r.below(6) as usize;
+            let mode = match r.below(3) {
+                0 => ReductionMode::Classic,
+                1 => ReductionMode::Eager,
+                _ => ReductionMode::Delayed,
+            };
+            (lines, ranks, mode)
+        },
+        |(lines, ranks, mode)| {
+            let cluster = ClusterConfig::builder().ranks(*ranks).build();
+            let got = blaze_rs::apps::wordcount::run(&cluster, lines, *mode).unwrap();
+            got.result == blaze_rs::apps::wordcount::count_serial(lines)
+        },
+    );
+}
+
+#[test]
+fn prop_varint_size_monotone() {
+    use blaze_rs::serial::Encoder;
+    for_all(
+        "varint length is non-decreasing in value",
+        |r| {
+            let a = r.next_u64();
+            let b = r.next_u64();
+            (a.min(b), a.max(b))
+        },
+        |(small, large)| {
+            let len = |v: u64| {
+                let mut e = Encoder::new();
+                e.put_varint(v);
+                e.len()
+            };
+            len(*small) <= len(*large)
+        },
+    );
+}
+
+#[test]
+fn prop_stable_hash_no_collision_burst() {
+    // Not a collision-freeness claim — just that random key sets of 100
+    // don't collide into <90 distinct hashes (would indicate brokenness).
+    for_all(
+        "hash spreads random keys",
+        |r| vec_of(r, 100, |r| r.next_u64()),
+        |keys| {
+            let s = blaze_rs::util::hash::SeededState::new(7);
+            let mut hs: Vec<u64> = keys.iter().map(|k| s.hash_one(k)).collect();
+            hs.sort_unstable();
+            hs.dedup();
+            hs.len() + 10 >= keys.len().min(100)
+        },
+    );
+}
