@@ -1,0 +1,28 @@
+# Build-time targets. Rust builds go through cargo; `make artifacts` runs
+# the Python (JAX/Pallas) AOT pipeline that produces the HLO-text kernels
+# + manifest the PJRT runtime loads (needs jax installed; see
+# python/compile/aot.py docstring for the format rationale).
+
+SENTINEL := artifacts/model.hlo.txt
+KERNEL_SRCS := python/compile/aot.py python/compile/model.py \
+               $(wildcard python/compile/kernels/*.py)
+
+.PHONY: all artifacts test test-python clean
+
+all:
+	cargo build --release
+
+artifacts: $(SENTINEL)
+
+$(SENTINEL): $(KERNEL_SRCS)
+	cd python && python3 -m compile.aot --out ../$(SENTINEL)
+
+test:
+	cargo test -q
+
+test-python:
+	cd python && python3 -m pytest -q tests
+
+clean:
+	cargo clean
+	rm -rf artifacts

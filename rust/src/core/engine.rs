@@ -21,7 +21,7 @@ use super::scheduler::{FaultPlan, TaskFeed};
 
 /// A configured MapReduce job over a borrowed input slice.
 ///
-/// ```no_run
+/// ```
 /// use blaze_rs::prelude::*;
 /// use blaze_rs::core::MapReduceJob;
 ///

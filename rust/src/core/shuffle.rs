@@ -70,13 +70,11 @@ impl<K: FastSerialize, V: FastSerialize> SpillBuffer<K, V> {
         if self.in_mem.is_empty() {
             return Ok(());
         }
-        let tf = match &mut self.spill {
-            Some(f) => f,
-            None => {
-                let f = TempFile::new("blaze-spill").context("creating shuffle spill file")?;
-                self.spill.insert(f)
-            }
-        };
+        if self.spill.is_none() {
+            let f = TempFile::new("blaze-spill").context("creating shuffle spill file")?;
+            self.spill = Some(f);
+        }
+        let tf = self.spill.as_mut().expect("spill file just ensured");
         let file = tf.file();
         let mut enc = Encoder::with_capacity(self.mem_bytes as usize);
         enc.put_varint(self.in_mem.len() as u64);

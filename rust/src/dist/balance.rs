@@ -1,0 +1,144 @@
+//! Shard leveling: compute the minimal set of moves that balances shard
+//! populations to within one element.
+//!
+//! Used by [`crate::dist::DistVector::rebalance`] after skewed pushes and
+//! by [`crate::cluster::ElasticCluster`] when the shard count changes
+//! between waves (DELMA-style grow/shrink). The plan is a pure function
+//! of the shard counts, so every rank derives the identical plan from one
+//! `allgather` — no coordinator round.
+
+/// One planned transfer: move `count` elements from shard `from` to
+/// shard `to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Move {
+    pub from: usize,
+    pub to: usize,
+    pub count: usize,
+}
+
+/// Plan the minimal-mass set of moves that levels `counts` to within one
+/// element (max - min <= 1 after applying the plan).
+///
+/// Guarantees:
+/// * conservation — applying the plan preserves the total count;
+/// * no self-moves and no zero-count moves;
+/// * each shard is only a donor or only a receiver, never both;
+/// * moved mass is minimal: the `total % n` "+1" targets go to the
+///   largest shards, so no element travels that could have stayed.
+pub fn rebalance_plan(counts: &[usize]) -> Vec<Move> {
+    let n = counts.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total: usize = counts.iter().sum();
+    let base = total / n;
+    let extra = total % n;
+
+    // Give the +1 targets to the `extra` most-populated shards (ties
+    // broken by index for determinism): any other assignment moves at
+    // least as much mass.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+    let mut target = vec![base as i64; n];
+    for &i in order.iter().take(extra) {
+        target[i] += 1;
+    }
+
+    let mut surplus: Vec<i64> =
+        counts.iter().zip(&target).map(|(&c, &t)| c as i64 - t).collect();
+    let donors: Vec<usize> = (0..n).filter(|&i| surplus[i] > 0).collect();
+    let receivers: Vec<usize> = (0..n).filter(|&i| surplus[i] < 0).collect();
+
+    // Two-pointer matching: drain each donor into receivers in index
+    // order. Plan length is at most donors + receivers - 1 < n.
+    let mut moves = Vec::new();
+    let (mut di, mut ri) = (0, 0);
+    while di < donors.len() && ri < receivers.len() {
+        let d = donors[di];
+        let r = receivers[ri];
+        let amount = surplus[d].min(-surplus[r]);
+        debug_assert!(amount > 0);
+        moves.push(Move { from: d, to: r, count: amount as usize });
+        surplus[d] -= amount;
+        surplus[r] += amount;
+        if surplus[d] == 0 {
+            di += 1;
+        }
+        if surplus[r] == 0 {
+            ri += 1;
+        }
+    }
+    debug_assert!(surplus.iter().all(|&s| s == 0));
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn apply(counts: &[usize], plan: &[Move]) -> Vec<usize> {
+        let mut after = counts.to_vec();
+        for m in plan {
+            assert_ne!(m.from, m.to, "self-move in {plan:?}");
+            assert!(m.count > 0, "zero-count move in {plan:?}");
+            after[m.from] -= m.count;
+            after[m.to] += m.count;
+        }
+        after
+    }
+
+    #[test]
+    fn conserves_and_levels() {
+        for counts in [
+            vec![10usize, 0, 0, 2],
+            vec![1, 1, 1],
+            vec![0, 0, 7],
+            vec![3],
+            vec![100, 1, 50, 2, 99],
+        ] {
+            let total: usize = counts.iter().sum();
+            let plan = rebalance_plan(&counts);
+            let after = apply(&counts, &plan);
+            assert_eq!(after.iter().sum::<usize>(), total, "{counts:?}");
+            let max = *after.iter().max().unwrap();
+            let min = *after.iter().min().unwrap();
+            assert!(max - min <= 1, "{counts:?} -> {after:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_input_needs_no_moves() {
+        assert!(rebalance_plan(&[5, 5, 5]).is_empty());
+        // 14 over 3 shards levels as {5, 4, 5}: already within one.
+        assert!(rebalance_plan(&[5, 4, 5]).is_empty());
+        assert!(rebalance_plan(&[]).is_empty());
+        assert!(rebalance_plan(&[0, 0]).is_empty());
+    }
+
+    #[test]
+    fn moved_mass_is_minimal() {
+        // [10, 0, 0, 2]: targets are 3 each, donor 0 must shed exactly 7.
+        let plan = rebalance_plan(&[10, 0, 0, 2]);
+        let moved: usize = plan.iter().map(|m| m.count).sum();
+        assert_eq!(moved, 7, "{plan:?}");
+        // The +1 target goes to the largest shard: [4, 1] -> targets
+        // {3, 2}, one move of 1 (not 2, which a low-index +1 would cost).
+        let plan = rebalance_plan(&[4, 1]);
+        assert_eq!(plan, vec![Move { from: 0, to: 1, count: 1 }]);
+    }
+
+    #[test]
+    fn no_shard_both_sends_and_receives() {
+        let plan = rebalance_plan(&[9, 0, 4, 0, 9]);
+        for m in &plan {
+            assert!(plan.iter().all(|o| o.to != m.from), "{plan:?}");
+        }
+        assert!(plan.len() < 5, "at most n-1 moves: {plan:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let counts = vec![7, 3, 9, 0, 0, 5];
+        assert_eq!(rebalance_plan(&counts), rebalance_plan(&counts));
+    }
+}

@@ -1,0 +1,204 @@
+//! `DistHashMap`: stage-anywhere / flush-to-owner key-value shards —
+//! the container the paper's results "land in" (§III.D step 6), and the
+//! M3R-style stable-ownership map that makes iterative jobs cheap: the
+//! same router places the same keys on the same ranks every wave.
+//!
+//! Usage shape (SPMD, all ranks):
+//!
+//! 1. `stage(key, value)` wherever the pair is produced — no
+//!    communication, any rank may stage any key;
+//! 2. `flush(combine)` — COLLECTIVE: every staged pair rides one
+//!    `alltoallv` shuffle to `router.owner(key)`, where it is folded
+//!    into the owner's local shard with `combine`;
+//! 3. `get_local` / `iter_local` read the owned shard (only the owner
+//!    sees a key).
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::core::shuffle::shuffle_pairs;
+use crate::metrics::PeakTracker;
+use crate::mpi::{Communicator, Rank};
+use crate::serial::FastSerialize;
+
+use super::router::ShardRouter;
+
+/// A hash map sharded by key ownership across the ranks of one
+/// communicator.
+pub struct DistHashMap<'c, K, V> {
+    comm: &'c Communicator,
+    router: ShardRouter,
+    staged: Vec<(K, V)>,
+    owned: HashMap<K, V>,
+    tracker: Arc<PeakTracker>,
+}
+
+impl<'c, K, V> DistHashMap<'c, K, V>
+where
+    K: FastSerialize + Hash + Eq,
+    V: FastSerialize,
+{
+    /// An empty shard whose router spans the communicator (one shard per
+    /// rank) under `salt`. Every rank must use the same salt or flushed
+    /// keys will land on disagreeing owners.
+    pub fn new(comm: &'c Communicator, salt: u64) -> Self {
+        Self::with_tracker(comm, salt, PeakTracker::new())
+    }
+
+    /// Like [`DistHashMap::new`], charging flush shuffle buffers to a
+    /// shared tracker (e.g. the engine's per-job tracker) so container
+    /// traffic shows up in job peak-memory accounting.
+    pub fn with_tracker(comm: &'c Communicator, salt: u64, tracker: Arc<PeakTracker>) -> Self {
+        Self {
+            comm,
+            router: ShardRouter::new(comm.size(), salt),
+            staged: Vec::new(),
+            owned: HashMap::new(),
+            tracker,
+        }
+    }
+
+    /// The tracker flush shuffle buffers are charged to.
+    pub fn tracker(&self) -> &Arc<PeakTracker> {
+        &self.tracker
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// The rank that owns `key` after a flush.
+    pub fn owner(&self, key: &K) -> Rank {
+        self.router.owner(key)
+    }
+
+    /// Buffer a pair locally — any rank may stage any key.
+    pub fn stage(&mut self, key: K, value: V) {
+        self.staged.push((key, value));
+    }
+
+    /// Pairs staged since the last flush.
+    pub fn staged_len(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Keys owned by this rank.
+    pub fn len_local(&self) -> usize {
+        self.owned.len()
+    }
+
+    /// Read an owned entry; `None` on every rank but the owner.
+    pub fn get_local(&self, key: &K) -> Option<&V> {
+        self.owned.get(key)
+    }
+
+    pub fn iter_local(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.owned.iter()
+    }
+
+    /// Dissolve the container, keeping this rank's owned shard.
+    pub fn into_local(self) -> HashMap<K, V> {
+        self.owned
+    }
+
+    /// COLLECTIVE: total owned keys across all ranks.
+    pub fn len_global(&self) -> Result<u64> {
+        self.comm.allreduce_sum_u64(self.owned.len() as u64)
+    }
+
+    /// COLLECTIVE: route every staged pair to its owner and fold it into
+    /// the owner's shard. `combine(acc, v)` resolves an arriving value
+    /// with the value already owned; first arrival inserts.
+    ///
+    /// Error semantics match the MPI collectives underneath: a failed
+    /// exchange (a peer rank hung up mid-`alltoallv`) poisons the whole
+    /// universe, so staged pairs are consumed either way and the map
+    /// must not be reused after an `Err`. In-wave rank death aborts the
+    /// wave; recovery happens a layer up (`cluster::FaultTracker`
+    /// re-runs the wave), never by re-flushing a poisoned container.
+    pub fn flush(&mut self, combine: impl Fn(&mut V, V)) -> Result<()> {
+        let staged = std::mem::take(&mut self.staged);
+        let incoming = shuffle_pairs(self.comm, &self.router, staged, &self.tracker)?;
+        for (k, v) in incoming {
+            debug_assert_eq!(self.router.owner(&k), self.comm.rank(), "shuffle misroute");
+            match self.owned.entry(k) {
+                Entry::Occupied(mut e) => combine(e.get_mut(), v),
+                Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{run_ranks, Universe};
+
+    #[test]
+    fn flush_routes_every_staged_key_to_its_owner() {
+        const SALT: u64 = 11;
+        let shards = run_ranks(Universe::local(3), |c| {
+            let mut dm: DistHashMap<String, u64> = DistHashMap::new(c, SALT);
+            // Every rank stages every key: owners must fold 3 stages each.
+            for i in 0..10 {
+                dm.stage(format!("k{i}"), 1);
+            }
+            dm.flush(|acc, v| *acc += v).unwrap();
+            assert_eq!(dm.staged_len(), 0, "flush must drain the stage buffer");
+            dm.into_local()
+        });
+        let reference = ShardRouter::new(3, SALT);
+        let mut seen = 0;
+        for (rank, shard) in shards.iter().enumerate() {
+            for (k, v) in shard {
+                assert_eq!(reference.owner(k).0, rank, "key {k} on wrong rank");
+                assert_eq!(*v, 3, "key {k} missed a staged value");
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 10, "keys lost or duplicated across shards");
+    }
+
+    #[test]
+    fn non_owners_read_none() {
+        let got = run_ranks(Universe::local(4), |c| {
+            let mut dm: DistHashMap<String, u64> = DistHashMap::new(c, 0);
+            dm.stage("shared-key".into(), 1);
+            dm.flush(|acc, v| *acc += v).unwrap();
+            (dm.get_local(&"shared-key".to_string()).copied(), dm.len_global().unwrap())
+        });
+        let owners: Vec<u64> = got.iter().filter_map(|(v, _)| *v).collect();
+        assert_eq!(owners, vec![4], "exactly one owner folding all 4 stages");
+        assert!(got.iter().all(|&(_, global)| global == 1));
+    }
+
+    #[test]
+    fn repeated_flushes_accumulate() {
+        let got = run_ranks(Universe::local(2), |c| {
+            let mut dm: DistHashMap<u32, u64> = DistHashMap::new(c, 5);
+            for wave in 1..=3u64 {
+                for key in 0..4u32 {
+                    dm.stage(key, wave);
+                }
+                dm.flush(|acc, v| *acc += v).unwrap();
+            }
+            dm.into_local()
+        });
+        // Each key: 2 ranks x (1 + 2 + 3) = 12, owned exactly once.
+        let mut merged: HashMap<u32, u64> = HashMap::new();
+        for shard in got {
+            for (k, v) in shard {
+                assert!(merged.insert(k, v).is_none(), "key {k} on two ranks");
+            }
+        }
+        assert_eq!(merged.len(), 4);
+        assert!(merged.values().all(|&v| v == 12), "{merged:?}");
+    }
+}

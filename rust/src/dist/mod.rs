@@ -1,0 +1,37 @@
+//! Distributed containers — the data-structure layer the paper's engines
+//! are written against (§III.D: "Intermediate reducer combines the keys
+//! into a DistVector", results land in a `DistHashMap`-shaped shard).
+//!
+//! The design follows the container-centric lineage the related work
+//! establishes: Thrill's DIAs show that a compiled MapReduce stack is
+//! really a library of distributed collections plus collectives, and
+//! M3R's in-memory key ownership shows that a *stable* key→rank map is
+//! the lever for iterative jobs. Concretely:
+//!
+//! * [`ShardRouter`] — the salted, deterministic key→owner hash every
+//!   shuffle and container shares. Same salt + shard count ⇒ same
+//!   placement on every rank, with no negotiation (the determinism
+//!   property `tests/prop_invariants.rs` checks).
+//! * [`DistVector`] — a rank-sharded `Vec`: local pushes are free, global
+//!   length/offset are one collective away, and [`DistVector::rebalance`]
+//!   levels shard sizes using a [`rebalance_plan`].
+//! * [`DistHashMap`] — stage-anywhere / flush-to-owner key-value shards:
+//!   `stage` buffers pairs on whichever rank produced them; `flush`
+//!   shuffles every staged pair to `router.owner(key)` and combines.
+//! * [`rebalance_plan`] — the minimal-move leveling plan shared by
+//!   `DistVector::rebalance` and [`crate::cluster::ElasticCluster`]
+//!   resizes.
+//!
+//! All collective operations here are SPMD: every rank of the
+//! communicator must make the same call in the same order, exactly like
+//! the MPI collectives they are built from.
+
+mod balance;
+mod hashmap;
+mod router;
+mod vector;
+
+pub use balance::{rebalance_plan, Move};
+pub use hashmap::DistHashMap;
+pub use router::ShardRouter;
+pub use vector::DistVector;

@@ -1,0 +1,103 @@
+//! `ShardRouter`: the deterministic, salted key→owner map.
+//!
+//! Every rank must route a key to the same shard without talking to a
+//! master, so ownership is a pure function of `(shards, salt, key)`:
+//! a seeded [`StableHasher`] (never process-random state) reduced mod the
+//! shard count. The salt folds in the cluster seed + job salt
+//! (`engine::MapReduceJob::salt`), so two jobs on the same cluster can
+//! place the same keys differently — which is how the engine's
+//! "different seeds, same results, different placement" tests probe for
+//! accidental coupling.
+
+use std::hash::{Hash, Hasher};
+
+use crate::mpi::Rank;
+use crate::util::hash::StableHasher;
+
+/// Stream constant folded into the salt so router hashes are independent
+/// of other `StableHasher` users sharing a seed.
+const ROUTER_STREAM: u64 = 0x5248_4F55_5445_5221;
+
+/// Deterministic salted key→shard router (one shard per reducer rank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRouter {
+    shards: usize,
+    salt: u64,
+}
+
+impl ShardRouter {
+    /// A router over `shards` shards. Two routers built with the same
+    /// `(shards, salt)` agree on every key, on every rank, forever.
+    pub fn new(shards: usize, salt: u64) -> Self {
+        assert!(shards > 0, "router needs at least one shard");
+        Self { shards, salt }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn salt(&self) -> u64 {
+        self.salt
+    }
+
+    /// Owning rank of `key`.
+    #[inline]
+    pub fn owner<K: Hash + ?Sized>(&self, key: &K) -> Rank {
+        let mut h = StableHasher::with_seed(self.salt ^ ROUTER_STREAM);
+        key.hash(&mut h);
+        Rank((h.finish() % self.shards as u64) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_across_instances() {
+        let a = ShardRouter::new(7, 42);
+        let b = ShardRouter::new(7, 42);
+        for i in 0..500u64 {
+            let key = format!("key-{i}");
+            assert_eq!(a.owner(&key), b.owner(&key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn owners_in_range() {
+        for shards in [1usize, 2, 3, 16, 31] {
+            let r = ShardRouter::new(shards, 9);
+            for i in 0..200u64 {
+                assert!(r.owner(&i).0 < shards);
+            }
+        }
+    }
+
+    #[test]
+    fn salt_changes_placement() {
+        let a = ShardRouter::new(8, 1);
+        let b = ShardRouter::new(8, 2);
+        let moved = (0..200u64).filter(|i| a.owner(i) != b.owner(i)).count();
+        // With 8 shards ~7/8 of keys should move under a new salt.
+        assert!(moved > 100, "only {moved}/200 keys moved");
+    }
+
+    #[test]
+    fn spreads_sequential_keys() {
+        let r = ShardRouter::new(16, 0);
+        let mut hist = [0usize; 16];
+        for i in 0..1_600u64 {
+            hist[r.owner(&i).0] += 1;
+        }
+        for (shard, n) in hist.iter().enumerate() {
+            assert!((40..200).contains(n), "shard {shard}: {n} ({hist:?})");
+        }
+    }
+
+    #[test]
+    fn str_and_string_agree() {
+        let r = ShardRouter::new(5, 3);
+        assert_eq!(r.owner("wordlike"), r.owner(&"wordlike".to_string()));
+    }
+}

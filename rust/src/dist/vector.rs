@@ -1,0 +1,187 @@
+//! `DistVector`: a rank-sharded vector — the paper's "DistVector of
+//! locally-grouped runs" (§III.D pseudocode step 3).
+//!
+//! Each rank owns a local `Vec<T>` shard; local mutation (push/extend/
+//! sort) costs nothing on the wire. The collective operations —
+//! [`DistVector::len_global`], [`DistVector::global_offset`],
+//! [`DistVector::rebalance`] — are built on the communicator's
+//! collectives, so the virtual clock charges them like any other
+//! exchange. Delayed reduction materializes its grouped runs in one of
+//! these, sorts the shard in place (merge sort), and then dissolves it
+//! into the shuffle via [`DistVector::into_local`].
+
+use anyhow::Result;
+
+use crate::mpi::{Communicator, Rank};
+use crate::serial::{from_bytes, to_bytes, FastSerialize};
+
+use super::balance::rebalance_plan;
+
+/// A vector sharded across the ranks of one communicator.
+pub struct DistVector<'c, T> {
+    comm: &'c Communicator,
+    local: Vec<T>,
+}
+
+impl<'c, T> DistVector<'c, T> {
+    /// An empty shard on this rank.
+    pub fn new(comm: &'c Communicator) -> Self {
+        Self { comm, local: Vec::new() }
+    }
+
+    /// Wrap an already-built local shard (delayed reduction's grouped
+    /// runs enter the container this way).
+    pub fn from_local(comm: &'c Communicator, local: Vec<T>) -> Self {
+        Self { comm, local }
+    }
+
+    /// Append one element to the local shard (no communication).
+    pub fn push(&mut self, item: T) {
+        self.local.push(item);
+    }
+
+    /// Append many elements to the local shard (no communication).
+    pub fn extend(&mut self, items: impl IntoIterator<Item = T>) {
+        self.local.extend(items);
+    }
+
+    pub fn len_local(&self) -> usize {
+        self.local.len()
+    }
+
+    pub fn is_empty_local(&self) -> bool {
+        self.local.is_empty()
+    }
+
+    pub fn local(&self) -> &[T] {
+        &self.local
+    }
+
+    pub fn local_mut(&mut self) -> &mut Vec<T> {
+        &mut self.local
+    }
+
+    /// Dissolve the container, keeping this rank's shard.
+    pub fn into_local(self) -> Vec<T> {
+        self.local
+    }
+
+    pub fn comm(&self) -> &'c Communicator {
+        self.comm
+    }
+
+    /// COLLECTIVE: total element count across all ranks.
+    pub fn len_global(&self) -> Result<u64> {
+        self.comm.allreduce_sum_u64(self.local.len() as u64)
+    }
+
+    /// COLLECTIVE: this shard's starting index in the global order
+    /// (exclusive prefix sum of shard lengths over ranks).
+    pub fn global_offset(&self) -> Result<u64> {
+        self.comm.exscan_sum(self.local.len() as u64)
+    }
+}
+
+impl<'c, T: FastSerialize> DistVector<'c, T> {
+    /// COLLECTIVE: level shard sizes to within one element using the
+    /// minimal-move [`rebalance_plan`]. Donors ship elements from the
+    /// tail of their shard; receivers append. Every rank derives the
+    /// identical plan from one `allgather` of shard lengths, so the
+    /// point-to-point transfers pair up without negotiation.
+    pub fn rebalance(&mut self) -> Result<()> {
+        let lens: Vec<u64> = self.comm.allgather(self.local.len() as u64)?;
+        let counts: Vec<usize> = lens.into_iter().map(|l| l as usize).collect();
+        let plan = rebalance_plan(&counts);
+        if plan.is_empty() {
+            return Ok(());
+        }
+        // One tag for the whole exchange: sends are matched by
+        // (source, tag), and each rank appears at most once per plan
+        // entry, so order stays deterministic. All ranks reach this
+        // point (the plan is nonempty everywhere or nowhere), keeping
+        // the collective tag counters aligned.
+        let tag = self.comm.next_collective_tag();
+        let me = self.comm.rank().0;
+        for m in &plan {
+            if m.from == me {
+                let moved: Vec<T> = self.local.split_off(self.local.len() - m.count);
+                self.comm.send(Rank(m.to), tag, to_bytes(&moved))?;
+            }
+        }
+        for m in &plan {
+            if m.to == me {
+                let bytes = self.comm.recv(Rank(m.from), tag)?;
+                let mut moved: Vec<T> = from_bytes(&bytes)?;
+                self.local.append(&mut moved);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{run_ranks, Universe};
+
+    #[test]
+    fn local_ops_do_not_touch_the_network() {
+        let got = run_ranks(Universe::local(2), |c| {
+            let mut dv: DistVector<u32> = DistVector::new(c);
+            dv.push(1);
+            dv.extend([2, 3]);
+            dv.local_mut().sort_unstable_by(|a, b| b.cmp(a));
+            (dv.len_local(), dv.local().to_vec(), dv.into_local())
+        });
+        for (len, local, owned) in got {
+            assert_eq!(len, 3);
+            assert_eq!(local, vec![3, 2, 1]);
+            assert_eq!(owned, vec![3, 2, 1]);
+        }
+    }
+
+    #[test]
+    fn global_len_and_offset() {
+        let got = run_ranks(Universe::local(4), |c| {
+            let mut dv: DistVector<u64> = DistVector::new(c);
+            dv.extend(0..c.rank().0 as u64); // rank r holds r elements
+            (dv.len_global().unwrap(), dv.global_offset().unwrap())
+        });
+        // Lengths are [0, 1, 2, 3]: total 6, offsets [0, 0, 1, 3].
+        assert_eq!(got, vec![(6, 0), (6, 0), (6, 1), (6, 3)]);
+    }
+
+    #[test]
+    fn rebalance_levels_and_preserves_multiset() {
+        let shards = run_ranks(Universe::local(4), |c| {
+            let r = c.rank().0 as u64;
+            let mut dv: DistVector<u64> = DistVector::new(c);
+            // Rank r pushes 3r elements: lengths [0, 3, 6, 9].
+            dv.extend((0..3 * r).map(|i| r * 100 + i));
+            dv.rebalance().unwrap();
+            dv.into_local()
+        });
+        let lens: Vec<usize> = shards.iter().map(Vec::len).collect();
+        let max = *lens.iter().max().unwrap();
+        let min = *lens.iter().min().unwrap();
+        assert!(max - min <= 1, "lens {lens:?}");
+        let mut all: Vec<u64> = shards.into_iter().flatten().collect();
+        all.sort_unstable();
+        let mut want: Vec<u64> =
+            (0..4u64).flat_map(|r| (0..3 * r).map(move |i| r * 100 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(all, want, "elements lost or duplicated");
+    }
+
+    #[test]
+    fn rebalance_on_balanced_data_is_a_no_op() {
+        let shards = run_ranks(Universe::local(3), |c| {
+            let mut dv: DistVector<u64> = DistVector::from_local(c, vec![c.rank().0 as u64; 5]);
+            dv.rebalance().unwrap();
+            dv.into_local()
+        });
+        for (r, shard) in shards.iter().enumerate() {
+            assert_eq!(shard, &vec![r as u64; 5]);
+        }
+    }
+}

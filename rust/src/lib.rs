@@ -11,7 +11,7 @@
 //! counting) are AOT-compiled JAX/Pallas kernels executed through PJRT —
 //! Python never runs on the request path.
 //!
-//! ```no_run
+//! ```
 //! use blaze_rs::prelude::*;
 //!
 //! let cluster = ClusterConfig::builder().ranks(4).build();

@@ -5,11 +5,24 @@
 //! module makes the resulting `artifacts/*.hlo.txt` callable from Rust via
 //! the PJRT C API (`xla` crate). One compiled executable per model variant,
 //! cached for the life of the process.
+//!
+//! The PJRT bindings are optional: with the default feature set the
+//! `pjrt_stub` module is linked in place of `pjrt`, exposing identical
+//! types whose construction fails with an actionable error. Everything
+//! above this module ([`ComputeService`], apps, benches) is written
+//! against [`TensorArg`]/[`TensorOut`] and degrades to the native compute
+//! paths when kernels are unavailable.
 
 mod artifacts;
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 mod pjrt;
 mod service;
+mod tensor;
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
-pub use pjrt::{Executable, Runtime, TensorArg, TensorOut};
+pub use pjrt::{Executable, Runtime};
 pub use service::{ComputeHandle, ComputeService};
+pub use tensor::{TensorArg, TensorOut};

@@ -1,4 +1,6 @@
 //! PJRT client wrapper: compile HLO text once, execute many times.
+//! Compiled only with `--features xla`; `runtime/pjrt_stub.rs` provides
+//! the same surface (erroring at startup) for default builds.
 //!
 //! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
 //! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
@@ -19,43 +21,9 @@ use std::rc::Rc;
 use anyhow::{anyhow, Context, Result};
 
 use super::artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
-
-/// An owned, typed tensor argument for an executable.
-#[derive(Debug, Clone, PartialEq)]
-pub enum TensorArg {
-    F32 { data: Vec<f32>, dims: Vec<usize> },
-    I32 { data: Vec<i32>, dims: Vec<usize> },
-}
+use super::tensor::{TensorArg, TensorOut};
 
 impl TensorArg {
-    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
-        TensorArg::F32 { data, dims: dims.to_vec() }
-    }
-
-    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
-        TensorArg::I32 { data, dims: dims.to_vec() }
-    }
-
-    fn dims(&self) -> &[usize] {
-        match self {
-            TensorArg::F32 { dims, .. } | TensorArg::I32 { dims, .. } => dims,
-        }
-    }
-
-    fn len(&self) -> usize {
-        match self {
-            TensorArg::F32 { data, .. } => data.len(),
-            TensorArg::I32 { data, .. } => data.len(),
-        }
-    }
-
-    fn dtype_name(&self) -> &'static str {
-        match self {
-            TensorArg::F32 { .. } => "float32",
-            TensorArg::I32 { .. } => "int32",
-        }
-    }
-
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -63,49 +31,6 @@ impl TensorArg {
             TensorArg::I32 { data, .. } => xla::Literal::vec1(data),
         };
         Ok(lit.reshape(&dims_i64)?)
-    }
-
-    /// Validate against the manifest's input spec.
-    fn check(&self, spec: &TensorSpec, pos: usize) -> Result<()> {
-        if spec.dtype != self.dtype_name() {
-            return Err(anyhow!(
-                "arg {pos}: dtype mismatch (manifest {}, got {})",
-                spec.dtype,
-                self.dtype_name()
-            ));
-        }
-        if spec.shape != self.dims() || spec.elems() != self.len() {
-            return Err(anyhow!(
-                "arg {pos}: shape mismatch (manifest {:?}, got {:?} with {} elems)",
-                spec.shape,
-                self.dims(),
-                self.len()
-            ));
-        }
-        Ok(())
-    }
-}
-
-/// A typed tensor result from an executable.
-#[derive(Debug, Clone, PartialEq)]
-pub enum TensorOut {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl TensorOut {
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            TensorOut::F32(v) => Ok(v),
-            TensorOut::I32(_) => Err(anyhow!("expected f32 output, got i32")),
-        }
-    }
-
-    pub fn as_i32(&self) -> Result<&[i32]> {
-        match self {
-            TensorOut::I32(v) => Ok(v),
-            TensorOut::F32(_) => Err(anyhow!("expected i32 output, got f32")),
-        }
     }
 }
 

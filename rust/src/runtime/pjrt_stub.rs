@@ -1,0 +1,81 @@
+//! Stub PJRT runtime, compiled when the `xla` feature is OFF (the
+//! default). The build environment is not guaranteed to carry the
+//! vendored `xla` crate, so a clean checkout links this zero-dependency
+//! surface instead: same types and signatures as `runtime/pjrt.rs`, but
+//! [`Runtime::new`] fails with a clear message and nothing else is
+//! constructible. [`super::service::ComputeService::start`] therefore
+//! reports kernels as unavailable and every caller falls back to the
+//! native compute paths (which all apps, benches and figures support).
+
+use std::convert::Infallible;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+use super::tensor::{TensorArg, TensorOut};
+
+const NO_XLA: &str = "blaze-rs was built without the `xla` feature, so the PJRT runtime is a \
+                      stub; rebuild with `--features xla` (after adding the vendored `xla` \
+                      crate to Cargo.toml) to execute AOT kernels — native compute paths work \
+                      without it";
+
+/// Uninhabited stand-in for the compiled-executable handle: it can never
+/// be constructed, so these method bodies are statically unreachable.
+pub struct Executable {
+    #[allow(dead_code)]
+    never: Infallible,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        unreachable!("stub Executable cannot be constructed")
+    }
+
+    pub fn run(&self, _args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        Err(anyhow!(NO_XLA))
+    }
+}
+
+/// Uninhabited stand-in for the PJRT runtime; construction always fails.
+pub struct Runtime {
+    #[allow(dead_code)]
+    never: Infallible,
+}
+
+impl Runtime {
+    pub fn new(_artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Err(anyhow!(NO_XLA))
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(ArtifactManifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn executable(&self, _name: &str) -> Result<Rc<Executable>> {
+        Err(anyhow!(NO_XLA))
+    }
+
+    pub fn run(&self, _name: &str, _args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        Err(anyhow!(NO_XLA))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_with_actionable_message() {
+        let err = Runtime::from_default_dir().unwrap_err();
+        assert!(format!("{err:#}").contains("--features xla"), "{err:#}");
+    }
+}

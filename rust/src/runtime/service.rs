@@ -12,7 +12,8 @@ use std::thread::JoinHandle;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use anyhow::{anyhow, Result};
 
-use super::pjrt::{Runtime, TensorArg, TensorOut};
+use super::pjrt::Runtime;
+use super::tensor::{TensorArg, TensorOut};
 
 enum Request {
     Run {

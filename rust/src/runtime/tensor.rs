@@ -1,0 +1,117 @@
+//! Typed tensor arguments/results for the compute runtime.
+//!
+//! These are plain Rust values with no PJRT types in their signatures,
+//! so everything above the runtime (apps, the compute service, tests)
+//! compiles identically whether the real `xla`-backed runtime or the
+//! stub is linked (see `runtime/mod.rs`).
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::TensorSpec;
+
+/// An owned, typed tensor argument for an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorArg {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
+impl TensorArg {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        TensorArg::F32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        TensorArg::I32 { data, dims: dims.to_vec() }
+    }
+
+    pub(crate) fn dims(&self) -> &[usize] {
+        match self {
+            TensorArg::F32 { dims, .. } | TensorArg::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            TensorArg::F32 { data, .. } => data.len(),
+            TensorArg::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub(crate) fn dtype_name(&self) -> &'static str {
+        match self {
+            TensorArg::F32 { .. } => "float32",
+            TensorArg::I32 { .. } => "int32",
+        }
+    }
+
+    /// Validate against the manifest's input spec.
+    pub(crate) fn check(&self, spec: &TensorSpec, pos: usize) -> Result<()> {
+        if spec.dtype != self.dtype_name() {
+            return Err(anyhow!(
+                "arg {pos}: dtype mismatch (manifest {}, got {})",
+                spec.dtype,
+                self.dtype_name()
+            ));
+        }
+        if spec.shape != self.dims() || spec.elems() != self.len() {
+            return Err(anyhow!(
+                "arg {pos}: shape mismatch (manifest {:?}, got {:?} with {} elems)",
+                spec.shape,
+                self.dims(),
+                self.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A typed tensor result from an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            TensorOut::I32(_) => Err(anyhow!("expected f32 output, got i32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorOut::I32(v) => Ok(v),
+            TensorOut::F32(_) => Err(anyhow!("expected i32 output, got f32")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_enforce_dtype() {
+        let f = TensorOut::F32(vec![1.0]);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let i = TensorOut::I32(vec![1]);
+        assert!(i.as_i32().is_ok());
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn check_validates_shape_and_dtype() {
+        let spec = TensorSpec { shape: vec![2, 2], dtype: "float32".into() };
+        let good = TensorArg::f32(vec![0.0; 4], &[2, 2]);
+        assert!(good.check(&spec, 0).is_ok());
+        let wrong_shape = TensorArg::f32(vec![0.0; 4], &[4]);
+        assert!(wrong_shape.check(&spec, 0).is_err());
+        let wrong_dtype = TensorArg::i32(vec![0; 4], &[2, 2]);
+        assert!(wrong_dtype.check(&spec, 0).is_err());
+    }
+}

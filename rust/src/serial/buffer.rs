@@ -4,7 +4,7 @@
 use anyhow::{anyhow, ensure, Result};
 
 /// Append-only byte sink. Reuse via [`Encoder::clear`] to amortize
-//  allocation in the shuffle hot loop (see core/shuffle.rs).
+/// allocation in the shuffle hot loop (see core/shuffle.rs).
 #[derive(Debug, Default, Clone)]
 pub struct Encoder {
     buf: Vec<u8>,

@@ -1,7 +1,8 @@
 //! In-tree substrate utilities.
 //!
-//! The build environment vendors only the `xla` PJRT bindings (and
-//! `anyhow`), so everything a framework usually pulls from crates.io is
+//! The build depends only on `anyhow` and `libc` (plus the optional,
+//! feature-gated `xla` PJRT bindings), so everything a framework usually
+//! pulls from crates.io is
 //! implemented here from scratch: deterministic RNG, seeded hashing, a
 //! JSON value type + parser, a TOML-subset config parser, self-deleting
 //! temp files, a micro-benchmark harness, and a property-test runner.

@@ -11,6 +11,10 @@ use blaze_rs::core::ReductionMode;
 use blaze_rs::runtime::{ArtifactManifest, ComputeService, Runtime, TensorArg};
 
 fn artifacts_ready() -> bool {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature (PJRT runtime is stubbed)");
+        return false;
+    }
     let dir = ArtifactManifest::default_dir();
     if ArtifactManifest::load(&dir).is_ok() {
         true
