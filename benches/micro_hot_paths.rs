@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use blaze_rs::dist::ShardRouter;
-use blaze_rs::mpi::{run_ranks, Universe};
+use blaze_rs::mpi::{run_ranks, RankPool, Universe};
 use blaze_rs::serial::{from_bytes, to_bytes, Encoder, FastSerialize};
 use blaze_rs::util::bench::{bench, black_box};
 use blaze_rs::util::rng::Rng;
@@ -111,6 +111,26 @@ fn main() {
             .len()
     }));
 
+    // --- pooled SPMD executor vs spawn-per-wave --------------------------
+    // The RankPool tentpole claim, measured: an iterative app (k-means,
+    // one engine job per wave) on small waves, where thread spawn/join is
+    // a visible fraction of each wave. Both shapes produce bit-identical
+    // centroids; only the executor differs.
+    let wave_pts = blaze_rs::apps::kmeans::generate_points(2_000, 2, 4, 11);
+    let spawned = bench("spmd/kmeans 12 waves x4 ranks, spawn-per-wave", 1, 10, || {
+        blaze_rs::apps::kmeans::run_wave_jobs(&cluster, &wave_pts, 4, 12, None)
+            .unwrap()
+            .inertia
+    });
+    let pool = RankPool::from_config(&cluster);
+    let pooled = bench("spmd/kmeans 12 waves x4 ranks, pooled", 1, 10, || {
+        blaze_rs::apps::kmeans::run_wave_jobs(&cluster, &wave_pts, 4, 12, Some(&pool))
+            .unwrap()
+            .inertia
+    });
+    results.push(spawned.clone());
+    results.push(pooled.clone());
+
     println!("\n== micro_hot_paths ==");
     for r in &results {
         println!("{}", r.line());
@@ -120,5 +140,11 @@ fn main() {
     let fast = results[0].mean_ns + results[1].mean_ns;
     let json = results[2].mean_ns + results[3].mean_ns;
     println!("\nfast-codec vs json roundtrip ratio: {:.1}x faster", json / fast);
+    // Headline ratio for the pooled-executor claim (ROADMAP thread-pool
+    // item): iterative waves on warm threads vs spawn-per-wave.
+    println!(
+        "pooled vs spawn-per-wave (kmeans 12 waves): {:.2}x faster",
+        spawned.mean_ns / pooled.mean_ns
+    );
     black_box(results);
 }

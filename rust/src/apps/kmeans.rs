@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::core::JobStats;
-use crate::mpi::{run_ranks_with_universe, Topology, Universe};
+use crate::mpi::{Communicator, RankPool, Topology, TrafficDelta, Universe};
 use crate::runtime::{ComputeHandle, TensorArg};
 use crate::util::rng::Rng;
 
@@ -76,9 +76,26 @@ pub enum ComputePath {
 
 /// Run distributed K-means. Points are sharded by rank; each iteration
 /// does local assign+combine then a sums/counts allreduce (the iterative
-/// MapReduce of [15] with eager reduction).
+/// MapReduce of [15] with eager reduction). Spawns a throwaway
+/// [`RankPool`] — callers running several configurations should hold one
+/// warm pool and use [`run_on_pool`].
 pub fn run(
     cluster: &ClusterConfig,
+    points: &Points,
+    k: usize,
+    iterations: usize,
+    path: ComputePath,
+    compute: Option<&ComputeHandle>,
+) -> Result<KmeansResult> {
+    run_on_pool(cluster, &RankPool::from_config(cluster), points, k, iterations, path, compute)
+}
+
+/// [`run`] on a caller-owned warm [`RankPool`]: the whole run — every
+/// wave's assign/combine and allreduce — executes on the pool's
+/// persistent rank threads.
+pub fn run_on_pool(
+    cluster: &ClusterConfig,
+    pool: &RankPool,
     points: &Points,
     k: usize,
     iterations: usize,
@@ -96,20 +113,17 @@ pub fn run(
         let handle = compute.context("kernel path needs a ComputeHandle")?;
         handle.warmup(&format!("kmeans_step_d{}", points.d))?;
     }
-
-    let topology = Topology::from_config(cluster);
-    let universe = Universe::new(topology, cluster.network_model());
-    let stats_handle = universe.stats();
+    let ranks = cluster.ranks();
+    pool.ensure_models(cluster)?;
     let wall = std::time::Instant::now();
 
     let d = points.d;
-    let ranks = cluster.ranks();
     let chunk_pts = points.n.div_ceil(ranks.max(1)).max(1);
 
     // Initial centroids: first k points (deterministic, standard Forgy-ish).
     let init: Vec<f32> = points.data[..k * d].to_vec();
 
-    let (rank_results, clocks) = run_ranks_with_universe(universe, |comm| -> Result<(Vec<f32>, f64)> {
+    let out = pool.run_job(ranks, |comm| -> Result<(Vec<f32>, f64)> {
         let me = comm.rank().0;
         let lo = (me * chunk_pts).min(points.n);
         let hi = ((me + 1) * chunk_pts).min(points.n);
@@ -119,52 +133,23 @@ pub fn run(
         let mut centroids = init.clone();
         let mut inertia = 0.0f64;
         for _iter in 0..iterations {
-            // Map + combine on this shard.
-            let (mut sums, mut counts, local_inertia) = match path {
+            let (sums, counts, local_inertia) = match path {
                 ComputePath::Native => comm.timed(|| native_step(shard, shard_n, d, k, &centroids)),
                 ComputePath::Kernel => {
                     let handle = compute.expect("checked above");
                     kernel_step(comm, handle, shard, shard_n, d, k, &centroids)?
                 }
             };
-
-            // Reduce across ranks: one (k*d + k)-float allreduce.
-            sums.extend_from_slice(&counts);
-            let reduced = comm.allreduce_sum_f32(sums)?;
-            let (rsums, rcounts) = reduced.split_at(k * d);
-            counts = rcounts.to_vec();
-            inertia = comm.allreduce(local_inertia, |a, b| a + b)?;
-
-            // Update step (same on every rank — deterministic).
-            comm.timed(|| {
-                for c in 0..k {
-                    if counts[c] > 0.0 {
-                        for j in 0..d {
-                            centroids[c * d + j] = rsums[c * d + j] / counts[c];
-                        }
-                    }
-                }
-            });
+            inertia = reduce_and_update(comm, sums, counts, local_inertia, &mut centroids, d, k)?;
         }
         Ok((centroids, inertia))
     });
 
-    let mut final_centroids: Option<Vec<f32>> = None;
-    let mut inertia = 0.0;
-    for (i, r) in rank_results.into_iter().enumerate() {
-        let (c, iner) = r.with_context(|| format!("rank {i}"))?;
-        inertia = iner;
-        if let Some(prev) = &final_centroids {
-            anyhow::ensure!(prev == &c, "ranks disagree on centroids — nondeterminism bug");
-        }
-        final_centroids = Some(c);
-    }
-
+    let (final_centroids, inertia) = collapse_rank_results(out.results)?;
     let profile = cluster.deployment.profile();
-    let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
-    let (msgs, bytes, _, rbytes) = stats_handle.snapshot();
+    let slowest = out.clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
     Ok(KmeansResult {
-        centroids: final_centroids.context("no ranks")?,
+        centroids: final_centroids,
         k,
         d,
         inertia,
@@ -174,14 +159,146 @@ pub fn run(
             compute_ms: slowest.1 as f64 / 1e6,
             net_ms: slowest.2 as f64 / 1e6,
             startup_ms: profile.startup_ms as f64,
-            shuffle_bytes: bytes,
-            messages: msgs,
-            remote_bytes: rbytes,
+            shuffle_bytes: out.traffic.bytes,
+            messages: out.traffic.messages,
+            remote_bytes: out.traffic.remote_bytes,
             peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
             spilled_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })
+}
+
+/// The Hadoop-shaped variant: **one engine job per wave** (the paper's
+/// motivation scenario — each iteration of an iterative app is a separate
+/// MapReduce job). With `pool: None` every wave spawns and joins fresh
+/// rank threads, exactly the per-job overhead the pooled executor
+/// removes; with `Some(pool)` every wave reuses the warm threads. The
+/// two produce bit-identical centroids, which is what lets
+/// `benches/micro_hot_paths.rs` and the `pool-ablation` figure compare
+/// their wall-clock honestly.
+pub fn run_wave_jobs(
+    cluster: &ClusterConfig,
+    points: &Points,
+    k: usize,
+    iterations: usize,
+    pool: Option<&RankPool>,
+) -> Result<KmeansResult> {
+    anyhow::ensure!(k > 0 && k <= points.n, "k={k} out of range");
+    let ranks = cluster.ranks();
+    let topology = Topology::from_config(cluster);
+    let network = cluster.network_model();
+    if let Some(pool) = pool {
+        pool.ensure_models(cluster)?;
+    }
+    let wall = std::time::Instant::now();
+
+    let d = points.d;
+    let chunk_pts = points.n.div_ceil(ranks.max(1)).max(1);
+    let mut centroids: Vec<f32> = points.data[..k * d].to_vec();
+    let mut inertia = 0.0f64;
+    let mut modeled = (0u64, 0u64, 0u64);
+    let mut traffic = TrafficDelta::default();
+
+    for _wave in 0..iterations {
+        let current = centroids.clone();
+        let wave = |comm: &Communicator| -> Result<(Vec<f32>, f64)> {
+            let me = comm.rank().0;
+            let lo = (me * chunk_pts).min(points.n);
+            let hi = ((me + 1) * chunk_pts).min(points.n);
+            let shard = &points.data[lo * d..hi * d];
+            let (sums, counts, local_inertia) =
+                comm.timed(|| native_step(shard, hi - lo, d, k, &current));
+            let mut next = current.clone();
+            let iner = reduce_and_update(comm, sums, counts, local_inertia, &mut next, d, k)?;
+            Ok((next, iner))
+        };
+        let out = match pool {
+            Some(pool) => pool.run_job(ranks, wave),
+            // Spawn-per-wave: a throwaway pool per iteration, the old
+            // `run_ranks` cost structure.
+            None => RankPool::new(Universe::new(topology.clone(), network.clone()))
+                .run_job(ranks, wave),
+        };
+        let (next, iner) = collapse_rank_results(out.results)?;
+        centroids = next;
+        inertia = iner;
+        let slowest =
+            out.clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
+        modeled.0 += slowest.0;
+        modeled.1 += slowest.1;
+        modeled.2 += slowest.2;
+        traffic.messages += out.traffic.messages;
+        traffic.bytes += out.traffic.bytes;
+        traffic.remote_messages += out.traffic.remote_messages;
+        traffic.remote_bytes += out.traffic.remote_bytes;
+    }
+
+    let profile = cluster.deployment.profile();
+    Ok(KmeansResult {
+        centroids,
+        k,
+        d,
+        inertia,
+        iterations,
+        stats: JobStats {
+            modeled_ms: modeled.0 as f64 / 1e6,
+            compute_ms: modeled.1 as f64 / 1e6,
+            net_ms: modeled.2 as f64 / 1e6,
+            startup_ms: profile.startup_ms as f64,
+            shuffle_bytes: traffic.bytes,
+            messages: traffic.messages,
+            remote_bytes: traffic.remote_bytes,
+            peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
+            spilled_bytes: 0,
+            host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
+        },
+    })
+}
+
+/// One wave's reduce: allreduce (sums ++ counts) and inertia, then apply
+/// the centroid update in place (identical on every rank). Returns the
+/// global inertia.
+fn reduce_and_update(
+    comm: &Communicator,
+    mut sums: Vec<f32>,
+    counts: Vec<f32>,
+    local_inertia: f64,
+    centroids: &mut [f32],
+    d: usize,
+    k: usize,
+) -> Result<f64> {
+    // Reduce across ranks: one (k*d + k)-float allreduce.
+    sums.extend_from_slice(&counts);
+    let reduced = comm.allreduce_sum_f32(sums)?;
+    let (rsums, rcounts) = reduced.split_at(k * d);
+    let inertia = comm.allreduce(local_inertia, |a, b| a + b)?;
+    // Update step (same on every rank — deterministic).
+    comm.timed(|| {
+        for c in 0..k {
+            if rcounts[c] > 0.0 {
+                for j in 0..d {
+                    centroids[c * d + j] = rsums[c * d + j] / rcounts[c];
+                }
+            }
+        }
+    });
+    Ok(inertia)
+}
+
+/// All ranks must agree on (centroids, inertia); returns rank 0's copy.
+fn collapse_rank_results(results: Vec<Result<(Vec<f32>, f64)>>) -> Result<(Vec<f32>, f64)> {
+    let mut agreed: Option<Vec<f32>> = None;
+    let mut inertia = 0.0;
+    for (i, r) in results.into_iter().enumerate() {
+        let (c, iner) = r.with_context(|| format!("rank {i}"))?;
+        inertia = iner;
+        if let Some(prev) = &agreed {
+            anyhow::ensure!(prev == &c, "ranks disagree on centroids — nondeterminism bug");
+        }
+        agreed = Some(c);
+    }
+    Ok((agreed.context("no ranks")?, inertia))
 }
 
 /// Scalar assign+combine over one shard: returns (sums k*d, counts k,
@@ -358,5 +475,35 @@ mod tests {
         let pts = generate_points(100, 3, 2, 1);
         let cluster = ClusterConfig::builder().ranks(1).build();
         assert!(run(&cluster, &pts, 2, 1, ComputePath::Kernel, None).is_err());
+    }
+
+    #[test]
+    fn warm_pool_run_matches_fresh_run() {
+        let pts = generate_points(400, 2, 4, 5);
+        let cluster = ClusterConfig::builder().ranks(3).build();
+        let fresh = run(&cluster, &pts, 4, 6, ComputePath::Native, None).unwrap();
+        let pool = RankPool::from_config(&cluster);
+        for _ in 0..3 {
+            let pooled =
+                run_on_pool(&cluster, &pool, &pts, 4, 6, ComputePath::Native, None).unwrap();
+            assert_eq!(pooled.centroids, fresh.centroids);
+            assert_eq!(pooled.stats.shuffle_bytes, fresh.stats.shuffle_bytes);
+        }
+        assert_eq!(pool.jobs_run(), 3);
+    }
+
+    #[test]
+    fn wave_jobs_agree_with_single_job_run_pooled_or_not() {
+        let pts = generate_points(300, 2, 4, 9);
+        let cluster = ClusterConfig::builder().ranks(2).build();
+        let single = run(&cluster, &pts, 4, 5, ComputePath::Native, None).unwrap();
+        let spawned = run_wave_jobs(&cluster, &pts, 4, 5, None).unwrap();
+        let pool = RankPool::from_config(&cluster);
+        let pooled = run_wave_jobs(&cluster, &pts, 4, 5, Some(&pool)).unwrap();
+        assert_eq!(spawned.centroids, single.centroids);
+        assert_eq!(pooled.centroids, single.centroids);
+        assert_eq!(pooled.inertia, spawned.inertia);
+        // One job per wave, all on the same warm pool.
+        assert_eq!(pool.jobs_run(), 5);
     }
 }

@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::core::JobStats;
-use crate::mpi::{run_ranks_with_universe, Topology, Universe};
+use crate::mpi::RankPool;
 use crate::runtime::{ComputeHandle, TensorArg};
 use crate::util::rng::Rng;
 
@@ -60,9 +60,25 @@ pub enum ComputePath {
     Kernel,
 }
 
-/// Distributed batch gradient descent.
+/// Distributed batch gradient descent. Spawns a throwaway [`RankPool`];
+/// sweeps should hold one warm pool and call [`run_on_pool`].
 pub fn run(
     cluster: &ClusterConfig,
+    data: &RegData,
+    iterations: usize,
+    lr: f32,
+    path: ComputePath,
+    compute: Option<&ComputeHandle>,
+) -> Result<LinregResult> {
+    run_on_pool(cluster, &RankPool::from_config(cluster), data, iterations, lr, path, compute)
+}
+
+/// [`run`] on a caller-owned warm [`RankPool`]: every GD iteration's
+/// gradient partials and allreduce execute on the pool's persistent rank
+/// threads.
+pub fn run_on_pool(
+    cluster: &ClusterConfig,
+    pool: &RankPool,
     data: &RegData,
     iterations: usize,
     lr: f32,
@@ -75,16 +91,14 @@ pub fn run(
         }
         compute.context("kernel path needs a ComputeHandle")?.warmup("linreg_d8")?;
     }
-    let topology = Topology::from_config(cluster);
-    let universe = Universe::new(topology, cluster.network_model());
-    let stats_handle = universe.stats();
+    let ranks = cluster.ranks();
+    pool.ensure_models(cluster)?;
     let wall = std::time::Instant::now();
 
     let d = data.d;
-    let ranks = cluster.ranks();
     let chunk = data.n.div_ceil(ranks.max(1)).max(1);
 
-    let (rank_results, clocks) = run_ranks_with_universe(universe, |comm| -> Result<(Vec<f32>, f64)> {
+    let out = pool.run_job(ranks, |comm| -> Result<(Vec<f32>, f64)> {
         let me = comm.rank().0;
         let lo = (me * chunk).min(data.n);
         let hi = ((me + 1) * chunk).min(data.n);
@@ -121,7 +135,7 @@ pub fn run(
 
     let mut w: Option<Vec<f32>> = None;
     let mut mse = 0.0;
-    for (i, r) in rank_results.into_iter().enumerate() {
+    for (i, r) in out.results.into_iter().enumerate() {
         let (rw, rmse) = r.with_context(|| format!("rank {i}"))?;
         mse = rmse;
         if let Some(prev) = &w {
@@ -131,8 +145,7 @@ pub fn run(
     }
 
     let profile = cluster.deployment.profile();
-    let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
-    let (msgs, bytes, _, rbytes) = stats_handle.snapshot();
+    let slowest = out.clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
     Ok(LinregResult {
         w: w.context("no ranks")?,
         mse,
@@ -142,9 +155,9 @@ pub fn run(
             compute_ms: slowest.1 as f64 / 1e6,
             net_ms: slowest.2 as f64 / 1e6,
             startup_ms: profile.startup_ms as f64,
-            shuffle_bytes: bytes,
-            messages: msgs,
-            remote_bytes: rbytes,
+            shuffle_bytes: out.traffic.bytes,
+            messages: out.traffic.messages,
+            remote_bytes: out.traffic.remote_bytes,
             peak_mem_bytes: ((d + 1) * 4 * ranks) as u64 + (data.x.len() * 4) as u64,
             spilled_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
@@ -275,5 +288,20 @@ mod tests {
         let data = generate(100, 4, 0.0, 1);
         let cluster = ClusterConfig::builder().ranks(1).build();
         assert!(run(&cluster, &data, 1, 0.1, ComputePath::Kernel, None).is_err());
+    }
+
+    #[test]
+    fn warm_pool_run_matches_fresh_run() {
+        let data = generate(400, 4, 0.05, 11);
+        let cluster = ClusterConfig::builder().ranks(2).build();
+        let fresh = run(&cluster, &data, 20, 0.3, ComputePath::Native, None).unwrap();
+        let pool = RankPool::from_config(&cluster);
+        for _ in 0..2 {
+            let pooled =
+                run_on_pool(&cluster, &pool, &data, 20, 0.3, ComputePath::Native, None).unwrap();
+            assert_eq!(pooled.w, fresh.w);
+            assert_eq!(pooled.mse, fresh.mse);
+        }
+        assert_eq!(pool.jobs_run(), 2);
     }
 }

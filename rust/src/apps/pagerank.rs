@@ -17,6 +17,7 @@ use anyhow::Result;
 
 use crate::cluster::ClusterConfig;
 use crate::core::{JobStats, MapReduceJob, ReductionMode};
+use crate::mpi::RankPool;
 use crate::util::rng::Rng;
 
 /// Adjacency-list graph with contiguous u32 vertex ids.
@@ -85,11 +86,16 @@ pub fn run(
     let vertex_ids: Vec<u32> = (0..n as u32).collect();
     let base = (1.0 - damping) / n as f64;
 
+    // One warm pool for the whole run: every iteration's MapReduce job is
+    // a wave on the same persistent rank threads (the iterative shape the
+    // pooled executor exists for — previously each wave respawned them).
+    let pool = RankPool::from_config(cluster);
+
     let mut last_stats = JobStats::default();
     let mut last_delta = f64::INFINITY;
     for _ in 0..iterations {
         let ranks_in = ranks.clone();
-        let job = MapReduceJob::new(cluster, &vertex_ids).with_mode(mode);
+        let job = MapReduceJob::new(cluster, &vertex_ids).with_mode(mode).with_pool(&pool);
         let map = |&u: &u32, emit: &mut dyn FnMut(u32, f64)| {
             let u = u as usize;
             let out = &graph.edges[u];

@@ -34,10 +34,12 @@ pub enum FigureId {
     AblationReduction,
     /// E8 — §III deployment overheads (Figs 3-5 architectures).
     Deployment,
+    /// E9 — pooled SPMD executor vs spawn-per-wave (host wall clock).
+    PoolAblation,
 }
 
 impl FigureId {
-    pub const ALL: [FigureId; 8] = [
+    pub const ALL: [FigureId; 9] = [
         FigureId::Fig8,
         FigureId::Fig9,
         FigureId::Fig10,
@@ -46,6 +48,7 @@ impl FigureId {
         FigureId::Fig13,
         FigureId::AblationReduction,
         FigureId::Deployment,
+        FigureId::PoolAblation,
     ];
 
     pub fn parse(s: &str) -> Option<FigureId> {
@@ -58,6 +61,7 @@ impl FigureId {
             "fig13" | "e6" => FigureId::Fig13,
             "ablation-reduction" | "e7" => FigureId::AblationReduction,
             "deployment" | "e8" => FigureId::Deployment,
+            "pool-ablation" | "e9" => FigureId::PoolAblation,
             _ => return None,
         })
     }
@@ -72,6 +76,7 @@ impl FigureId {
             FigureId::Fig13 => "fig13",
             FigureId::AblationReduction => "ablation-reduction",
             FigureId::Deployment => "deployment",
+            FigureId::PoolAblation => "pool-ablation",
         }
     }
 }
@@ -98,6 +103,7 @@ pub fn run_figure(id: FigureId, quick: bool) -> Result<Report> {
         FigureId::Fig13 => fig13(quick),
         FigureId::AblationReduction => ablation_reduction(quick),
         FigureId::Deployment => deployment(quick),
+        FigureId::PoolAblation => pool_ablation(quick),
     }
 }
 
@@ -279,6 +285,53 @@ fn ablation_reduction(quick: bool) -> Result<Report> {
     Ok(report)
 }
 
+/// E9 — the pooled-executor ablation: the same iterative K-means, one
+/// engine job per wave, run spawn-per-wave (fresh rank threads every
+/// iteration, the pre-pool cost structure) vs on one warm `RankPool`.
+/// The y-axis is HOST wall time — this figure measures our runtime's own
+/// per-job overhead, not the modeled cluster — and the two executors are
+/// checked to produce bit-identical centroids per sweep point.
+fn pool_ablation(quick: bool) -> Result<Report> {
+    use crate::mpi::RankPool;
+    use crate::util::bench::time_once;
+
+    let n = if quick { 2_000 } else { 20_000 };
+    let reps = if quick { 3 } else { 5 };
+    let points = kmeans::generate_points(n, 2, 8, 48);
+    let cluster = vm_cluster(4, 48);
+    let pool = RankPool::from_config(&cluster);
+
+    let mut report = Report::new("E9 — pooled SPMD executor vs spawn-per-wave (host wall)");
+    let mut spawned = Series::new("spawn-per-wave", "waves", "host_wall_ms");
+    let mut pooled = Series::new("pooled (RankPool)", "waves", "host_wall_ms");
+    for waves in [5usize, 10, 20, 40] {
+        let mut spawn_ms = f64::INFINITY;
+        let mut pool_ms = f64::INFINITY;
+        for _ in 0..reps {
+            let (a, da) = time_once(|| kmeans::run_wave_jobs(&cluster, &points, 8, waves, None));
+            let (b, db) =
+                time_once(|| kmeans::run_wave_jobs(&cluster, &points, 8, waves, Some(&pool)));
+            anyhow::ensure!(
+                a?.centroids == b?.centroids,
+                "executors diverged at {waves} waves"
+            );
+            // Min-of-reps: the standard noise filter for wall clocks.
+            spawn_ms = spawn_ms.min(da.as_secs_f64() * 1e3);
+            pool_ms = pool_ms.min(db.as_secs_f64() * 1e3);
+        }
+        spawned.push(waves as f64, spawn_ms);
+        pooled.push(waves as f64, pool_ms);
+    }
+    let last = spawned.points.len() - 1;
+    report.note(format!(
+        "40 waves: spawn-per-wave/pooled host-wall ratio = {:.2}x (ROADMAP thread-pool item)",
+        spawned.points[last].1 / pooled.points[last].1.max(1e-9)
+    ));
+    report.add(spawned);
+    report.add(pooled);
+    Ok(report)
+}
+
 /// E8 — §III deployment comparison: the same WordCount under the three
 /// proposed architectures (Figs 3-5) + Local reference.
 fn deployment(quick: bool) -> Result<Report> {
@@ -308,6 +361,14 @@ mod tests {
             assert_eq!(FigureId::parse(id.name()), Some(id));
         }
         assert_eq!(FigureId::parse("fig99"), None);
+    }
+
+    #[test]
+    fn pool_ablation_quick_runs_both_executors() {
+        let r = run_figure(FigureId::PoolAblation, true).unwrap();
+        assert_eq!(r.series.len(), 2);
+        assert_eq!(r.series[0].points.len(), r.series[1].points.len());
+        assert!(!r.notes.is_empty());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! (`dist::balance`) onto the new shard count. This module owns that
 //! lifecycle and its audit log.
 
+use crate::mpi::{RankPool, Topology, Universe};
+
 use super::config::ClusterConfig;
 
 /// One membership change, for the audit log / tests.
@@ -19,19 +21,32 @@ pub enum ElasticEvent {
     Shrank { removed: usize, nodes: usize },
 }
 
-/// A cluster whose node count can change between waves. Each wave gets a
-/// fresh universe built from the *current* config; shard maps are
-/// recomputed so `DistHashMap` data lands on the right owner after a
-/// resize (see `dist::balance::rebalance_plan`).
-#[derive(Debug, Clone)]
+/// A cluster whose node count can change between waves. Waves run on a
+/// session-owned [`RankPool`] ([`ElasticCluster::pool_for_wave`]): while
+/// membership is stable, every wave reuses the same warm rank threads;
+/// a grow/shrink rebuilds the pool at the next wave boundary so the cost
+/// model reflects the *current* placement. Shard maps are recomputed so
+/// `DistHashMap` data lands on the right owner after a resize (see
+/// `dist::balance::rebalance_plan`).
+#[derive(Debug)]
 pub struct ElasticCluster {
     config: ClusterConfig,
     log: Vec<ElasticEvent>,
+    /// Warm rank threads for the current membership; lazily (re)built.
+    pool: Option<RankPool>,
+}
+
+impl Clone for ElasticCluster {
+    /// Clones membership and audit log; the warm thread pool stays with
+    /// the original and the clone builds its own on first wave.
+    fn clone(&self) -> Self {
+        Self { config: self.config.clone(), log: self.log.clone(), pool: None }
+    }
 }
 
 impl ElasticCluster {
     pub fn new(config: ClusterConfig) -> Self {
-        Self { config, log: Vec::new() }
+        Self { config, log: Vec::new(), pool: None }
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -63,6 +78,25 @@ impl ElasticCluster {
 
     pub fn events(&self) -> &[ElasticEvent] {
         &self.log
+    }
+
+    /// The warm [`RankPool`] for the next wave. Reused verbatim while the
+    /// membership (and therefore topology/network model) is unchanged;
+    /// rebuilt lazily after a [`ElasticCluster::grow`] /
+    /// [`ElasticCluster::shrink`] — the DELMA contract that resizes take
+    /// effect at wave boundaries, now without respawning threads on the
+    /// boundaries where nothing changed.
+    pub fn pool_for_wave(&mut self) -> &RankPool {
+        let topology = Topology::from_config(&self.config);
+        let network = self.config.network_model();
+        let stale = match &self.pool {
+            Some(pool) => !pool.matches(&topology, &network),
+            None => true,
+        };
+        if stale {
+            self.pool = Some(RankPool::new(Universe::new(topology, network)));
+        }
+        self.pool.as_ref().expect("just ensured")
     }
 }
 
@@ -103,5 +137,28 @@ mod tests {
         let mut c = cluster(2);
         assert!(c.shrink(2).is_err());
         assert_eq!(c.nodes(), 2);
+    }
+
+    #[test]
+    fn waves_reuse_pool_until_resize() {
+        let mut c = cluster(2); // 2 nodes x 2 slots = 4 ranks
+        for _ in 0..3 {
+            let pool = c.pool_for_wave();
+            assert_eq!(pool.size(), 4);
+            let got = pool.run(|comm| comm.allreduce_sum_u64(1).unwrap());
+            assert_eq!(got, vec![4; 4]);
+        }
+        // Same membership -> same pool, job counter kept accumulating.
+        assert_eq!(c.pool_for_wave().jobs_run(), 3);
+
+        c.grow(1);
+        let pool = c.pool_for_wave();
+        assert_eq!(pool.size(), 6, "resize rebuilds for the new membership");
+        assert_eq!(pool.jobs_run(), 0, "fresh pool after resize");
+        let got = pool.run(|comm| comm.allreduce_sum_u64(1).unwrap());
+        assert_eq!(got, vec![6; 6]);
+
+        c.shrink(2).unwrap();
+        assert_eq!(c.pool_for_wave().size(), 2);
     }
 }

@@ -226,4 +226,51 @@ mod tests {
         let _b = t.claim_next(Rank(1)).unwrap();
         assert_eq!(t.progress(), (1, 1, 1, 0));
     }
+
+    #[test]
+    fn rank_panic_does_not_poison_the_pool() {
+        // Regression test for the pooled executor's failure path: a job
+        // closure that panics on one rank must be contained on that
+        // rank's thread — the pool keeps serving jobs, which is what lets
+        // the tracker-driven recovery above retry on surviving ranks
+        // instead of tearing the whole session down.
+        use crate::mpi::RankPool;
+
+        let pool = RankPool::local(3);
+        let tracker = FaultTracker::new(4);
+
+        let err = pool
+            .try_run_on(3, |c| {
+                if c.rank().0 == 1 {
+                    panic!("injected wave fault");
+                }
+                c.rank().0
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rank 1 panicked"), "{err:#}");
+
+        // Master-side bookkeeping, then the retry wave runs on the SAME
+        // pool with the dead rank sitting out.
+        tracker.mark_rank_failed(Rank(1));
+        let out = pool.run(|c| {
+            if tracker.is_rank_dead(c.rank()) {
+                return 0u64;
+            }
+            let mut done = 0;
+            while let Some(task) = tracker.claim_next(c.rank()) {
+                tracker.complete(task, c.rank());
+                done += 1;
+            }
+            done
+        });
+        assert!(tracker.all_done());
+        assert_eq!(out[1], 0, "dead rank must not claim work");
+        assert_eq!(out.iter().sum::<u64>(), 4);
+
+        // And the pool is still healthy for ordinary collective jobs.
+        for _ in 0..3 {
+            assert_eq!(pool.run(|c| c.allreduce_sum_u64(1).unwrap()), vec![3; 3]);
+        }
+        assert_eq!(pool.live_threads(), 3);
+    }
 }

@@ -99,14 +99,14 @@ where
 mod tests {
     use super::*;
     use crate::core::job::Scheduling;
-    use crate::mpi::{run_ranks, Universe};
+    use crate::util::testpool::pool_run;
 
     #[test]
     fn classic_wordcount_matches_truth() {
         let input: Vec<String> =
             ["x y x", "y z y", "x"].iter().map(|s| s.to_string()).collect();
         let feed = TaskFeed::new(&input, 3, 1, Scheduling::Static, None);
-        let results = run_ranks(Universe::local(3), |c| {
+        let results = pool_run(3, |c| {
             let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
                 for w in line.split_whitespace() {
                     emit(w.to_string(), 1);
@@ -129,7 +129,7 @@ mod tests {
     fn classic_reduce_sees_full_multiset() {
         let input: Vec<u32> = (0..10).collect();
         let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
-        let results = run_ranks(Universe::local(2), |c| {
+        let results = pool_run(2, |c| {
             // All items map to one key; reducer asserts it sees all 10.
             let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit(0u8, *i);
             let reduce = |_k: &u8, vs: Vec<u32>| {
@@ -148,7 +148,7 @@ mod tests {
     fn classic_with_tiny_spill_threshold_still_correct() {
         let input: Vec<String> = (0..50).map(|i| format!("w{} w{}", i % 5, i % 3)).collect();
         let feed = TaskFeed::new(&input, 2, 2, Scheduling::Static, None);
-        let results = run_ranks(Universe::local(2), |c| {
+        let results = pool_run(2, |c| {
             let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
                 for w in line.split_whitespace() {
                     emit(w.to_string(), 1);

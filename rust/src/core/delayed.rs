@@ -164,14 +164,14 @@ where
 mod tests {
     use super::*;
     use crate::core::job::Scheduling;
-    use crate::mpi::{run_ranks, Universe};
+    use crate::util::testpool::pool_run;
 
     #[test]
     fn delayed_wordcount_matches_truth() {
         let input: Vec<String> =
             ["a b a", "b c b", "a"].iter().map(|s| s.to_string()).collect();
         let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
-        let results = run_ranks(Universe::local(2), |c| {
+        let results = pool_run(2, |c| {
             let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
                 for w in line.split_whitespace() {
                     emit(w.to_string(), 1);
@@ -194,7 +194,7 @@ mod tests {
     fn groups_are_key_sorted_and_complete() {
         let input: Vec<u32> = (0..20).collect();
         let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
-        let outputs = run_ranks(Universe::local(2), |c| {
+        let outputs = pool_run(2, |c| {
             let map = |i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 4, *i);
             let tracker = PeakTracker::new();
             let out = delayed_rank_groups(c, &feed, &map, 0, &tracker).unwrap();
@@ -223,7 +223,7 @@ mod tests {
         // groups first (e.g. to inspect), then reduce.
         let input: Vec<u32> = (1..=6).collect();
         let feed = TaskFeed::new(&input, 1, 1, Scheduling::Static, None);
-        let results = run_ranks(Universe::local(1), |c| {
+        let results = pool_run(1, |c| {
             let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit((i % 2) as u8, *i);
             let tracker = PeakTracker::new();
             let out = delayed_rank_groups(c, &feed, &map, 0, &tracker).unwrap();
@@ -241,7 +241,7 @@ mod tests {
         // iterable reducer — the §III.D motivation in miniature.
         let input: Vec<u32> = vec![5, 1, 9, 3, 7];
         let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
-        let results = run_ranks(Universe::local(2), |c| {
+        let results = pool_run(2, |c| {
             let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit(0, *i);
             let reduce = |_k: &u8, mut vs: Vec<u32>| {
                 vs.sort_unstable();

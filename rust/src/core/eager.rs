@@ -97,7 +97,7 @@ where
 mod tests {
     use super::*;
     use crate::core::job::Scheduling;
-    use crate::mpi::{run_ranks, Universe};
+    use crate::util::testpool::pool_run;
 
     #[test]
     fn eager_wordcount_two_ranks() {
@@ -106,7 +106,7 @@ mod tests {
         // One shared feed captured by every rank closure (as the engine
         // does); Dynamic claiming is exercised by engine tests.
         let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
-        let results = run_ranks(Universe::local(2), |c| {
+        let results = pool_run(2, |c| {
             let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
                 for w in line.split_whitespace() {
                     emit(w.to_string(), 1);

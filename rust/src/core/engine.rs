@@ -10,7 +10,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::metrics::PeakTracker;
-use crate::mpi::{run_ranks_with_universe, Communicator, Topology, Universe};
+use crate::mpi::{Communicator, RankPool, Topology, Universe};
 use crate::serial::FastSerialize;
 
 use super::classic::classic_rank;
@@ -42,11 +42,13 @@ pub struct MapReduceJob<'i, I> {
     config: JobConfig,
     input: &'i [I],
     fault: Option<FaultPlan>,
+    pool: Option<&'i RankPool>,
 }
 
 impl<'i, I: Sync> MapReduceJob<'i, I> {
     pub fn new(cluster: &ClusterConfig, input: &'i [I]) -> Self {
-        Self { cluster: cluster.clone(), config: JobConfig::default(), input, fault: None }
+        let cluster = cluster.clone();
+        Self { cluster, config: JobConfig::default(), input, fault: None, pool: None }
     }
 
     pub fn with_config(mut self, config: JobConfig) -> Self {
@@ -56,6 +58,16 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
 
     pub fn with_mode(mut self, mode: ReductionMode) -> Self {
         self.config.mode = mode;
+        self
+    }
+
+    /// Run on a caller-owned warm [`RankPool`] instead of spawning fresh
+    /// rank threads — multi-job sessions (PageRank's wave loop, bench
+    /// sweeps, `ElasticCluster` sessions) pay thread start-up once. The
+    /// pool must model this cluster's placement/network on its first
+    /// `ranks()` ranks (build it with [`RankPool::from_config`]).
+    pub fn with_pool(mut self, pool: &'i RankPool) -> Self {
+        self.pool = Some(pool);
         self
     }
 
@@ -153,21 +165,31 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
     {
         self.cluster.validate()?;
         let wall_start = Instant::now();
-        let topology = Topology::from_config(&self.cluster);
-        let universe = Universe::new(topology, self.cluster.network_model());
-        let stats_handle = universe.stats();
+        let ranks = self.cluster.ranks();
         let tracker = PeakTracker::new();
         let feed = TaskFeed::new(
             self.input,
-            self.cluster.ranks(),
+            ranks,
             self.config.tasks_per_rank,
             self.config.scheduling,
             self.fault,
         );
 
-        let (rank_results, clocks) = run_ranks_with_universe(universe, |comm| {
-            body(comm, &feed, &tracker)
-        });
+        let rank_body = |comm: &Communicator| body(comm, &feed, &tracker);
+        let out = match self.pool {
+            Some(pool) => {
+                pool.ensure_models(&self.cluster)?;
+                pool.run_job(ranks, rank_body)
+            }
+            // One-shot: a throwaway pool wired exactly like the old fresh
+            // universe (same threads-per-job cost as before the refactor).
+            None => RankPool::new(Universe::new(
+                Topology::from_config(&self.cluster),
+                self.cluster.network_model(),
+            ))
+            .run_job(ranks, rank_body),
+        };
+        let (rank_results, clocks, traffic) = (out.results, out.clocks, out.traffic);
 
         // Merge shards (disjoint key ownership) and surface rank errors.
         let mut merged: HashMap<K, V> = HashMap::new();
@@ -184,7 +206,6 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
 
         let profile = self.cluster.deployment.profile();
         let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
-        let (msgs, bytes, _rmsgs, rbytes) = stats_handle.snapshot();
         // Job time excludes cluster bring-up (the paper benchmarks jobs on
         // an already-running cluster); startup is reported separately.
         let stats = JobStats {
@@ -192,9 +213,9 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             compute_ms: slowest.1 as f64 / 1e6,
             net_ms: slowest.2 as f64 / 1e6,
             startup_ms: profile.startup_ms as f64,
-            shuffle_bytes: bytes,
-            messages: msgs,
-            remote_bytes: rbytes,
+            shuffle_bytes: traffic.bytes,
+            messages: traffic.messages,
+            remote_bytes: traffic.remote_bytes,
             peak_mem_bytes: tracker.peak_bytes(),
             spilled_bytes: spilled,
             host_wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
@@ -287,6 +308,43 @@ mod tests {
         // folded into modeled_ms.
         assert!(s.startup_ms == 1_200.0);
         assert!(s.modeled_ms < s.startup_ms);
+    }
+
+    #[test]
+    fn pooled_session_matches_fresh_spawn_across_jobs() {
+        let input = wordcount_input(120);
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let pool = RankPool::from_config(&cluster);
+        for mode in ReductionMode::ALL {
+            let fresh = MapReduceJob::new(&cluster, &input)
+                .with_mode(mode)
+                .run_monoid(wc_map, |a: u64, b| a + b)
+                .unwrap();
+            let pooled = MapReduceJob::new(&cluster, &input)
+                .with_mode(mode)
+                .with_pool(&pool)
+                .run_monoid(wc_map, |a: u64, b| a + b)
+                .unwrap();
+            assert_eq!(fresh.result, pooled.result);
+            // Per-job traffic accounting must read like a fresh universe
+            // even on a reused pool (clocks carry real CPU measurements,
+            // so only the deterministic counters are compared).
+            assert_eq!(fresh.stats.shuffle_bytes, pooled.stats.shuffle_bytes);
+            assert_eq!(fresh.stats.messages, pooled.stats.messages);
+        }
+        assert_eq!(pool.jobs_run(), 3);
+    }
+
+    #[test]
+    fn mismatched_pool_is_rejected() {
+        let input = wordcount_input(10);
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let small_pool = RankPool::from_config(&ClusterConfig::builder().ranks(2).build());
+        let err = MapReduceJob::new(&cluster, &input)
+            .with_pool(&small_pool)
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rank pool"), "{err:#}");
     }
 
     #[test]

@@ -197,11 +197,11 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mpi::{run_ranks, Universe};
+    use crate::util::testpool::pool_run;
 
     #[test]
     fn shuffle_routes_every_pair_to_owner() {
-        let got = run_ranks(Universe::local(3), |c| {
+        let got = pool_run(3, |c| {
             let router = ShardRouter::new(3, 0);
             let tracker = PeakTracker::new();
             let pairs: Vec<(u32, u64)> =

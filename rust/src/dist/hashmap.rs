@@ -139,12 +139,12 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mpi::{run_ranks, Universe};
+    use crate::util::testpool::pool_run;
 
     #[test]
     fn flush_routes_every_staged_key_to_its_owner() {
         const SALT: u64 = 11;
-        let shards = run_ranks(Universe::local(3), |c| {
+        let shards = pool_run(3, |c| {
             let mut dm: DistHashMap<String, u64> = DistHashMap::new(c, SALT);
             // Every rank stages every key: owners must fold 3 stages each.
             for i in 0..10 {
@@ -168,7 +168,7 @@ mod tests {
 
     #[test]
     fn non_owners_read_none() {
-        let got = run_ranks(Universe::local(4), |c| {
+        let got = pool_run(4, |c| {
             let mut dm: DistHashMap<String, u64> = DistHashMap::new(c, 0);
             dm.stage("shared-key".into(), 1);
             dm.flush(|acc, v| *acc += v).unwrap();
@@ -181,7 +181,7 @@ mod tests {
 
     #[test]
     fn repeated_flushes_accumulate() {
-        let got = run_ranks(Universe::local(2), |c| {
+        let got = pool_run(2, |c| {
             let mut dm: DistHashMap<u32, u64> = DistHashMap::new(c, 5);
             for wave in 1..=3u64 {
                 for key in 0..4u32 {

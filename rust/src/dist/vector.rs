@@ -122,11 +122,11 @@ impl<'c, T: FastSerialize> DistVector<'c, T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mpi::{run_ranks, Universe};
+    use crate::util::testpool::pool_run;
 
     #[test]
     fn local_ops_do_not_touch_the_network() {
-        let got = run_ranks(Universe::local(2), |c| {
+        let got = pool_run(2, |c| {
             let mut dv: DistVector<u32> = DistVector::new(c);
             dv.push(1);
             dv.extend([2, 3]);
@@ -142,7 +142,7 @@ mod tests {
 
     #[test]
     fn global_len_and_offset() {
-        let got = run_ranks(Universe::local(4), |c| {
+        let got = pool_run(4, |c| {
             let mut dv: DistVector<u64> = DistVector::new(c);
             dv.extend(0..c.rank().0 as u64); // rank r holds r elements
             (dv.len_global().unwrap(), dv.global_offset().unwrap())
@@ -153,7 +153,7 @@ mod tests {
 
     #[test]
     fn rebalance_levels_and_preserves_multiset() {
-        let shards = run_ranks(Universe::local(4), |c| {
+        let shards = pool_run(4, |c| {
             let r = c.rank().0 as u64;
             let mut dv: DistVector<u64> = DistVector::new(c);
             // Rank r pushes 3r elements: lengths [0, 3, 6, 9].
@@ -175,7 +175,7 @@ mod tests {
 
     #[test]
     fn rebalance_on_balanced_data_is_a_no_op() {
-        let shards = run_ranks(Universe::local(3), |c| {
+        let shards = pool_run(3, |c| {
             let mut dv: DistVector<u64> = DistVector::from_local(c, vec![c.rank().0 as u64; 5]);
             dv.rebalance().unwrap();
             dv.into_local()

@@ -38,6 +38,6 @@ pub mod prelude {
     pub use crate::cluster::{ClusterConfig, DeploymentKind};
     pub use crate::core::{JobConfig, JobResult, ReductionMode};
     pub use crate::dist::{DistHashMap, DistVector};
-    pub use crate::mpi::{Communicator, Rank};
+    pub use crate::mpi::{Communicator, Rank, RankPool};
     pub use crate::serial::{Decoder, Encoder, FastSerialize};
 }

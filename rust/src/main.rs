@@ -4,7 +4,7 @@
 //! blaze run --app wordcount [--mode eager] [--ranks 4] [--deployment vm]
 //!           [--cluster cluster.toml] [--kernel] [app-specific sizes]
 //! blaze bench-figure <fig8|fig9|fig10|fig11|fig12|fig13|
-//!                     ablation-reduction|deployment|all> [--quick]
+//!                     ablation-reduction|deployment|pool-ablation|all> [--quick]
 //!                    [--json-dir target/figures]
 //! blaze inspect-artifacts [--dir artifacts]
 //! blaze cluster-info [--cluster cluster.toml | --ranks N --deployment K]
@@ -134,7 +134,7 @@ fn print_usage() {
          APP OPTS:\n  wordcount: --lines N --vocab V\n  kmeans: --points N \
          --dims D --k K --iters I\n  pi: --samples N\n  matmul: --size N\n  \
          linreg: --rows N --dims D --iters I --lr F\n\n\
-         FIGURES: fig8 fig9 fig10 fig11 fig12 fig13 ablation-reduction deployment"
+         FIGURES: fig8 fig9 fig10 fig11 fig12 fig13 ablation-reduction deployment pool-ablation"
     );
 }
 

@@ -64,6 +64,10 @@ impl Universe {
         &self.topology
     }
 
+    pub fn network(&self) -> &NetworkModel {
+        &self.network
+    }
+
     /// Build one [`Communicator`] per rank. Consumes the universe; the
     /// stats handle survives via [`Universe::stats`].
     pub fn communicators(self) -> Vec<Communicator> {
@@ -83,7 +87,8 @@ impl Universe {
             .enumerate()
             .map(|(i, rx)| Communicator {
                 rank: Rank(i),
-                size: n,
+                world: n,
+                active: Cell::new(n),
                 senders: senders.clone(),
                 rx,
                 pending: RefCell::new(HashMap::new()),
@@ -104,7 +109,12 @@ impl Universe {
 /// `MPI_COMM_WORLD` slot.
 pub struct Communicator {
     rank: Rank,
-    size: usize,
+    /// Ranks wired into this universe (mailboxes, senders).
+    world: usize,
+    /// Ranks participating in the *current* job. Equal to `world` for a
+    /// one-shot universe; a [`crate::mpi::RankPool`] narrows it per job so
+    /// a warm pool can run jobs smaller than the pool.
+    active: Cell<usize>,
     senders: Arc<Vec<Sender<Message>>>,
     rx: Receiver<Message>,
     /// Out-of-order buffer: messages received while waiting for a
@@ -126,8 +136,14 @@ impl Communicator {
         self.rank
     }
 
+    /// Ranks participating in the current job (collectives span these).
     pub fn size(&self) -> usize {
-        self.size
+        self.active.get()
+    }
+
+    /// Ranks physically wired into the universe (>= [`Communicator::size`]).
+    pub fn world_size(&self) -> usize {
+        self.world
     }
 
     pub fn is_root(&self) -> bool {
@@ -159,6 +175,29 @@ impl Communicator {
         Tag::collective(seq)
     }
 
+    /// Narrow the communicator to the first `n` ranks for the duration of
+    /// one pooled job (see [`crate::mpi::RankPool`]).
+    pub(crate) fn set_active_size(&self, n: usize) {
+        debug_assert!(n >= 1 && n <= self.world, "active size {n} outside 1..={}", self.world);
+        self.active.set(n);
+    }
+
+    /// Restore fresh-universe state between pooled jobs: discard any
+    /// unconsumed messages (matched or buffered), zero the virtual clocks,
+    /// and realign the collective tag sequence. Called by the pool's
+    /// prepare phase, after every rank of the previous job has finished
+    /// and before any rank of the next job starts — so nothing legitimate
+    /// can still be in flight.
+    pub(crate) fn reset_job_state(&self) {
+        while self.rx.try_recv().is_ok() {}
+        self.pending.borrow_mut().clear();
+        self.clock_ns.set(0);
+        self.compute_ns.set(0);
+        self.net_wait_ns.set(0);
+        self.collective_seq.set(0);
+        self.active.set(self.world);
+    }
+
     /// Charge `ns` of modeled compute time to this rank's clock.
     pub fn advance(&self, ns: u64) {
         self.clock_ns.set(self.clock_ns.get() + ns);
@@ -188,7 +227,7 @@ impl Communicator {
     /// Point-to-point send (non-blocking, unbounded buffering — MPI's
     /// eager protocol for our message sizes).
     pub fn send(&self, dst: Rank, tag: Tag, payload: Vec<u8>) -> Result<()> {
-        ensure!(dst.0 < self.size, "send to {dst} outside universe of {}", self.size);
+        ensure!(dst.0 < self.size(), "send to {dst} outside universe of {}", self.size());
         let bytes = payload.len() as u64;
         let same_node = self.topology.same_node(self.rank, dst);
         self.stats.messages.fetch_add(1, Ordering::Relaxed);

@@ -17,14 +17,28 @@
 //! Everything the framework above (shuffle, dist containers, engines) does
 //! with the network goes through [`Communicator`], so modeled time and
 //! traffic stats are complete.
+//!
+//! ## Execution: one-shot vs pooled
+//!
+//! [`run_ranks`] is the one-shot launcher (fresh threads per job, like
+//! `mpirun` per job). [`RankPool`] is the pooled SPMD executor: it starts
+//! the rank threads once, keeps the universe's mailbox/clock/stats wiring
+//! alive between jobs, and feeds successive jobs to the warm threads —
+//! the lifecycle (start → prepare/submit → inter-job barrier semantics →
+//! panic containment → shutdown) is documented on [`pool`]'s module docs.
+//! Iterative drivers (`core::MapReduceJob::with_pool`, the apps' pooled
+//! entry points, `cluster::ElasticCluster::pool_for_wave`) all ride on it;
+//! `run_ranks` itself is now a thin wrapper that builds a throwaway pool.
 
 mod collectives;
 mod comm;
 mod datatypes;
+pub mod pool;
 mod process;
 mod topology;
 
 pub use comm::{Communicator, TrafficStats, Universe};
 pub use datatypes::{Message, Rank, Tag};
+pub use pool::{JobOutput, RankPool, TrafficDelta};
 pub use process::{run_ranks, run_ranks_with_universe};
 pub use topology::{Hostfile, Topology};

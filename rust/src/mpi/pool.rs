@@ -1,0 +1,546 @@
+//! The pooled SPMD executor — persistent rank threads fed jobs over
+//! channels.
+//!
+//! [`super::process::run_ranks`] spawns and joins one OS thread per rank
+//! per job, so iterative applications (k-means, linear regression,
+//! PageRank run one job per wave) pay thread spawn/join on every
+//! iteration — exactly the per-job runtime overhead the paper argues a
+//! compiled environment should avoid, and the reason Thrill keeps worker
+//! threads alive across operations and M3R reuses long-lived workers
+//! across Hadoop jobs. [`RankPool`] starts the rank threads **once**,
+//! keeps the whole `Universe` wiring (mailboxes, topology, traffic stats)
+//! alive between jobs, and feeds each job to the warm threads.
+//!
+//! ## Lifecycle
+//!
+//! 1. **Start** — [`RankPool::new`] consumes a [`Universe`], builds one
+//!    [`Communicator`] per rank and parks each on its own named OS thread.
+//! 2. **Submit** — [`RankPool::run_job`] / [`RankPool::try_run_on`] run a
+//!    closure SPMD on the first `nranks <= size` ranks. Submission is
+//!    two-phase: a *prepare* command first restores fresh-universe state
+//!    on every rank (drain mailboxes, zero virtual clocks, realign
+//!    collective tags) and is acknowledged by all ranks **before** any
+//!    rank receives the job — so a rank can never drain a peer's
+//!    just-sent message belonging to the new job. Results, per-job clock
+//!    readings and a per-job traffic delta come back in rank order.
+//! 3. **Barrier semantics between jobs** — a job is complete only when
+//!    every active rank has reported; the next job's prepare phase
+//!    therefore happens-after all sends of the previous job. Jobs on one
+//!    pool are serialized (a submission mutex), so concurrent callers
+//!    interleave at job granularity, never inside a job.
+//! 4. **Panic containment** — a rank closure that panics is caught on the
+//!    rank thread; the thread survives and the panic is reported to the
+//!    submitter ([`RankPool::try_run_on`] returns `Err`, the `run*`
+//!    wrappers re-panic like `run_ranks` always did). Subsequent jobs run
+//!    normally; the next prepare phase discards anything the dead job
+//!    left in flight. Caveat (same as fresh-spawn MPI semantics): if a
+//!    panicking rank leaves a *peer* blocked in `recv`, the job never
+//!    completes — and because jobs serialize on the pool, a wedged job
+//!    also blocks every later submitter of a **shared** pool (and its
+//!    `Drop`). Keep deliberately-faulty jobs on a dedicated pool;
+//!    controlled failure handling lives a layer up in
+//!    [`crate::cluster::FaultTracker`].
+//! 5. **Shutdown** — dropping the pool sends every thread a shutdown
+//!    command and joins it.
+//!
+//! ```
+//! use blaze_rs::mpi::RankPool;
+//!
+//! let pool = RankPool::local(4);
+//! // Many jobs, one set of threads — this is the iterative-app shape.
+//! for _ in 0..3 {
+//!     let sums = pool.run(|c| c.allreduce_sum_u64(1).unwrap());
+//!     assert_eq!(sums, vec![4; 4]);
+//! }
+//! // Jobs narrower than the pool run on a prefix of the warm ranks.
+//! assert_eq!(pool.run_on(2, |c| c.rank().0), vec![0, 1]);
+//! assert_eq!(pool.jobs_run(), 4);
+//! ```
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{ClusterConfig, NetworkModel};
+
+use super::comm::{Communicator, TrafficStats, Universe};
+use super::topology::Topology;
+
+/// A job body shipped to a rank thread. Lifetime-erased: see the SAFETY
+/// argument in [`RankPool::submit_raw`].
+type Task = Box<dyn FnOnce(&Communicator) + Send>;
+
+enum Command {
+    /// Restore fresh-universe state, then ack on the enclosed channel.
+    Prepare(Sender<()>),
+    /// Run one job on the first `active` ranks; `task` is `None` on ranks
+    /// idle for this job.
+    Run { active: usize, task: Option<Task> },
+    Shutdown,
+}
+
+/// Universe-wide traffic attributable to one pooled job.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrafficDelta {
+    pub messages: u64,
+    pub bytes: u64,
+    pub remote_messages: u64,
+    pub remote_bytes: u64,
+}
+
+/// Everything one pooled job produced: per-rank results (rank order),
+/// per-rank virtual clocks `(clock_ns, compute_ns, net_wait_ns)` — reset
+/// at job start, so these read like a fresh universe's — and the job's
+/// traffic delta.
+#[derive(Debug)]
+pub struct JobOutput<T> {
+    pub results: Vec<T>,
+    pub clocks: Vec<(u64, u64, u64)>,
+    pub traffic: TrafficDelta,
+}
+
+struct Worker {
+    tx: Sender<Command>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Persistent SPMD executor: one warm OS thread per rank of a universe,
+/// reused across jobs. See the module docs for the lifecycle.
+pub struct RankPool {
+    workers: Vec<Worker>,
+    topology: Topology,
+    network: NetworkModel,
+    stats: Arc<TrafficStats>,
+    /// Serializes jobs: one at a time, whole-pool granularity.
+    submit: Mutex<()>,
+    jobs_run: AtomicU64,
+}
+
+impl std::fmt::Debug for RankPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RankPool")
+            .field("size", &self.workers.len())
+            .field("jobs_run", &self.jobs_run.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+fn worker_loop(comm: Communicator, rx: Receiver<Command>) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Prepare(ack) => {
+                comm.reset_job_state();
+                let _ = ack.send(());
+            }
+            Command::Run { active, task } => {
+                if let Some(task) = task {
+                    comm.set_active_size(active);
+                    task(&comm);
+                }
+            }
+            Command::Shutdown => break,
+        }
+    }
+}
+
+impl RankPool {
+    /// Start one persistent thread per rank of `universe`.
+    pub fn new(universe: Universe) -> Self {
+        let topology = universe.topology().clone();
+        let network = universe.network().clone();
+        let stats = universe.stats();
+        let workers = universe
+            .communicators()
+            .into_iter()
+            .map(|comm| {
+                let (tx, rx) = channel::<Command>();
+                let handle = std::thread::Builder::new()
+                    .name(format!("blaze-rank-{}", comm.rank().0))
+                    .spawn(move || worker_loop(comm, rx))
+                    .expect("spawn rank thread");
+                Worker { tx, handle: Some(handle) }
+            })
+            .collect();
+        Self {
+            workers,
+            topology,
+            network,
+            stats,
+            submit: Mutex::new(()),
+            jobs_run: AtomicU64::new(0),
+        }
+    }
+
+    /// Pool over `n` ranks on one Local-profile node — tests and benches.
+    pub fn local(n: usize) -> Self {
+        Self::new(Universe::local(n))
+    }
+
+    /// Pool wired exactly like the one-shot universe `MapReduceJob` would
+    /// build for `cfg` — the way sessions share threads across jobs.
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        Self::new(Universe::new(Topology::from_config(cfg), cfg.network_model()))
+    }
+
+    /// Number of warm rank threads (the maximum job width).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs completed over the pool's lifetime.
+    pub fn jobs_run(&self) -> u64 {
+        self.jobs_run.load(Ordering::Relaxed)
+    }
+
+    /// Rank threads currently alive — constant at [`RankPool::size`] for
+    /// a healthy pool; the leak checks in `tests/integration_pool.rs`
+    /// assert it never drifts across jobs.
+    pub fn live_threads(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| w.handle.as_ref().is_some_and(|h| !h.is_finished()))
+            .count()
+    }
+
+    /// Does this pool model exactly this placement and network?
+    pub fn matches(&self, topology: &Topology, network: &NetworkModel) -> bool {
+        self.network == *network && self.topology == *topology
+    }
+
+    /// Loud guard for pool-backed entry points: error unless this pool
+    /// can stand in for the fresh universe `cluster` would get (first
+    /// `cluster.ranks()` ranks of the placement + the network model).
+    pub fn ensure_models(&self, cluster: &ClusterConfig) -> Result<()> {
+        let ranks = cluster.ranks();
+        anyhow::ensure!(
+            self.matches_prefix(&Topology::from_config(cluster), &cluster.network_model(), ranks),
+            "rank pool ({} ranks) does not model this cluster's first {ranks} ranks — \
+             build it with RankPool::from_config(&cluster)",
+            self.size()
+        );
+        Ok(())
+    }
+
+    /// Can this pool stand in for a fresh `nranks`-rank universe with the
+    /// given placement/network? True when the models agree on the first
+    /// `nranks` ranks — the prefix a narrowed job runs on.
+    pub fn matches_prefix(
+        &self,
+        topology: &Topology,
+        network: &NetworkModel,
+        nranks: usize,
+    ) -> bool {
+        nranks <= self.size()
+            && self.network == *network
+            && self.topology.agrees_on_prefix(topology, nranks)
+    }
+
+    /// Run `f` SPMD on every rank; panics if any rank panicked (first
+    /// rank in rank order, message-compatible with `run_ranks`).
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        self.run_job(self.size(), f).results
+    }
+
+    /// Like [`RankPool::run`] on the first `nranks` ranks only.
+    pub fn run_on<T, F>(&self, nranks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        self.run_job(nranks, f).results
+    }
+
+    /// Full-fat submission: results + per-job clocks + traffic delta.
+    /// Rank panics propagate as a panic, like `run_ranks`.
+    pub fn run_job<T, F>(&self, nranks: usize, f: F) -> JobOutput<T>
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        let (raw, traffic) = self.submit_raw(nranks, f);
+        let mut results = Vec::with_capacity(raw.len());
+        let mut clocks = Vec::with_capacity(raw.len());
+        for (i, r) in raw.into_iter().enumerate() {
+            match r {
+                Ok((v, clk)) => {
+                    results.push(v);
+                    clocks.push(clk);
+                }
+                Err(e) => {
+                    std::panic::panic_any(format!("rank {i} panicked: {}", panic_message(&*e)))
+                }
+            }
+        }
+        JobOutput { results, clocks, traffic }
+    }
+
+    /// Panic-containing submission: a rank panic surfaces as `Err`
+    /// (listing every panicked rank) instead of unwinding the caller, and
+    /// the pool stays fully usable for subsequent jobs.
+    pub fn try_run_on<T, F>(&self, nranks: usize, f: F) -> Result<JobOutput<T>>
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        let (raw, traffic) = self.submit_raw(nranks, f);
+        let mut results = Vec::with_capacity(raw.len());
+        let mut clocks = Vec::with_capacity(raw.len());
+        let mut panics = Vec::new();
+        for (i, r) in raw.into_iter().enumerate() {
+            match r {
+                Ok((v, clk)) => {
+                    results.push(v);
+                    clocks.push(clk);
+                }
+                Err(e) => panics.push(format!("rank {i} panicked: {}", panic_message(&*e))),
+            }
+        }
+        if !panics.is_empty() {
+            bail!("{}", panics.join("; "));
+        }
+        Ok(JobOutput { results, clocks, traffic })
+    }
+
+    /// Two-phase dispatch; returns per-active-rank outcomes in rank order
+    /// plus the job's traffic delta.
+    fn submit_raw<T, F>(
+        &self,
+        nranks: usize,
+        f: F,
+    ) -> (Vec<std::thread::Result<(T, (u64, u64, u64))>>, TrafficDelta)
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        assert!(
+            nranks <= self.size(),
+            "job wants {nranks} ranks but the pool has {}",
+            self.size()
+        );
+        let _job = self.submit.lock().unwrap_or_else(|poison| poison.into_inner());
+
+        // Phase 1 — prepare: every rank restores fresh-universe state and
+        // acks. All acks are collected before any Run command goes out, so
+        // no rank can drain a message the new job already sent it.
+        let (ack_tx, ack_rx) = channel::<()>();
+        for w in &self.workers {
+            w.tx.send(Command::Prepare(ack_tx.clone())).expect("rank thread alive");
+        }
+        drop(ack_tx);
+        for _ in &self.workers {
+            ack_rx.recv().expect("rank thread alive for prepare ack");
+        }
+
+        let before = self.stats.snapshot();
+
+        // Phase 2 — dispatch the job to the active prefix.
+        let (res_tx, res_rx) = channel::<(usize, std::thread::Result<(T, (u64, u64, u64))>)>();
+        let f: &(dyn Fn(&Communicator) -> T + Sync) = &f;
+        for (i, w) in self.workers.iter().enumerate() {
+            let task = (i < nranks).then(|| {
+                let res_tx = res_tx.clone();
+                let boxed: Box<dyn FnOnce(&Communicator) + Send + '_> = Box::new(move |comm| {
+                    let out = catch_unwind(AssertUnwindSafe(|| {
+                        let v = f(comm);
+                        (v, (comm.clock_ns(), comm.compute_ns(), comm.net_wait_ns()))
+                    }));
+                    let _ = res_tx.send((comm.rank().0, out));
+                });
+                // SAFETY: `boxed` borrows `f` (and `T` may borrow the
+                // caller's environment), but we block below until every
+                // active rank has sent its result — and sending is the
+                // closure's final action, after its last read through the
+                // borrow. Whatever the worker still holds afterwards (the
+                // spent box, its sender clone) is only *dropped*, which
+                // never dereferences the erased borrows: dropping a shared
+                // reference is a no-op and the result channel's queue is
+                // fully drained before we return. The `recv` expects below
+                // can only fail once every sender is dropped, i.e. after
+                // all borrows are already dead, so even the panic path
+                // cannot outrun a live borrow.
+                unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce(&Communicator) + Send + '_>, Task>(boxed)
+                }
+            });
+            w.tx.send(Command::Run { active: nranks, task }).expect("rank thread alive");
+        }
+        drop(res_tx);
+
+        let mut slots: Vec<Option<std::thread::Result<(T, (u64, u64, u64))>>> =
+            (0..nranks).map(|_| None).collect();
+        for _ in 0..nranks {
+            let (rank, out) = res_rx.recv().expect("rank thread alive mid-job");
+            slots[rank] = Some(out);
+        }
+        let after = self.stats.snapshot();
+        self.jobs_run.fetch_add(1, Ordering::Relaxed);
+        let traffic = TrafficDelta {
+            messages: after.0 - before.0,
+            bytes: after.1 - before.1,
+            remote_messages: after.2 - before.2,
+            remote_bytes: after.3 - before.3,
+        };
+        (slots.into_iter().map(|s| s.expect("every active rank reports")).collect(), traffic)
+    }
+}
+
+impl Drop for RankPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Command::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(handle) = w.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{Rank, Tag};
+
+    #[test]
+    fn pool_runs_many_jobs_on_same_threads() {
+        let pool = RankPool::local(3);
+        let ids0 = pool.run(|_| std::thread::current().id());
+        for round in 0..10u64 {
+            let got = pool.run(|c| c.allreduce_sum_u64(round).unwrap());
+            assert_eq!(got, vec![round * 3; 3]);
+            assert_eq!(pool.run(|_| std::thread::current().id()), ids0);
+        }
+        assert_eq!(pool.live_threads(), 3);
+        assert_eq!(pool.jobs_run(), 21);
+    }
+
+    #[test]
+    fn narrowed_jobs_use_rank_prefix() {
+        let pool = RankPool::local(5);
+        // Narrowed jobs see the job width as size() and the pool width as
+        // world_size().
+        assert_eq!(
+            pool.run_on(2, |c| (c.rank().0, c.size(), c.world_size())),
+            vec![(0, 2, 5), (1, 2, 5)]
+        );
+        // Collectives span only the active prefix.
+        assert_eq!(pool.run_on(3, |c| c.allgather(c.rank().0 as u32).unwrap()), vec![
+            vec![0, 1, 2];
+            3
+        ]);
+        // Back to full width afterwards.
+        assert_eq!(pool.run(|c| c.size()), vec![5; 5]);
+    }
+
+    #[test]
+    fn clocks_and_traffic_reset_between_jobs() {
+        let pool = RankPool::local(2);
+        let job = |c: &Communicator| {
+            c.advance(1_000);
+            c.send(Rank((c.rank().0 + 1) % 2), Tag::user(0), vec![0u8; 100]).unwrap();
+            c.recv(Rank((c.rank().0 + 1) % 2), Tag::user(0)).unwrap().len()
+        };
+        let first = pool.run_job(2, job);
+        let second = pool.run_job(2, job);
+        assert_eq!(first.results, vec![100, 100]);
+        assert_eq!(first.clocks, second.clocks, "clocks must reset per job");
+        assert_eq!(first.traffic, second.traffic, "traffic delta must be per job");
+        assert_eq!(first.traffic.messages, 2);
+        assert_eq!(first.traffic.bytes, 200);
+    }
+
+    #[test]
+    fn unconsumed_messages_do_not_leak_into_next_job() {
+        let pool = RankPool::local(2);
+        // Job 1 leaves an unconsumed message in rank 1's mailbox.
+        pool.run(|c| {
+            if c.is_root() {
+                c.send(Rank(1), Tag::user(0), vec![0xEE]).unwrap();
+            }
+        });
+        // Job 2 sends on the SAME (src, tag): must see the fresh payload.
+        let got = pool.run(|c| {
+            if c.is_root() {
+                c.send(Rank(1), Tag::user(0), vec![0x11]).unwrap();
+                0
+            } else {
+                c.recv(Rank(0), Tag::user(0)).unwrap()[0]
+            }
+        });
+        assert_eq!(got, vec![0, 0x11]);
+    }
+
+    #[test]
+    fn rank_panic_is_contained_and_pool_survives() {
+        let pool = RankPool::local(4);
+        let err = pool
+            .try_run_on(4, |c| {
+                if c.rank().0 == 2 {
+                    panic!("injected fault");
+                }
+                c.rank().0
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 2 panicked"), "{msg}");
+        assert!(msg.contains("injected fault"), "{msg}");
+        // The pool is not poisoned: collectives still work on all ranks.
+        for _ in 0..3 {
+            assert_eq!(pool.run(|c| c.allreduce_sum_u64(1).unwrap()), vec![4; 4]);
+        }
+        assert_eq!(pool.live_threads(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank 1 panicked")]
+    fn run_propagates_rank_panic_like_run_ranks() {
+        let pool = RankPool::local(2);
+        pool.run(|c| {
+            if c.rank().0 == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn borrowed_environment_jobs_are_supported() {
+        // Non-'static captures: the engine's closures borrow the input
+        // slice and task feed; make sure the erased-lifetime path holds.
+        let data: Vec<u64> = (0..100).collect();
+        let pool = RankPool::local(4);
+        let total = pool.run(|c| {
+            let chunk = data.len() / c.size();
+            let lo = c.rank().0 * chunk;
+            let local: u64 = data[lo..lo + chunk].iter().sum();
+            c.allreduce_sum_u64(local).unwrap()
+        });
+        assert_eq!(total, vec![data.iter().sum::<u64>(); 4]);
+    }
+
+    #[test]
+    fn empty_pool_runs_empty_jobs() {
+        let pool = RankPool::local(0);
+        let out = pool.run_job(0, |c: &Communicator| c.rank().0);
+        assert!(out.results.is_empty());
+        assert_eq!(out.traffic, TrafficDelta::default());
+    }
+}

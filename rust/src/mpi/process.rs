@@ -1,10 +1,13 @@
 //! The rank launcher — our `mpirun`.
 //!
-//! Spawns one OS thread per rank, hands each its [`Communicator`], and
-//! joins them, propagating panics. SPMD like MPI: every rank runs the same
-//! closure, branching on `comm.rank()`.
+//! One-shot SPMD: every rank runs the same closure, branching on
+//! `comm.rank()`. Since the pooled-executor refactor this is a thin
+//! wrapper that builds a throwaway [`RankPool`] for the universe, runs a
+//! single job on it, and tears it down — iterative callers should hold a
+//! [`RankPool`] instead and pay thread start-up once.
 
 use super::comm::{Communicator, Universe};
+use super::pool::RankPool;
 
 /// Run `f` on every rank of `universe`; results returned in rank order.
 ///
@@ -19,7 +22,7 @@ where
     run_ranks_with_universe(universe, f).0
 }
 
-/// Like [`run_ranks`], also returning the universe-wide traffic stats and
+/// Like [`run_ranks`], also returning
 /// the per-rank virtual clocks `(results, (clocks_ns, compute_ns, net_ns))`.
 #[allow(clippy::type_complexity)]
 pub fn run_ranks_with_universe<T, F>(
@@ -30,34 +33,9 @@ where
     T: Send,
     F: Fn(&Communicator) -> T + Sync,
 {
-    let comms = universe.communicators();
-    let f = &f;
-    let results: Vec<(T, (u64, u64, u64))> = std::thread::scope(|scope| {
-        let handles: Vec<_> = comms
-            .into_iter()
-            .map(|comm| {
-                scope.spawn(move || {
-                    let out = f(&comm);
-                    (out, (comm.clock_ns(), comm.compute_ns(), comm.net_wait_ns()))
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .enumerate()
-            .map(|(i, h)| match h.join() {
-                Ok(v) => v,
-                Err(e) => std::panic::panic_any(format!("rank {i} panicked: {e:?}")),
-            })
-            .collect()
-    });
-    let mut outs = Vec::with_capacity(results.len());
-    let mut clocks = Vec::with_capacity(results.len());
-    for (out, clk) in results {
-        outs.push(out);
-        clocks.push(clk);
-    }
-    (outs, clocks)
+    let pool = RankPool::new(universe);
+    let out = pool.run_job(pool.size(), f);
+    (out.results, out.clocks)
 }
 
 #[cfg(test)]

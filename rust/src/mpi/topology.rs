@@ -155,6 +155,17 @@ impl Topology {
     pub fn compute_scale(&self, rank: Rank) -> f64 {
         self.compute_scale[rank.0]
     }
+
+    /// Do the first `n` ranks of `self` and `other` share placement and
+    /// compute scaling? This is what lets a warm [`crate::mpi::RankPool`]
+    /// stand in for a fresh, narrower universe: a job on ranks `0..n`
+    /// only ever consults those prefixes of the cost model.
+    pub fn agrees_on_prefix(&self, other: &Topology, n: usize) -> bool {
+        self.node_of_rank.len() >= n
+            && other.node_of_rank.len() >= n
+            && self.node_of_rank[..n] == other.node_of_rank[..n]
+            && self.compute_scale[..n] == other.compute_scale[..n]
+    }
 }
 
 #[cfg(test)]

@@ -13,6 +13,8 @@ pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
+#[cfg(test)]
+pub(crate) mod testpool;
 pub mod tmp;
 pub mod toml_mini;
 

@@ -1,0 +1,34 @@
+//! Shared [`RankPool`]s for unit tests.
+//!
+//! Module unit tests used to build a fresh `Universe::local(n)` (and one
+//! OS thread per rank) per test via `run_ranks`. [`pool_run`] routes them
+//! through a warm pool instead, so the unit-test suite itself is a
+//! many-jobs-on-one-pool workout of the pooled executor: every
+//! `core::`/`dist::` test is another job on reused threads, with the
+//! prepare phase isolating them exactly like fresh universes (same
+//! results, reset clocks, realigned collective tags).
+//!
+//! One pool per *test thread* (not one global pool): jobs on a pool
+//! serialize, so a process-wide pool would strip libtest's test-level
+//! parallelism and let one wedged job block every other test. Each
+//! libtest thread lazily builds its own pool and reuses it for every
+//! test it runs, which keeps both the reuse workout and the parallelism.
+
+use crate::mpi::{Communicator, RankPool};
+
+/// Width of each per-thread pool; unit tests use at most 5 ranks today,
+/// and narrower jobs run on a prefix of the warm threads.
+pub(crate) const POOL_RANKS: usize = 8;
+
+/// Pooled drop-in for `run_ranks(Universe::local(n), f)` in unit tests.
+pub(crate) fn pool_run<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Communicator) -> T + Sync,
+{
+    thread_local! {
+        static POOL: RankPool = RankPool::local(POOL_RANKS);
+    }
+    assert!(n <= POOL_RANKS, "test wants {n} ranks, per-thread pool has {POOL_RANKS}");
+    POOL.with(|pool| pool.run_on(n, f))
+}

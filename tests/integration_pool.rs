@@ -1,0 +1,138 @@
+//! Integration tests for the pooled SPMD executor (`mpi::RankPool`):
+//! many consecutive jobs on one pool, mixed rank counts, equivalence with
+//! fresh-spawn `run_ranks`, thread reuse without leaks, per-job state
+//! isolation, and panic containment through the public API.
+
+use std::collections::HashMap;
+use std::thread::ThreadId;
+
+use blaze_rs::dist::ShardRouter;
+use blaze_rs::mpi::{run_ranks, Communicator, RankPool, Universe};
+
+const POOL_RANKS: usize = 8;
+
+/// A deterministic job exercising p2p + collectives + the shuffle
+/// primitive, parameterized so different waves do different work.
+fn mixed_job(round: u64) -> impl Fn(&Communicator) -> (u64, Vec<u64>, usize) + Sync {
+    move |c: &Communicator| {
+        let me = c.rank().0 as u64;
+        let sum = c.allreduce_sum_u64(me + round).unwrap();
+        let gathered = c.allgather(me * round).unwrap();
+        // alltoallv: rank i sends (round + i + j) bytes to rank j.
+        let bufs: Vec<Vec<u8>> = (0..c.size())
+            .map(|j| vec![me as u8; (round as usize + me as usize + j) % 7 + 1])
+            .collect();
+        let received = c.alltoallv(bufs).unwrap();
+        let total_recv: usize = received.iter().map(Vec::len).sum();
+        c.barrier().unwrap();
+        (sum, gathered, total_recv)
+    }
+}
+
+#[test]
+fn twenty_plus_jobs_mixed_rank_counts_match_fresh_spawn() {
+    let pool = RankPool::local(POOL_RANKS);
+    let widths = [8usize, 5, 3, 1, 8, 2, 6, 4];
+    let mut jobs = 0;
+    for round in 0..24u64 {
+        let nranks = widths[round as usize % widths.len()];
+        let job = mixed_job(round);
+        let pooled = pool.run_on(nranks, &job);
+        let fresh = run_ranks(Universe::local(nranks), &job);
+        assert_eq!(pooled, fresh, "round {round} on {nranks} ranks diverged");
+        jobs += 1;
+    }
+    assert!(jobs >= 20);
+    assert_eq!(pool.jobs_run(), jobs);
+}
+
+#[test]
+fn pool_threads_are_reused_and_do_not_leak() {
+    let pool = RankPool::local(6);
+    assert_eq!(pool.live_threads(), 6);
+    let baseline: Vec<ThreadId> = pool.run(|_| std::thread::current().id());
+    for round in 0..20u64 {
+        // Every job (any width) lands on the same warm threads...
+        let nranks = 1 + (round as usize % 6);
+        let ids = pool.run_on(nranks, |_| std::thread::current().id());
+        assert_eq!(ids, baseline[..nranks], "round {round}: ranks moved threads");
+        // ...and the pool's thread census never drifts.
+        assert_eq!(pool.live_threads(), 6, "round {round}: thread leak or death");
+    }
+    assert_eq!(pool.jobs_run(), 21);
+}
+
+#[test]
+fn per_job_clocks_and_traffic_read_like_fresh_universes() {
+    let pool = RankPool::local(4);
+    let job = |c: &Communicator| {
+        c.advance(10_000);
+        c.allreduce_sum_u64(1).unwrap()
+    };
+    let first = pool.run_job(4, job);
+    // A different job in between, then the same job again.
+    pool.run(|c| c.allgather(c.rank().0).unwrap());
+    let again = pool.run_job(4, job);
+    assert_eq!(first.results, again.results);
+    assert_eq!(first.clocks, again.clocks, "virtual clocks must reset per job");
+    assert_eq!(first.traffic, again.traffic, "traffic must be a per-job delta");
+}
+
+#[test]
+fn shuffle_heavy_jobs_agree_with_fresh_spawn() {
+    // A wordcount-flavoured shuffle repeated on a reused pool: keys are
+    // routed with the real ShardRouter, each rank counts what it owns.
+    let pool = RankPool::local(4);
+    let lines: Vec<String> =
+        (0..200).map(|i| format!("w{} w{} common", i % 13, i % 5)).collect();
+    let job = |c: &Communicator| -> Vec<(String, u64)> {
+        let router = ShardRouter::new(c.size(), 7);
+        let chunk = lines.len().div_ceil(c.size());
+        let lo = (c.rank().0 * chunk).min(lines.len());
+        let hi = ((c.rank().0 + 1) * chunk).min(lines.len());
+        let mut bufs: Vec<Vec<u8>> = (0..c.size()).map(|_| Vec::new()).collect();
+        for line in &lines[lo..hi] {
+            for w in line.split_whitespace() {
+                let dst = router.owner(&w.to_string()).0;
+                bufs[dst].extend_from_slice(w.as_bytes());
+                bufs[dst].push(b'\n');
+            }
+        }
+        let received = c.alltoallv(bufs).unwrap();
+        let mut counts: HashMap<String, u64> = HashMap::new();
+        for buf in received {
+            for w in buf.split(|&b| b == b'\n').filter(|s| !s.is_empty()) {
+                *counts.entry(String::from_utf8(w.to_vec()).unwrap()).or_insert(0) += 1;
+            }
+        }
+        let mut out: Vec<(String, u64)> = counts.into_iter().collect();
+        out.sort();
+        out
+    };
+    let fresh = run_ranks(Universe::local(4), &job);
+    for round in 0..5 {
+        assert_eq!(pool.run(&job), fresh, "round {round} diverged");
+    }
+}
+
+#[test]
+fn panic_in_one_job_does_not_poison_later_jobs() {
+    let pool = RankPool::local(4);
+    // Healthy job first.
+    assert_eq!(pool.run(|c| c.allreduce_sum_u64(2).unwrap()), vec![8; 4]);
+    // One rank blows up (without stranding peers mid-collective).
+    let err = pool
+        .try_run_on(4, |c| {
+            if c.rank().0 == 3 {
+                panic!("deliberate test fault");
+            }
+            c.rank().0
+        })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("rank 3 panicked"), "{err:#}");
+    // The pool keeps serving full-width collective jobs afterwards.
+    for _ in 0..5 {
+        assert_eq!(pool.run(|c| c.allreduce_sum_u64(2).unwrap()), vec![8; 4]);
+    }
+    assert_eq!(pool.live_threads(), 4);
+}

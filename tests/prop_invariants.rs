@@ -199,6 +199,117 @@ fn prop_engine_equals_serial_wordcount() {
 }
 
 #[test]
+fn prop_pooled_jobs_match_fresh_spawn_on_random_workloads() {
+    // Shuffle determinism on a REUSED pool: every case is another job on
+    // the same warm rank threads, and each must equal what a fresh-spawn
+    // `run_ranks` universe computes for the same input.
+    use blaze_rs::mpi::{run_ranks, Communicator, RankPool, Universe};
+    let pool = RankPool::local(6);
+    for_all(
+        "pool.run_on == run_ranks for random records, widths, salts",
+        |r| {
+            let recs = vec_of(r, 80, |r| (string(r, 12), r.next_u64() >> 16));
+            let ranks = 1 + r.below(6) as usize;
+            let salt = r.next_u64();
+            (recs, ranks, salt)
+        },
+        |(recs, ranks, salt)| {
+            let job = |c: &Communicator| -> Vec<(String, u64)> {
+                let router = ShardRouter::new(c.size(), *salt);
+                let chunk = recs.len().div_ceil(c.size()).max(1);
+                let lo = (c.rank().0 * chunk).min(recs.len());
+                let hi = ((c.rank().0 + 1) * chunk).min(recs.len());
+                let mut outbound: Vec<Vec<(String, u64)>> =
+                    (0..c.size()).map(|_| Vec::new()).collect();
+                for (k, v) in &recs[lo..hi] {
+                    outbound[router.owner(k).0].push((k.clone(), *v));
+                }
+                let bufs: Vec<Vec<u8>> = outbound.iter().map(to_bytes).collect();
+                let mut counts: HashMap<String, u64> = HashMap::new();
+                for buf in c.alltoallv(bufs).unwrap() {
+                    for (k, v) in from_bytes::<Vec<(String, u64)>>(&buf).unwrap() {
+                        let e = counts.entry(k).or_insert(0);
+                        *e = e.wrapping_add(v);
+                    }
+                }
+                let mut out: Vec<(String, u64)> = counts.into_iter().collect();
+                out.sort();
+                out
+            };
+            pool.run_on(*ranks, &job) == run_ranks(Universe::local(*ranks), &job)
+        },
+    );
+}
+
+#[test]
+fn prop_pooled_alltoallv_conserves_and_stays_deterministic_across_resizes() {
+    // `alltoallv` conservation (every byte sent is received, transposed,
+    // with the sender's payload intact) on an `ElasticCluster` session
+    // pool, including right after simulated grow/shrink events — and the
+    // pooled wave must be repeatable and equal to a fresh-spawn universe
+    // of the current membership.
+    use std::cell::RefCell;
+
+    use blaze_rs::cluster::{DeploymentKind, ElasticCluster};
+    use blaze_rs::mpi::{run_ranks, Communicator, Topology, Universe};
+
+    let elastic = RefCell::new(ElasticCluster::new(
+        ClusterConfig::builder()
+            .deployment(DeploymentKind::Container)
+            .nodes(2)
+            .slots_per_node(2)
+            .build(),
+    ));
+    for_all(
+        "elastic pool alltoallv conserves bytes and matches fresh spawn",
+        |r| {
+            // Payload size matrix for the widest possible membership
+            // (3 nodes x 2 slots); narrower waves use the top-left block.
+            let sizes: Vec<Vec<usize>> =
+                (0..6).map(|_| (0..6).map(|_| r.below(64) as usize).collect()).collect();
+            (sizes, r.below(3))
+        },
+        |(sizes, resize)| {
+            let mut elastic = elastic.borrow_mut();
+            match *resize {
+                1 if elastic.nodes() < 3 => elastic.grow(1),
+                2 if elastic.nodes() > 1 => elastic.shrink(1).unwrap(),
+                _ => {}
+            }
+            let job = |c: &Communicator| -> (Vec<usize>, u64, u64, bool) {
+                let me = c.rank().0;
+                let bufs: Vec<Vec<u8>> =
+                    (0..c.size()).map(|j| vec![me as u8; sizes[me][j]]).collect();
+                let sent: u64 = bufs.iter().map(|b| b.len() as u64).sum();
+                let received = c.alltoallv(bufs).unwrap();
+                let intact = received
+                    .iter()
+                    .enumerate()
+                    .all(|(src, b)| b.iter().all(|&byte| byte == src as u8));
+                let recv_lens: Vec<usize> = received.iter().map(Vec::len).collect();
+                let recv_total: u64 = recv_lens.iter().map(|&l| l as u64).sum();
+                let global_sent = c.allreduce_sum_u64(sent).unwrap();
+                let global_recv = c.allreduce_sum_u64(recv_total).unwrap();
+                (recv_lens, global_sent, global_recv, intact)
+            };
+            let cfg = elastic.config().clone();
+            let pool = elastic.pool_for_wave();
+            let pooled = pool.run(&job);
+            let repeat = pool.run(&job);
+            let fresh =
+                run_ranks(Universe::new(Topology::from_config(&cfg), cfg.network_model()), &job);
+            pooled == repeat
+                && pooled == fresh
+                && pooled.iter().enumerate().all(|(j, (recv_lens, sent, recv, intact))| {
+                    *intact
+                        && sent == recv
+                        && recv_lens.iter().enumerate().all(|(i, &l)| l == sizes[i][j])
+                })
+        },
+    );
+}
+
+#[test]
 fn prop_varint_size_monotone() {
     use blaze_rs::serial::Encoder;
     for_all(
