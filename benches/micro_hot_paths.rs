@@ -84,6 +84,42 @@ fn main() {
         encoders.iter().map(Encoder::len).sum::<usize>()
     }));
 
+    // --- store: external-merge machinery (the out-of-core hot path) -----
+    // Writer sorts + spills ~20 runs of ~500 pairs; the loser-tree merge
+    // streams them back in key order. This is exactly what delayed-mode
+    // grouping pays per rank once inputs pass the memory budget.
+    {
+        use blaze_rs::metrics::PeakTracker;
+        use blaze_rs::store::RunWriter;
+        let tracker = PeakTracker::new();
+        results.push(bench("store/spill+kway-merge 10k pairs, ~20 runs", 2, 10, || {
+            let mut w: RunWriter<'_, String, u64> =
+                RunWriter::new(16 << 10, tracker.clone());
+            for (k, v) in &records {
+                w.push(k.clone(), *v).unwrap();
+            }
+            let mut merge = w.finish().unwrap().into_merge().unwrap();
+            let mut n = 0usize;
+            while merge.next().unwrap().is_some() {
+                n += 1;
+            }
+            n
+        }));
+        results.push(bench("store/in-core sort path 10k pairs (baseline)", 2, 10, || {
+            let mut w: RunWriter<'_, String, u64> =
+                RunWriter::new(u64::MAX, tracker.clone());
+            for (k, v) in &records {
+                w.push(k.clone(), *v).unwrap();
+            }
+            let mut merge = w.finish().unwrap().into_merge().unwrap();
+            let mut n = 0usize;
+            while merge.next().unwrap().is_some() {
+                n += 1;
+            }
+            n
+        }));
+    }
+
     // --- collectives (4-rank in-proc universe) ---------------------------
     results.push(bench("mpi/alltoallv 4 ranks x 64KiB", 1, 10, || {
         run_ranks(Universe::local(4), |c| {

@@ -45,21 +45,47 @@ fn main() -> anyhow::Result<()> {
     let feed = TaskFeed::new(&items, 2, 2, Scheduling::Static, None);
     let inspected = run_ranks(Universe::local(2), |comm| {
         let tracker = PeakTracker::new();
-        let groups = delayed::delayed_rank_groups(
+        let mut groups = delayed::delayed_rank_groups(
             comm,
             &feed,
             &|&i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 4, i),
             0,
+            u64::MAX, // stage in memory: the pre-store shape
             &tracker,
         )
         .unwrap();
         // "later": inspect the iterable first...
-        let sizes: Vec<usize> = groups.iter_groups().map(|(_, vs)| vs.len()).collect();
+        let sizes: Vec<usize> =
+            groups.iter_groups().unwrap().map(|(_, vs)| vs.len()).collect();
         // ...then reduce.
-        let reduced = groups.reduce_now(|_, vs| vs.into_iter().sum::<u32>());
+        let reduced = groups.reduce_now(|_, vs| vs.into_iter().sum::<u32>()).unwrap();
         (sizes, reduced.len())
     });
     println!("\nlazy groups per rank (sizes, then reduced): {inspected:?}");
+
+    // ---- 2b. Out-of-core: the §III.D caveat, removed. ------------------
+    // The same pipeline with a 512-byte budget: staged pairs spill to
+    // key-ordered disk runs, the shuffle goes in budget-bounded rounds,
+    // and for_each_group streams one group at a time off the loser-tree
+    // merge — identical groups, bounded memory.
+    let feed2 = TaskFeed::new(&items, 2, 2, Scheduling::Static, None);
+    let streamed = run_ranks(Universe::local(2), |comm| {
+        let tracker = PeakTracker::new();
+        let groups = delayed::delayed_rank_groups(
+            comm,
+            &feed2,
+            &|&i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 4, i),
+            0,
+            512, // out-of-core budget
+            &tracker,
+        )
+        .unwrap();
+        let spilled = groups.spilled_bytes();
+        let mut sizes: Vec<(u32, usize)> = Vec::new();
+        groups.for_each_group(|k, vs| sizes.push((k, vs.len()))).unwrap();
+        (spilled, sizes, tracker.peak_bytes())
+    });
+    println!("\nout-of-core groups per rank (spilled B, sizes, peak B): {streamed:?}");
 
     // ---- 3. The DistVector/DistHashMap containers under the hood. -----
     let summary = run_ranks(Universe::local(4), |comm| {

@@ -164,6 +164,7 @@ pub fn run_on_pool(
             remote_bytes: out.traffic.remote_bytes,
             peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
             spilled_bytes: 0,
+            combined_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })
@@ -251,6 +252,7 @@ pub fn run_wave_jobs(
             remote_bytes: traffic.remote_bytes,
             peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
             spilled_bytes: 0,
+            combined_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })

@@ -160,6 +160,7 @@ pub fn run_on_pool(
             remote_bytes: out.traffic.remote_bytes,
             peak_mem_bytes: ((d + 1) * 4 * ranks) as u64 + (data.x.len() * 4) as u64,
             spilled_bytes: 0,
+            combined_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })

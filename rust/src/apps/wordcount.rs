@@ -65,6 +65,24 @@ pub fn run(
         .run_monoid(map_line, |a: u64, b: u64| a + b)
 }
 
+/// Classic-mode wordcount with the **map-side combiner** (Hadoop's):
+/// per-key counts are folded at run-write/merge time before the
+/// shuffle, so the wire carries at most one pair per distinct key per
+/// rank — `JobStats::combined_bytes` records what the combiner saved.
+/// The showcase for the three-way classic/eager/combined comparison.
+pub fn run_combined(
+    cluster: &ClusterConfig,
+    lines: &[String],
+) -> Result<JobResult<HashMap<String, u64>>> {
+    // `run_classic_with_combiner` IS the mode dispatch — no JobConfig
+    // mode needed.
+    MapReduceJob::new(cluster, lines).run_classic_with_combiner(
+        map_line,
+        |a: &mut u64, b: u64| *a += b,
+        |_k, vs: Vec<u64>| vs.into_iter().sum(),
+    )
+}
+
 /// Tile sizes fixed at AOT time (see python/compile/aot.py).
 pub const SEGSUM_TILE: usize = 8192;
 pub const SEGSUM_KEYS: u32 = 1024;
@@ -168,6 +186,7 @@ pub fn run_segsum_kernel(
             remote_bytes: rbytes,
             peak_mem_bytes: (SEGSUM_KEYS as u64) * 4 * cluster.ranks() as u64,
             spilled_bytes: 0,
+            combined_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })
@@ -208,6 +227,16 @@ mod tests {
             let got = run(&cluster, &corpus, mode).unwrap();
             assert_eq!(got.result, truth, "mode {mode}");
         }
+    }
+
+    #[test]
+    fn combined_matches_plain_classic() {
+        let corpus = generate_corpus(80, 6, 20, 5);
+        let truth = count_serial(&corpus);
+        let cluster = ClusterConfig::builder().ranks(3).build();
+        let got = run_combined(&cluster, &corpus).unwrap();
+        assert_eq!(got.result, truth);
+        assert!(got.stats.combined_bytes > 0, "hot vocab must fold pairs");
     }
 
     #[test]

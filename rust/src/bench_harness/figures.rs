@@ -36,10 +36,14 @@ pub enum FigureId {
     Deployment,
     /// E9 — pooled SPMD executor vs spawn-per-wave (host wall clock).
     PoolAblation,
+    /// E10 — spill crossover: delayed wordcount swept through the
+    /// in-core -> out-of-core transition, plus the three-way
+    /// classic/eager/classic+combiner shuffle-bytes comparison.
+    SpillCrossover,
 }
 
 impl FigureId {
-    pub const ALL: [FigureId; 9] = [
+    pub const ALL: [FigureId; 10] = [
         FigureId::Fig8,
         FigureId::Fig9,
         FigureId::Fig10,
@@ -49,6 +53,7 @@ impl FigureId {
         FigureId::AblationReduction,
         FigureId::Deployment,
         FigureId::PoolAblation,
+        FigureId::SpillCrossover,
     ];
 
     pub fn parse(s: &str) -> Option<FigureId> {
@@ -62,6 +67,7 @@ impl FigureId {
             "ablation-reduction" | "e7" => FigureId::AblationReduction,
             "deployment" | "e8" => FigureId::Deployment,
             "pool-ablation" | "e9" => FigureId::PoolAblation,
+            "spill-crossover" | "e10" => FigureId::SpillCrossover,
             _ => return None,
         })
     }
@@ -77,6 +83,7 @@ impl FigureId {
             FigureId::AblationReduction => "ablation-reduction",
             FigureId::Deployment => "deployment",
             FigureId::PoolAblation => "pool-ablation",
+            FigureId::SpillCrossover => "spill-crossover",
         }
     }
 }
@@ -104,6 +111,7 @@ pub fn run_figure(id: FigureId, quick: bool) -> Result<Report> {
         FigureId::AblationReduction => ablation_reduction(quick),
         FigureId::Deployment => deployment(quick),
         FigureId::PoolAblation => pool_ablation(quick),
+        FigureId::SpillCrossover => spill_crossover(quick),
     }
 }
 
@@ -332,6 +340,88 @@ fn pool_ablation(quick: bool) -> Result<Report> {
     Ok(report)
 }
 
+/// E10 — the `store` subsystem's money figure. Part 1 sweeps a delayed
+/// wordcount's memory budget from unbounded down through the in-core ->
+/// out-of-core crossover: spilled bytes turn on, peak tracked memory
+/// collapses toward the budget, the result stays byte-identical. Part 2
+/// is the three-way shuffle-bytes comparison the map-side combiner
+/// enables: classic (every raw pair), eager (one value per key), and
+/// classic+combiner (Hadoop's middle ground).
+fn spill_crossover(quick: bool) -> Result<Report> {
+    let lines = if quick { 3_000 } else { 30_000 };
+    let corpus = wordcount::generate_corpus(lines, 8, 2_000, 49);
+    let mut report =
+        Report::new("E10 — spill crossover + combiner bytes (4 VM nodes, delayed wordcount)");
+
+    // Part 1: budget sweep. x = log2(budget KiB); the unbounded point is
+    // plotted at 2^20 KiB.
+    let budgets: [(f64, u64); 6] = [
+        (20.0, u64::MAX),
+        (10.0, 1 << 20),
+        (8.0, 256 << 10),
+        (6.0, 64 << 10),
+        (4.0, 16 << 10),
+        (2.0, 4 << 10),
+    ];
+    let mut peak = Series::new("peak tracked KiB", "log2(budget_KiB)", "KiB");
+    let mut spilled = Series::new("spilled KiB", "log2(budget_KiB)", "KiB");
+    let mut time = Series::new("modeled_ms", "log2(budget_KiB)", "ms");
+    let mut baseline: Option<std::collections::HashMap<String, u64>> = None;
+    let mut crossover: Option<u64> = None;
+    for (x, budget) in budgets {
+        let cluster = ClusterConfig::builder()
+            .deployment(DeploymentKind::Vm)
+            .nodes(4)
+            .slots_per_node(1)
+            .seed(49)
+            .shuffle_buffer_bytes(budget)
+            .build();
+        let r = wordcount::run(&cluster, &corpus, ReductionMode::Delayed)?;
+        match &baseline {
+            None => baseline = Some(r.result.clone()),
+            Some(truth) => anyhow::ensure!(
+                r.result == *truth,
+                "out-of-core result diverged at budget {budget}"
+            ),
+        }
+        if r.stats.spilled_bytes > 0 && crossover.is_none() {
+            crossover = Some(budget);
+        }
+        peak.push(x, r.stats.peak_mem_bytes as f64 / 1024.0);
+        spilled.push(x, r.stats.spilled_bytes as f64 / 1024.0);
+        time.push(x, r.stats.modeled_ms);
+    }
+    match crossover {
+        Some(b) => report.note(format!(
+            "results byte-identical at every budget; first spill at {} KiB",
+            b / 1024
+        )),
+        None => report.note("no budget spilled — corpus too small for the sweep".to_string()),
+    }
+
+    // Part 2: the three-way bytes comparison (ROADMAP combiner item).
+    let cluster = vm_cluster(4, 49);
+    let classic = wordcount::run(&cluster, &corpus, ReductionMode::Classic)?;
+    let eager = wordcount::run(&cluster, &corpus, ReductionMode::Eager)?;
+    let combined = wordcount::run_combined(&cluster, &corpus)?;
+    anyhow::ensure!(classic.result == eager.result && eager.result == combined.result);
+    let mut bytes =
+        Series::new("shuffle_bytes", "shape(0=classic,1=eager,2=classic+combiner)", "bytes");
+    bytes.push(0.0, classic.stats.shuffle_bytes as f64);
+    bytes.push(1.0, eager.stats.shuffle_bytes as f64);
+    bytes.push(2.0, combined.stats.shuffle_bytes as f64);
+    report.note(format!(
+        "combiner folded {} B away pre-wire; classic/combined wire ratio = {:.2}x",
+        combined.stats.combined_bytes,
+        classic.stats.shuffle_bytes as f64 / combined.stats.shuffle_bytes.max(1) as f64
+    ));
+    report.add(peak);
+    report.add(spilled);
+    report.add(time);
+    report.add(bytes);
+    Ok(report)
+}
+
 /// E8 — §III deployment comparison: the same WordCount under the three
 /// proposed architectures (Figs 3-5) + Local reference.
 fn deployment(quick: bool) -> Result<Report> {
@@ -369,6 +459,29 @@ mod tests {
         assert_eq!(r.series.len(), 2);
         assert_eq!(r.series[0].points.len(), r.series[1].points.len());
         assert!(!r.notes.is_empty());
+    }
+
+    #[test]
+    fn spill_crossover_quick_crosses_over_and_ranks_shapes() {
+        let r = run_figure(FigureId::SpillCrossover, true).unwrap();
+        assert_eq!(r.series.len(), 4);
+        let spilled = &r.series[1];
+        assert!(
+            spilled.points.iter().any(|(_, kib)| *kib > 0.0),
+            "sweep must reach the out-of-core regime"
+        );
+        assert!(
+            spilled.points.first().map(|(_, kib)| *kib) == Some(0.0),
+            "unbounded budget must stay in core"
+        );
+        // Three-way ordering: combined folds to one pair per key per
+        // rank like eager, but pays the round-based shuffle's framing
+        // and agreement traffic on top — so eager stays the leanest.
+        let bytes = &r.series[3];
+        let (classic, eager, combined) =
+            (bytes.points[0].1, bytes.points[1].1, bytes.points[2].1);
+        assert!(combined < classic, "combiner must cut classic volume");
+        assert!(eager <= combined, "eager stays the leanest");
     }
 
     #[test]

@@ -152,10 +152,27 @@ impl ClusterConfig {
         NetworkModel::from_profile(&self.deployment.profile())
     }
 
-    /// Per-rank shuffle spill threshold in bytes.
+    /// Per-rank shuffle spill threshold in bytes. Precedence: an
+    /// explicit `limits.shuffle_buffer_bytes`, then the
+    /// `BLAZE_SPILL_THRESHOLD` environment override (the low-memory CI
+    /// leg runs the whole suite with it at 4096 so every test exercises
+    /// the out-of-core path), then the node-derived budget.
     pub fn spill_threshold_bytes(&self) -> u64 {
+        let env = std::env::var("BLAZE_SPILL_THRESHOLD").ok();
+        self.resolve_spill_threshold(env.as_deref())
+    }
+
+    /// Resolution with the env override injected — tests exercise the
+    /// precedence without mutating process-global environment (setenv
+    /// races getenv across test threads).
+    fn resolve_spill_threshold(&self, env: Option<&str>) -> u64 {
         if self.limits.shuffle_buffer_bytes > 0 {
             return self.limits.shuffle_buffer_bytes;
+        }
+        if let Some(v) = env.and_then(|s| s.trim().parse::<u64>().ok()) {
+            if v > 0 {
+                return v;
+            }
         }
         let node = NodeSpec::for_kind(self.deployment, 0);
         let per_rank = node.mem_bytes as f64 * self.limits.mem_fraction / self.slots_per_node as f64;
@@ -290,19 +307,35 @@ mod tests {
     }
 
     #[test]
+    fn explicit_buffer_beats_env_beats_derived() {
+        // Injected env values: no process-global set_var/remove_var
+        // (setenv races getenv across concurrent test threads).
+        let derived = ClusterConfig::builder().build();
+        let explicit = ClusterConfig::builder().shuffle_buffer_bytes(777).build();
+        let base = derived.resolve_spill_threshold(None);
+        assert!(base > 10_000, "derived budget should be node-scale, got {base}");
+        assert_eq!(derived.resolve_spill_threshold(Some("4096")), 4096, "env overrides derived");
+        assert_eq!(explicit.resolve_spill_threshold(Some("4096")), 777, "explicit beats env");
+        assert_eq!(derived.resolve_spill_threshold(Some("nonsense")), base, "garbage ignored");
+        assert_eq!(derived.resolve_spill_threshold(Some("0")), base, "zero ignored");
+    }
+
+    #[test]
     fn spill_threshold_scales_with_slots() {
+        // Resolved without the env override so the low-memory CI leg
+        // (BLAZE_SPILL_THRESHOLD=4096) cannot flatten the derived curve.
         let one = ClusterConfig::builder()
             .deployment(DeploymentKind::BareMetal)
             .nodes(1)
             .slots_per_node(1)
             .build()
-            .spill_threshold_bytes();
+            .resolve_spill_threshold(None);
         let four = ClusterConfig::builder()
             .deployment(DeploymentKind::BareMetal)
             .nodes(1)
             .slots_per_node(4)
             .build()
-            .spill_threshold_bytes();
+            .resolve_spill_threshold(None);
         // Equal up to f64->u64 truncation.
         assert!((one as i64 - (four * 4) as i64).abs() <= 4, "{one} vs {}", four * 4);
     }

@@ -4,8 +4,15 @@
 //! mode whose raw-pair shuffle volume makes Fig 10's small-key-range
 //! wordcount anti-scale.
 //!
-//! Map output rides a [`SpillBuffer`]: past the node memory budget pairs
-//! go to disk (MR-MPI's out-of-core pages).
+//! Map output stages into [`crate::store::RunWriter`] sorted runs: past
+//! the node memory budget pairs go to disk (MR-MPI's out-of-core
+//! pages, now key-ordered), the shuffle runs in budget-bounded rounds,
+//! and the reducer streams `(K, Iterable<V>)` groups off a loser-tree
+//! merge — the whole pipeline is bounded by the budget, not the input.
+//!
+//! An optional **map-side combiner** (Hadoop's) folds equal-key values
+//! at run-write and merge time before the wire; without one, every raw
+//! pair still crosses the network, preserving the Fig 10 baseline.
 
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -17,82 +24,65 @@ use crate::dist::ShardRouter;
 use crate::metrics::PeakTracker;
 use crate::mpi::Communicator;
 use crate::serial::FastSerialize;
+use crate::store::{Combiner, GroupStream, RunWriter};
 
 use super::scheduler::TaskFeed;
-use super::shuffle::{shuffle_pairs, SpillBuffer};
+use super::shuffle::{shuffle_runs, stage_sorted_runs};
 
 /// SPMD rank body for one classic job. Returns (result shard, spilled
-/// bytes). `reduce` sees the full value multiset per key.
+/// bytes, combiner-folded bytes). `reduce` sees the full value multiset
+/// per key (partially pre-folded when a combiner is supplied — Hadoop's
+/// combiner contract).
+#[allow(clippy::too_many_arguments)]
 pub fn classic_rank<I, K, V, M, R>(
     comm: &Communicator,
     feed: &TaskFeed<'_, I>,
     map: &M,
     reduce: &R,
+    combiner: Option<Combiner<'_, V>>,
     salt: u64,
     spill_threshold: u64,
     tracker: &Arc<PeakTracker>,
-) -> Result<(HashMap<K, V>, u64)>
+) -> Result<(HashMap<K, V>, u64, u64)>
 where
     I: Sync,
-    K: FastSerialize + Hash + Eq + Send,
+    K: FastSerialize + Hash + Eq + Ord + Send,
     V: FastSerialize + Send,
     M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
     R: Fn(&K, Vec<V>) -> V + Sync,
 {
-    // Map phase: every pair is kept (possibly spilled), none combined.
-    let mut buffer: SpillBuffer<K, V> = SpillBuffer::new(spill_threshold, tracker.clone());
-    let mut rank_feed = feed.for_rank(comm.rank());
-    while let Some((task, chunk)) = rank_feed.next() {
-        let res: Result<()> = comm.timed(|| {
-            let mut err = None;
-            for item in chunk {
-                map(item, &mut |k, v| {
-                    if err.is_none() {
-                        if let Err(e) = buffer.push(k, v) {
-                            err = Some(e);
-                        }
-                    }
-                });
-            }
-            err.map_or(Ok(()), Err)
-        });
-        res?;
-        rank_feed.complete(task);
+    // Map phase: every pair staged (possibly spilled as a sorted run);
+    // the combiner, when present, folds equal keys at run-write time.
+    let mut writer: RunWriter<'_, K, V> = RunWriter::new(spill_threshold, tracker.clone());
+    if let Some(c) = combiner {
+        writer = writer.with_combiner(c);
     }
+    let local_runs = stage_sorted_runs(comm, feed, map, writer)?;
+    let map_spilled = local_runs.spilled_bytes();
+    let write_combined = local_runs.combined_bytes();
 
-    let spilled = buffer.spilled_bytes();
-    let pairs = comm.timed(|| buffer.drain())?;
-
-    // Shuffle every raw pair.
+    // Shuffle the runs in budget-bounded rounds (combiner also folds
+    // across this rank's runs at merge time, pre-wire).
     let router = ShardRouter::new(comm.size(), salt);
-    let mine = shuffle_pairs(comm, &router, pairs, tracker)?;
+    let (incoming, merge_combined) =
+        shuffle_runs(comm, &router, local_runs, spill_threshold, combiner, tracker)?;
+    let spilled = map_spilled + incoming.spilled_bytes();
+    let combined = write_combined + merge_combined;
 
-    // Group + reduce on the owner.
-    let out = comm.timed(|| {
-        let mut groups: HashMap<K, Vec<V>> = HashMap::with_capacity(mine.len() / 2 + 1);
-        for (k, v) in mine {
-            groups.entry(k).or_default().push(v);
-        }
-        let group_bytes: u64 = groups
-            .iter()
-            .map(|(k, vs)| {
-                (k.size_hint() + vs.iter().map(FastSerialize::size_hint).sum::<usize>() + 32)
-                    as u64
-            })
-            .sum();
-        tracker.alloc(group_bytes);
-        let mut out = HashMap::with_capacity(groups.len());
-        for (k, vs) in groups {
+    // Group + reduce on the owner, streaming one group at a time.
+    let out = comm.timed(|| -> Result<HashMap<K, V>> {
+        let mut stream = GroupStream::new(incoming.into_merge()?);
+        let mut out = HashMap::new();
+        while let Some((k, vs)) = stream.next_group()? {
             let reduced = reduce(&k, vs);
             out.insert(k, reduced);
         }
-        tracker.free(group_bytes);
-        out
-    });
+        Ok(out)
+    })?;
     let out_bytes: u64 =
         out.iter().map(|(k, v)| (k.size_hint() + v.size_hint() + 16) as u64).sum();
     tracker.alloc(out_bytes);
-    Ok((out, spilled))
+    Ok((out, spilled, combined))
 }
 
 #[cfg(test)]
@@ -114,7 +104,7 @@ mod tests {
             };
             let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
             let tracker = PeakTracker::new();
-            classic_rank(c, &feed, &map, &reduce, 0, u64::MAX, &tracker).unwrap().0
+            classic_rank(c, &feed, &map, &reduce, None, 0, u64::MAX, &tracker).unwrap().0
         });
         let mut merged: HashMap<String, u64> = HashMap::new();
         for shard in results {
@@ -137,7 +127,7 @@ mod tests {
                 vs.into_iter().max().unwrap()
             };
             let tracker = PeakTracker::new();
-            classic_rank(c, &feed, &map, &reduce, 0, u64::MAX, &tracker).unwrap().0
+            classic_rank(c, &feed, &map, &reduce, None, 0, u64::MAX, &tracker).unwrap().0
         });
         let owner_shard: Vec<_> = results.into_iter().filter(|m| !m.is_empty()).collect();
         assert_eq!(owner_shard.len(), 1);
@@ -156,7 +146,9 @@ mod tests {
             };
             let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
             let tracker = PeakTracker::new();
-            classic_rank(c, &feed, &map, &reduce, 0, 128, &tracker).unwrap()
+            let (shard, spilled, _) =
+                classic_rank(c, &feed, &map, &reduce, None, 0, 128, &tracker).unwrap();
+            (shard, spilled)
         });
         let spilled: u64 = results.iter().map(|(_, s)| s).sum();
         assert!(spilled > 0, "tiny threshold must force spilling");
@@ -166,5 +158,51 @@ mod tests {
         }
         let total: u64 = merged.values().sum();
         assert_eq!(total, 100, "50 lines x 2 words");
+    }
+
+    #[test]
+    fn combiner_preserves_result_and_cuts_shuffled_pairs() {
+        let input: Vec<String> =
+            (0..60).map(|i| format!("hot hot w{} hot", i % 4)).collect();
+        let feed = TaskFeed::new(&input, 2, 2, Scheduling::Static, None);
+        let run = |with_combiner: bool| {
+            pool_run(2, |c| {
+                let map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+                    for w in line.split_whitespace() {
+                        emit(w.to_string(), 1);
+                    }
+                };
+                let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+                let combine = |acc: &mut u64, v: u64| *acc += v;
+                let tracker = PeakTracker::new();
+                classic_rank(
+                    c,
+                    &feed,
+                    &map,
+                    &reduce,
+                    with_combiner.then_some(&combine as Combiner<'_, u64>),
+                    0,
+                    256,
+                    &tracker,
+                )
+                .unwrap()
+            })
+        };
+        let raw = run(false);
+        let combined = run(true);
+        let merge = |rs: &[(HashMap<String, u64>, u64, u64)]| {
+            let mut all: HashMap<String, u64> = HashMap::new();
+            for (shard, _, _) in rs {
+                all.extend(shard.iter().map(|(k, v)| (k.clone(), *v)));
+            }
+            all
+        };
+        assert_eq!(merge(&raw), merge(&combined), "combiner must not change results");
+        assert_eq!(merge(&raw)[&"hot".to_string()], 180);
+        assert_eq!(raw.iter().map(|(_, _, cb)| cb).sum::<u64>(), 0);
+        assert!(
+            combined.iter().map(|(_, _, cb)| cb).sum::<u64>() > 0,
+            "combiner must fold bytes"
+        );
     }
 }

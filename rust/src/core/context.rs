@@ -4,9 +4,12 @@
 //! * [`CombineEmitter`] — eager mode: Blaze's *thread-local cache*; pairs
 //!   are combined in a per-rank hash map at emit time so only one value
 //!   per key survives to the shuffle.
-//! * [`GroupEmitter`] — delayed mode's intermediate reducer: pairs are
+//! * [`GroupEmitter`] — the in-memory grouping emitter: pairs are
 //!   *grouped* (not reduced) per key, preserving the value multiset for
-//!   the final `Iterable<V>` reducer.
+//!   the final `Iterable<V>` reducer. The delayed engine itself now
+//!   stages through [`crate::store::RunWriter`] so grouping survives
+//!   inputs past the memory budget; this emitter remains the simple
+//!   in-memory building block.
 
 use std::collections::HashMap;
 use std::hash::Hash;

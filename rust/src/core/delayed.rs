@@ -1,17 +1,29 @@
-//! Delayed Reduction — the paper's contribution (§III.D, Figs 6-7).
+//! Delayed Reduction — the paper's contribution (§III.D, Figs 6-7),
+//! now out-of-core.
 //!
 //! Paper pseudocode, step by step:
 //!  1. a source collection feeds the mappers;
 //!  2. mappers emit `(K, V)` pairs;
-//!  3. an *intermediate reducer* combines keys into a `DistVector` of
-//!     locally-grouped runs — grouping, not reducing, so the value
-//!     multiset survives (this is what eager reduction destroys and why
-//!     matmul/linreg "felt rigidity");
-//!  4. runs are sorted with **merge sort** and shuffled across the
-//!     cluster, yielding `(K, Iterable<V>)` on the owning rank;
-//!  5. the final reducer runs over the iterable — *"immediately or later.
-//!     Laziness of Reduction is displayed"* — hence [`DelayedOutput`];
+//!  3. an *intermediate reducer* stages pairs into locally key-ordered
+//!     runs — grouping, not reducing, so the value multiset survives
+//!     (this is what eager reduction destroys and why matmul/linreg
+//!     "felt rigidity"). Runs past the memory budget spill to disk via
+//!     [`crate::store::RunWriter`];
+//!  4. runs are sorted with **merge sort** (each run by Rust's stable
+//!     merge sort, runs merged by the loser-tree
+//!     [`crate::store::KWayMerge`] — external merge sort end to end)
+//!     and shuffled across the cluster in budget-bounded rounds,
+//!     yielding `(K, Iterable<V>)` on the owning rank;
+//!  5. the final reducer runs over the iterable — *"immediately or
+//!     later. Laziness of Reduction is displayed"* — hence
+//!     [`DelayedOutput`], whose `for_each_group` streams groups without
+//!     ever materializing the dataset;
 //!  6. results land in a `DistHashMap`-shaped shard.
+//!
+//! The §III.D caveat ("grouping happens in memory") is gone: with a
+//! finite budget the only full-dataset copies live in spill runs on
+//! disk, and peak tracked memory stays near the budget plus a constant
+//! per-run overhead (asserted in `tests/integration_store.rs`).
 
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -19,51 +31,129 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::dist::{DistVector, ShardRouter};
-use crate::metrics::PeakTracker;
+use crate::dist::ShardRouter;
+use crate::metrics::{MemoryScope, PeakTracker};
 use crate::mpi::Communicator;
 use crate::serial::FastSerialize;
+use crate::store::{GroupStream, RunSet, RunWriter};
 
-use super::context::{Emitter, GroupEmitter};
 use super::scheduler::TaskFeed;
-use super::shuffle::shuffle_pairs;
+use super::shuffle::{shuffle_runs, stage_sorted_runs};
 
 /// The lazily-reducible output of the delayed pipeline on one rank:
-/// key-sorted groups of `(K, Iterable<V>)`, final reduce not yet applied.
-#[derive(Debug)]
+/// key-ordered groups of `(K, Iterable<V>)`, final reduce not yet
+/// applied. Backed by the rank's incoming [`RunSet`] — iterating or
+/// reducing streams groups off the merge; nothing is materialized
+/// unless [`DelayedOutput::iter_groups`] asks for it.
 pub struct DelayedOutput<K, V> {
+    runs: Option<RunSet<K, V>>,
     groups: Vec<(K, Vec<V>)>,
+    materialized: bool,
+    /// Tracker charge for the materialized groups (freed on drop).
+    group_scope: Option<MemoryScope>,
+    tracker: Arc<PeakTracker>,
+    spilled_bytes: u64,
 }
 
-impl<K: Ord + Hash + Eq, V> DelayedOutput<K, V> {
-    /// Iterate `(key, values)` groups without reducing — step 5's "later".
-    pub fn iter_groups(&self) -> impl Iterator<Item = (&K, &[V])> {
-        self.groups.iter().map(|(k, vs)| (k, vs.as_slice()))
+impl<K, V> DelayedOutput<K, V>
+where
+    K: FastSerialize + Hash + Eq + Ord,
+    V: FastSerialize,
+{
+    fn from_runs(runs: RunSet<K, V>, spilled_bytes: u64, tracker: Arc<PeakTracker>) -> Self {
+        Self {
+            runs: Some(runs),
+            groups: Vec::new(),
+            materialized: false,
+            group_scope: None,
+            tracker,
+            spilled_bytes,
+        }
     }
 
-    pub fn num_groups(&self) -> usize {
-        self.groups.len()
+    /// Bytes this rank spilled while grouping (0 = stayed in core).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
     }
 
-    /// Apply the final reducer now — step 5's "immediately".
-    pub fn reduce_now<R: Fn(&K, Vec<V>) -> V>(self, reduce: R) -> HashMap<K, V> {
-        let mut out = HashMap::with_capacity(self.groups.len());
-        for (k, vs) in self.groups {
+    /// Step 5's "later", out-of-core: stream `(key, values)` groups in
+    /// ascending key order, one group in memory at a time.
+    pub fn for_each_group(mut self, mut f: impl FnMut(K, Vec<V>)) -> Result<()> {
+        if self.materialized {
+            for (k, vs) in self.groups.drain(..) {
+                f(k, vs);
+            }
+            return Ok(());
+        }
+        let Some(runs) = self.runs.take() else { return Ok(()) };
+        let mut stream = GroupStream::new(runs.into_merge()?);
+        while let Some((k, vs)) = stream.next_group()? {
+            f(k, vs);
+        }
+        Ok(())
+    }
+
+    /// Materialize all groups in memory (the pre-out-of-core shape; use
+    /// [`DelayedOutput::for_each_group`] to stay within the budget).
+    /// The whole dataset is real memory again, so it is charged to the
+    /// tracker until this output is dropped.
+    fn materialize(&mut self) -> Result<()> {
+        if self.materialized {
+            return Ok(());
+        }
+        if let Some(runs) = self.runs.take() {
+            let mut stream = GroupStream::new(runs.into_merge()?);
+            while let Some(g) = stream.next_group()? {
+                self.groups.push(g);
+            }
+        }
+        let group_bytes: u64 = self
+            .groups
+            .iter()
+            .map(|(k, vs)| {
+                (k.size_hint() + vs.iter().map(FastSerialize::size_hint).sum::<usize>() + 32)
+                    as u64
+            })
+            .sum();
+        self.group_scope = Some(MemoryScope::charge(&self.tracker, group_bytes));
+        self.materialized = true;
+        Ok(())
+    }
+
+    /// Iterate `(key, values)` groups without reducing — step 5's
+    /// "later", in-memory form. Materializes the groups on first call.
+    pub fn iter_groups(&mut self) -> Result<impl Iterator<Item = (&K, &[V])>> {
+        self.materialize()?;
+        Ok(self.groups.iter().map(|(k, vs)| (k, vs.as_slice())))
+    }
+
+    pub fn num_groups(&mut self) -> Result<usize> {
+        self.materialize()?;
+        Ok(self.groups.len())
+    }
+
+    /// Apply the final reducer now — step 5's "immediately". Streams
+    /// groups off the runs; only the reduced result is materialized.
+    pub fn reduce_now<R: Fn(&K, Vec<V>) -> V>(self, reduce: R) -> Result<HashMap<K, V>> {
+        let mut out = HashMap::new();
+        self.for_each_group(|k, vs| {
             let reduced = reduce(&k, vs);
             out.insert(k, reduced);
-        }
-        out
+        })?;
+        Ok(out)
     }
 }
 
-/// SPMD rank body up to (and excluding) the final reduce: map, local
-/// group, merge-sort, shuffle, merge. Returns this rank's
-/// [`DelayedOutput`] — call `reduce_now` for step 5, or iterate lazily.
+/// SPMD rank body up to (and excluding) the final reduce: map, stage
+/// into sorted runs under `spill_budget` bytes, shuffle in bounded
+/// rounds, merge. Returns this rank's [`DelayedOutput`] — call
+/// `reduce_now` for step 5, or stream groups lazily.
 pub fn delayed_rank_groups<I, K, V, M>(
     comm: &Communicator,
     feed: &TaskFeed<'_, I>,
     map: &M,
     salt: u64,
+    spill_budget: u64,
     tracker: &Arc<PeakTracker>,
 ) -> Result<DelayedOutput<K, V>>
 where
@@ -72,79 +162,35 @@ where
     V: FastSerialize + Send,
     M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
 {
-    // Steps 1-3: map + intermediate (grouping) reducer.
-    let mut emitter: GroupEmitter<K, V> = GroupEmitter::new();
-    let mut rank_feed = feed.for_rank(comm.rank());
-    while let Some((task, chunk)) = rank_feed.next() {
-        comm.timed(|| {
-            for item in chunk {
-                map(item, &mut |k, v| emitter.emit(k, v));
-            }
-        });
-        rank_feed.complete(task);
-    }
+    // Steps 1-3 + 4a: map + intermediate (grouping) stage into sorted
+    // runs. No combiner here — delayed reduction's whole point is that
+    // the multiset survives.
+    let writer: RunWriter<'_, K, V> = RunWriter::new(spill_budget, tracker.clone());
+    let local_runs = stage_sorted_runs(comm, feed, map, writer)?;
+    let map_spilled = local_runs.spilled_bytes();
 
-    // The temporary DistVector of locally-grouped runs.
-    let mut runs: DistVector<'_, (K, Vec<V>)> =
-        DistVector::from_local(comm, comm.timed(|| emitter.groups.into_iter().collect()));
-    let run_bytes: u64 = runs
-        .local()
-        .iter()
-        .map(|(k, vs)| {
-            (k.size_hint() + vs.iter().map(FastSerialize::size_hint).sum::<usize>() + 32) as u64
-        })
-        .sum();
-    tracker.alloc(run_bytes);
-
-    // Step 4a: merge sort the local run by key. `sort_by` is a stable
-    // adaptive merge sort — literally the paper's "sorting using Merge
-    // Sort".
-    comm.timed(|| runs.local_mut().sort_by(|a, b| a.0.cmp(&b.0)));
-
-    // Step 4b: shuffle runs to key owners.
+    // Step 4b: shuffle runs to key owners in budget-bounded rounds.
     let router = ShardRouter::new(comm.size(), salt);
-    let incoming = shuffle_pairs(comm, &router, runs.into_local(), tracker)?;
-    tracker.free(run_bytes);
+    let (incoming, _) = shuffle_runs(comm, &router, local_runs, spill_budget, None, tracker)?;
 
-    // Step 4c: merge the (per-source sorted) incoming runs into key-sorted
-    // groups. Sorting a concatenation of sorted runs is the k-way merge
-    // phase of merge sort; Rust's stable sort detects and merges the runs.
-    let groups = comm.timed(|| {
-        let mut incoming = incoming;
-        incoming.sort_by(|a, b| a.0.cmp(&b.0));
-        let mut groups: Vec<(K, Vec<V>)> = Vec::new();
-        for (k, mut vs) in incoming {
-            match groups.last_mut() {
-                Some((lk, lvs)) if *lk == k => lvs.append(&mut vs),
-                _ => groups.push((k, vs)),
-            }
-        }
-        groups
-    });
-    let group_bytes: u64 = groups
-        .iter()
-        .map(|(k, vs)| {
-            (k.size_hint() + vs.iter().map(FastSerialize::size_hint).sum::<usize>() + 32) as u64
-        })
-        .sum();
-    tracker.alloc(group_bytes);
-    // Charge stays until the output is dropped/reduced; engine frees after
-    // reduce via its own accounting of the result map.
-    tracker.free(group_bytes);
-    Ok(DelayedOutput { groups })
+    // Step 4c happens lazily: the loser-tree merge of the incoming runs
+    // is the k-way phase of merge sort, pulled by the DelayedOutput.
+    let spilled = map_spilled + incoming.spilled_bytes();
+    Ok(DelayedOutput::from_runs(incoming, spilled, tracker.clone()))
 }
 
 /// Full delayed-reduction rank body: groups then reduces immediately.
-/// Returns (result shard, spilled bytes = 0; grouping happens in memory —
-/// out-of-core delayed reduction is future work, as in the paper).
+/// Returns (result shard, spilled bytes, combined bytes = 0 — delayed
+/// mode never combines; the multiset is the contract).
 pub fn delayed_rank<I, K, V, M, R>(
     comm: &Communicator,
     feed: &TaskFeed<'_, I>,
     map: &M,
     reduce: &R,
     salt: u64,
+    spill_budget: u64,
     tracker: &Arc<PeakTracker>,
-) -> Result<(HashMap<K, V>, u64)>
+) -> Result<(HashMap<K, V>, u64, u64)>
 where
     I: Sync,
     K: FastSerialize + Hash + Eq + Ord + Send,
@@ -152,12 +198,13 @@ where
     M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
     R: Fn(&K, Vec<V>) -> V + Sync,
 {
-    let output = delayed_rank_groups(comm, feed, map, salt, tracker)?;
-    let out = comm.timed(|| output.reduce_now(reduce));
+    let output = delayed_rank_groups(comm, feed, map, salt, spill_budget, tracker)?;
+    let spilled = output.spilled_bytes();
+    let out = comm.timed(|| output.reduce_now(reduce))?;
     let out_bytes: u64 =
         out.iter().map(|(k, v)| (k.size_hint() + v.size_hint() + 16) as u64).sum();
     tracker.alloc(out_bytes);
-    Ok((out, 0))
+    Ok((out, spilled, 0))
 }
 
 #[cfg(test)]
@@ -179,7 +226,7 @@ mod tests {
             };
             let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
             let tracker = PeakTracker::new();
-            delayed_rank(c, &feed, &map, &reduce, 0, &tracker).unwrap().0
+            delayed_rank(c, &feed, &map, &reduce, 0, u64::MAX, &tracker).unwrap().0
         });
         let mut merged: HashMap<String, u64> = HashMap::new();
         for shard in results {
@@ -197,12 +244,14 @@ mod tests {
         let outputs = pool_run(2, |c| {
             let map = |i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 4, *i);
             let tracker = PeakTracker::new();
-            let out = delayed_rank_groups(c, &feed, &map, 0, &tracker).unwrap();
-            let keys: Vec<u32> = out.iter_groups().map(|(k, _)| *k).collect();
+            let mut out =
+                delayed_rank_groups(c, &feed, &map, 0, u64::MAX, &tracker).unwrap();
+            let keys: Vec<u32> = out.iter_groups().unwrap().map(|(k, _)| *k).collect();
             let mut sorted = keys.clone();
             sorted.sort_unstable();
             assert_eq!(keys, sorted, "groups must be key-sorted");
             out.iter_groups()
+                .unwrap()
                 .map(|(k, vs)| (*k, vs.len()))
                 .collect::<Vec<_>>()
         });
@@ -226,10 +275,12 @@ mod tests {
         let results = pool_run(1, |c| {
             let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit((i % 2) as u8, *i);
             let tracker = PeakTracker::new();
-            let out = delayed_rank_groups(c, &feed, &map, 0, &tracker).unwrap();
-            let inspected: usize = out.iter_groups().map(|(_, vs)| vs.len()).sum();
+            let mut out =
+                delayed_rank_groups(c, &feed, &map, 0, u64::MAX, &tracker).unwrap();
+            let inspected: usize =
+                out.iter_groups().unwrap().map(|(_, vs)| vs.len()).sum();
             assert_eq!(inspected, 6);
-            out.reduce_now(|_, vs| vs.into_iter().sum::<u32>())
+            out.reduce_now(|_, vs| vs.into_iter().sum::<u32>()).unwrap()
         });
         assert_eq!(results[0][&0u8], 2 + 4 + 6);
         assert_eq!(results[0][&1u8], 1 + 3 + 5);
@@ -248,9 +299,63 @@ mod tests {
                 vs[vs.len() / 2]
             };
             let tracker = PeakTracker::new();
-            delayed_rank(c, &feed, &map, &reduce, 0, &tracker).unwrap().0
+            delayed_rank(c, &feed, &map, &reduce, 0, u64::MAX, &tracker).unwrap().0
         });
         let owner: Vec<_> = results.into_iter().filter(|m| !m.is_empty()).collect();
         assert_eq!(owner[0][&0u8], 5);
+    }
+
+    #[test]
+    fn out_of_core_budget_matches_in_memory_run() {
+        // The tentpole property at rank level: a budget of a few hundred
+        // bytes must spill, stream, and still produce the in-memory
+        // answer — with the value multiset intact.
+        let input: Vec<u32> = (0..600).collect();
+        let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
+        let run_with = |budget: u64| {
+            pool_run(2, |c| {
+                let map = |i: &u32, emit: &mut dyn FnMut(u32, u64)| {
+                    emit(i % 16, (*i as u64) * 3)
+                };
+                let reduce = |_k: &u32, vs: Vec<u64>| {
+                    assert!(!vs.is_empty());
+                    vs.into_iter().sum::<u64>()
+                };
+                let tracker = PeakTracker::new();
+                delayed_rank(c, &feed, &map, &reduce, 0, budget, &tracker).unwrap()
+            })
+        };
+        let in_mem = run_with(u64::MAX);
+        let spilled = run_with(300);
+        assert!(
+            spilled.iter().map(|(_, s, _)| s).sum::<u64>() > 0,
+            "tiny budget must hit disk"
+        );
+        let merge = |rs: &[(HashMap<u32, u64>, u64, u64)]| {
+            let mut all: HashMap<u32, u64> = HashMap::new();
+            for (shard, _, _) in rs {
+                all.extend(shard.iter().map(|(k, v)| (*k, *v)));
+            }
+            all
+        };
+        assert_eq!(merge(&in_mem), merge(&spilled), "byte-identical grouped sums");
+    }
+
+    #[test]
+    fn streaming_for_each_group_visits_every_group_once() {
+        let input: Vec<u32> = (0..100).collect();
+        let feed = TaskFeed::new(&input, 1, 1, Scheduling::Static, None);
+        let visited = pool_run(1, |c| {
+            let map = |i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 10, *i);
+            let tracker = PeakTracker::new();
+            let out =
+                delayed_rank_groups(c, &feed, &map, 0, 256, &tracker).unwrap();
+            let mut seen: Vec<(u32, usize)> = Vec::new();
+            out.for_each_group(|k, vs| seen.push((k, vs.len()))).unwrap();
+            seen
+        });
+        assert_eq!(visited[0].len(), 10);
+        assert!(visited[0].windows(2).all(|w| w[0].0 < w[1].0), "ascending keys");
+        assert!(visited[0].iter().all(|(_, n)| *n == 10));
     }
 }

@@ -27,8 +27,9 @@ use super::scheduler::TaskFeed;
 use super::shuffle::shuffle_pairs;
 
 /// SPMD rank body for one eager-reduction job. Returns this rank's result
-/// shard and its spilled byte count (always 0 here: the cache *is* the
-/// memory bound).
+/// shard plus spilled/combined byte counts (both always 0 here: the
+/// cache *is* the memory bound, and combining at emit time is the mode
+/// itself, not a separate combiner pass).
 pub fn eager_rank<I, K, V, M>(
     comm: &Communicator,
     feed: &TaskFeed<'_, I>,
@@ -36,7 +37,7 @@ pub fn eager_rank<I, K, V, M>(
     combine: &(dyn Fn(&mut V, V) + Sync),
     salt: u64,
     tracker: &Arc<PeakTracker>,
-) -> Result<(HashMap<K, V>, u64)>
+) -> Result<(HashMap<K, V>, u64, u64)>
 where
     I: Sync,
     K: FastSerialize + Hash + Eq + Send,
@@ -90,7 +91,7 @@ where
     let out_bytes: u64 =
         out.iter().map(|(k, v)| (k.size_hint() + v.size_hint() + 16) as u64).sum();
     tracker.alloc(out_bytes);
-    Ok((out, 0))
+    Ok((out, 0, 0))
 }
 
 #[cfg(test)]

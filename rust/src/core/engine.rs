@@ -101,7 +101,7 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
     /// Run classic (Hadoop-style) MapReduce.
     pub fn run_classic<K, V, M, R>(&self, map: M, reduce: R) -> Result<JobResult<HashMap<K, V>>>
     where
-        K: FastSerialize + Hash + Eq + Send,
+        K: FastSerialize + Hash + Eq + Ord + Send,
         V: FastSerialize + Send,
         M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
         R: Fn(&K, Vec<V>) -> V + Sync,
@@ -109,11 +109,39 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         let salt = self.salt();
         let spill = self.cluster.spill_threshold_bytes();
         self.execute(move |comm, feed, tracker| {
-            classic_rank(comm, feed, &map, &reduce, salt, spill, tracker)
+            classic_rank(comm, feed, &map, &reduce, None, salt, spill, tracker)
         })
     }
 
-    /// Run with the paper's Delayed Reduction.
+    /// Run classic MapReduce with a **map-side combiner** (Hadoop's):
+    /// `combine` folds equal-key values at run-write and merge time
+    /// before the shuffle, cutting wire volume without changing the
+    /// result. `combine` must be associative and agree with `reduce`
+    /// (applying it to any bracketing of a key's values then reducing
+    /// must equal reducing the raw multiset). Folded-away bytes are
+    /// reported in [`JobStats::combined_bytes`].
+    pub fn run_classic_with_combiner<K, V, M, R>(
+        &self,
+        map: M,
+        combine: impl Fn(&mut V, V) + Sync,
+        reduce: R,
+    ) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: FastSerialize + Hash + Eq + Ord + Send,
+        V: FastSerialize + Send,
+        M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+        R: Fn(&K, Vec<V>) -> V + Sync,
+    {
+        let salt = self.salt();
+        let spill = self.cluster.spill_threshold_bytes();
+        self.execute(move |comm, feed, tracker| {
+            classic_rank(comm, feed, &map, &reduce, Some(&combine), salt, spill, tracker)
+        })
+    }
+
+    /// Run with the paper's Delayed Reduction. Grouping is out-of-core:
+    /// staged pairs past the cluster's spill threshold go to key-ordered
+    /// disk runs (see [`crate::store`]).
     pub fn run_delayed<K, V, M, R>(&self, map: M, reduce: R) -> Result<JobResult<HashMap<K, V>>>
     where
         K: FastSerialize + Hash + Eq + Ord + Send,
@@ -122,8 +150,9 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         R: Fn(&K, Vec<V>) -> V + Sync,
     {
         let salt = self.salt();
+        let spill = self.cluster.spill_threshold_bytes();
         self.execute(move |comm, feed, tracker| {
-            delayed_rank(comm, feed, &map, &reduce, salt, tracker)
+            delayed_rank(comm, feed, &map, &reduce, salt, spill, tracker)
         })
     }
 
@@ -160,7 +189,11 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
     where
         K: Hash + Eq + Send,
         V: Send,
-        B: Fn(&Communicator, &TaskFeed<'_, I>, &Arc<PeakTracker>) -> Result<(HashMap<K, V>, u64)>
+        B: Fn(
+                &Communicator,
+                &TaskFeed<'_, I>,
+                &Arc<PeakTracker>,
+            ) -> Result<(HashMap<K, V>, u64, u64)>
             + Sync,
     {
         self.cluster.validate()?;
@@ -194,9 +227,12 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         // Merge shards (disjoint key ownership) and surface rank errors.
         let mut merged: HashMap<K, V> = HashMap::new();
         let mut spilled = 0u64;
+        let mut combined = 0u64;
         for (i, r) in rank_results.into_iter().enumerate() {
-            let (shard, rank_spilled) = r.map_err(|e| anyhow!("rank {i} failed: {e:#}"))?;
+            let (shard, rank_spilled, rank_combined) =
+                r.map_err(|e| anyhow!("rank {i} failed: {e:#}"))?;
             spilled += rank_spilled;
+            combined += rank_combined;
             for (k, v) in shard {
                 if merged.insert(k, v).is_some() {
                     return Err(anyhow!("key owned by two ranks — router desync"));
@@ -218,6 +254,7 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             remote_bytes: traffic.remote_bytes,
             peak_mem_bytes: tracker.peak_bytes(),
             spilled_bytes: spilled,
+            combined_bytes: combined,
             host_wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
         };
         Ok(JobResult { result: merged, stats })
@@ -345,6 +382,56 @@ mod tests {
             .run_eager(wc_map, |a, b| *a += b)
             .unwrap_err();
         assert!(format!("{err:#}").contains("rank pool"), "{err:#}");
+    }
+
+    #[test]
+    fn combiner_matches_classic_and_cuts_shuffle_volume() {
+        // Small key range, many lines: the map-side combiner should
+        // collapse almost all raw pairs before the wire while leaving
+        // the result untouched — Hadoop's combiner contract.
+        let input = wordcount_input(300);
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let raw = MapReduceJob::new(&cluster, &input)
+            .run_classic(wc_map, |_k, vs: Vec<u64>| vs.into_iter().sum())
+            .unwrap();
+        let combined = MapReduceJob::new(&cluster, &input)
+            .run_classic_with_combiner(
+                wc_map,
+                |a: &mut u64, b: u64| *a += b,
+                |_k, vs: Vec<u64>| vs.into_iter().sum(),
+            )
+            .unwrap();
+        assert_eq!(raw.result, combined.result);
+        assert_eq!(raw.stats.combined_bytes, 0);
+        assert!(combined.stats.combined_bytes > 0);
+        assert!(
+            combined.stats.shuffle_bytes * 2 < raw.stats.shuffle_bytes,
+            "combined {} vs raw {}",
+            combined.stats.shuffle_bytes,
+            raw.stats.shuffle_bytes
+        );
+    }
+
+    #[test]
+    fn tiny_budget_delayed_and_classic_match_unlimited() {
+        // The out-of-core tentpole at engine level: a budget far below
+        // the staged volume must spill and still give identical results.
+        let input = wordcount_input(400);
+        let tight = ClusterConfig::builder().ranks(3).shuffle_buffer_bytes(2048).build();
+        let roomy = ClusterConfig::builder().ranks(3).shuffle_buffer_bytes(u64::MAX).build();
+        for mode in [ReductionMode::Classic, ReductionMode::Delayed] {
+            let a = MapReduceJob::new(&tight, &input)
+                .with_mode(mode)
+                .run_monoid(wc_map, |a: u64, b| a + b)
+                .unwrap();
+            let b = MapReduceJob::new(&roomy, &input)
+                .with_mode(mode)
+                .run_monoid(wc_map, |a: u64, b| a + b)
+                .unwrap();
+            assert_eq!(a.result, b.result, "mode {mode}");
+            assert!(a.stats.spilled_bytes > 0, "mode {mode} must spill");
+            assert_eq!(b.stats.spilled_bytes, 0, "mode {mode} unlimited must not");
+        }
     }
 
     #[test]

@@ -102,6 +102,9 @@ pub struct JobStats {
     pub peak_mem_bytes: u64,
     /// Bytes spilled to disk by the shuffle (out-of-core path).
     pub spilled_bytes: u64,
+    /// Bytes the map-side combiner folded away before the wire
+    /// (0 unless the job ran with a combiner).
+    pub combined_bytes: u64,
     /// Host wall-clock of the whole job (for harness sanity only —
     /// figures use `modeled_ms`).
     pub host_wall_ms: f64,

@@ -6,8 +6,14 @@
 //! * [`eager`] — Blaze's Eager Reduction: combine into a thread-local
 //!   cache *during* map, shuffle only combined pairs (Fig 2).
 //! * [`delayed`] — the paper's contribution (§III.D, Figs 6-7): mappers
-//!   emit locally-grouped runs into a `DistVector`, runs are merge-sorted
-//!   and shuffled, and the final reducer sees `(K, Iterable<V>)` — lazily.
+//!   stage locally key-ordered runs, runs are merge-sorted and shuffled,
+//!   and the final reducer sees `(K, Iterable<V>)` — lazily.
+//!
+//! Classic and delayed both ride [`crate::store`]'s out-of-core sorted
+//! runs: staged pairs past the cluster's spill threshold go to disk,
+//! the shuffle exchanges them in budget-bounded rounds, and reducers
+//! stream groups off a loser-tree merge — inputs past the node's memory
+//! budget are first-class, not a crash.
 //!
 //! [`engine`] wraps a mode dispatch + metrics + result collection around
 //! the SPMD bodies; [`scheduler`] adds dynamic task claiming (data-skew
@@ -29,4 +35,4 @@ pub use engine::MapReduceJob;
 pub use job::{JobConfig, JobResult, JobStats, ReductionMode, Scheduling};
 pub use partitioner::RangePartitioner;
 pub use scheduler::{FaultPlan, TaskFeed};
-pub use shuffle::SpillBuffer;
+pub use shuffle::{shuffle_runs, SpillBuffer};

@@ -1,15 +1,27 @@
-//! The shuffle: partition `(K, V)` pairs by key owner and exchange them
-//! with one `alltoallv`, with optional out-of-core spilling.
+//! The shuffle: partition `(K, V)` pairs by key owner and exchange them,
+//! with out-of-core paths built on [`crate::store`].
 //!
-//! Spilling reproduces MR-MPI's page/out-of-core behaviour the paper's
-//! related work dwells on: when staged pairs exceed the node's memory
-//! budget ([`crate::cluster::ClusterConfig::spill_threshold_bytes`]), the
-//! overflow is serialized to a temp file and re-read at exchange time. The
-//! spilled byte count feeds `JobStats::spilled_bytes` so benches can show
-//! the in-core -> out-of-core crossover.
+//! Two collectives live here:
+//!
+//!  * [`shuffle_pairs`] — one `alltoallv` of every pair at once. Eager
+//!    reduction uses it: the thread-local cache already bounds its
+//!    volume to one value per distinct key.
+//!  * [`shuffle_runs`] — the out-of-core shuffle for classic and
+//!    delayed modes: drains a key-ordered [`RunSet`] through its merge,
+//!    exchanges it in rounds of at most `budget / n` bytes per
+//!    destination (so no rank ever *receives* more than ~`budget` per
+//!    round), and restages the incoming pairs into a fresh budget-bound
+//!    `RunSet` on the owner. Ranks agree on the round count with an
+//!    allreduce, so the collective stays aligned at any skew.
+//!
+//! [`SpillBuffer`] remains as the order-preserving *unsorted* staging
+//! buffer (MR-MPI's pages); its drain streams the spill file back one
+//! block at a time through [`crate::store::RunReader`] instead of the
+//! old whole-file `read_to_end`, so recovery memory is bounded by the
+//! block size, not the spill size.
 
 use std::hash::Hash;
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Seek, SeekFrom, Write};
 use std::sync::Arc;
 
 use crate::util::tmp::TempFile;
@@ -20,8 +32,13 @@ use crate::dist::ShardRouter;
 use crate::metrics::PeakTracker;
 use crate::mpi::Communicator;
 use crate::serial::{Decoder, Encoder, FastSerialize};
+use crate::store::{Combiner, RunReader, RunSet, RunWriter};
+
+use super::scheduler::TaskFeed;
 
 /// Buffer for map-side pairs with a spill-to-disk overflow path.
+/// Order-preserving (disk chunks first, then memory) — the *sorted*
+/// counterpart is [`crate::store::RunWriter`].
 pub struct SpillBuffer<K, V> {
     in_mem: Vec<(K, V)>,
     mem_bytes: u64,
@@ -66,6 +83,8 @@ impl<K: FastSerialize, V: FastSerialize> SpillBuffer<K, V> {
     }
 
     /// Serialize the in-memory pairs to the spill file and drop them.
+    /// The chunk frame is the store's run-block format, which is what
+    /// lets [`RunReader`] stream it back.
     fn spill_now(&mut self) -> Result<()> {
         if self.in_mem.is_empty() {
             return Ok(());
@@ -93,33 +112,33 @@ impl<K: FastSerialize, V: FastSerialize> SpillBuffer<K, V> {
         Ok(())
     }
 
-    /// Drain everything (disk chunks first, then memory) into a vector.
-    pub fn drain(mut self) -> Result<Vec<(K, V)>> {
-        let mut out = Vec::with_capacity(self.in_mem.len() + self.spilled_items as usize);
+    /// Stream everything out in insertion order (disk chunks first, then
+    /// memory), holding at most one spill block in memory at a time.
+    pub fn drain_for_each(mut self, mut f: impl FnMut(K, V)) -> Result<()> {
         if let Some(mut tf) = self.spill.take() {
-            let file = tf.file();
-            file.seek(SeekFrom::Start(0))?;
-            let mut raw = Vec::new();
-            file.read_to_end(&mut raw)?;
-            let mut pos = 0usize;
-            while pos < raw.len() {
-                let len =
-                    u64::from_le_bytes(raw[pos..pos + 8].try_into().unwrap()) as usize;
-                pos += 8;
-                let mut dec = Decoder::new(&raw[pos..pos + len]);
-                pos += len;
-                let count = dec.get_varint()?;
-                for _ in 0..count {
-                    let k = K::decode(&mut dec)?;
-                    let v = V::decode(&mut dec)?;
-                    out.push((k, v));
-                }
-                dec.finish()?;
+            let end = tf.file().seek(SeekFrom::End(0))?;
+            let shared =
+                Arc::new(tf.file().try_clone().context("cloning spill file for drain")?);
+            let mut reader: RunReader<K, V> =
+                RunReader::new(shared, 0, end, self.tracker.clone());
+            while let Some((k, v)) = reader.next()? {
+                f(k, v);
             }
         }
-        out.append(&mut self.in_mem);
+        for (k, v) in self.in_mem.drain(..) {
+            f(k, v);
+        }
         self.tracker.free(self.mem_bytes);
         self.mem_bytes = 0;
+        Ok(())
+    }
+
+    /// Drain everything (disk chunks first, then memory) into a vector.
+    /// Reads the spill in bounded blocks (via [`RunReader`]), never the
+    /// whole file at once.
+    pub fn drain(self) -> Result<Vec<(K, V)>> {
+        let mut out = Vec::with_capacity(self.in_mem.len() + self.spilled_items as usize);
+        self.drain_for_each(|k, v| out.push((k, v)))?;
         Ok(out)
     }
 }
@@ -194,6 +213,156 @@ where
     Ok(out)
 }
 
+/// The shared map-phase stage loop for the run-backed engines: feed
+/// this rank's task chunks through `map`, pushing every emitted pair
+/// into `writer` (first emit error wins and fails the rank), then close
+/// the writer into its [`RunSet`]. Classic and delayed both stage this
+/// way — one place to fix emit-error semantics.
+pub(crate) fn stage_sorted_runs<I, K, V, M>(
+    comm: &Communicator,
+    feed: &TaskFeed<'_, I>,
+    map: &M,
+    mut writer: RunWriter<'_, K, V>,
+) -> Result<RunSet<K, V>>
+where
+    I: Sync,
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+    M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+{
+    let mut rank_feed = feed.for_rank(comm.rank());
+    while let Some((task, chunk)) = rank_feed.next() {
+        let res: Result<()> = comm.timed(|| {
+            let mut err = None;
+            for item in chunk {
+                map(item, &mut |k, v| {
+                    if err.is_none() {
+                        if let Err(e) = writer.push(k, v) {
+                            err = Some(e);
+                        }
+                    }
+                });
+            }
+            err.map_or(Ok(()), Err)
+        });
+        res?;
+        rank_feed.complete(task);
+    }
+    comm.timed(|| writer.finish())
+}
+
+/// COLLECTIVE: the out-of-core shuffle. Drains `runs` in key order,
+/// exchanges pairs in rounds bounded by `budget`, and restages what this
+/// rank owns into a fresh budget-bound [`RunSet`] (each incoming round
+/// re-sorted and re-spilled under the same budget). With a combiner,
+/// equal-key values are folded both while draining (merge-time: across
+/// this rank's runs, pre-wire) and while restaging on the owner.
+///
+/// Returns `(incoming run set, bytes the sender-side merge combined
+/// away)`. Memory: one round holds at most ~`budget` of outgoing framed
+/// buffers and ~`budget` of incoming bytes, on top of the run machinery's
+/// per-run block overhead.
+pub fn shuffle_runs<K, V>(
+    comm: &Communicator,
+    router: &ShardRouter,
+    runs: RunSet<K, V>,
+    budget: u64,
+    combiner: Option<Combiner<'_, V>>,
+    tracker: &Arc<PeakTracker>,
+) -> Result<(RunSet<K, V>, u64)>
+where
+    K: FastSerialize + Hash + Ord,
+    V: FastSerialize,
+{
+    let n = comm.size();
+    debug_assert_eq!(router.shards(), n, "router/communicator size mismatch");
+
+    let mut source = runs.into_merge()?;
+    if let Some(c) = combiner {
+        source = source.with_combiner(c);
+    }
+    let mut receiver: RunWriter<'_, K, V> = RunWriter::new(budget, tracker.clone());
+    if let Some(c) = combiner {
+        receiver = receiver.with_combiner(c);
+    }
+
+    // Per-round, per-destination byte cap: a receiver hears from n
+    // senders, so capping each at budget/n bounds what any rank takes in
+    // per round by ~budget (minimum one record per round to guarantee
+    // progress under tiny budgets).
+    let per_dest_cap = (budget / n as u64).max(1);
+
+    let mut pending: Option<(K, V)> = None;
+    loop {
+        // Fill this round's buffers in key order. Stop at the first pair
+        // whose destination is full: pairs for one destination must stay
+        // in key order, so we cannot skip past it. Buffers are raw
+        // record streams (no count frame): the receiver decodes until
+        // the buffer is exhausted, which avoids re-copying ~budget bytes
+        // per round just to prepend a length.
+        let mut encoders: Vec<Encoder> = (0..n).map(|_| Encoder::new()).collect();
+        let fill: Result<()> = comm.timed(|| {
+            loop {
+                let (k, v) = match pending.take() {
+                    Some(p) => p,
+                    None => match source.next()? {
+                        Some(p) => p,
+                        None => break,
+                    },
+                };
+                let dst = router.owner(&k).0;
+                if encoders[dst].len() as u64 >= per_dest_cap {
+                    pending = Some((k, v));
+                    break;
+                }
+                k.encode(&mut encoders[dst]);
+                v.encode(&mut encoders[dst]);
+            }
+            Ok(())
+        });
+        fill?;
+
+        let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(n);
+        let mut total = 0u64;
+        for enc in encoders {
+            total += enc.len() as u64;
+            bufs.push(enc.into_bytes());
+        }
+        // Charged once assembled; the fill phase itself holds at most
+        // the same bytes, so the high-water timing is the exchange.
+        tracker.alloc(total);
+        let incoming = comm.alltoallv(bufs)?;
+        tracker.free(total);
+
+        let in_total: u64 = incoming.iter().map(|b| b.len() as u64).sum();
+        tracker.alloc(in_total);
+        let absorb: Result<()> = comm.timed(|| {
+            for buf in &incoming {
+                let mut dec = Decoder::new(buf);
+                while !dec.is_empty() {
+                    let k = K::decode(&mut dec)?;
+                    let v = V::decode(&mut dec)?;
+                    receiver.push(k, v)?;
+                }
+            }
+            Ok(())
+        });
+        absorb?;
+        drop(incoming);
+        tracker.free(in_total);
+
+        // Collective agreement: another round only while someone still
+        // has pairs in flight (keeps every rank's alltoallv count equal).
+        let more = u64::from(pending.is_some());
+        if comm.allreduce_sum_u64(more)? == 0 {
+            break;
+        }
+    }
+
+    let sender_combined = source.combined_bytes();
+    Ok((receiver.finish()?, sender_combined))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,5 +423,83 @@ mod tests {
         assert!(t.peak_bytes() < 2_048, "peak {}", t.peak_bytes());
         let items = b.drain().unwrap();
         assert_eq!(items.len(), 10_000);
+    }
+
+    #[test]
+    fn spill_buffer_streaming_drain_matches_vec_drain() {
+        let make = |t: &Arc<PeakTracker>| {
+            let mut b: SpillBuffer<u64, u64> = SpillBuffer::new(128, t.clone());
+            for i in 0..500u64 {
+                b.push(i % 7, i).unwrap();
+            }
+            b
+        };
+        let t = PeakTracker::new();
+        let vec_drained = make(&t).drain().unwrap();
+        let mut streamed = Vec::new();
+        make(&t)
+            .drain_for_each(|k, v| streamed.push((k, v)))
+            .unwrap();
+        assert_eq!(vec_drained, streamed);
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn shuffle_runs_routes_and_sorts_under_tiny_budget() {
+        let got = pool_run(3, |c| {
+            let router = ShardRouter::new(3, 7);
+            let tracker = PeakTracker::new();
+            let mut w: RunWriter<'_, u32, u64> = RunWriter::new(200, tracker.clone());
+            for i in 0..200u32 {
+                w.push(i % 40, (c.rank().0 as u64) << 32 | i as u64).unwrap();
+            }
+            let runs = w.finish().unwrap();
+            let (mine, _) =
+                shuffle_runs(c, &router, runs, 200, None, &tracker).unwrap();
+            let mut m = mine.into_merge().unwrap();
+            let mut count = 0u64;
+            let mut last: Option<u32> = None;
+            while let Some((k, _)) = m.next().unwrap() {
+                assert_eq!(router.owner(&k), c.rank(), "pair landed on owner");
+                if let Some(prev) = last {
+                    assert!(prev <= k, "owner stream stays key-ordered");
+                }
+                last = Some(k);
+                count += 1;
+            }
+            drop(m);
+            assert_eq!(tracker.current_bytes(), 0, "all charges released");
+            count
+        });
+        assert_eq!(got.iter().sum::<u64>(), 600, "every pair arrived exactly once");
+    }
+
+    #[test]
+    fn shuffle_runs_combiner_folds_before_the_wire() {
+        let got = pool_run(2, |c| {
+            let tracker = PeakTracker::new();
+            let router = ShardRouter::new(2, 1);
+            let combine = |acc: &mut u64, v: u64| *acc += v;
+            let mut w: RunWriter<'_, u32, u64> =
+                RunWriter::new(150, tracker.clone()).with_combiner(&combine);
+            // 3 hot keys, 300 emissions: the combiner should collapse
+            // nearly everything before the exchange.
+            for i in 0..300u32 {
+                w.push(i % 3, 1).unwrap();
+            }
+            let runs = w.finish().unwrap();
+            let write_combined = runs.combined_bytes();
+            let (mine, merge_combined) =
+                shuffle_runs(c, &router, runs, 150, Some(&combine), &tracker).unwrap();
+            let mut m = mine.into_merge().unwrap();
+            let mut total = 0u64;
+            while let Some((_, v)) = m.next().unwrap() {
+                total += v;
+            }
+            (total, write_combined + merge_combined)
+        });
+        let grand: u64 = got.iter().map(|(t, _)| t).sum();
+        assert_eq!(grand, 600, "combined counts conserved end to end");
+        assert!(got.iter().any(|(_, c)| *c > 0), "combiner must fold bytes pre-wire");
     }
 }

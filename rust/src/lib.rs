@@ -31,6 +31,7 @@ pub mod metrics;
 pub mod mpi;
 pub mod runtime;
 pub mod serial;
+pub mod store;
 pub mod util;
 
 /// Most-used types, re-exported for `use blaze_rs::prelude::*`.

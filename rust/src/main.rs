@@ -232,7 +232,8 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn print_stats(s: &blaze_rs::core::JobStats) {
     println!(
         "  modeled {:.2} ms (compute {:.2} + net {:.2} + startup {:.0}) | \
-         shuffle {} B in {} msgs ({} B remote) | peak mem {} B | spilled {} B | host wall {:.1} ms",
+         shuffle {} B in {} msgs ({} B remote) | peak mem {} B | spilled {} B | \
+         combined away {} B | host wall {:.1} ms",
         s.modeled_ms,
         s.compute_ms,
         s.net_ms,
@@ -242,6 +243,7 @@ fn print_stats(s: &blaze_rs::core::JobStats) {
         s.remote_bytes,
         s.peak_mem_bytes,
         s.spilled_bytes,
+        s.combined_bytes,
         s.host_wall_ms
     );
 }
@@ -251,7 +253,10 @@ fn cmd_bench_figure(args: &Args) -> Result<()> {
         .positional
         .first()
         .map(String::as_str)
-        .context("which figure? (fig8..fig13, ablation-reduction, deployment, all)")?;
+        .context(
+            "which figure? (fig8..fig13, ablation-reduction, deployment, pool-ablation, \
+             spill-crossover, all)",
+        )?;
     let quick = args.has("quick");
     let ids: Vec<FigureId> = if which == "all" {
         FigureId::ALL.to_vec()

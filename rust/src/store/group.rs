@@ -1,0 +1,118 @@
+//! [`GroupStream`]: turn a key-ordered pair stream into `(K, Vec<V>)`
+//! groups, one group in memory at a time — the out-of-core form of the
+//! paper's `(K, Iterable<V>)` contract (§III.D). Memory is bounded by
+//! the largest single group plus the merge's per-run block overhead,
+//! never by the dataset.
+
+use anyhow::Result;
+
+use crate::serial::FastSerialize;
+
+use super::merge::KWayMerge;
+
+/// Streams key-ordered `(K, Vec<V>)` groups off a [`KWayMerge`].
+pub struct GroupStream<'f, K, V> {
+    merge: KWayMerge<'f, K, V>,
+    pending: Option<(K, V)>,
+}
+
+impl<'f, K, V> GroupStream<'f, K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    pub fn new(merge: KWayMerge<'f, K, V>) -> Self {
+        Self { merge, pending: None }
+    }
+
+    /// Next `(key, values)` group in ascending key order; `None` at end.
+    /// The value multiset per key is complete — every run's values for
+    /// the key, in run order.
+    pub fn next_group(&mut self) -> Result<Option<(K, Vec<V>)>> {
+        let (key, first) = match self.pending.take() {
+            Some(p) => p,
+            None => match self.merge.next()? {
+                Some(p) => p,
+                None => return Ok(None),
+            },
+        };
+        let mut values = vec![first];
+        loop {
+            match self.merge.next()? {
+                Some((k, v)) if k == key => values.push(v),
+                Some(other) => {
+                    self.pending = Some(other);
+                    break;
+                }
+                None => break,
+            }
+        }
+        Ok(Some((key, values)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RunWriter;
+    use super::*;
+    use crate::metrics::PeakTracker;
+
+    fn groups_of(budget: u64, pairs: &[(u64, u64)]) -> Vec<(u64, Vec<u64>)> {
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(budget, t);
+        for &(k, v) in pairs {
+            w.push(k, v).unwrap();
+        }
+        let mut gs = GroupStream::new(w.finish().unwrap().into_merge().unwrap());
+        let mut out = Vec::new();
+        while let Some(g) = gs.next_group().unwrap() {
+            out.push(g);
+        }
+        out
+    }
+
+    #[test]
+    fn groups_collect_full_multiset_per_key() {
+        let pairs: Vec<(u64, u64)> = (0..100).map(|i| (i % 4, i)).collect();
+        for budget in [u64::MAX, 64] {
+            let groups = groups_of(budget, &pairs);
+            assert_eq!(groups.len(), 4, "budget {budget}");
+            for (k, vs) in &groups {
+                assert_eq!(vs.len(), 25, "key {k} budget {budget}");
+                assert!(vs.iter().all(|v| v % 4 == *k));
+            }
+            let keys: Vec<u64> = groups.iter().map(|(k, _)| *k).collect();
+            assert_eq!(keys, vec![0, 1, 2, 3], "ascending keys");
+        }
+    }
+
+    #[test]
+    fn out_of_core_groups_equal_in_core_groups() {
+        let pairs: Vec<(u64, u64)> = (0..500).map(|i| ((i * 31) % 17, i)).collect();
+        let in_core = groups_of(u64::MAX, &pairs);
+        let out_of_core = groups_of(128, &pairs);
+        // Same keys; same value multisets (order may differ across runs).
+        assert_eq!(in_core.len(), out_of_core.len());
+        for ((ka, va), (kb, vb)) in in_core.iter().zip(&out_of_core) {
+            assert_eq!(ka, kb);
+            let mut sa = va.clone();
+            let mut sb = vb.clone();
+            sa.sort_unstable();
+            sb.sort_unstable();
+            assert_eq!(sa, sb, "key {ka}");
+        }
+    }
+
+    #[test]
+    fn empty_stream_yields_no_groups() {
+        assert!(groups_of(64, &[]).is_empty());
+    }
+
+    #[test]
+    fn single_key_many_values() {
+        let pairs: Vec<(u64, u64)> = (0..300).map(|i| (9, i)).collect();
+        let groups = groups_of(100, &pairs);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].1.len(), 300);
+    }
+}

@@ -1,0 +1,310 @@
+//! [`KWayMerge`]: a loser-tree merge of key-ordered runs (the k-way
+//! phase of external merge sort, Thrill-style) with an optional
+//! combiner folding equal keys as they meet.
+//!
+//! The tournament is a classic loser tree: internal node `t` stores the
+//! loser of the match played there and the overall winner sits at the
+//! root, so replacing the winner's head replays exactly one root-to-leaf
+//! path — `O(log k)` comparisons per yielded pair instead of the `O(k)`
+//! of a naive scan. Ties break toward the lower run index, which makes
+//! the merged stream deterministic and keeps the writer's run order
+//! (stability across runs).
+
+use std::cmp::Ordering;
+
+use anyhow::Result;
+
+use crate::serial::FastSerialize;
+
+use super::run::{pair_bytes, Charge, RunReader, RunSet, SharedSpill};
+use super::Combiner;
+
+/// One merge input: the in-memory tail run or a disk run stream.
+pub enum RunCursor<K, V> {
+    Mem(std::vec::IntoIter<(K, V)>),
+    Disk(RunReader<K, V>),
+}
+
+impl<K: FastSerialize, V: FastSerialize> RunCursor<K, V> {
+    fn next(&mut self) -> Result<Option<(K, V)>> {
+        match self {
+            RunCursor::Mem(it) => Ok(it.next()),
+            RunCursor::Disk(r) => r.next(),
+        }
+    }
+}
+
+/// Does player `a` beat player `b`? Exhausted sources sort to +infinity;
+/// equal keys go to the lower run index (determinism + stability).
+fn wins<K: Ord, V>(heads: &[Option<(K, V)>], a: usize, b: usize) -> bool {
+    match (&heads[a], &heads[b]) {
+        (None, _) => false,
+        (Some(_), None) => true,
+        (Some((ka, _)), Some((kb, _))) => match ka.cmp(kb) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => a < b,
+        },
+    }
+}
+
+/// Merges `k` key-ordered runs into one key-ordered stream.
+pub struct KWayMerge<'f, K, V> {
+    cursors: Vec<RunCursor<K, V>>,
+    heads: Vec<Option<(K, V)>>,
+    /// `tree[0]` = winner; `tree[1..k]` = per-node losers.
+    tree: Vec<usize>,
+    combiner: Option<Combiner<'f, V>>,
+    pending: Option<(K, V)>,
+    combined_bytes: u64,
+    /// Keeps the in-memory run's tracker charge alive while merging.
+    _charge: Charge,
+    /// Keeps the spill file (and its unlink-on-drop) alive while merging.
+    _spill: Option<SharedSpill>,
+}
+
+impl<K, V> RunSet<K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    /// Consume the run set into a single key-ordered merge stream. Disk
+    /// runs come first in run-creation order, the in-memory tail last —
+    /// chronological, so stable merging preserves overall write order
+    /// within a key.
+    pub fn into_merge(self) -> Result<KWayMerge<'static, K, V>> {
+        let (mem_run, charge, spill, runs, tracker) = self.into_parts();
+        let mut cursors: Vec<RunCursor<K, V>> = Vec::with_capacity(runs.len() + 1);
+        if let Some(shared) = &spill {
+            for span in &runs {
+                cursors.push(RunCursor::Disk(RunReader::for_span(
+                    shared.reader.clone(),
+                    *span,
+                    tracker.clone(),
+                )));
+            }
+        }
+        if !mem_run.is_empty() {
+            cursors.push(RunCursor::Mem(mem_run.into_iter()));
+        }
+        KWayMerge::with_parts(cursors, charge, spill)
+    }
+}
+
+impl<'f, K, V> KWayMerge<'f, K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    fn with_parts(
+        cursors: Vec<RunCursor<K, V>>,
+        charge: Charge,
+        spill: Option<SharedSpill>,
+    ) -> Result<KWayMerge<'static, K, V>> {
+        let k = cursors.len();
+        let mut merge = KWayMerge {
+            cursors,
+            heads: Vec::with_capacity(k),
+            tree: vec![0; k.max(1)],
+            combiner: None,
+            pending: None,
+            combined_bytes: 0,
+            _charge: charge,
+            _spill: spill,
+        };
+        for i in 0..k {
+            let head = merge.cursors[i].next()?;
+            merge.heads.push(head);
+        }
+        if k >= 2 {
+            let winner = merge.play(1);
+            merge.tree[0] = winner;
+        }
+        Ok(merge)
+    }
+
+    /// Fold equal-key values with `combine` as the merge yields them.
+    pub fn with_combiner(mut self, combine: Combiner<'f, V>) -> KWayMerge<'f, K, V> {
+        self.combiner = Some(combine);
+        self
+    }
+
+    /// Modeled bytes folded away by the merge-time combiner.
+    pub fn combined_bytes(&self) -> u64 {
+        self.combined_bytes
+    }
+
+    /// Recursively play the initial tournament below internal node `t`,
+    /// recording losers; returns the subtree winner. Children of node
+    /// `t` live at array positions `2t` / `2t+1`, where positions `>= k`
+    /// are the leaves (run index = position - k).
+    fn play(&mut self, t: usize) -> usize {
+        let left = self.play_child(2 * t);
+        let right = self.play_child(2 * t + 1);
+        let (w, l) =
+            if wins(&self.heads, left, right) { (left, right) } else { (right, left) };
+        self.tree[t] = l;
+        w
+    }
+
+    fn play_child(&mut self, c: usize) -> usize {
+        let k = self.cursors.len();
+        if c >= k {
+            c - k
+        } else {
+            self.play(c)
+        }
+    }
+
+    /// Replay the winner `s`'s path to the root after its head changed.
+    fn adjust(&mut self, mut s: usize) {
+        let k = self.cursors.len();
+        let mut t = (s + k) / 2;
+        while t > 0 {
+            let stored = self.tree[t];
+            if wins(&self.heads, stored, s) {
+                self.tree[t] = s;
+                s = stored;
+            }
+            t /= 2;
+        }
+        self.tree[0] = s;
+    }
+
+    /// Next pair in global key order (combiner not applied).
+    fn next_raw(&mut self) -> Result<Option<(K, V)>> {
+        if self.cursors.is_empty() {
+            return Ok(None);
+        }
+        let w = self.tree[0];
+        let Some(item) = self.heads[w].take() else { return Ok(None) };
+        self.heads[w] = self.cursors[w].next()?;
+        self.adjust(w);
+        Ok(Some(item))
+    }
+
+    /// Next pair in global key order; with a combiner, equal-key pairs
+    /// are folded into one before being yielded.
+    pub fn next(&mut self) -> Result<Option<(K, V)>> {
+        let Some(combine) = self.combiner else { return self.next_raw() };
+        loop {
+            match self.next_raw()? {
+                Some((k, v)) => match self.pending.take() {
+                    None => self.pending = Some((k, v)),
+                    Some((pk, mut pv)) => {
+                        if pk == k {
+                            self.combined_bytes += pair_bytes(&k, &v);
+                            combine(&mut pv, v);
+                            self.pending = Some((pk, pv));
+                        } else {
+                            self.pending = Some((k, v));
+                            return Ok(Some((pk, pv)));
+                        }
+                    }
+                },
+                None => return Ok(self.pending.take()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::RunWriter;
+    use super::*;
+    use crate::metrics::PeakTracker;
+
+    /// Build a RunSet with `runs` disk runs of `per` reversed pairs each
+    /// plus an in-memory tail, by sizing the budget to the run length.
+    fn multi_run_set(runs: usize, per: usize) -> super::super::RunSet<u64, u64> {
+        let t = PeakTracker::new();
+        // (k, v) pairs charge ~22 bytes each; budget of per*22 gives runs
+        // of roughly `per` items.
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new((per as u64) * 22, t);
+        let total = runs * per;
+        for i in (0..total as u64).rev() {
+            w.push(i % 97, i).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    fn drain(mut m: KWayMerge<'_, u64, u64>) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        while let Some(p) = m.next().unwrap() {
+            out.push(p);
+        }
+        out
+    }
+
+    #[test]
+    fn merge_is_globally_key_ordered_and_complete() {
+        let set = multi_run_set(6, 40);
+        assert!(set.num_runs() >= 3, "runs {}", set.num_runs());
+        let got = drain(set.into_merge().unwrap());
+        assert_eq!(got.len(), 240);
+        assert!(got.windows(2).all(|w| w[0].0 <= w[1].0));
+        let mut values: Vec<u64> = got.iter().map(|(_, v)| *v).collect();
+        values.sort_unstable();
+        assert_eq!(values, (0..240).collect::<Vec<_>>(), "multiset preserved");
+    }
+
+    #[test]
+    fn merge_matches_naive_sort() {
+        let set = multi_run_set(5, 33);
+        let mut naive: Vec<(u64, u64)> = Vec::new();
+        for i in (0..165u64).rev() {
+            naive.push((i % 97, i));
+        }
+        naive.sort_by(|a, b| a.0.cmp(&b.0));
+        let keys = |v: &[(u64, u64)]| v.iter().map(|(k, _)| *k).collect::<Vec<_>>();
+        let got = drain(set.into_merge().unwrap());
+        assert_eq!(keys(&got), keys(&naive));
+    }
+
+    #[test]
+    fn merge_combiner_folds_across_runs() {
+        let set = multi_run_set(4, 50);
+        let add = |acc: &mut u64, v: u64| *acc = acc.wrapping_add(v);
+        let mut m = set.into_merge().unwrap().with_combiner(&add);
+        let mut keys = Vec::new();
+        let mut sum = 0u64;
+        while let Some((k, v)) = m.next().unwrap() {
+            keys.push(k);
+            sum = sum.wrapping_add(v);
+        }
+        // One pair per distinct key, strictly ascending.
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(sum, (0..200u64).sum::<u64>(), "values conserved");
+        assert!(m.combined_bytes() > 0);
+    }
+
+    #[test]
+    fn single_and_zero_run_edges() {
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(u64::MAX, Arc::clone(&t));
+        w.push(2, 20).unwrap();
+        w.push(1, 10).unwrap();
+        let got = drain(w.finish().unwrap().into_merge().unwrap());
+        assert_eq!(got, vec![(1, 10), (2, 20)]);
+
+        let empty: RunWriter<'_, u64, u64> = RunWriter::new(u64::MAX, t);
+        assert!(drain(empty.finish().unwrap().into_merge().unwrap()).is_empty());
+    }
+
+    #[test]
+    fn tie_break_prefers_earlier_run() {
+        // Two disk runs with the same key: run 0's value must come first.
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(30, t);
+        // Budget fits one pair: the second push spills a run, leaving
+        // disk run [(7,100),(7,200)] and in-memory tail [(7,300)].
+        w.push(7, 100).unwrap();
+        w.push(7, 200).unwrap();
+        w.push(7, 300).unwrap();
+        let set = w.finish().unwrap();
+        let got = drain(set.into_merge().unwrap());
+        assert_eq!(got, vec![(7, 100), (7, 200), (7, 300)]);
+    }
+}

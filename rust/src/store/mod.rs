@@ -1,0 +1,47 @@
+//! `store` — out-of-core sorted-run storage: the layer that lets
+//! delayed reduction (and the classic shuffle) survive inputs past the
+//! node's memory budget.
+//!
+//! The paper's own caveat on Delayed Reduction (§III.D) is that
+//! grouping happens in memory. This subsystem removes it with the
+//! classic external-merge-sort shape Thrill makes a first-class
+//! primitive:
+//!
+//!  * [`RunWriter`] stages `(K, V)` pairs under a byte budget
+//!    ([`crate::cluster::ClusterConfig::spill_threshold_bytes`], or the
+//!    `BLAZE_SPILL_THRESHOLD` env override); each overflow is sorted by
+//!    key — Rust's stable adaptive **merge sort**, literally the
+//!    paper's "sorting using Merge Sort" — and spilled as one encoded,
+//!    key-ordered run ([`crate::serial::Encoder`] framing on a
+//!    [`crate::util::tmp::TempFile`]).
+//!  * [`RunReader`] streams a run back holding one raw block
+//!    (≤ [`block_cap`]) at a time.
+//!  * [`KWayMerge`] is a loser-tree tournament over any mix of
+//!    in-memory and on-disk runs, yielding one key-ordered stream in
+//!    `O(log k)` comparisons per pair.
+//!  * [`GroupStream`] turns that stream into `(K, Iterable<V>)` groups
+//!    — one group in memory at a time, never the dataset.
+//!
+//! An optional [`Combiner`] (Hadoop's map-side combiner, Lu et al.'s
+//! local reduction) folds equal-key values at run-write and merge time;
+//! the folded-away bytes feed `JobStats::combined_bytes`.
+//!
+//! Memory contract (all charges on the job's
+//! [`crate::metrics::PeakTracker`]): staging ≤ budget + one pair;
+//! merging adds at most one block (≤ `block_cap(budget)`) per open run.
+//! `tests/integration_store.rs` asserts the end-to-end version of this
+//! bound through the engine.
+
+mod group;
+mod merge;
+mod run;
+
+pub use group::GroupStream;
+pub use merge::{KWayMerge, RunCursor};
+pub use run::{block_cap, RunReader, RunSet, RunSpan, RunWriter, PAIR_OVERHEAD};
+
+/// A map-side combine hook: fold `v` into the accumulator for one key.
+/// Must be associative (Hadoop's combiner contract): the framework may
+/// apply it zero or more times, at run-write or merge time, on any
+/// bracketing of a key's values.
+pub type Combiner<'f, V> = &'f (dyn Fn(&mut V, V) + Sync);

@@ -1,0 +1,532 @@
+//! Sorted spill runs: [`RunWriter`] stages `(K, V)` pairs under a byte
+//! budget and sorts each overflow into an encoded, key-ordered run on
+//! disk; [`RunSet`] owns the finished runs; [`RunReader`] streams a run
+//! back one block at a time.
+//!
+//! ## On-disk format
+//!
+//! A run is a sequence of *blocks*, each framed as
+//!
+//! ```text
+//! [u64 LE payload length][payload = varint pair count, then count x (K, V)]
+//! ```
+//!
+//! Blocks are capped near [`block_cap`] bytes, so a reader never holds
+//! more than one block of raw bytes — the "constant per-run overhead"
+//! the memory-budget contract is stated in. The same frame is what
+//! [`crate::core::SpillBuffer`] has always written, which is why its
+//! drain path can stream through [`RunReader`] too.
+//!
+//! All staged memory is charged to the job's
+//! [`crate::metrics::PeakTracker`]; the invariant (asserted by the unit
+//! tests below) is that a writer + its readers never hold more than
+//! `budget + num_runs * block_cap(budget)` tracked bytes.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::metrics::PeakTracker;
+use crate::serial::{Decoder, Encoder, FastSerialize};
+use crate::util::tmp::TempFile;
+
+use super::Combiner;
+
+/// Modeled per-pair container overhead (matches `SpillBuffer`'s charge).
+pub const PAIR_OVERHEAD: u64 = 16;
+
+/// Raw-byte cap for one run block under `budget`: a sixteenth of the
+/// budget, clamped to [256 B, 16 KiB]. One block per open run is the
+/// constant per-run overhead of merging — kept a small fraction of the
+/// budget so a k-way merge's fan-in memory stays far below the data it
+/// is merging.
+pub fn block_cap(budget: u64) -> usize {
+    (budget / 16).clamp(256, 16 << 10) as usize
+}
+
+/// Modeled bytes of one staged pair.
+#[inline]
+pub(crate) fn pair_bytes<K: FastSerialize, V: FastSerialize>(k: &K, v: &V) -> u64 {
+    (k.size_hint() + v.size_hint()) as u64 + PAIR_OVERHEAD
+}
+
+/// A tracker charge that releases itself on drop (transfer semantics:
+/// the bytes were already alloc'd by whoever hands us the charge).
+pub(crate) struct Charge {
+    tracker: Arc<PeakTracker>,
+    bytes: u64,
+}
+
+impl Charge {
+    pub(crate) fn transfer(tracker: Arc<PeakTracker>, bytes: u64) -> Self {
+        Self { tracker, bytes }
+    }
+}
+
+impl Drop for Charge {
+    fn drop(&mut self) {
+        self.tracker.free(self.bytes);
+    }
+}
+
+/// One key-ordered run's span inside the shared spill file.
+#[derive(Debug, Clone, Copy)]
+pub struct RunSpan {
+    pub(crate) start: u64,
+    pub(crate) end: u64,
+    /// Pairs in the run (post-combine).
+    pub items: u64,
+}
+
+/// The spill file once writing is done: an owner that unlinks the path
+/// on drop plus a cloned handle readers share via positional reads.
+pub(crate) struct SharedSpill {
+    pub(crate) reader: Arc<File>,
+    _owner: TempFile,
+}
+
+impl SharedSpill {
+    fn new(mut owner: TempFile) -> Result<Self> {
+        let reader =
+            Arc::new(owner.file().try_clone().context("cloning spill file for readers")?);
+        Ok(Self { reader, _owner: owner })
+    }
+}
+
+/// Append `count` pairs already encoded in `records` as one framed block.
+fn flush_block(file: &mut File, pos: &mut u64, count: u64, records: &Encoder) -> Result<()> {
+    if count == 0 {
+        return Ok(());
+    }
+    let mut head = Encoder::with_capacity(10);
+    head.put_varint(count);
+    let payload = (head.len() + records.len()) as u64;
+    file.write_all(&payload.to_le_bytes())?;
+    file.write_all(head.as_bytes())?;
+    file.write_all(records.as_bytes())?;
+    *pos += 8 + payload;
+    Ok(())
+}
+
+/// Stages `(K, V)` pairs under a memory budget; each overflow is sorted
+/// (stably, by key) and written to disk as one key-ordered run. An
+/// optional [`Combiner`] folds equal-key values at sort time — the
+/// map-side combiner hook.
+pub struct RunWriter<'f, K, V> {
+    budget: u64,
+    block_cap: usize,
+    staged: Vec<(K, V)>,
+    staged_bytes: u64,
+    combiner: Option<Combiner<'f, V>>,
+    combined_bytes: u64,
+    spill: Option<TempFile>,
+    write_pos: u64,
+    runs: Vec<RunSpan>,
+    spilled_bytes: u64,
+    tracker: Arc<PeakTracker>,
+}
+
+impl<'f, K, V> RunWriter<'f, K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    /// `budget` = max staged bytes before a run is spilled
+    /// (`u64::MAX` = stage everything in memory: the in-core path).
+    pub fn new(budget: u64, tracker: Arc<PeakTracker>) -> Self {
+        Self {
+            budget,
+            block_cap: block_cap(budget),
+            staged: Vec::new(),
+            staged_bytes: 0,
+            combiner: None,
+            combined_bytes: 0,
+            spill: None,
+            write_pos: 0,
+            runs: Vec::new(),
+            spilled_bytes: 0,
+            tracker,
+        }
+    }
+
+    /// Fold equal-key values with `combine` whenever a run is sorted.
+    /// `combine` must be associative (Hadoop's combiner contract).
+    pub fn with_combiner(mut self, combine: Combiner<'f, V>) -> Self {
+        self.combiner = Some(combine);
+        self
+    }
+
+    pub fn push(&mut self, key: K, value: V) -> Result<()> {
+        let sz = pair_bytes(&key, &value);
+        self.staged_bytes += sz;
+        self.tracker.alloc(sz);
+        self.staged.push((key, value));
+        if self.staged_bytes > self.budget {
+            self.spill_run()?;
+        }
+        Ok(())
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+    }
+
+    /// Modeled bytes of pairs the combiner has folded away so far.
+    pub fn combined_bytes(&self) -> u64 {
+        self.combined_bytes
+    }
+
+    /// Sort the staged pairs by key (stable: insertion order survives
+    /// within a key) and, with a combiner, fold equal keys in place.
+    fn sort_and_combine(&mut self) {
+        self.staged.sort_by(|a, b| a.0.cmp(&b.0));
+        let Some(combine) = self.combiner else { return };
+        if self.staged.is_empty() {
+            return;
+        }
+        let mut out: Vec<(K, V)> = Vec::with_capacity(self.staged.len());
+        for (k, v) in self.staged.drain(..) {
+            match out.last_mut() {
+                Some((lk, lv)) if *lk == k => {
+                    self.combined_bytes += pair_bytes(&k, &v);
+                    combine(lv, v);
+                }
+                _ => out.push((k, v)),
+            }
+        }
+        self.staged = out;
+        // Re-estimate after folding (fewer pairs, possibly wider values).
+        let now: u64 = self.staged.iter().map(|(k, v)| pair_bytes(k, v)).sum();
+        if now < self.staged_bytes {
+            self.tracker.free(self.staged_bytes - now);
+        } else {
+            self.tracker.alloc(now - self.staged_bytes);
+        }
+        self.staged_bytes = now;
+    }
+
+    /// Sort + (combine) + encode the staged pairs to disk as one run.
+    /// If combining alone shrinks staging to half the budget (hot-key
+    /// workloads), nothing is written — Hadoop's combine-on-spill. The
+    /// half-budget hysteresis matters: a retained fold leaves at least
+    /// budget/2 of headroom before the next overflow re-sorts the
+    /// staging vec, so per-push work stays amortized even when the
+    /// folded working set hovers near the budget (those spill).
+    fn spill_run(&mut self) -> Result<()> {
+        self.sort_and_combine();
+        if self.staged.is_empty() {
+            return Ok(());
+        }
+        if self.combiner.is_some() && self.staged_bytes <= self.budget / 2 {
+            return Ok(());
+        }
+        if self.spill.is_none() {
+            self.spill = Some(TempFile::new("blaze-run").context("creating run spill file")?);
+        }
+        let staged = std::mem::take(&mut self.staged);
+        let file = self.spill.as_mut().expect("spill file just ensured").file();
+        let start = self.write_pos;
+        let mut pos = self.write_pos;
+        let mut records = Encoder::with_capacity(self.block_cap + 64);
+        let mut count = 0u64;
+        let items = staged.len() as u64;
+        for (k, v) in staged {
+            k.encode(&mut records);
+            v.encode(&mut records);
+            count += 1;
+            if records.len() >= self.block_cap {
+                flush_block(file, &mut pos, count, &records)?;
+                records.clear();
+                count = 0;
+            }
+        }
+        flush_block(file, &mut pos, count, &records)?;
+        self.write_pos = pos;
+        self.runs.push(RunSpan { start, end: pos, items });
+        self.spilled_bytes += pos - start;
+        self.tracker.free(self.staged_bytes);
+        self.staged_bytes = 0;
+        Ok(())
+    }
+
+    /// Sort the in-memory tail and hand every run over as a [`RunSet`].
+    pub fn finish(mut self) -> Result<RunSet<K, V>> {
+        self.sort_and_combine();
+        let mem_run = std::mem::take(&mut self.staged);
+        let mem_items = mem_run.len() as u64;
+        let charge =
+            Charge::transfer(self.tracker.clone(), std::mem::replace(&mut self.staged_bytes, 0));
+        let spill = match self.spill.take() {
+            Some(tf) => Some(SharedSpill::new(tf)?),
+            None => None,
+        };
+        let disk_items: u64 = self.runs.iter().map(|r| r.items).sum();
+        Ok(RunSet {
+            mem_run,
+            charge,
+            spill,
+            runs: std::mem::take(&mut self.runs),
+            spilled_bytes: self.spilled_bytes,
+            combined_bytes: self.combined_bytes,
+            items: mem_items + disk_items,
+            tracker: self.tracker.clone(),
+        })
+    }
+}
+
+impl<K, V> Drop for RunWriter<'_, K, V> {
+    fn drop(&mut self) {
+        self.tracker.free(self.staged_bytes);
+    }
+}
+
+/// The finished output of a [`RunWriter`]: zero or more key-ordered
+/// disk runs plus the key-ordered in-memory tail run. Consume it with
+/// [`RunSet::into_merge`] to get one globally key-ordered stream.
+pub struct RunSet<K, V> {
+    pub(crate) mem_run: Vec<(K, V)>,
+    pub(crate) charge: Charge,
+    pub(crate) spill: Option<SharedSpill>,
+    pub(crate) runs: Vec<RunSpan>,
+    spilled_bytes: u64,
+    combined_bytes: u64,
+    items: u64,
+    pub(crate) tracker: Arc<PeakTracker>,
+}
+
+impl<K, V> RunSet<K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    /// Disk runs + the in-memory tail (when non-empty).
+    pub fn num_runs(&self) -> usize {
+        self.runs.len() + usize::from(!self.mem_run.is_empty())
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+    }
+
+    pub fn combined_bytes(&self) -> u64 {
+        self.combined_bytes
+    }
+
+    /// Total pairs across all runs (post-combine).
+    pub fn total_items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items == 0
+    }
+
+    /// Decompose for the merge layer (run module owns the fields).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn into_parts(
+        self,
+    ) -> (Vec<(K, V)>, Charge, Option<SharedSpill>, Vec<RunSpan>, Arc<PeakTracker>) {
+        (self.mem_run, self.charge, self.spill, self.runs, self.tracker)
+    }
+}
+
+/// Streams one run back from disk, holding at most one raw block
+/// (≤ the writer's block cap) at a time. The held block's raw length is
+/// charged to the tracker while buffered.
+pub struct RunReader<K, V> {
+    file: Arc<File>,
+    pos: u64,
+    end: u64,
+    block: VecDeque<(K, V)>,
+    block_bytes: u64,
+    tracker: Arc<PeakTracker>,
+}
+
+impl<K, V> RunReader<K, V>
+where
+    K: FastSerialize,
+    V: FastSerialize,
+{
+    /// Stream the frames in `file` between byte offsets `start..end`.
+    pub fn new(file: Arc<File>, start: u64, end: u64, tracker: Arc<PeakTracker>) -> Self {
+        Self { file, pos: start, end, block: VecDeque::new(), block_bytes: 0, tracker }
+    }
+
+    pub(crate) fn for_span(
+        file: Arc<File>,
+        span: RunSpan,
+        tracker: Arc<PeakTracker>,
+    ) -> Self {
+        Self::new(file, span.start, span.end, tracker)
+    }
+
+    /// Next pair in run order, or `None` at end of run.
+    pub fn next(&mut self) -> Result<Option<(K, V)>> {
+        loop {
+            if let Some(pair) = self.block.pop_front() {
+                return Ok(Some(pair));
+            }
+            if self.pos >= self.end {
+                self.tracker.free(self.block_bytes);
+                self.block_bytes = 0;
+                return Ok(None);
+            }
+            self.load_block()?;
+        }
+    }
+
+    fn load_block(&mut self) -> Result<()> {
+        ensure!(self.pos + 8 <= self.end, "truncated run frame at {}", self.pos);
+        let mut lenb = [0u8; 8];
+        self.file.read_exact_at(&mut lenb, self.pos).context("reading run frame header")?;
+        let len = u64::from_le_bytes(lenb);
+        ensure!(self.pos + 8 + len <= self.end, "run block overruns its span");
+        let mut payload = vec![0u8; len as usize];
+        self.file.read_exact_at(&mut payload, self.pos + 8).context("reading run block")?;
+        self.pos += 8 + len;
+        self.tracker.free(self.block_bytes);
+        self.block_bytes = len;
+        self.tracker.alloc(self.block_bytes);
+        let mut dec = Decoder::new(&payload);
+        let count = dec.get_varint()?;
+        for _ in 0..count {
+            let k = K::decode(&mut dec)?;
+            let v = V::decode(&mut dec)?;
+            self.block.push_back((k, v));
+        }
+        dec.finish()?;
+        Ok(())
+    }
+}
+
+impl<K, V> Drop for RunReader<K, V> {
+    fn drop(&mut self) {
+        self.tracker.free(self.block_bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_merge(set: RunSet<u64, u64>) -> Vec<(u64, u64)> {
+        let mut m = set.into_merge().unwrap();
+        let mut out = Vec::new();
+        while let Some(p) = m.next().unwrap() {
+            out.push(p);
+        }
+        out
+    }
+
+    #[test]
+    fn in_core_writer_sorts_stably() {
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(u64::MAX, t.clone());
+        for (k, v) in [(3u64, 0u64), (1, 1), (3, 2), (2, 3), (1, 4)] {
+            w.push(k, v).unwrap();
+        }
+        let set = w.finish().unwrap();
+        assert_eq!(set.num_runs(), 1);
+        assert_eq!(set.spilled_bytes(), 0);
+        let got = drain_merge(set);
+        // Stable by key: (1,1) before (1,4), (3,0) before (3,2).
+        assert_eq!(got, vec![(1, 1), (1, 4), (2, 3), (3, 0), (3, 2)]);
+        assert_eq!(t.current_bytes(), 0, "all charges released");
+    }
+
+    #[test]
+    fn tiny_budget_spills_sorted_runs_and_merges_back() {
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(256, t.clone());
+        // Reverse order input: forces real sorting inside every run.
+        for i in (0..500u64).rev() {
+            w.push(i, i * 7).unwrap();
+        }
+        let set = w.finish().unwrap();
+        assert!(set.num_runs() > 1, "expected several runs, got {}", set.num_runs());
+        assert!(set.spilled_bytes() > 0);
+        assert_eq!(set.total_items(), 500);
+        let got = drain_merge(set);
+        assert_eq!(got.len(), 500);
+        assert!(got.windows(2).all(|w| w[0].0 <= w[1].0), "globally key-ordered");
+        assert_eq!(got.iter().map(|(k, _)| *k).collect::<Vec<_>>(), (0..500).collect::<Vec<_>>());
+        assert!(got.iter().all(|(k, v)| *v == k * 7));
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn combiner_folds_at_run_write_and_counts_bytes() {
+        let t = PeakTracker::new();
+        let combine = |acc: &mut u64, v: u64| *acc += v;
+        let mut w: RunWriter<'_, u64, u64> =
+            RunWriter::new(200, t.clone()).with_combiner(&combine);
+        for i in 0..300u64 {
+            w.push(i % 3, 1).unwrap();
+        }
+        let set = w.finish().unwrap();
+        assert!(set.combined_bytes() > 0, "combiner must have folded pairs");
+        // 3 distinct keys per run: far fewer surviving items than 300.
+        assert!(set.total_items() < 50, "items {}", set.total_items());
+        let got = drain_merge(set);
+        let total: u64 = got.iter().map(|(_, v)| v).sum();
+        assert_eq!(total, 300, "combined counts conserve the multiset");
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn writer_peak_stays_near_budget_plus_block_overhead() {
+        let t = PeakTracker::new();
+        let budget = 512u64;
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(budget, t.clone());
+        for i in 0..20_000u64 {
+            w.push(i ^ 0x5a5a, i).unwrap();
+        }
+        // Staging alone must stay within budget + one pair.
+        assert!(t.peak_bytes() < budget + 64, "staging peak {}", t.peak_bytes());
+        let set = w.finish().unwrap();
+        let runs = set.num_runs() as u64;
+        let got = drain_merge(set);
+        assert_eq!(got.len(), 20_000);
+        // Merging adds at most one raw block per run.
+        let bound = budget + runs * block_cap(budget) as u64 + 64;
+        assert!(t.peak_bytes() <= bound, "peak {} > bound {bound}", t.peak_bytes());
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn empty_writer_finishes_empty() {
+        let t = PeakTracker::new();
+        let w: RunWriter<'_, String, u64> = RunWriter::new(64, t.clone());
+        let set = w.finish().unwrap();
+        assert!(set.is_empty());
+        assert_eq!(set.num_runs(), 0);
+        let mut m = set.into_merge().unwrap();
+        assert!(m.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn string_keys_roundtrip_through_disk_runs() {
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, String, u64> = RunWriter::new(300, t.clone());
+        for i in 0..200u64 {
+            w.push(format!("key{:03}", i % 40), i).unwrap();
+        }
+        let set = w.finish().unwrap();
+        assert!(set.spilled_bytes() > 0);
+        let mut m = set.into_merge().unwrap();
+        let mut n = 0;
+        let mut last: Option<String> = None;
+        while let Some((k, _)) = m.next().unwrap() {
+            if let Some(prev) = &last {
+                assert!(*prev <= k);
+            }
+            last = Some(k);
+            n += 1;
+        }
+        assert_eq!(n, 200);
+    }
+}

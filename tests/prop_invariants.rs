@@ -310,6 +310,105 @@ fn prop_pooled_alltoallv_conserves_and_stays_deterministic_across_resizes() {
 }
 
 #[test]
+fn prop_out_of_core_equals_in_memory_across_budgets() {
+    // The store subsystem's core invariant: for ANY memory budget —
+    // including a few hundred bytes, where every stage spills, the
+    // shuffle needs many rounds, and the merges fan in dozens of runs —
+    // delayed and classic modes must produce exactly the in-memory
+    // (unlimited-budget) result. Every case is another job on one warm
+    // RankPool, so this also workouts store state isolation across
+    // pooled jobs.
+    use blaze_rs::core::{MapReduceJob, ReductionMode};
+    use blaze_rs::mpi::RankPool;
+
+    const MAX_RANKS: usize = 4;
+    let pool = RankPool::from_config(&ClusterConfig::builder().ranks(MAX_RANKS).build());
+    let wc_map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+        for w in line.split_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    };
+    for_all(
+        "out-of-core == in-memory for delayed+classic over random budgets",
+        |r| {
+            let lines = vec_of(r, 24, |r| {
+                (0..1 + r.below(6))
+                    .map(|_| format!("w{}", r.below(16)))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            });
+            let ranks = 1 + r.below(MAX_RANKS as u64) as usize;
+            // Budgets from "a few hundred bytes" up through comfortable.
+            let budget = 200 + r.below(8_000);
+            let mode = if r.below(2) == 0 { ReductionMode::Classic } else { ReductionMode::Delayed };
+            (lines, ranks, budget, mode)
+        },
+        |(lines, ranks, budget, mode)| {
+            let tight =
+                ClusterConfig::builder().ranks(*ranks).shuffle_buffer_bytes(*budget).build();
+            let roomy =
+                ClusterConfig::builder().ranks(*ranks).shuffle_buffer_bytes(u64::MAX).build();
+            let run = |cluster: &ClusterConfig| {
+                MapReduceJob::new(cluster, lines)
+                    .with_mode(*mode)
+                    .with_pool(&pool)
+                    .run_monoid(wc_map, |a: u64, b: u64| a + b)
+                    .unwrap()
+                    .result
+            };
+            let truth = blaze_rs::apps::wordcount::count_serial(lines);
+            let out_of_core = run(&tight);
+            out_of_core == run(&roomy) && out_of_core == truth
+        },
+    );
+}
+
+#[test]
+fn prop_classic_combiner_never_changes_the_result() {
+    // Hadoop's combiner contract as a property: folding equal-key values
+    // at run-write/merge time must be invisible in the output, for any
+    // budget and width — only JobStats bytes may differ.
+    use blaze_rs::core::MapReduceJob;
+    use blaze_rs::mpi::RankPool;
+
+    let pool = RankPool::from_config(&ClusterConfig::builder().ranks(4).build());
+    let wc_map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+        for w in line.split_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    };
+    for_all(
+        "classic+combiner == classic for random corpora and budgets",
+        |r| {
+            let lines = vec_of(r, 20, |r| {
+                (0..1 + r.below(6))
+                    .map(|_| format!("w{}", r.below(8)))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            });
+            (lines, 1 + r.below(4) as usize, 250 + r.below(4_000))
+        },
+        |(lines, ranks, budget)| {
+            let cluster =
+                ClusterConfig::builder().ranks(*ranks).shuffle_buffer_bytes(*budget).build();
+            let raw = MapReduceJob::new(&cluster, lines)
+                .with_pool(&pool)
+                .run_classic(wc_map, |_k, vs: Vec<u64>| vs.into_iter().sum())
+                .unwrap();
+            let combined = MapReduceJob::new(&cluster, lines)
+                .with_pool(&pool)
+                .run_classic_with_combiner(
+                    wc_map,
+                    |a: &mut u64, b: u64| *a += b,
+                    |_k, vs: Vec<u64>| vs.into_iter().sum(),
+                )
+                .unwrap();
+            raw.result == combined.result && raw.stats.combined_bytes == 0
+        },
+    );
+}
+
+#[test]
 fn prop_varint_size_monotone() {
     use blaze_rs::serial::Encoder;
     for_all(
