@@ -118,6 +118,40 @@ fn main() {
             }
             n
         }));
+        // Receiver-side restage shapes: the same 20 presorted chunks
+        // (what a 20-round shuffle delivers from one source) staged via
+        // push_sorted_run (zero-comparison, run-per-chunk) vs pushed
+        // pair by pair (re-sorted at every spill — the old shape).
+        let mut sorted_chunks: Vec<Vec<(u64, u64)>> = Vec::new();
+        for c in 0..20u64 {
+            sorted_chunks.push((0..500).map(|i| (i, c * 1_000 + i)).collect());
+        }
+        results.push(bench("store/restage 20 presorted chunks (run-per-chunk)", 2, 10, || {
+            let mut w: RunWriter<'_, u64, u64> = RunWriter::new(16 << 10, tracker.clone());
+            for chunk in &sorted_chunks {
+                w.push_sorted_run(chunk.clone()).unwrap();
+            }
+            let mut merge = w.finish().unwrap().into_merge().unwrap();
+            let mut n = 0usize;
+            while merge.next().unwrap().is_some() {
+                n += 1;
+            }
+            n
+        }));
+        results.push(bench("store/restage 20 presorted chunks (re-sort baseline)", 2, 10, || {
+            let mut w: RunWriter<'_, u64, u64> = RunWriter::new(16 << 10, tracker.clone());
+            for chunk in &sorted_chunks {
+                for (k, v) in chunk {
+                    w.push(*k, *v).unwrap();
+                }
+            }
+            let mut merge = w.finish().unwrap().into_merge().unwrap();
+            let mut n = 0usize;
+            while merge.next().unwrap().is_some() {
+                n += 1;
+            }
+            n
+        }));
     }
 
     // --- collectives (4-rank in-proc universe) ---------------------------
@@ -136,6 +170,39 @@ fn main() {
             acc
         })
     }));
+    // Collective algorithm shapes on one warm 16-rank pool: host wall is
+    // noise here, the interesting number is the virtual clock (see the
+    // tree-ablation figure); this case just keeps all three shapes on
+    // the bench radar for host-side regressions.
+    {
+        use blaze_rs::mpi::{CollectiveAlgo, Topology};
+        use blaze_rs::cluster::NetworkModel;
+        let pool = RankPool::new(Universe::new(
+            Topology::block(4, 4),
+            NetworkModel::free(),
+        ));
+        for algo in CollectiveAlgo::ALL {
+            results.push(bench(
+                match algo {
+                    CollectiveAlgo::Star => "mpi/allreduce x50, 16 ranks, star",
+                    CollectiveAlgo::Tree => "mpi/allreduce x50, 16 ranks, tree",
+                    CollectiveAlgo::Hierarchical => "mpi/allreduce x50, 16 ranks, hierarchical",
+                },
+                1,
+                10,
+                || {
+                    pool.run(|c| {
+                        c.set_collective_algo(algo);
+                        let mut acc = 0u64;
+                        for i in 0..50 {
+                            acc += c.allreduce_sum_u64(i).unwrap();
+                        }
+                        acc
+                    })
+                },
+            ));
+        }
+    }
 
     // --- end-to-end tiny job (engine overhead floor) ---------------------
     let corpus = blaze_rs::apps::wordcount::generate_corpus(1_000, 8, 200, 3);

@@ -161,6 +161,7 @@ pub fn run_on_pool(
             startup_ms: profile.startup_ms as f64,
             shuffle_bytes: out.traffic.bytes,
             messages: out.traffic.messages,
+            remote_messages: out.traffic.remote_messages,
             remote_bytes: out.traffic.remote_bytes,
             peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
             spilled_bytes: 0,
@@ -218,8 +219,11 @@ pub fn run_wave_jobs(
             Some(pool) => pool.run_job(ranks, wave),
             // Spawn-per-wave: a throwaway pool per iteration, the old
             // `run_ranks` cost structure.
-            None => RankPool::new(Universe::new(topology.clone(), network.clone()))
-                .run_job(ranks, wave),
+            None => RankPool::new(
+                Universe::new(topology.clone(), network.clone())
+                    .with_collective_algo(cluster.collective_algo()),
+            )
+            .run_job(ranks, wave),
         };
         let (next, iner) = collapse_rank_results(out.results)?;
         centroids = next;
@@ -249,6 +253,7 @@ pub fn run_wave_jobs(
             startup_ms: profile.startup_ms as f64,
             shuffle_bytes: traffic.bytes,
             messages: traffic.messages,
+            remote_messages: traffic.remote_messages,
             remote_bytes: traffic.remote_bytes,
             peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
             spilled_bytes: 0,

@@ -157,6 +157,7 @@ pub fn run_on_pool(
             startup_ms: profile.startup_ms as f64,
             shuffle_bytes: out.traffic.bytes,
             messages: out.traffic.messages,
+            remote_messages: out.traffic.remote_messages,
             remote_bytes: out.traffic.remote_bytes,
             peak_mem_bytes: ((d + 1) * 4 * ranks) as u64 + (data.x.len() * 4) as u64,
             spilled_bytes: 0,

@@ -102,7 +102,8 @@ pub fn run_kernel(
     compute.warmup("pi_count")?;
     let total: u64 = chunks.iter().map(|c| c.samples as u64).sum();
     let topology = Topology::from_config(cluster);
-    let universe = Universe::new(topology, cluster.network_model());
+    let universe = Universe::new(topology, cluster.network_model())
+        .with_collective_algo(cluster.collective_algo());
     let stats = universe.stats();
     let wall = std::time::Instant::now();
 
@@ -148,7 +149,7 @@ pub fn run_kernel(
 
     let profile = cluster.deployment.profile();
     let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
-    let (msgs, bytes, _, rbytes) = stats.snapshot();
+    let (msgs, bytes, rmsgs, rbytes) = stats.snapshot();
     Ok(JobResult {
         result: estimate(inside, total),
         stats: crate::core::JobStats {
@@ -158,6 +159,7 @@ pub fn run_kernel(
             startup_ms: profile.startup_ms as f64,
             shuffle_bytes: bytes,
             messages: msgs,
+            remote_messages: rmsgs,
             remote_bytes: rbytes,
             peak_mem_bytes: (KERNEL_TILE * 2 * 4 * ranks) as u64,
             spilled_bytes: 0,

@@ -98,7 +98,8 @@ pub fn run_segsum_kernel(
 ) -> Result<JobResult<HashMap<String, u64>>> {
     compute.warmup("wordcount_segsum")?;
     let topology = Topology::from_config(cluster);
-    let universe = Universe::new(topology, cluster.network_model());
+    let universe = Universe::new(topology, cluster.network_model())
+        .with_collective_algo(cluster.collective_algo());
     let stats = universe.stats();
     let wall = std::time::Instant::now();
 
@@ -173,7 +174,7 @@ pub fn run_segsum_kernel(
 
     let profile = cluster.deployment.profile();
     let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
-    let (msgs, bytes, _, rbytes) = stats.snapshot();
+    let (msgs, bytes, rmsgs, rbytes) = stats.snapshot();
     Ok(JobResult {
         result,
         stats: crate::core::JobStats {
@@ -183,6 +184,7 @@ pub fn run_segsum_kernel(
             startup_ms: profile.startup_ms as f64,
             shuffle_bytes: bytes,
             messages: msgs,
+            remote_messages: rmsgs,
             remote_bytes: rbytes,
             peak_mem_bytes: (SEGSUM_KEYS as u64) * 4 * cluster.ranks() as u64,
             spilled_bytes: 0,

@@ -40,10 +40,15 @@ pub enum FigureId {
     /// in-core -> out-of-core transition, plus the three-way
     /// classic/eager/classic+combiner shuffle-bytes comparison.
     SpillCrossover,
+    /// E11 — tree ablation: rank count x collective algorithm. The
+    /// virtual-clock gap between star and tree collectives widens with
+    /// rank count, and the Fig 10 wordcount curve bends when the
+    /// runtime gets smarter collectives.
+    TreeAblation,
 }
 
 impl FigureId {
-    pub const ALL: [FigureId; 10] = [
+    pub const ALL: [FigureId; 11] = [
         FigureId::Fig8,
         FigureId::Fig9,
         FigureId::Fig10,
@@ -54,6 +59,7 @@ impl FigureId {
         FigureId::Deployment,
         FigureId::PoolAblation,
         FigureId::SpillCrossover,
+        FigureId::TreeAblation,
     ];
 
     pub fn parse(s: &str) -> Option<FigureId> {
@@ -68,6 +74,7 @@ impl FigureId {
             "deployment" | "e8" => FigureId::Deployment,
             "pool-ablation" | "e9" => FigureId::PoolAblation,
             "spill-crossover" | "e10" => FigureId::SpillCrossover,
+            "tree-ablation" | "e11" => FigureId::TreeAblation,
             _ => return None,
         })
     }
@@ -84,6 +91,7 @@ impl FigureId {
             FigureId::Deployment => "deployment",
             FigureId::PoolAblation => "pool-ablation",
             FigureId::SpillCrossover => "spill-crossover",
+            FigureId::TreeAblation => "tree-ablation",
         }
     }
 }
@@ -112,6 +120,7 @@ pub fn run_figure(id: FigureId, quick: bool) -> Result<Report> {
         FigureId::Deployment => deployment(quick),
         FigureId::PoolAblation => pool_ablation(quick),
         FigureId::SpillCrossover => spill_crossover(quick),
+        FigureId::TreeAblation => tree_ablation(quick),
     }
 }
 
@@ -422,6 +431,111 @@ fn spill_crossover(quick: bool) -> Result<Report> {
     Ok(report)
 }
 
+/// E11 — the collective-algorithm ablation (ISSUE 4 tentpole). Part 1
+/// is a pure-collective microbench on the VM network model — rounds of
+/// a 64 KiB broadcast + an allreduce, swept over rank count x algorithm.
+/// The y-axis is purely the charged network clock (no `timed` compute),
+/// so the curves are deterministic: the star root pays `O(P)` serial
+/// injections per broadcast while the tree pays `O(log P)` levels, and
+/// the gap widens with rank count — the "what if the runtime were
+/// smarter" axis over Fig 10's anti-scaling. Part 2 re-runs Fig 10's
+/// small-key-range wordcount (2 slots/node so coalescing has same-node
+/// company) under each algorithm, showing the curve bending end to end.
+fn tree_ablation(quick: bool) -> Result<Report> {
+    use crate::cluster::NetworkModel;
+    use crate::mpi::{CollectiveAlgo, Communicator, Rank, RankPool, Topology, Universe};
+
+    let rounds = if quick { 3 } else { 10 };
+    let mut report =
+        Report::new("E11 — tree ablation: rank count x collective algorithm (VM network)");
+
+    // Part 1: collective microbench. 2 slots per node; virtual clock only.
+    let rank_sweep: &[usize] = if quick { &[4, 8, 16, 32] } else { &[4, 8, 16, 32, 64] };
+    let net = NetworkModel::from_profile(&DeploymentKind::Vm.profile());
+    let mut clock_series: Vec<Series> = CollectiveAlgo::ALL
+        .iter()
+        .map(|a| Series::new(format!("collectives {a}"), "ranks", "modeled_ms"))
+        .collect();
+    let mut root_msgs_note: Vec<String> = Vec::new();
+    for &ranks in rank_sweep {
+        for (ai, algo) in CollectiveAlgo::ALL.iter().enumerate() {
+            let pool = RankPool::new(
+                Universe::new(Topology::block(ranks / 2, 2), net.clone())
+                    .with_collective_algo(*algo),
+            );
+            let out = pool.run_job(ranks, |c: &Communicator| {
+                let payload = vec![0xABu8; 64 << 10];
+                let mut acc = 0u64;
+                for _ in 0..rounds {
+                    let v = if c.is_root() { payload.clone() } else { Vec::new() };
+                    acc = acc.wrapping_add(c.bcast(Rank::ROOT, v).unwrap().len() as u64);
+                    acc = acc.wrapping_add(c.allreduce_sum_u64(c.rank().0 as u64).unwrap());
+                }
+                (acc, c.sent_messages() + c.received_messages())
+            });
+            let slowest = out.clocks.iter().map(|(clk, _, _)| *clk).max().unwrap_or(0);
+            clock_series[ai].push(ranks as f64, slowest as f64 / 1e6);
+            if ranks == *rank_sweep.last().unwrap() {
+                root_msgs_note.push(format!("{algo}: root touched {} msgs", out.results[0].1));
+            }
+        }
+    }
+    let gap = |i: usize| clock_series[0].points[i].1 - clock_series[1].points[i].1;
+    let last = rank_sweep.len() - 1;
+    report.note(format!(
+        "star-minus-tree clock gap: {:.2} ms at {} ranks -> {:.2} ms at {} ranks (widening = \
+         the Fig 10 'smarter runtime' axis)",
+        gap(0),
+        rank_sweep[0],
+        gap(last),
+        rank_sweep[last],
+    ));
+    report.note(format!(
+        "root message counts at {} ranks — {}",
+        rank_sweep[last],
+        root_msgs_note.join("; ")
+    ));
+
+    // Part 2: Fig 10's wordcount, per algorithm, 2 slots per node.
+    let corpus = wordcount::generate_corpus(2_000, 8, 50, 42);
+    let mut wc_series: Vec<Series> = CollectiveAlgo::ALL
+        .iter()
+        .map(|a| Series::new(format!("wordcount {a}"), "nodes", "modeled_ms"))
+        .collect();
+    let mut remote_msgs = [0u64; 3];
+    for nodes in NODE_SWEEP {
+        for (ai, algo) in CollectiveAlgo::ALL.iter().enumerate() {
+            let cluster = ClusterConfig::builder()
+                .deployment(DeploymentKind::Vm)
+                .nodes(nodes)
+                .slots_per_node(2)
+                .seed(42)
+                .collective_algo(*algo)
+                .build();
+            let r = wordcount::run(&cluster, &corpus, ReductionMode::Eager)?;
+            wc_series[ai].push(nodes as f64, r.stats.modeled_ms);
+            if nodes == NODE_SWEEP[NODE_SWEEP.len() - 1] {
+                remote_msgs[ai] = r.stats.remote_messages;
+            }
+        }
+    }
+    report.note(format!(
+        "wordcount remote messages at {} nodes: star {}, tree {}, hierarchical {} (node \
+         coalescing)",
+        NODE_SWEEP[NODE_SWEEP.len() - 1],
+        remote_msgs[0],
+        remote_msgs[1],
+        remote_msgs[2],
+    ));
+    for s in clock_series {
+        report.add(s);
+    }
+    for s in wc_series {
+        report.add(s);
+    }
+    Ok(report)
+}
+
 /// E8 — §III deployment comparison: the same WordCount under the three
 /// proposed architectures (Figs 3-5) + Local reference.
 fn deployment(quick: bool) -> Result<Report> {
@@ -482,6 +596,32 @@ mod tests {
             (bytes.points[0].1, bytes.points[1].1, bytes.points[2].1);
         assert!(combined < classic, "combiner must cut classic volume");
         assert!(eager <= combined, "eager stays the leanest");
+    }
+
+    #[test]
+    fn tree_ablation_quick_gap_widens_with_rank_count() {
+        let r = run_figure(FigureId::TreeAblation, true).unwrap();
+        assert_eq!(r.series.len(), 6, "3 collective series + 3 wordcount series");
+        let star = &r.series[0];
+        let tree = &r.series[1];
+        assert_eq!(star.points.len(), tree.points.len());
+        // Deterministic part (pure network clock): the star-vs-tree gap
+        // must widen with rank count and tree must win at the top end.
+        let last = star.points.len() - 1;
+        let gap_first = star.points[0].1 - tree.points[0].1;
+        let gap_last = star.points[last].1 - tree.points[last].1;
+        assert!(
+            gap_last > gap_first,
+            "gap must widen: {gap_first:.3} ms -> {gap_last:.3} ms"
+        );
+        assert!(
+            tree.points[last].1 < star.points[last].1,
+            "tree {} ms must beat star {} ms at {} ranks",
+            tree.points[last].1,
+            star.points[last].1,
+            star.points[last].0
+        );
+        assert_eq!(r.notes.len(), 3);
     }
 
     #[test]

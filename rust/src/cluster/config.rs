@@ -17,6 +17,7 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::mpi::CollectiveAlgo;
 use crate::util::toml_mini::TomlDoc;
 
 use super::deployment::DeploymentKind;
@@ -48,6 +49,9 @@ pub struct ClusterConfig {
     pub slots_per_node: usize,
     /// RNG seed for synthetic data + partition salt.
     pub seed: u64,
+    /// Explicit collective algorithm, if pinned (see
+    /// [`ClusterConfig::collective_algo`] for the resolution order).
+    pub collective_algo: Option<CollectiveAlgo>,
     pub limits: Limits,
 }
 
@@ -74,6 +78,7 @@ impl ClusterConfig {
             nodes: 1,
             slots_per_node: 1,
             seed: default_seed(),
+            collective_algo: None,
             limits: Limits::default(),
         };
         for (section, entries) in doc.sections() {
@@ -93,6 +98,14 @@ impl ClusterConfig {
                     ("", "nodes") => cfg.nodes = int()?,
                     ("", "slots-per-node") => cfg.slots_per_node = int()?,
                     ("", "seed") => cfg.seed = int()? as u64,
+                    ("", "collective-algo") => {
+                        cfg.collective_algo = Some(
+                            value
+                                .as_str()
+                                .with_context(|| format!("{key}: expected string"))?
+                                .parse()?,
+                        );
+                    }
                     ("limits", "mem-fraction") => {
                         cfg.limits.mem_fraction =
                             value.as_float().with_context(|| format!("{key}: expected float"))?;
@@ -110,8 +123,12 @@ impl ClusterConfig {
 
     /// Serialize to the TOML schema `from_toml_str` accepts.
     pub fn to_toml_string(&self) -> String {
+        let algo = match self.collective_algo {
+            Some(a) => format!("collective-algo = \"{a}\"\n"),
+            None => String::new(),
+        };
         format!(
-            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
+            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n{algo}\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
             self.deployment,
             self.nodes,
             self.slots_per_node,
@@ -178,6 +195,26 @@ impl ClusterConfig {
         let per_rank = node.mem_bytes as f64 * self.limits.mem_fraction / self.slots_per_node as f64;
         per_rank as u64
     }
+
+    /// Collective algorithm for this cluster's universes. Precedence
+    /// (mirroring [`ClusterConfig::spill_threshold_bytes`]): an explicit
+    /// `collective_algo` field, then the `BLAZE_COLLECTIVE_ALGO`
+    /// environment override (the tree CI leg runs the whole suite with
+    /// it set to `tree`), then [`CollectiveAlgo::Star`].
+    pub fn collective_algo(&self) -> CollectiveAlgo {
+        let env = std::env::var("BLAZE_COLLECTIVE_ALGO").ok();
+        self.resolve_collective_algo(env.as_deref())
+    }
+
+    /// Resolution with the env override injected — tests exercise the
+    /// precedence without mutating process-global environment (setenv
+    /// races getenv across test threads).
+    fn resolve_collective_algo(&self, env: Option<&str>) -> CollectiveAlgo {
+        match self.collective_algo {
+            Some(algo) => algo,
+            None => CollectiveAlgo::resolve(env),
+        }
+    }
 }
 
 /// Builder for [`ClusterConfig`]. `ranks(n)` is shorthand for n single-slot
@@ -189,6 +226,7 @@ pub struct ClusterConfigBuilder {
     nodes: Option<usize>,
     slots_per_node: Option<usize>,
     seed: Option<u64>,
+    collective_algo: Option<CollectiveAlgo>,
     limits: Option<Limits>,
 }
 
@@ -220,6 +258,12 @@ impl ClusterConfigBuilder {
         self
     }
 
+    /// Pin the collective algorithm (beats the env override).
+    pub fn collective_algo(mut self, algo: CollectiveAlgo) -> Self {
+        self.collective_algo = Some(algo);
+        self
+    }
+
     pub fn mem_fraction(mut self, f: f64) -> Self {
         self.limits.get_or_insert_with(Limits::default).mem_fraction = f;
         self
@@ -236,6 +280,7 @@ impl ClusterConfigBuilder {
             nodes: self.nodes.unwrap_or(1),
             slots_per_node: self.slots_per_node.unwrap_or(1),
             seed: self.seed.unwrap_or_else(default_seed),
+            collective_algo: self.collective_algo,
             limits: self.limits.unwrap_or_default(),
         };
         cfg.validate().expect("builder produced invalid config");
@@ -282,6 +327,34 @@ mod tests {
         let text = c.to_toml_string();
         let back = ClusterConfig::from_toml_str(&text).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn toml_roundtrip_with_collective_algo() {
+        let c = ClusterConfig::builder()
+            .deployment(DeploymentKind::Vm)
+            .nodes(2)
+            .collective_algo(CollectiveAlgo::Hierarchical)
+            .build();
+        let text = c.to_toml_string();
+        assert!(text.contains("collective-algo = \"hierarchical\""), "{text}");
+        assert_eq!(ClusterConfig::from_toml_str(&text).unwrap(), c);
+        assert!(ClusterConfig::from_toml_str("collective-algo = \"ring\"\n").is_err());
+    }
+
+    #[test]
+    fn explicit_algo_beats_env_beats_default() {
+        let derived = ClusterConfig::builder().build();
+        let explicit =
+            ClusterConfig::builder().collective_algo(CollectiveAlgo::Hierarchical).build();
+        assert_eq!(derived.resolve_collective_algo(None), CollectiveAlgo::Star);
+        assert_eq!(derived.resolve_collective_algo(Some("tree")), CollectiveAlgo::Tree);
+        assert_eq!(derived.resolve_collective_algo(Some("wat")), CollectiveAlgo::Star);
+        assert_eq!(
+            explicit.resolve_collective_algo(Some("tree")),
+            CollectiveAlgo::Hierarchical,
+            "explicit beats env"
+        );
     }
 
     #[test]

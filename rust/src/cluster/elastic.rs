@@ -81,20 +81,24 @@ impl ElasticCluster {
     }
 
     /// The warm [`RankPool`] for the next wave. Reused verbatim while the
-    /// membership (and therefore topology/network model) is unchanged;
-    /// rebuilt lazily after a [`ElasticCluster::grow`] /
-    /// [`ElasticCluster::shrink`] — the DELMA contract that resizes take
+    /// membership (and therefore topology/network model/collective
+    /// algorithm) is unchanged; rebuilt lazily after a
+    /// [`ElasticCluster::grow`] / [`ElasticCluster::shrink`] (or an algo
+    /// change in the config) — the DELMA contract that resizes take
     /// effect at wave boundaries, now without respawning threads on the
     /// boundaries where nothing changed.
     pub fn pool_for_wave(&mut self) -> &RankPool {
         let topology = Topology::from_config(&self.config);
         let network = self.config.network_model();
+        let algo = self.config.collective_algo();
         let stale = match &self.pool {
-            Some(pool) => !pool.matches(&topology, &network),
+            Some(pool) => !pool.matches(&topology, &network, algo),
             None => true,
         };
         if stale {
-            self.pool = Some(RankPool::new(Universe::new(topology, network)));
+            self.pool = Some(RankPool::new(
+                Universe::new(topology, network).with_collective_algo(algo),
+            ));
         }
         self.pool.as_ref().expect("just ensured")
     }
@@ -160,5 +164,30 @@ mod tests {
 
         c.shrink(2).unwrap();
         assert_eq!(c.pool_for_wave().size(), 2);
+    }
+
+    #[test]
+    fn algo_change_rebuilds_pool_at_wave_boundary() {
+        use crate::mpi::CollectiveAlgo;
+        let mut c = cluster(2);
+        c.pool_for_wave().run(|comm| comm.barrier().unwrap());
+        assert_eq!(c.pool_for_wave().jobs_run(), 1);
+        // Pinning a *different* algorithm is a config change: next wave
+        // gets a pool whose universes default to the new shape. (Chosen
+        // relative to the resolved algo so the BLAZE_COLLECTIVE_ALGO CI
+        // leg cannot make the pin a no-op.)
+        let next = match c.config.collective_algo() {
+            CollectiveAlgo::Tree => CollectiveAlgo::Hierarchical,
+            _ => CollectiveAlgo::Tree,
+        };
+        c.config.collective_algo = Some(next);
+        let pool = c.pool_for_wave();
+        assert_eq!(pool.jobs_run(), 0, "algo change must rebuild the pool");
+        assert_eq!(pool.collective_algo(), next);
+        let got = pool.run(|comm| {
+            assert_eq!(comm.collective_algo(), next);
+            comm.allreduce_sum_u64(1).unwrap()
+        });
+        assert_eq!(got, vec![4; 4]);
     }
 }

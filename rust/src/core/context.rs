@@ -4,12 +4,11 @@
 //! * [`CombineEmitter`] — eager mode: Blaze's *thread-local cache*; pairs
 //!   are combined in a per-rank hash map at emit time so only one value
 //!   per key survives to the shuffle.
-//! * [`GroupEmitter`] — the in-memory grouping emitter: pairs are
-//!   *grouped* (not reduced) per key, preserving the value multiset for
-//!   the final `Iterable<V>` reducer. The delayed engine itself now
-//!   stages through [`crate::store::RunWriter`] so grouping survives
-//!   inputs past the memory budget; this emitter remains the simple
-//!   in-memory building block.
+//!
+//! (The old `GroupEmitter` — in-memory grouping without reduction — was
+//! retired once the delayed engine moved onto [`crate::store::RunWriter`]
+//! sorted runs and [`crate::store::GroupStream`] streaming groups; its
+//! multiset-preservation contract is asserted by the store's tests.)
 
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -83,39 +82,6 @@ impl<K: Hash + Eq, V> Emitter<K, V> for CombineEmitter<'_, K, V> {
     }
 }
 
-/// Delayed-reduction intermediate emitter: groups values per key without
-/// reducing them ("Intermediate reducer combines the keys into a
-/// DistVector" — paper pseudocode step 3).
-#[derive(Debug)]
-pub struct GroupEmitter<K, V> {
-    pub groups: HashMap<K, Vec<V>>,
-    emitted: u64,
-}
-
-impl<K: Hash + Eq, V> GroupEmitter<K, V> {
-    pub fn new() -> Self {
-        Self { groups: HashMap::new(), emitted: 0 }
-    }
-
-    pub fn emitted(&self) -> u64 {
-        self.emitted
-    }
-}
-
-impl<K: Hash + Eq, V> Default for GroupEmitter<K, V> {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl<K: Hash + Eq, V> Emitter<K, V> for GroupEmitter<K, V> {
-    #[inline]
-    fn emit(&mut self, key: K, value: V) {
-        self.emitted += 1;
-        self.groups.entry(key).or_default().push(value);
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,16 +106,6 @@ mod tests {
         assert_eq!(e.cache[&"y"], 10);
         assert_eq!(e.emitted(), 6);
         assert_eq!(e.cache.len(), 2);
-    }
-
-    #[test]
-    fn group_emitter_preserves_multiset() {
-        let mut e = GroupEmitter::new();
-        e.emit("k", 3);
-        e.emit("k", 1);
-        e.emit("k", 3);
-        assert_eq!(e.groups[&"k"], vec![3, 1, 3]);
-        assert_eq!(e.emitted(), 3);
     }
 
     #[test]

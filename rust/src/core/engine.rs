@@ -216,10 +216,13 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             }
             // One-shot: a throwaway pool wired exactly like the old fresh
             // universe (same threads-per-job cost as before the refactor).
-            None => RankPool::new(Universe::new(
-                Topology::from_config(&self.cluster),
-                self.cluster.network_model(),
-            ))
+            None => RankPool::new(
+                Universe::new(
+                    Topology::from_config(&self.cluster),
+                    self.cluster.network_model(),
+                )
+                .with_collective_algo(self.cluster.collective_algo()),
+            )
             .run_job(ranks, rank_body),
         };
         let (rank_results, clocks, traffic) = (out.results, out.clocks, out.traffic);
@@ -251,6 +254,7 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             startup_ms: profile.startup_ms as f64,
             shuffle_bytes: traffic.bytes,
             messages: traffic.messages,
+            remote_messages: traffic.remote_messages,
             remote_bytes: traffic.remote_bytes,
             peak_mem_bytes: tracker.peak_bytes(),
             spilled_bytes: spilled,
@@ -432,6 +436,43 @@ mod tests {
             assert!(a.stats.spilled_bytes > 0, "mode {mode} must spill");
             assert_eq!(b.stats.spilled_bytes, 0, "mode {mode} unlimited must not");
         }
+    }
+
+    #[test]
+    fn collective_algos_agree_and_hierarchical_coalesces() {
+        use crate::mpi::CollectiveAlgo;
+        let input = wordcount_input(200);
+        let cluster = |algo| {
+            ClusterConfig::builder()
+                .deployment(DeploymentKind::Container)
+                .nodes(2)
+                .slots_per_node(3)
+                .collective_algo(algo)
+                .build()
+        };
+        let mut outputs = Vec::new();
+        for algo in CollectiveAlgo::ALL {
+            for mode in ReductionMode::ALL {
+                let out = MapReduceJob::new(&cluster(algo), &input)
+                    .with_mode(mode)
+                    .run_monoid(wc_map, |a: u64, b| a + b)
+                    .unwrap();
+                outputs.push((algo, out));
+            }
+        }
+        for (algo, out) in &outputs[1..] {
+            assert_eq!(out.result, outputs[0].1.result, "{algo} diverged");
+        }
+        // The same eager shuffle under hierarchical collectives crosses
+        // node boundaries in coalesced bundles: fewer remote messages.
+        let star = &outputs[1].1.stats; // (Star, Eager)
+        let hier = &outputs[7].1.stats; // (Hierarchical, Eager)
+        assert!(
+            hier.remote_messages < star.remote_messages,
+            "hier {} vs star {} remote messages",
+            hier.remote_messages,
+            star.remote_messages
+        );
     }
 
     #[test]

@@ -96,6 +96,9 @@ pub struct JobStats {
     pub shuffle_bytes: u64,
     /// Messages on the wire.
     pub messages: u64,
+    /// Messages that crossed node boundaries — the count the
+    /// hierarchical (node-coalesced) collectives shrink.
+    pub remote_messages: u64,
     /// Bytes that crossed node boundaries.
     pub remote_bytes: u64,
     /// Peak modeled data-path memory across the job (Fig 13).

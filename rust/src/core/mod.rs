@@ -35,4 +35,4 @@ pub use engine::MapReduceJob;
 pub use job::{JobConfig, JobResult, JobStats, ReductionMode, Scheduling};
 pub use partitioner::RangePartitioner;
 pub use scheduler::{FaultPlan, TaskFeed};
-pub use shuffle::{shuffle_runs, SpillBuffer};
+pub use shuffle::shuffle_runs;

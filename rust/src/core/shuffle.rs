@@ -14,140 +14,28 @@
 //!    `RunSet` on the owner. Ranks agree on the round count with an
 //!    allreduce, so the collective stays aligned at any skew.
 //!
-//! [`SpillBuffer`] remains as the order-preserving *unsorted* staging
-//! buffer (MR-MPI's pages); its drain streams the spill file back one
-//! block at a time through [`crate::store::RunReader`] instead of the
-//! old whole-file `read_to_end`, so recovery memory is bounded by the
-//! block size, not the spill size.
-
+//! Receiver-side restage is **re-sort-free**: each incoming per-source
+//! chunk is already key-ordered (the sender drains its merge in key
+//! order), so it is staged via [`RunWriter::push_sorted_run`] as its own
+//! run — zero comparisons at restage; the final loser-tree merge pays
+//! `O(log k)` per pair instead.
+//!
+//! Both collectives ride [`crate::mpi::Communicator::alltoallv`], so
+//! under [`crate::mpi::CollectiveAlgo::Hierarchical`] every shuffle
+//! round is node-coalesced: pairs bound for ranks on one destination
+//! node cross the wire as a single framed bundle to that node's leader.
 use std::hash::Hash;
-use std::io::{Seek, SeekFrom, Write};
 use std::sync::Arc;
 
-use crate::util::tmp::TempFile;
-
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::dist::ShardRouter;
 use crate::metrics::PeakTracker;
 use crate::mpi::Communicator;
 use crate::serial::{Decoder, Encoder, FastSerialize};
-use crate::store::{Combiner, RunReader, RunSet, RunWriter};
+use crate::store::{Combiner, RunSet, RunWriter};
 
 use super::scheduler::TaskFeed;
-
-/// Buffer for map-side pairs with a spill-to-disk overflow path.
-/// Order-preserving (disk chunks first, then memory) — the *sorted*
-/// counterpart is [`crate::store::RunWriter`].
-pub struct SpillBuffer<K, V> {
-    in_mem: Vec<(K, V)>,
-    mem_bytes: u64,
-    threshold: u64,
-    spill: Option<TempFile>,
-    spilled_bytes: u64,
-    spilled_items: u64,
-    tracker: Arc<PeakTracker>,
-}
-
-impl<K: FastSerialize, V: FastSerialize> SpillBuffer<K, V> {
-    /// `threshold` = max in-memory bytes before spilling (u64::MAX = never).
-    pub fn new(threshold: u64, tracker: Arc<PeakTracker>) -> Self {
-        Self {
-            in_mem: Vec::new(),
-            mem_bytes: 0,
-            threshold,
-            spill: None,
-            spilled_bytes: 0,
-            spilled_items: 0,
-            tracker,
-        }
-    }
-
-    pub fn push(&mut self, key: K, value: V) -> Result<()> {
-        let sz = (key.size_hint() + value.size_hint()) as u64 + 16;
-        self.mem_bytes += sz;
-        self.tracker.alloc(sz);
-        self.in_mem.push((key, value));
-        if self.mem_bytes > self.threshold {
-            self.spill_now()?;
-        }
-        Ok(())
-    }
-
-    pub fn len_in_mem(&self) -> usize {
-        self.in_mem.len()
-    }
-
-    pub fn spilled_bytes(&self) -> u64 {
-        self.spilled_bytes
-    }
-
-    /// Serialize the in-memory pairs to the spill file and drop them.
-    /// The chunk frame is the store's run-block format, which is what
-    /// lets [`RunReader`] stream it back.
-    fn spill_now(&mut self) -> Result<()> {
-        if self.in_mem.is_empty() {
-            return Ok(());
-        }
-        if self.spill.is_none() {
-            let f = TempFile::new("blaze-spill").context("creating shuffle spill file")?;
-            self.spill = Some(f);
-        }
-        let tf = self.spill.as_mut().expect("spill file just ensured");
-        let file = tf.file();
-        let mut enc = Encoder::with_capacity(self.mem_bytes as usize);
-        enc.put_varint(self.in_mem.len() as u64);
-        for (k, v) in &self.in_mem {
-            k.encode(&mut enc);
-            v.encode(&mut enc);
-        }
-        let chunk = enc.into_bytes();
-        file.write_all(&(chunk.len() as u64).to_le_bytes())?;
-        file.write_all(&chunk)?;
-        self.spilled_bytes += chunk.len() as u64;
-        self.spilled_items += self.in_mem.len() as u64;
-        self.in_mem.clear();
-        self.tracker.free(self.mem_bytes);
-        self.mem_bytes = 0;
-        Ok(())
-    }
-
-    /// Stream everything out in insertion order (disk chunks first, then
-    /// memory), holding at most one spill block in memory at a time.
-    pub fn drain_for_each(mut self, mut f: impl FnMut(K, V)) -> Result<()> {
-        if let Some(mut tf) = self.spill.take() {
-            let end = tf.file().seek(SeekFrom::End(0))?;
-            let shared =
-                Arc::new(tf.file().try_clone().context("cloning spill file for drain")?);
-            let mut reader: RunReader<K, V> =
-                RunReader::new(shared, 0, end, self.tracker.clone());
-            while let Some((k, v)) = reader.next()? {
-                f(k, v);
-            }
-        }
-        for (k, v) in self.in_mem.drain(..) {
-            f(k, v);
-        }
-        self.tracker.free(self.mem_bytes);
-        self.mem_bytes = 0;
-        Ok(())
-    }
-
-    /// Drain everything (disk chunks first, then memory) into a vector.
-    /// Reads the spill in bounded blocks (via [`RunReader`]), never the
-    /// whole file at once.
-    pub fn drain(self) -> Result<Vec<(K, V)>> {
-        let mut out = Vec::with_capacity(self.in_mem.len() + self.spilled_items as usize);
-        self.drain_for_each(|k, v| out.push((k, v)))?;
-        Ok(out)
-    }
-}
-
-impl<K, V> Drop for SpillBuffer<K, V> {
-    fn drop(&mut self) {
-        self.tracker.free(self.mem_bytes);
-    }
-}
 
 /// COLLECTIVE: partition `pairs` by `router.owner(key)` and exchange.
 /// Returns the pairs this rank owns. Peak memory for the serialized
@@ -253,10 +141,12 @@ where
 
 /// COLLECTIVE: the out-of-core shuffle. Drains `runs` in key order,
 /// exchanges pairs in rounds bounded by `budget`, and restages what this
-/// rank owns into a fresh budget-bound [`RunSet`] (each incoming round
-/// re-sorted and re-spilled under the same budget). With a combiner,
-/// equal-key values are folded both while draining (merge-time: across
-/// this rank's runs, pre-wire) and while restaging on the owner.
+/// rank owns into a fresh budget-bound [`RunSet`] (each incoming
+/// per-source chunk staged as an already-sorted run — no restage
+/// re-sort). With a combiner, equal-key values are folded while draining
+/// (merge-time: across this rank's runs, pre-wire) and within each
+/// incoming chunk on the owner; cross-chunk folding happens at the final
+/// merge, which the consumers drive.
 ///
 /// Returns `(incoming run set, bytes the sender-side merge combined
 /// away)`. Memory: one round holds at most ~`budget` of outgoing framed
@@ -336,14 +226,23 @@ where
 
         let in_total: u64 = incoming.iter().map(|b| b.len() as u64).sum();
         tracker.alloc(in_total);
+        // Each per-source chunk arrived key-ordered (the sender drains
+        // its merge in key order), so it restages as its own presorted
+        // run: zero comparisons here, `O(log k)` per pair at the final
+        // merge instead of a full re-sort per round.
         let absorb: Result<()> = comm.timed(|| {
             for buf in &incoming {
+                if buf.is_empty() {
+                    continue;
+                }
                 let mut dec = Decoder::new(buf);
+                let mut chunk: Vec<(K, V)> = Vec::new();
                 while !dec.is_empty() {
                     let k = K::decode(&mut dec)?;
                     let v = V::decode(&mut dec)?;
-                    receiver.push(k, v)?;
+                    chunk.push((k, v));
                 }
+                receiver.push_sorted_run(chunk)?;
             }
             Ok(())
         });
@@ -385,66 +284,6 @@ mod tests {
     }
 
     #[test]
-    fn spill_buffer_roundtrip_without_spill() {
-        let t = PeakTracker::new();
-        let mut b: SpillBuffer<String, u64> = SpillBuffer::new(u64::MAX, t.clone());
-        b.push("a".into(), 1).unwrap();
-        b.push("b".into(), 2).unwrap();
-        assert_eq!(b.spilled_bytes(), 0);
-        let items = b.drain().unwrap();
-        assert_eq!(items, vec![("a".into(), 1), ("b".into(), 2)]);
-        assert_eq!(t.current_bytes(), 0);
-    }
-
-    #[test]
-    fn spill_buffer_spills_past_threshold_and_preserves_order() {
-        let t = PeakTracker::new();
-        let mut b: SpillBuffer<u64, u64> = SpillBuffer::new(256, t.clone());
-        for i in 0..100u64 {
-            b.push(i, i * 2).unwrap();
-        }
-        assert!(b.spilled_bytes() > 0, "should have spilled");
-        assert!(b.len_in_mem() < 100);
-        let items = b.drain().unwrap();
-        assert_eq!(items.len(), 100);
-        // Disk chunks precede memory; within chunks order preserved.
-        let expected: Vec<(u64, u64)> = (0..100).map(|i| (i, i * 2)).collect();
-        assert_eq!(items, expected);
-    }
-
-    #[test]
-    fn spill_peak_memory_bounded() {
-        let t = PeakTracker::new();
-        let mut b: SpillBuffer<u64, u64> = SpillBuffer::new(512, t.clone());
-        for i in 0..10_000u64 {
-            b.push(i, i).unwrap();
-        }
-        // Peak stays near the threshold, not the full data size.
-        assert!(t.peak_bytes() < 2_048, "peak {}", t.peak_bytes());
-        let items = b.drain().unwrap();
-        assert_eq!(items.len(), 10_000);
-    }
-
-    #[test]
-    fn spill_buffer_streaming_drain_matches_vec_drain() {
-        let make = |t: &Arc<PeakTracker>| {
-            let mut b: SpillBuffer<u64, u64> = SpillBuffer::new(128, t.clone());
-            for i in 0..500u64 {
-                b.push(i % 7, i).unwrap();
-            }
-            b
-        };
-        let t = PeakTracker::new();
-        let vec_drained = make(&t).drain().unwrap();
-        let mut streamed = Vec::new();
-        make(&t)
-            .drain_for_each(|k, v| streamed.push((k, v)))
-            .unwrap();
-        assert_eq!(vec_drained, streamed);
-        assert_eq!(t.current_bytes(), 0);
-    }
-
-    #[test]
     fn shuffle_runs_routes_and_sorts_under_tiny_budget() {
         let got = pool_run(3, |c| {
             let router = ShardRouter::new(3, 7);
@@ -475,6 +314,41 @@ mod tests {
     }
 
     #[test]
+    fn shuffle_runs_restage_preserves_value_order_within_keys() {
+        // The presorted-restage path must keep the (round, source,
+        // position) value order a reducer observes — same contract the
+        // old sort-at-restage path had via stable sorting.
+        let got = pool_run(2, |c| {
+            let router = ShardRouter::new(2, 3);
+            let tracker = PeakTracker::new();
+            let mut w: RunWriter<'_, u32, u64> = RunWriter::new(u64::MAX, tracker.clone());
+            // Every rank emits 3 values per key, locally ordered 0,1,2.
+            for i in 0..60u32 {
+                w.push(i % 20, ((c.rank().0 as u64) << 8) | (i / 20) as u64).unwrap();
+            }
+            let runs = w.finish().unwrap();
+            let (mine, _) = shuffle_runs(c, &router, runs, 300, None, &tracker).unwrap();
+            let mut m = mine.into_merge().unwrap();
+            let mut per_key: std::collections::HashMap<u32, Vec<u64>> =
+                std::collections::HashMap::new();
+            while let Some((k, v)) = m.next().unwrap() {
+                per_key.entry(k).or_default().push(v);
+            }
+            for (k, vs) in &per_key {
+                assert_eq!(vs.len(), 6, "key {k}: 3 values from each of 2 ranks");
+                // Within one source rank, sequence positions ascend.
+                for src in 0..2u64 {
+                    let seq: Vec<u64> =
+                        vs.iter().filter(|v| *v >> 8 == src).map(|v| v & 0xff).collect();
+                    assert_eq!(seq, vec![0, 1, 2], "key {k} src {src}");
+                }
+            }
+            per_key.len() as u64
+        });
+        assert_eq!(got.iter().sum::<u64>(), 20, "20 keys split across owners");
+    }
+
+    #[test]
     fn shuffle_runs_combiner_folds_before_the_wire() {
         let got = pool_run(2, |c| {
             let tracker = PeakTracker::new();
@@ -491,7 +365,7 @@ mod tests {
             let write_combined = runs.combined_bytes();
             let (mine, merge_combined) =
                 shuffle_runs(c, &router, runs, 150, Some(&combine), &tracker).unwrap();
-            let mut m = mine.into_merge().unwrap();
+            let mut m = mine.into_merge().unwrap().with_combiner(&combine);
             let mut total = 0u64;
             while let Some((_, v)) = m.next().unwrap() {
                 total += v;

@@ -3,9 +3,9 @@
 //! ```text
 //! blaze run --app wordcount [--mode eager] [--ranks 4] [--deployment vm]
 //!           [--cluster cluster.toml] [--kernel] [app-specific sizes]
-//! blaze bench-figure <fig8|fig9|fig10|fig11|fig12|fig13|
-//!                     ablation-reduction|deployment|pool-ablation|all> [--quick]
-//!                    [--json-dir target/figures]
+//! blaze bench-figure <fig8|fig9|fig10|fig11|fig12|fig13|ablation-reduction|
+//!                     deployment|pool-ablation|spill-crossover|tree-ablation|all>
+//!                    [--quick] [--json-dir target/figures]
 //! blaze inspect-artifacts [--dir artifacts]
 //! blaze cluster-info [--cluster cluster.toml | --ranks N --deployment K]
 //! ```
@@ -134,7 +134,8 @@ fn print_usage() {
          APP OPTS:\n  wordcount: --lines N --vocab V\n  kmeans: --points N \
          --dims D --k K --iters I\n  pi: --samples N\n  matmul: --size N\n  \
          linreg: --rows N --dims D --iters I --lr F\n\n\
-         FIGURES: fig8 fig9 fig10 fig11 fig12 fig13 ablation-reduction deployment pool-ablation"
+         FIGURES: fig8 fig9 fig10 fig11 fig12 fig13 ablation-reduction deployment pool-ablation \
+         spill-crossover tree-ablation"
     );
 }
 
@@ -232,7 +233,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn print_stats(s: &blaze_rs::core::JobStats) {
     println!(
         "  modeled {:.2} ms (compute {:.2} + net {:.2} + startup {:.0}) | \
-         shuffle {} B in {} msgs ({} B remote) | peak mem {} B | spilled {} B | \
+         shuffle {} B in {} msgs ({} msgs / {} B remote) | peak mem {} B | spilled {} B | \
          combined away {} B | host wall {:.1} ms",
         s.modeled_ms,
         s.compute_ms,
@@ -240,6 +241,7 @@ fn print_stats(s: &blaze_rs::core::JobStats) {
         s.startup_ms,
         s.shuffle_bytes,
         s.messages,
+        s.remote_messages,
         s.remote_bytes,
         s.peak_mem_bytes,
         s.spilled_bytes,
@@ -255,7 +257,7 @@ fn cmd_bench_figure(args: &Args) -> Result<()> {
         .map(String::as_str)
         .context(
             "which figure? (fig8..fig13, ablation-reduction, deployment, pool-ablation, \
-             spill-crossover, all)",
+             spill-crossover, tree-ablation, all)",
         )?;
     let quick = args.has("quick");
     let ids: Vec<FigureId> = if which == "all" {
@@ -300,13 +302,14 @@ fn cmd_cluster_info(args: &Args) -> Result<()> {
     println!("{}", cluster.to_toml_string());
     let profile = cluster.deployment.profile();
     println!(
-        "# ranks={} | startup {} ms | net {} µs / {} Mbit/s | compute x{:.2} | spill at {} B/rank",
+        "# ranks={} | startup {} ms | net {} µs / {} Mbit/s | compute x{:.2} | spill at {} B/rank | {} collectives",
         cluster.ranks(),
         profile.startup_ms,
         profile.net_latency_us,
         profile.net_bandwidth_mbps,
         profile.effective_compute_scale(),
-        cluster.spill_threshold_bytes()
+        cluster.spill_threshold_bytes(),
+        cluster.collective_algo()
     );
     Ok(())
 }

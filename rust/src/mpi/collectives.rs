@@ -1,41 +1,381 @@
 //! Collective operations over [`Communicator`], built from p2p sends so
 //! the virtual clock sees every byte and every synchronization point.
 //!
+//! ## Algorithms
+//!
+//! Every rooted collective is implemented by two byte-level primitives —
+//! a broadcast and a gather — each available in three shapes, selected by
+//! [`CollectiveAlgo`]:
+//!
+//!  * **Star** — the seed implementation: gather is recv-from-everyone at
+//!    the root, broadcast is send-to-everyone from the root. The root
+//!    pays `O(P)` message injections on its uplink, which is exactly the
+//!    serialization that makes Fig 10's small-key-range wordcount
+//!    anti-scale.
+//!  * **Tree** — a binomial tree over the ranks (MPICH's shape): the
+//!    root touches `O(log P)` messages and the virtual-clock depth is
+//!    `O(log P)` levels of injection + propagation instead of `O(P)`
+//!    injections at the root.
+//!  * **Hierarchical** — a node-leader tree that consults
+//!    [`crate::mpi::Topology::node_of`]: cross-node hops happen once per
+//!    node (binomial over the node leaders), intra-node fan-out/fan-in
+//!    stays on same-node links. [`Communicator::alltoallv`] additionally
+//!    coalesces all pairs bound for one destination node into a single
+//!    framed message to that node's leader, which scatters locally — the
+//!    Thrill/M3R node-level message-coalescing shape.
+//!
+//! `allreduce` gathers the operands and folds **at the root, in rank
+//! order**, whatever the algorithm — so its result is bit-identical
+//! across Star/Tree/Hierarchical even for float operations whose
+//! rounding depends on association. The tree still buys the `O(log P)`
+//! clock depth; it just does not re-associate the fold.
+//!
 //! Tag discipline: collectives allocate tags from a per-rank sequence
 //! counter ([`Communicator::next_collective_tag`]). Programs are SPMD —
-//! every rank executes the same collective sequence — so counters stay
-//! aligned without negotiation, the same assumption MPI makes about
-//! communicator-ordered collectives.
+//! every rank executes the same collective sequence with the same
+//! algorithm in effect — so counters stay aligned without negotiation,
+//! the same assumption MPI makes about communicator-ordered collectives.
+//! The tag count per call is deterministic *given the algorithm in
+//! effect* (e.g. `alltoallv` takes one tag pairwise, three coalesced);
+//! algorithm switches are themselves SPMD-synchronized
+//! ([`Communicator::set_collective_algo`]), so every rank still draws
+//! the same tag sequence — including when a job switches algorithms
+//! mid-flight, as the equivalence suite does.
 //!
 //! The blocking shapes matter for the paper: `alltoallv` is the shuffle
 //! (MR-MPI's `MPI_Alltoall` §II), and `barrier`/`allreduce` are the global
 //! synchronization points Mimir blames for MR-MPI's memory retention.
 
+use std::collections::{BTreeMap, HashMap};
+
 use anyhow::Result;
 
-use crate::serial::{from_bytes, to_bytes, FastSerialize};
+use crate::serial::{from_bytes, to_bytes, Decoder, Encoder, FastSerialize};
 
 use super::comm::Communicator;
-use super::datatypes::Rank;
+use super::datatypes::{Rank, Tag};
+
+/// Which wire shape the collectives use. Resolution order everywhere the
+/// selector is threaded (mirroring
+/// [`crate::cluster::ClusterConfig::spill_threshold_bytes`]): an explicit
+/// choice beats the `BLAZE_COLLECTIVE_ALGO` environment override beats
+/// the [`CollectiveAlgo::Star`] default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CollectiveAlgo {
+    /// Gather-to-root / send-from-root: `O(P)` injections at the root.
+    #[default]
+    Star,
+    /// Binomial tree over ranks: `O(log P)` depth and root messages.
+    Tree,
+    /// Binomial tree over node leaders + same-node fan-out, with
+    /// node-coalesced `alltoallv` bundles.
+    Hierarchical,
+}
+
+impl CollectiveAlgo {
+    pub const ALL: [CollectiveAlgo; 3] =
+        [CollectiveAlgo::Star, CollectiveAlgo::Tree, CollectiveAlgo::Hierarchical];
+
+    /// The `BLAZE_COLLECTIVE_ALGO` override, or the Star default.
+    /// Unparseable values are ignored (same forgiveness as the spill
+    /// threshold's env override).
+    pub fn from_env_or_default() -> CollectiveAlgo {
+        let env = std::env::var("BLAZE_COLLECTIVE_ALGO").ok();
+        Self::resolve(env.as_deref())
+    }
+
+    /// Resolution with the env value injected — tests exercise the
+    /// precedence without mutating process-global environment.
+    pub(crate) fn resolve(env: Option<&str>) -> CollectiveAlgo {
+        env.and_then(|s| s.trim().parse().ok()).unwrap_or_default()
+    }
+}
+
+impl std::fmt::Display for CollectiveAlgo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            CollectiveAlgo::Star => "star",
+            CollectiveAlgo::Tree => "tree",
+            CollectiveAlgo::Hierarchical => "hierarchical",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::str::FromStr for CollectiveAlgo {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "star" => Ok(CollectiveAlgo::Star),
+            "tree" => Ok(CollectiveAlgo::Tree),
+            "hierarchical" | "hier" => Ok(CollectiveAlgo::Hierarchical),
+            other => Err(anyhow::anyhow!("unknown collective algorithm {other:?}")),
+        }
+    }
+}
+
+/// `(rank, payload)` entries riding a gather tree edge: varint count,
+/// then per entry a varint rank and length-prefixed bytes.
+fn encode_entries(entries: &[(u64, Vec<u8>)]) -> Vec<u8> {
+    let total: usize = entries.iter().map(|(_, b)| b.len() + 10).sum();
+    let mut enc = Encoder::with_capacity(total + 10);
+    enc.put_varint(entries.len() as u64);
+    for (rank, bytes) in entries {
+        enc.put_varint(*rank);
+        enc.put_bytes(bytes);
+    }
+    enc.into_bytes()
+}
+
+fn decode_entries_into(bytes: &[u8], entries: &mut Vec<(u64, Vec<u8>)>) -> Result<()> {
+    let mut dec = Decoder::new(bytes);
+    let count = dec.get_varint()?;
+    // Never reserve more than what could possibly remain (corrupt-count
+    // guard, same as the serial codec's Vec decode).
+    entries.reserve((count as usize).min(dec.remaining()));
+    for _ in 0..count {
+        let rank = dec.get_varint()?;
+        entries.push((rank, dec.get_bytes()?.to_vec()));
+    }
+    dec.finish()
+}
+
+/// Length-prefixed segment list (the allgather wire format).
+fn encode_segments(segments: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = segments.iter().map(|s| s.len() + 10).sum();
+    let mut enc = Encoder::with_capacity(total + 10);
+    enc.put_varint(segments.len() as u64);
+    for seg in segments {
+        enc.put_bytes(seg);
+    }
+    enc.into_bytes()
+}
+
+fn decode_segments(bytes: &[u8]) -> Result<Vec<Vec<u8>>> {
+    let mut dec = Decoder::new(bytes);
+    let count = dec.get_varint()?;
+    let mut out = Vec::with_capacity((count as usize).min(dec.remaining()));
+    for _ in 0..count {
+        out.push(dec.get_bytes()?.to_vec());
+    }
+    dec.finish()?;
+    Ok(out)
+}
 
 impl Communicator {
-    /// Synchronize all ranks (and their virtual clocks) — gather-to-root
-    /// then broadcast, the classic two-phase tree flattened to star shape
-    /// (fine at our rank counts; cost model charges per message).
+    /// Active ranks grouped by node, for the hierarchical algorithms.
+    /// `groups[0]` is `root`'s node with `root` moved to the front; every
+    /// other group leads with its lowest rank. `g[0]` is the node's
+    /// **leader**: the only rank on the node that talks cross-node.
+    fn node_groups(&self, root: Rank) -> Vec<Vec<Rank>> {
+        let topo = self.topology();
+        let mut by_node: BTreeMap<usize, Vec<Rank>> = BTreeMap::new();
+        for r in 0..self.size() {
+            by_node.entry(topo.node_of(Rank(r))).or_default().push(Rank(r));
+        }
+        let mut groups: Vec<Vec<Rank>> = by_node.into_values().collect();
+        for g in &mut groups {
+            if let Some(i) = g.iter().position(|r| *r == root) {
+                g.swap(0, i);
+            }
+        }
+        if let Some(i) = groups.iter().position(|g| g[0] == root) {
+            groups.swap(0, i);
+        }
+        groups
+    }
+
+    /// Byte-level broadcast from `root`. `payload` must be `Some` on the
+    /// root (returned as-is there) and is ignored elsewhere.
+    fn bcast_bytes(&self, root: Rank, tag: Tag, payload: Option<Vec<u8>>) -> Result<Vec<u8>> {
+        match self.collective_algo() {
+            CollectiveAlgo::Star => self.bcast_bytes_star(root, tag, payload),
+            CollectiveAlgo::Tree => self.bcast_bytes_tree(root, tag, payload),
+            CollectiveAlgo::Hierarchical => self.bcast_bytes_hier(root, tag, payload),
+        }
+    }
+
+    fn bcast_bytes_star(&self, root: Rank, tag: Tag, payload: Option<Vec<u8>>) -> Result<Vec<u8>> {
+        if self.rank() == root {
+            let bytes = payload.expect("root broadcasts a payload");
+            for r in 0..self.size() {
+                if r != root.0 {
+                    self.send(Rank(r), tag, bytes.clone())?;
+                }
+            }
+            Ok(bytes)
+        } else {
+            self.recv(root, tag)
+        }
+    }
+
+    /// Binomial broadcast: virtual rank `vr = (rank - root) mod P`; a
+    /// rank receives from `vr - lsb(vr)` and forwards to `vr + m` for
+    /// each mask `m` descending below its lowest set bit.
+    fn bcast_bytes_tree(&self, root: Rank, tag: Tag, payload: Option<Vec<u8>>) -> Result<Vec<u8>> {
+        let n = self.size();
+        let vr = (self.rank().0 + n - root.0) % n;
+        let actual = |v: usize| Rank((v + root.0) % n);
+        let mut bytes = payload.unwrap_or_default();
+        let mut mask = 1usize;
+        while mask < n {
+            if vr & mask != 0 {
+                bytes = self.recv(actual(vr - mask), tag)?;
+                break;
+            }
+            mask <<= 1;
+        }
+        mask >>= 1;
+        while mask > 0 {
+            if vr + mask < n {
+                self.send(actual(vr + mask), tag, bytes.clone())?;
+            }
+            mask >>= 1;
+        }
+        Ok(bytes)
+    }
+
+    /// Node-leader broadcast: binomial over the leaders (rooted at
+    /// `root`, which is always its own node's leader), then a same-node
+    /// fan-out from each leader — one cross-node hop per node.
+    fn bcast_bytes_hier(&self, root: Rank, tag: Tag, payload: Option<Vec<u8>>) -> Result<Vec<u8>> {
+        let me = self.rank();
+        let groups = self.node_groups(root);
+        let gi = groups.iter().position(|g| g.contains(&me)).expect("rank in a node group");
+        let leader = groups[gi][0];
+        if me != leader {
+            return self.recv(leader, tag);
+        }
+        let m = groups.len();
+        let mut bytes = payload.unwrap_or_default();
+        let mut mask = 1usize;
+        while mask < m {
+            if gi & mask != 0 {
+                bytes = self.recv(groups[gi - mask][0], tag)?;
+                break;
+            }
+            mask <<= 1;
+        }
+        mask >>= 1;
+        while mask > 0 {
+            if gi + mask < m {
+                self.send(groups[gi + mask][0], tag, bytes.clone())?;
+            }
+            mask >>= 1;
+        }
+        for &member in &groups[gi][1..] {
+            self.send(member, tag, bytes.clone())?;
+        }
+        Ok(bytes)
+    }
+
+    /// Byte-level gather to `root`: `Some(payloads)` in rank order at the
+    /// root, `None` elsewhere.
+    fn gather_bytes(&self, root: Rank, tag: Tag, payload: Vec<u8>) -> Result<Option<Vec<Vec<u8>>>> {
+        match self.collective_algo() {
+            CollectiveAlgo::Star => self.gather_bytes_star(root, tag, payload),
+            CollectiveAlgo::Tree => self.gather_bytes_tree(root, tag, payload),
+            CollectiveAlgo::Hierarchical => self.gather_bytes_hier(root, tag, payload),
+        }
+    }
+
+    fn gather_bytes_star(
+        &self,
+        root: Rank,
+        tag: Tag,
+        payload: Vec<u8>,
+    ) -> Result<Option<Vec<Vec<u8>>>> {
+        if self.rank() == root {
+            let mut slots: Vec<Option<Vec<u8>>> = (0..self.size()).map(|_| None).collect();
+            slots[root.0] = Some(payload);
+            for _ in 1..self.size() {
+                let (src, bytes) = self.recv_any(tag)?;
+                slots[src.0] = Some(bytes);
+            }
+            Ok(Some(slots.into_iter().map(Option::unwrap).collect()))
+        } else {
+            self.send(root, tag, payload)?;
+            Ok(None)
+        }
+    }
+
+    /// Reverse binomial: each rank absorbs its subtree's `(rank, bytes)`
+    /// entries child by child, then forwards the accumulated list to its
+    /// parent — the root ends with all `P` entries after `O(log P)`
+    /// receives.
+    fn gather_bytes_tree(
+        &self,
+        root: Rank,
+        tag: Tag,
+        payload: Vec<u8>,
+    ) -> Result<Option<Vec<Vec<u8>>>> {
+        let n = self.size();
+        let me = self.rank();
+        let vr = (me.0 + n - root.0) % n;
+        let actual = |v: usize| Rank((v + root.0) % n);
+        let mut entries: Vec<(u64, Vec<u8>)> = vec![(me.0 as u64, payload)];
+        let mut mask = 1usize;
+        while mask < n {
+            if vr & mask != 0 {
+                self.send(actual(vr - mask), tag, encode_entries(&entries))?;
+                return Ok(None);
+            }
+            if vr + mask < n {
+                let bytes = self.recv(actual(vr + mask), tag)?;
+                decode_entries_into(&bytes, &mut entries)?;
+            }
+            mask <<= 1;
+        }
+        Ok(Some(rank_ordered(entries, n)?))
+    }
+
+    /// Node-leader gather: members hand their payload to their node's
+    /// leader on same-node links, leaders run the binomial gather toward
+    /// `root` — again one cross-node hop per node.
+    fn gather_bytes_hier(
+        &self,
+        root: Rank,
+        tag: Tag,
+        payload: Vec<u8>,
+    ) -> Result<Option<Vec<Vec<u8>>>> {
+        let me = self.rank();
+        let groups = self.node_groups(root);
+        let gi = groups.iter().position(|g| g.contains(&me)).expect("rank in a node group");
+        let leader = groups[gi][0];
+        if me != leader {
+            self.send(leader, tag, payload)?;
+            return Ok(None);
+        }
+        let mut entries: Vec<(u64, Vec<u8>)> = vec![(me.0 as u64, payload)];
+        for &member in &groups[gi][1..] {
+            let bytes = self.recv(member, tag)?;
+            entries.push((member.0 as u64, bytes));
+        }
+        let m = groups.len();
+        let mut mask = 1usize;
+        while mask < m {
+            if gi & mask != 0 {
+                self.send(groups[gi - mask][0], tag, encode_entries(&entries))?;
+                return Ok(None);
+            }
+            if gi + mask < m {
+                let bytes = self.recv(groups[gi + mask][0], tag)?;
+                decode_entries_into(&bytes, &mut entries)?;
+            }
+            mask <<= 1;
+        }
+        Ok(Some(rank_ordered(entries, self.size())?))
+    }
+
+    /// Synchronize all ranks (and their virtual clocks): an empty gather
+    /// followed by an empty broadcast, each in the selected shape — so a
+    /// tree barrier completes in `O(log P)` virtual-clock depth.
     pub fn barrier(&self) -> Result<()> {
         let gather_tag = self.next_collective_tag();
         let release_tag = self.next_collective_tag();
-        if self.is_root() {
-            for _ in 1..self.size() {
-                let _ = self.recv_any(gather_tag)?;
-            }
-            for r in 1..self.size() {
-                self.send(Rank(r), release_tag, Vec::new())?;
-            }
-        } else {
-            self.send(Rank::ROOT, gather_tag, Vec::new())?;
-            self.recv(Rank::ROOT, release_tag)?;
-        }
+        let gathered = self.gather_bytes(Rank::ROOT, gather_tag, Vec::new())?;
+        self.bcast_bytes(Rank::ROOT, release_tag, gathered.map(|_| Vec::new()))?;
         Ok(())
     }
 
@@ -44,15 +384,10 @@ impl Communicator {
     pub fn bcast<T: FastSerialize>(&self, root: Rank, value: T) -> Result<T> {
         let tag = self.next_collective_tag();
         if self.rank() == root {
-            let bytes = to_bytes(&value);
-            for r in 0..self.size() {
-                if r != root.0 {
-                    self.send(Rank(r), tag, bytes.clone())?;
-                }
-            }
+            self.bcast_bytes(root, tag, Some(to_bytes(&value)))?;
             Ok(value)
         } else {
-            let bytes = self.recv(root, tag)?;
+            let bytes = self.bcast_bytes(root, tag, None)?;
             from_bytes(&bytes)
         }
     }
@@ -61,36 +396,60 @@ impl Communicator {
     /// order) at root, `None` elsewhere.
     pub fn gather<T: FastSerialize>(&self, root: Rank, value: T) -> Result<Option<Vec<T>>> {
         let tag = self.next_collective_tag();
-        if self.rank() == root {
-            let mut slots: Vec<Option<T>> = (0..self.size()).map(|_| None).collect();
-            slots[root.0] = Some(value);
-            for _ in 1..self.size() {
-                let (src, bytes) = self.recv_any(tag)?;
-                slots[src.0] = Some(from_bytes(&bytes)?);
+        match self.gather_bytes(root, tag, to_bytes(&value))? {
+            None => Ok(None),
+            Some(slots) => {
+                let mut out = Vec::with_capacity(slots.len());
+                for bytes in &slots {
+                    out.push(from_bytes(bytes)?);
+                }
+                Ok(Some(out))
             }
-            Ok(Some(slots.into_iter().map(Option::unwrap).collect()))
-        } else {
-            self.send(root, tag, to_bytes(&value))?;
-            Ok(None)
         }
     }
 
     /// Gather at root, then broadcast the vector to everyone.
-    pub fn allgather<T: FastSerialize + Clone>(&self, value: T) -> Result<Vec<T>> {
-        let gathered = self.gather(Rank::ROOT, value)?;
-        self.bcast(Rank::ROOT, gathered.unwrap_or_default())
+    pub fn allgather<T: FastSerialize>(&self, value: T) -> Result<Vec<T>> {
+        let gather_tag = self.next_collective_tag();
+        let bcast_tag = self.next_collective_tag();
+        let gathered = self.gather_bytes(Rank::ROOT, gather_tag, to_bytes(&value))?;
+        let packed =
+            self.bcast_bytes(Rank::ROOT, bcast_tag, gathered.map(|s| encode_segments(&s)))?;
+        let segments = decode_segments(&packed)?;
+        let mut out = Vec::with_capacity(segments.len());
+        for seg in &segments {
+            out.push(from_bytes(seg)?);
+        }
+        Ok(out)
     }
 
     /// The shuffle primitive: rank i's `bufs[j]` is delivered as the
     /// return value's element i on rank j. `bufs.len()` must equal world
     /// size; `bufs[self]` short-circuits without touching the network.
-    pub fn alltoallv(&self, mut bufs: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
+    ///
+    /// Under [`CollectiveAlgo::Hierarchical`] the exchange is
+    /// **node-coalesced**: all pairs bound for ranks on one remote node
+    /// travel as a single framed bundle to that node's leader, which
+    /// scatters them to local destinations on same-node links (one
+    /// re-coalesced message per member). Same-node pairs always go
+    /// direct. Cross-node message count drops from `P * (P - slots)` to
+    /// `P * (nodes - 1)`; the leader transiently buffers its node's
+    /// inbound round, which is the locality-for-memory trade M3R makes.
+    pub fn alltoallv(&self, bufs: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
         anyhow::ensure!(
             bufs.len() == self.size(),
             "alltoallv needs one buffer per rank ({} != {})",
             bufs.len(),
             self.size()
         );
+        match self.collective_algo() {
+            CollectiveAlgo::Hierarchical => self.alltoallv_coalesced(bufs),
+            _ => self.alltoallv_pairwise(bufs),
+        }
+    }
+
+    /// One message per (src, dst) pair — Star and Tree.
+    fn alltoallv_pairwise(&self, mut bufs: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
         let tag = self.next_collective_tag();
         let me = self.rank().0;
         let mut out: Vec<Vec<u8>> = (0..self.size()).map(|_| Vec::new()).collect();
@@ -110,29 +469,103 @@ impl Communicator {
         Ok(out)
     }
 
+    /// Node-coalesced exchange (see [`Communicator::alltoallv`]).
+    fn alltoallv_coalesced(&self, mut bufs: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
+        let n = self.size();
+        let me = self.rank();
+        let direct_tag = self.next_collective_tag();
+        let bundle_tag = self.next_collective_tag();
+        let scatter_tag = self.next_collective_tag();
+        let groups = self.node_groups(Rank::ROOT);
+        let gi = groups.iter().position(|g| g.contains(&me)).expect("rank in a node group");
+        let leader = groups[gi][0];
+
+        let mut out: Vec<Vec<u8>> = (0..n).map(|_| Vec::new()).collect();
+        out[me.0] = std::mem::take(&mut bufs[me.0]);
+
+        // Send phase first: same-node pairs direct, one framed bundle per
+        // remote node addressed to its leader.
+        for &dst in &groups[gi] {
+            if dst != me {
+                self.send(dst, direct_tag, std::mem::take(&mut bufs[dst.0]))?;
+            }
+        }
+        for (gj, g) in groups.iter().enumerate() {
+            if gj == gi {
+                continue;
+            }
+            // One bundle per remote node, in the shared (rank, bytes)
+            // entry frame — here the "rank" is the destination.
+            let entries: Vec<(u64, Vec<u8>)> =
+                g.iter().map(|d| (d.0 as u64, std::mem::take(&mut bufs[d.0]))).collect();
+            self.send(g[0], bundle_tag, encode_entries(&entries))?;
+        }
+
+        // Receive phase: direct same-node messages...
+        for &src in &groups[gi] {
+            if src != me {
+                out[src.0] = self.recv(src, direct_tag)?;
+            }
+        }
+        if me == leader {
+            // ...then one bundle per remote rank; entries for this rank
+            // are absorbed, the rest regrouped into one scatter per local
+            // member (the second half of the coalescing win: members hear
+            // one message per round, not one per remote rank).
+            let remote = n - groups[gi].len();
+            let mut for_member: HashMap<usize, Vec<(u64, Vec<u8>)>> = HashMap::new();
+            for _ in 0..remote {
+                let (src, bytes) = self.recv_any(bundle_tag)?;
+                let mut entries = Vec::new();
+                decode_entries_into(&bytes, &mut entries)?;
+                for (dst, payload) in entries {
+                    if dst as usize == me.0 {
+                        out[src.0] = payload;
+                    } else {
+                        for_member.entry(dst as usize).or_default().push((src.0 as u64, payload));
+                    }
+                }
+            }
+            for &member in &groups[gi][1..] {
+                let list = for_member.remove(&member.0).unwrap_or_default();
+                self.send(member, scatter_tag, encode_entries(&list))?;
+            }
+        } else {
+            let bytes = self.recv(leader, scatter_tag)?;
+            let mut entries = Vec::new();
+            decode_entries_into(&bytes, &mut entries)?;
+            for (src, payload) in entries {
+                out[src as usize] = payload;
+            }
+        }
+        Ok(out)
+    }
+
     /// Reduce `value` across ranks with `op` (must be associative +
-    /// commutative), result on every rank.
+    /// commutative), result on every rank. The fold is applied at the
+    /// root in rank order under every algorithm, so the result is
+    /// bit-identical across [`CollectiveAlgo`]s even for float ops.
     pub fn allreduce<T, F>(&self, value: T, op: F) -> Result<T>
     where
-        T: FastSerialize + Clone,
+        T: FastSerialize,
         F: Fn(T, T) -> T,
     {
-        // Allocate the result-distribution tag BEFORE gather so every
-        // rank's collective sequence stays aligned.
-        let tag = self.next_collective_tag();
-        let gathered = self.gather(Rank::ROOT, value)?;
-        if self.is_root() {
-            let mut it = gathered.expect("root gathers").into_iter();
-            let first = it.next().expect("gather of >=1 rank");
-            let reduced = it.fold(first, &op);
-            let bytes = to_bytes(&reduced);
-            for r in 1..self.size() {
-                self.send(Rank(r), tag, bytes.clone())?;
+        let gather_tag = self.next_collective_tag();
+        let bcast_tag = self.next_collective_tag();
+        match self.gather_bytes(Rank::ROOT, gather_tag, to_bytes(&value))? {
+            Some(slots) => {
+                let mut it = slots.iter();
+                let mut acc: T = from_bytes(it.next().expect("gather of >=1 rank"))?;
+                for bytes in it {
+                    acc = op(acc, from_bytes(bytes)?);
+                }
+                self.bcast_bytes(Rank::ROOT, bcast_tag, Some(to_bytes(&acc)))?;
+                Ok(acc)
             }
-            Ok(reduced)
-        } else {
-            let bytes = self.recv(Rank::ROOT, tag)?;
-            from_bytes(&bytes)
+            None => {
+                let bytes = self.bcast_bytes(Rank::ROOT, bcast_tag, None)?;
+                from_bytes(&bytes)
+            }
         }
     }
 
@@ -160,11 +593,45 @@ impl Communicator {
     }
 }
 
+/// Order gathered `(rank, bytes)` entries into rank-indexed slots.
+fn rank_ordered(entries: Vec<(u64, Vec<u8>)>, n: usize) -> Result<Vec<Vec<u8>>> {
+    anyhow::ensure!(entries.len() == n, "gather collected {} of {n} entries", entries.len());
+    let mut slots: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+    for (rank, bytes) in entries {
+        let slot = slots
+            .get_mut(rank as usize)
+            .ok_or_else(|| anyhow::anyhow!("gathered entry for out-of-range rank {rank}"))?;
+        anyhow::ensure!(slot.is_none(), "rank {rank} contributed twice");
+        *slot = Some(bytes);
+    }
+    Ok(slots.into_iter().map(|s| s.expect("every rank contributes once")).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::comm::Universe;
     use super::super::process::run_ranks;
     use super::*;
+    use crate::cluster::NetworkModel;
+    use crate::mpi::Topology;
+
+    /// A 2-nodes x 2-slots universe pinned to `algo` (free network).
+    fn uni(algo: CollectiveAlgo) -> Universe {
+        Universe::new(Topology::block(2, 2), NetworkModel::free()).with_collective_algo(algo)
+    }
+
+    #[test]
+    fn algo_parse_roundtrip_and_env_resolution() {
+        for algo in CollectiveAlgo::ALL {
+            assert_eq!(algo.to_string().parse::<CollectiveAlgo>().unwrap(), algo);
+        }
+        assert_eq!("hier".parse::<CollectiveAlgo>().unwrap(), CollectiveAlgo::Hierarchical);
+        assert!("ring".parse::<CollectiveAlgo>().is_err());
+        assert_eq!(CollectiveAlgo::resolve(None), CollectiveAlgo::Star);
+        assert_eq!(CollectiveAlgo::resolve(Some("tree")), CollectiveAlgo::Tree);
+        assert_eq!(CollectiveAlgo::resolve(Some(" tree ")), CollectiveAlgo::Tree);
+        assert_eq!(CollectiveAlgo::resolve(Some("nonsense")), CollectiveAlgo::Star);
+    }
 
     #[test]
     fn bcast_from_root() {
@@ -176,10 +643,32 @@ mod tests {
     }
 
     #[test]
+    fn bcast_from_nonzero_root_every_algo() {
+        for algo in CollectiveAlgo::ALL {
+            let got = run_ranks(uni(algo), |c| {
+                let v = if c.rank().0 == 2 { format!("from2-{algo}") } else { String::new() };
+                c.bcast(Rank(2), v).unwrap()
+            });
+            assert_eq!(got, vec![format!("from2-{algo}"); 4], "{algo}");
+        }
+    }
+
+    #[test]
     fn gather_in_rank_order() {
         let got = run_ranks(Universe::local(3), |c| c.gather(Rank::ROOT, c.rank().0 as u64).unwrap());
         assert_eq!(got[0], Some(vec![0, 1, 2]));
         assert_eq!(got[1], None);
+    }
+
+    #[test]
+    fn gather_to_nonleader_root_every_algo() {
+        // Root = rank 3 (NOT its node's lowest rank): the hierarchical
+        // path must still land the full rank-ordered vector there.
+        for algo in CollectiveAlgo::ALL {
+            let got = run_ranks(uni(algo), |c| c.gather(Rank(3), c.rank().0 as u64).unwrap());
+            assert_eq!(got[3], Some(vec![0, 1, 2, 3]), "{algo}");
+            assert!(got[..3].iter().all(Option::is_none), "{algo}");
+        }
     }
 
     #[test]
@@ -191,16 +680,18 @@ mod tests {
     }
 
     #[test]
-    fn alltoallv_transpose() {
-        let got = run_ranks(Universe::local(3), |c| {
-            let me = c.rank().0 as u8;
-            // bufs[j] = [me, j]
-            let bufs: Vec<Vec<u8>> = (0..3).map(|j| vec![me, j as u8]).collect();
-            c.alltoallv(bufs).unwrap()
-        });
-        for (j, row) in got.iter().enumerate() {
-            for (i, buf) in row.iter().enumerate() {
-                assert_eq!(buf, &vec![i as u8, j as u8]);
+    fn alltoallv_transpose_every_algo() {
+        for algo in CollectiveAlgo::ALL {
+            let got = run_ranks(uni(algo), |c| {
+                let me = c.rank().0 as u8;
+                // bufs[j] = [me, j]
+                let bufs: Vec<Vec<u8>> = (0..4).map(|j| vec![me, j as u8]).collect();
+                c.alltoallv(bufs).unwrap()
+            });
+            for (j, row) in got.iter().enumerate() {
+                for (i, buf) in row.iter().enumerate() {
+                    assert_eq!(buf, &vec![i as u8, j as u8], "{algo} src {i} dst {j}");
+                }
             }
         }
     }
@@ -209,6 +700,19 @@ mod tests {
     fn allreduce_sum() {
         let got = run_ranks(Universe::local(4), |c| c.allreduce_sum_u64(c.rank().0 as u64 + 1).unwrap());
         assert_eq!(got, vec![10; 4]);
+    }
+
+    #[test]
+    fn allreduce_fold_order_is_rank_order_every_algo() {
+        // String concatenation is associative but NOT commutative: the
+        // identical result across algorithms pins the root-side
+        // rank-order fold (the bit-identity contract).
+        for algo in CollectiveAlgo::ALL {
+            let got = run_ranks(uni(algo), |c| {
+                c.allreduce(format!("r{}", c.rank().0), |a, b| a + &b).unwrap()
+            });
+            assert_eq!(got, vec!["r0r1r2r3".to_string(); 4], "{algo}");
+        }
     }
 
     #[test]
@@ -226,23 +730,25 @@ mod tests {
     }
 
     #[test]
-    fn barrier_syncs_clocks() {
-        use crate::cluster::{DeploymentKind, NetworkModel};
-        use crate::mpi::Topology;
-        let uni = Universe::new(
-            Topology::block(4, 1),
-            NetworkModel::from_profile(&DeploymentKind::BareMetal.profile()),
-        );
-        let clocks = run_ranks(uni, |c| {
-            if c.rank().0 == 2 {
-                c.advance(5_000_000); // one slow rank
+    fn barrier_syncs_clocks_every_algo() {
+        use crate::cluster::DeploymentKind;
+        for algo in CollectiveAlgo::ALL {
+            let u = Universe::new(
+                Topology::block(4, 1),
+                NetworkModel::from_profile(&DeploymentKind::BareMetal.profile()),
+            )
+            .with_collective_algo(algo);
+            let clocks = run_ranks(u, |c| {
+                if c.rank().0 == 2 {
+                    c.advance(5_000_000); // one slow rank
+                }
+                c.barrier().unwrap();
+                c.clock_ns()
+            });
+            // After a barrier every clock is at least the slow rank's time.
+            for clk in clocks {
+                assert!(clk >= 5_000_000, "{algo}: clock {clk}");
             }
-            c.barrier().unwrap();
-            c.clock_ns()
-        });
-        // After a barrier every clock is at least the slow rank's time.
-        for clk in clocks {
-            assert!(clk >= 5_000_000, "clock {clk}");
         }
     }
 
@@ -258,5 +764,66 @@ mod tests {
         });
         let expect: u64 = (0..50u64).map(|i| i * 3).sum();
         assert_eq!(got, vec![expect; 3]);
+    }
+
+    #[test]
+    fn mid_job_algo_switch_keeps_tags_aligned() {
+        // The equivalence suite's usage pattern: one job runs the same
+        // collective under all three algorithms back to back (every rank
+        // switching at the same point), interleaved with barriers.
+        let got = run_ranks(Universe::local(5), |c| {
+            let mut sums = Vec::new();
+            for algo in CollectiveAlgo::ALL {
+                c.set_collective_algo(algo);
+                sums.push(c.allreduce_sum_u64(c.rank().0 as u64).unwrap());
+                c.barrier().unwrap();
+                sums.push(c.allgather(1u64).unwrap().iter().sum::<u64>());
+            }
+            sums
+        });
+        assert_eq!(got, vec![vec![10, 5, 10, 5, 10, 5]; 5]);
+    }
+
+    #[test]
+    fn tree_allreduce_touches_root_log_p_times() {
+        let p = 16usize;
+        let log2p = 4u64; // ceil(log2(16))
+        let count_root_msgs = |algo: CollectiveAlgo| {
+            let u = Universe::new(Topology::block(p, 1), NetworkModel::free())
+                .with_collective_algo(algo);
+            run_ranks(u, |c| {
+                c.allreduce_sum_u64(1).unwrap();
+                c.sent_messages() + c.received_messages()
+            })[0]
+        };
+        let star = count_root_msgs(CollectiveAlgo::Star);
+        let tree = count_root_msgs(CollectiveAlgo::Tree);
+        assert_eq!(star, 2 * (p as u64 - 1), "star root touches O(P) messages");
+        assert_eq!(tree, 2 * log2p, "tree root touches O(log P) messages");
+    }
+
+    #[test]
+    fn coalesced_alltoallv_cuts_cross_node_messages() {
+        let remote_msgs = |algo: CollectiveAlgo| {
+            // 4 nodes x 4 slots.
+            let u = Universe::new(Topology::block(4, 4), NetworkModel::free())
+                .with_collective_algo(algo);
+            let stats = u.stats();
+            run_ranks(u, |c| {
+                let bufs: Vec<Vec<u8>> =
+                    (0..c.size()).map(|j| vec![c.rank().0 as u8; j + 1]).collect();
+                let got = c.alltoallv(bufs).unwrap();
+                // Every source sent this rank a (rank + 1)-byte buffer.
+                let total: usize = got.iter().map(Vec::len).sum();
+                assert_eq!(total, 16 * (c.rank().0 + 1));
+            });
+            stats.snapshot().2
+        };
+        let star = remote_msgs(CollectiveAlgo::Star);
+        let hier = remote_msgs(CollectiveAlgo::Hierarchical);
+        // Star: each of 16 ranks sends to 12 remote ranks = 192 remote
+        // messages. Coalesced: each rank sends 3 bundles = 48.
+        assert_eq!(star, 16 * 12);
+        assert_eq!(hier, 16 * 3);
     }
 }

@@ -12,6 +12,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::cluster::NetworkModel;
 
+use super::collectives::CollectiveAlgo;
 use super::datatypes::{Message, Rank, Tag};
 use super::topology::Topology;
 
@@ -39,17 +40,37 @@ impl TrafficStats {
 pub struct Universe {
     topology: Topology,
     network: NetworkModel,
+    algo: CollectiveAlgo,
     stats: Arc<TrafficStats>,
 }
 
 impl Universe {
+    /// A universe with the collective algorithm resolved from the
+    /// `BLAZE_COLLECTIVE_ALGO` environment (default
+    /// [`CollectiveAlgo::Star`]); override with
+    /// [`Universe::with_collective_algo`].
     pub fn new(topology: Topology, network: NetworkModel) -> Self {
-        Self { topology, network, stats: Arc::new(TrafficStats::default()) }
+        Self {
+            topology,
+            network,
+            algo: CollectiveAlgo::from_env_or_default(),
+            stats: Arc::new(TrafficStats::default()),
+        }
     }
 
     /// A universe of `n` ranks on one Local-profile node — unit tests.
     pub fn local(n: usize) -> Self {
         Self::new(Topology::single_node(n), NetworkModel::free())
+    }
+
+    /// Pin the collective algorithm (explicit beats the env default).
+    pub fn with_collective_algo(mut self, algo: CollectiveAlgo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn collective_algo(&self) -> CollectiveAlgo {
+        self.algo
     }
 
     pub fn size(&self) -> usize {
@@ -99,6 +120,11 @@ impl Universe {
                 compute_ns: Cell::new(0),
                 net_wait_ns: Cell::new(0),
                 collective_seq: Cell::new(0),
+                default_algo: self.algo,
+                algo: Cell::new(self.algo),
+                sent_messages: Cell::new(0),
+                sent_bytes: Cell::new(0),
+                received_messages: Cell::new(0),
             })
             .collect()
     }
@@ -129,6 +155,17 @@ pub struct Communicator {
     compute_ns: Cell<u64>,
     net_wait_ns: Cell<u64>,
     collective_seq: Cell<u64>,
+    /// The universe's algorithm, restored between pooled jobs.
+    default_algo: CollectiveAlgo,
+    /// Collective algorithm currently in effect (see
+    /// [`Communicator::set_collective_algo`]).
+    algo: Cell<CollectiveAlgo>,
+    /// Per-rank traffic, reset per pooled job — this is what lets tests
+    /// and figures see that a tree allreduce touches the root O(log P)
+    /// times where the star touches it O(P) times.
+    sent_messages: Cell<u64>,
+    sent_bytes: Cell<u64>,
+    received_messages: Cell<u64>,
 }
 
 impl Communicator {
@@ -169,6 +206,36 @@ impl Communicator {
         self.net_wait_ns.get()
     }
 
+    /// Collective algorithm currently in effect on this rank.
+    pub fn collective_algo(&self) -> CollectiveAlgo {
+        self.algo.get()
+    }
+
+    /// Switch the collective algorithm. SPMD discipline applies: every
+    /// rank of a job must switch at the same point in its collective
+    /// sequence, exactly like the tag counter — the equivalence suite
+    /// uses this to compare algorithms on one warm pool. Reset to the
+    /// universe's algorithm between pooled jobs.
+    pub fn set_collective_algo(&self, algo: CollectiveAlgo) {
+        self.algo.set(algo);
+    }
+
+    /// Messages this rank has sent in the current job.
+    pub fn sent_messages(&self) -> u64 {
+        self.sent_messages.get()
+    }
+
+    /// Payload bytes this rank has sent in the current job.
+    pub fn sent_bytes(&self) -> u64 {
+        self.sent_bytes.get()
+    }
+
+    /// Messages this rank has consumed (matched by a recv) in the
+    /// current job.
+    pub fn received_messages(&self) -> u64 {
+        self.received_messages.get()
+    }
+
     pub(crate) fn next_collective_tag(&self) -> Tag {
         let seq = self.collective_seq.get();
         self.collective_seq.set(seq + 1);
@@ -196,6 +263,10 @@ impl Communicator {
         self.net_wait_ns.set(0);
         self.collective_seq.set(0);
         self.active.set(self.world);
+        self.algo.set(self.default_algo);
+        self.sent_messages.set(0);
+        self.sent_bytes.set(0);
+        self.received_messages.set(0);
     }
 
     /// Charge `ns` of modeled compute time to this rank's clock.
@@ -230,6 +301,8 @@ impl Communicator {
         ensure!(dst.0 < self.size(), "send to {dst} outside universe of {}", self.size());
         let bytes = payload.len() as u64;
         let same_node = self.topology.same_node(self.rank, dst);
+        self.sent_messages.set(self.sent_messages.get() + 1);
+        self.sent_bytes.set(self.sent_bytes.get() + bytes);
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes.fetch_add(bytes, Ordering::Relaxed);
         if !same_node {
@@ -283,6 +356,7 @@ impl Communicator {
     /// Clock bookkeeping on message receipt:
     /// `clock = max(clock, sender_clock + transfer_cost)`.
     fn absorb(&self, msg: Message) -> Vec<u8> {
+        self.received_messages.set(self.received_messages.get() + 1);
         let same_node = self.topology.same_node(msg.src, self.rank);
         let cost = self.network.propagation_ns(same_node);
         let arrival = msg.clock_ns.saturating_add(cost);

@@ -29,6 +29,17 @@
 //! Iterative drivers (`core::MapReduceJob::with_pool`, the apps' pooled
 //! entry points, `cluster::ElasticCluster::pool_for_wave`) all ride on it;
 //! `run_ranks` itself is now a thin wrapper that builds a throwaway pool.
+//!
+//! ## Collective algorithms
+//!
+//! Collectives come in three wire shapes — [`CollectiveAlgo::Star`],
+//! [`CollectiveAlgo::Tree`] (binomial, `O(log P)` depth) and
+//! [`CollectiveAlgo::Hierarchical`] (node-leader trees + node-coalesced
+//! `alltoallv`) — selected per universe (explicit >
+//! `BLAZE_COLLECTIVE_ALGO` env > Star) and switchable mid-job under SPMD
+//! discipline. The collectives module docs spell out the shapes and the
+//! bit-identity contract ([`Communicator::allreduce`] folds at the root
+//! in rank order under every algorithm).
 
 mod collectives;
 mod comm;
@@ -37,6 +48,7 @@ pub mod pool;
 mod process;
 mod topology;
 
+pub use collectives::CollectiveAlgo;
 pub use comm::{Communicator, TrafficStats, Universe};
 pub use datatypes::{Message, Rank, Tag};
 pub use pool::{JobOutput, RankPool, TrafficDelta};

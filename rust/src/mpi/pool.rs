@@ -67,6 +67,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::{ClusterConfig, NetworkModel};
 
+use super::collectives::CollectiveAlgo;
 use super::comm::{Communicator, TrafficStats, Universe};
 use super::topology::Topology;
 
@@ -114,6 +115,11 @@ pub struct RankPool {
     workers: Vec<Worker>,
     topology: Topology,
     network: NetworkModel,
+    /// Default collective algorithm of the pool's universe; restored on
+    /// every rank by the prepare phase, so each pooled job starts from
+    /// the universe's algorithm no matter what the previous job switched
+    /// to mid-flight.
+    algo: CollectiveAlgo,
     stats: Arc<TrafficStats>,
     /// Serializes jobs: one at a time, whole-pool granularity.
     submit: Mutex<()>,
@@ -152,6 +158,7 @@ impl RankPool {
     pub fn new(universe: Universe) -> Self {
         let topology = universe.topology().clone();
         let network = universe.network().clone();
+        let algo = universe.collective_algo();
         let stats = universe.stats();
         let workers = universe
             .communicators()
@@ -169,6 +176,7 @@ impl RankPool {
             workers,
             topology,
             network,
+            algo,
             stats,
             submit: Mutex::new(()),
             jobs_run: AtomicU64::new(0),
@@ -183,7 +191,15 @@ impl RankPool {
     /// Pool wired exactly like the one-shot universe `MapReduceJob` would
     /// build for `cfg` — the way sessions share threads across jobs.
     pub fn from_config(cfg: &ClusterConfig) -> Self {
-        Self::new(Universe::new(Topology::from_config(cfg), cfg.network_model()))
+        Self::new(
+            Universe::new(Topology::from_config(cfg), cfg.network_model())
+                .with_collective_algo(cfg.collective_algo()),
+        )
+    }
+
+    /// The collective algorithm pooled jobs start with.
+    pub fn collective_algo(&self) -> CollectiveAlgo {
+        self.algo
     }
 
     /// Number of warm rank threads (the maximum job width).
@@ -206,36 +222,51 @@ impl RankPool {
             .count()
     }
 
-    /// Does this pool model exactly this placement and network?
-    pub fn matches(&self, topology: &Topology, network: &NetworkModel) -> bool {
-        self.network == *network && self.topology == *topology
+    /// Does this pool model exactly this placement, network, and
+    /// collective algorithm?
+    pub fn matches(
+        &self,
+        topology: &Topology,
+        network: &NetworkModel,
+        algo: CollectiveAlgo,
+    ) -> bool {
+        self.network == *network && self.algo == algo && self.topology == *topology
     }
 
     /// Loud guard for pool-backed entry points: error unless this pool
     /// can stand in for the fresh universe `cluster` would get (first
-    /// `cluster.ranks()` ranks of the placement + the network model).
+    /// `cluster.ranks()` ranks of the placement + the network model +
+    /// the cluster's resolved collective algorithm).
     pub fn ensure_models(&self, cluster: &ClusterConfig) -> Result<()> {
         let ranks = cluster.ranks();
         anyhow::ensure!(
-            self.matches_prefix(&Topology::from_config(cluster), &cluster.network_model(), ranks),
-            "rank pool ({} ranks) does not model this cluster's first {ranks} ranks — \
-             build it with RankPool::from_config(&cluster)",
-            self.size()
+            self.matches_prefix(
+                &Topology::from_config(cluster),
+                &cluster.network_model(),
+                cluster.collective_algo(),
+                ranks
+            ),
+            "rank pool ({} ranks, {} collectives) does not model this cluster's first {ranks} \
+             ranks — build it with RankPool::from_config(&cluster)",
+            self.size(),
+            self.algo
         );
         Ok(())
     }
 
     /// Can this pool stand in for a fresh `nranks`-rank universe with the
-    /// given placement/network? True when the models agree on the first
-    /// `nranks` ranks — the prefix a narrowed job runs on.
+    /// given placement/network/algorithm? True when the models agree on
+    /// the first `nranks` ranks — the prefix a narrowed job runs on.
     pub fn matches_prefix(
         &self,
         topology: &Topology,
         network: &NetworkModel,
+        algo: CollectiveAlgo,
         nranks: usize,
     ) -> bool {
         nranks <= self.size()
             && self.network == *network
+            && self.algo == algo
             && self.topology.agrees_on_prefix(topology, nranks)
     }
 
@@ -534,6 +565,20 @@ mod tests {
             c.allreduce_sum_u64(local).unwrap()
         });
         assert_eq!(total, vec![data.iter().sum::<u64>(); 4]);
+    }
+
+    #[test]
+    fn collective_algo_restored_between_pooled_jobs() {
+        let pool = RankPool::new(Universe::local(3).with_collective_algo(CollectiveAlgo::Tree));
+        assert_eq!(pool.collective_algo(), CollectiveAlgo::Tree);
+        let before = pool.run(|c| {
+            let a = c.collective_algo();
+            c.set_collective_algo(CollectiveAlgo::Star);
+            a
+        });
+        assert_eq!(before, vec![CollectiveAlgo::Tree; 3]);
+        // The prepare phase realigns algorithm (and tags) for job 2.
+        assert_eq!(pool.run(|c| c.collective_algo()), vec![CollectiveAlgo::Tree; 3]);
     }
 
     #[test]

@@ -2,18 +2,29 @@
 //! groups, one group in memory at a time — the out-of-core form of the
 //! paper's `(K, Iterable<V>)` contract (§III.D). Memory is bounded by
 //! the largest single group plus the merge's per-run block overhead,
-//! never by the dataset.
+//! never by the dataset — and the one materialized group is **charged to
+//! the job's [`crate::metrics::PeakTracker`]** while it is out: a skewed
+//! hot key whose values dwarf the budget is real memory, and the modeled
+//! peak now says so (ROADMAP group-size accounting follow-up).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::metrics::PeakTracker;
 use crate::serial::FastSerialize;
 
 use super::merge::KWayMerge;
+use super::run::pair_bytes;
 
 /// Streams key-ordered `(K, Vec<V>)` groups off a [`KWayMerge`].
 pub struct GroupStream<'f, K, V> {
     merge: KWayMerge<'f, K, V>,
     pending: Option<(K, V)>,
+    tracker: Arc<PeakTracker>,
+    /// Charge for the most recently yielded group; released when the
+    /// next group replaces it (or on drop).
+    group_bytes: u64,
 }
 
 impl<'f, K, V> GroupStream<'f, K, V>
@@ -22,13 +33,18 @@ where
     V: FastSerialize,
 {
     pub fn new(merge: KWayMerge<'f, K, V>) -> Self {
-        Self { merge, pending: None }
+        let tracker = merge.tracker();
+        Self { merge, pending: None, tracker, group_bytes: 0 }
     }
 
     /// Next `(key, values)` group in ascending key order; `None` at end.
     /// The value multiset per key is complete — every run's values for
-    /// the key, in run order.
+    /// the key, in run order. The group's modeled bytes stay charged to
+    /// the tracker until the next call (callers hold the group at least
+    /// that long).
     pub fn next_group(&mut self) -> Result<Option<(K, Vec<V>)>> {
+        self.tracker.free(self.group_bytes);
+        self.group_bytes = 0;
         let (key, first) = match self.pending.take() {
             Some(p) => p,
             None => match self.merge.next()? {
@@ -36,10 +52,20 @@ where
                 None => return Ok(None),
             },
         };
+        // Accumulate the charge on self as values arrive, so an error
+        // mid-group still leaves Drop knowing exactly what to free.
+        let sz = pair_bytes(&key, &first);
+        self.tracker.alloc(sz);
+        self.group_bytes += sz;
         let mut values = vec![first];
         loop {
             match self.merge.next()? {
-                Some((k, v)) if k == key => values.push(v),
+                Some((k, v)) if k == key => {
+                    let sz = pair_bytes(&key, &v);
+                    self.tracker.alloc(sz);
+                    self.group_bytes += sz;
+                    values.push(v);
+                }
                 Some(other) => {
                     self.pending = Some(other);
                     break;
@@ -51,11 +77,17 @@ where
     }
 }
 
+impl<K, V> Drop for GroupStream<'_, K, V> {
+    fn drop(&mut self) {
+        self.tracker.free(self.group_bytes);
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::run::PAIR_OVERHEAD;
     use super::super::RunWriter;
     use super::*;
-    use crate::metrics::PeakTracker;
 
     fn groups_of(budget: u64, pairs: &[(u64, u64)]) -> Vec<(u64, Vec<u64>)> {
         let t = PeakTracker::new();
@@ -114,5 +146,65 @@ mod tests {
         let groups = groups_of(100, &pairs);
         assert_eq!(groups.len(), 1);
         assert_eq!(groups[0].1.len(), 300);
+    }
+
+    #[test]
+    fn skewed_hot_group_dominates_the_modeled_peak() {
+        // The ROADMAP group-size accounting gap: 2000 values under ONE
+        // key, staged out-of-core under a 512 B budget. The materialized
+        // group is ~2000 modeled pairs of real memory; the tracker's
+        // high-water mark must say so instead of staying near the budget.
+        let t = PeakTracker::new();
+        let budget = 512u64;
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(budget, t.clone());
+        for i in 0..2_000u64 {
+            w.push(7, i).unwrap();
+        }
+        let set = w.finish().unwrap();
+        assert!(set.spilled_bytes() > 0, "hot key must spill");
+        let mut gs = GroupStream::new(set.into_merge().unwrap());
+        let (k, vs) = gs.next_group().unwrap().unwrap();
+        assert_eq!((k, vs.len()), (7, 2_000));
+        let group_floor = 2_000 * (PAIR_OVERHEAD + 2);
+        assert!(
+            t.peak_bytes() >= group_floor,
+            "peak {} must include the {group_floor}+ B hot group, not just the {budget} B budget",
+            t.peak_bytes()
+        );
+        assert!(gs.next_group().unwrap().is_none());
+        drop(gs);
+        drop(vs);
+        assert_eq!(t.current_bytes(), 0, "group charge released with the stream");
+    }
+
+    #[test]
+    fn group_charge_rolls_from_group_to_group() {
+        // Streaming many small groups holds one group's charge at a
+        // time, not the sum of all groups.
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(256, t.clone());
+        for i in 0..1_000u64 {
+            w.push(i % 100, i).unwrap();
+        }
+        let set = w.finish().unwrap();
+        let per_run = super::super::run::block_cap(256) as u64;
+        let runs = set.num_runs() as u64;
+        let mut gs = GroupStream::new(set.into_merge().unwrap());
+        let mut n = 0;
+        while let Some((_, vs)) = gs.next_group().unwrap() {
+            assert_eq!(vs.len(), 10);
+            n += 1;
+        }
+        assert_eq!(n, 100);
+        // Bound: budget + per-run blocks + ~one 10-value group (with
+        // slack), never the 1000-pair dataset.
+        let ten_pair_groups = 4 * 10 * (PAIR_OVERHEAD + 10);
+        assert!(
+            t.peak_bytes() < 256 + runs * per_run + ten_pair_groups,
+            "peak {} runs {runs}",
+            t.peak_bytes()
+        );
+        drop(gs);
+        assert_eq!(t.current_bytes(), 0);
     }
 }

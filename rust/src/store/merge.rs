@@ -69,12 +69,14 @@ where
     V: FastSerialize,
 {
     /// Consume the run set into a single key-ordered merge stream. Disk
-    /// runs come first in run-creation order, the in-memory tail last —
-    /// chronological, so stable merging preserves overall write order
-    /// within a key.
+    /// runs come first in run-creation order, the in-memory runs last —
+    /// chronological within each staging family, so stable merging
+    /// preserves overall write order within a key for any
+    /// single-family writer (see [`super::RunWriter::push_sorted_run`]
+    /// for the mixed-family caveat).
     pub fn into_merge(self) -> Result<KWayMerge<'static, K, V>> {
-        let (mem_run, charge, spill, runs, tracker) = self.into_parts();
-        let mut cursors: Vec<RunCursor<K, V>> = Vec::with_capacity(runs.len() + 1);
+        let (mem_runs, charge, spill, runs, tracker) = self.into_parts();
+        let mut cursors: Vec<RunCursor<K, V>> = Vec::with_capacity(runs.len() + mem_runs.len());
         if let Some(shared) = &spill {
             for span in &runs {
                 cursors.push(RunCursor::Disk(RunReader::for_span(
@@ -84,8 +86,10 @@ where
                 )));
             }
         }
-        if !mem_run.is_empty() {
-            cursors.push(RunCursor::Mem(mem_run.into_iter()));
+        for mem_run in mem_runs {
+            if !mem_run.is_empty() {
+                cursors.push(RunCursor::Mem(mem_run.into_iter()));
+            }
         }
         KWayMerge::with_parts(cursors, charge, spill)
     }
@@ -132,6 +136,13 @@ where
     /// Modeled bytes folded away by the merge-time combiner.
     pub fn combined_bytes(&self) -> u64 {
         self.combined_bytes
+    }
+
+    /// The tracker charges from this merge's runs land on — lets
+    /// [`super::GroupStream`] charge its materialized group to the same
+    /// accounting.
+    pub(crate) fn tracker(&self) -> std::sync::Arc<crate::metrics::PeakTracker> {
+        self._charge.tracker().clone()
     }
 
     /// Recursively play the initial tournament below internal node `t`,

@@ -28,9 +28,16 @@
 //!
 //! Memory contract (all charges on the job's
 //! [`crate::metrics::PeakTracker`]): staging ≤ budget + one pair;
-//! merging adds at most one block (≤ `block_cap(budget)`) per open run.
-//! `tests/integration_store.rs` asserts the end-to-end version of this
-//! bound through the engine.
+//! merging adds at most one block (≤ `block_cap(budget)`) per open run;
+//! [`GroupStream`] additionally charges the one materialized group —
+//! a skewed hot key's group is real memory and the modeled peak says
+//! so. `tests/integration_store.rs` asserts the end-to-end version of
+//! this bound through the engine.
+//!
+//! [`RunWriter::push_sorted_run`] is the comparison-free staging path
+//! for already key-ordered chunks (the shuffle's receiver-side
+//! restage): each chunk becomes its own run, in memory until the
+//! budget overflows and on disk after, with no re-sort either way.
 
 mod group;
 mod merge;

@@ -13,9 +13,13 @@
 //!
 //! Blocks are capped near [`block_cap`] bytes, so a reader never holds
 //! more than one block of raw bytes — the "constant per-run overhead"
-//! the memory-budget contract is stated in. The same frame is what
-//! [`crate::core::SpillBuffer`] has always written, which is why its
-//! drain path can stream through [`RunReader`] too.
+//! the memory-budget contract is stated in.
+//!
+//! Two staging paths feed a writer: [`RunWriter::push`] (unsorted pairs,
+//! sorted stably at spill time) and [`RunWriter::push_sorted_run`] (an
+//! already key-ordered chunk — e.g. one shuffle round's per-source slice
+//! — staged as its own run with **zero comparisons**; the k-way merge
+//! pays `O(log k)` per pair later instead of a full re-sort here).
 //!
 //! All staged memory is charged to the job's
 //! [`crate::metrics::PeakTracker`]; the invariant (asserted by the unit
@@ -36,7 +40,7 @@ use crate::util::tmp::TempFile;
 
 use super::Combiner;
 
-/// Modeled per-pair container overhead (matches `SpillBuffer`'s charge).
+/// Modeled per-pair container overhead.
 pub const PAIR_OVERHEAD: u64 = 16;
 
 /// Raw-byte cap for one run block under `budget`: a sixteenth of the
@@ -64,6 +68,10 @@ pub(crate) struct Charge {
 impl Charge {
     pub(crate) fn transfer(tracker: Arc<PeakTracker>, bytes: u64) -> Self {
         Self { tracker, bytes }
+    }
+
+    pub(crate) fn tracker(&self) -> &Arc<PeakTracker> {
+        &self.tracker
     }
 }
 
@@ -121,6 +129,10 @@ pub struct RunWriter<'f, K, V> {
     block_cap: usize,
     staged: Vec<(K, V)>,
     staged_bytes: u64,
+    /// Already key-ordered chunks staged by
+    /// [`RunWriter::push_sorted_run`], each its own run-to-be.
+    sorted_chunks: Vec<Vec<(K, V)>>,
+    sorted_bytes: u64,
     combiner: Option<Combiner<'f, V>>,
     combined_bytes: u64,
     spill: Option<TempFile>,
@@ -143,6 +155,8 @@ where
             block_cap: block_cap(budget),
             staged: Vec::new(),
             staged_bytes: 0,
+            sorted_chunks: Vec::new(),
+            sorted_bytes: 0,
             combiner: None,
             combined_bytes: 0,
             spill: None,
@@ -165,9 +179,69 @@ where
         self.staged_bytes += sz;
         self.tracker.alloc(sz);
         self.staged.push((key, value));
-        if self.staged_bytes > self.budget {
+        if self.staged_bytes + self.sorted_bytes > self.budget {
             self.spill_run()?;
         }
+        Ok(())
+    }
+
+    /// Stage an already key-ordered chunk as its **own run** — no sort,
+    /// no comparisons (the receiver-side restage path: every shuffle
+    /// round's per-source slice arrives pre-sorted, because the sender
+    /// drains its merge in key order). With a combiner, adjacent equal
+    /// keys are folded in one linear pass first. Chunks are retained in
+    /// memory (tracker-charged) until the budget overflows, at which
+    /// point each retained chunk is written to disk as its own run —
+    /// still comparison-free; the k-way merge pays `O(log k)` per pair
+    /// later instead of a full `O(n log n)` re-sort here.
+    ///
+    /// Ordering contract: the merge preserves write order within a key
+    /// **within each staging family** — chunk arrival order here,
+    /// push order in [`RunWriter::push`] — but NOT across the two
+    /// families (a pushed pair and a chunked pair under the same key
+    /// may merge in either relative order). Every current caller uses
+    /// one family per writer; mixed writers get key order only.
+    pub fn push_sorted_run(&mut self, chunk: Vec<(K, V)>) -> Result<()> {
+        let chunk = match self.combiner {
+            None => chunk,
+            Some(combine) => {
+                let mut out: Vec<(K, V)> = Vec::with_capacity(chunk.len());
+                for (k, v) in chunk {
+                    match out.last_mut() {
+                        Some((lk, lv)) if *lk == k => {
+                            self.combined_bytes += pair_bytes(&k, &v);
+                            combine(lv, v);
+                        }
+                        _ => out.push((k, v)),
+                    }
+                }
+                out
+            }
+        };
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        debug_assert!(
+            chunk.windows(2).all(|w| w[0].0 <= w[1].0),
+            "push_sorted_run chunk is not key-ordered"
+        );
+        let bytes: u64 = chunk.iter().map(|(k, v)| pair_bytes(k, v)).sum();
+        self.tracker.alloc(bytes);
+        self.sorted_bytes += bytes;
+        self.sorted_chunks.push(chunk);
+        if self.staged_bytes + self.sorted_bytes > self.budget {
+            self.flush_sorted_chunks()?;
+        }
+        Ok(())
+    }
+
+    /// Write every retained sorted chunk to disk, each as its own run.
+    fn flush_sorted_chunks(&mut self) -> Result<()> {
+        for chunk in std::mem::take(&mut self.sorted_chunks) {
+            self.write_run(chunk)?;
+        }
+        self.tracker.free(self.sorted_bytes);
+        self.sorted_bytes = 0;
         Ok(())
     }
 
@@ -217,6 +291,13 @@ where
     /// staging vec, so per-push work stays amortized even when the
     /// folded working set hovers near the budget (those spill).
     fn spill_run(&mut self) -> Result<()> {
+        // Sorted chunks spill first: they are already runs, so flushing
+        // them costs zero comparisons and frees budget for staging. If
+        // that alone clears the overflow, the staged pairs keep staging.
+        self.flush_sorted_chunks()?;
+        if self.staged_bytes <= self.budget {
+            return Ok(());
+        }
         self.sort_and_combine();
         if self.staged.is_empty() {
             return Ok(());
@@ -224,17 +305,30 @@ where
         if self.combiner.is_some() && self.staged_bytes <= self.budget / 2 {
             return Ok(());
         }
+        let staged = std::mem::take(&mut self.staged);
+        self.write_run(staged)?;
+        // Zero + free only after the write succeeded: on an I/O error the
+        // charge stays on staged_bytes so Drop still balances the books.
+        let freed = std::mem::replace(&mut self.staged_bytes, 0);
+        self.tracker.free(freed);
+        Ok(())
+    }
+
+    /// Encode `pairs` (already key-ordered) to disk as one framed run.
+    fn write_run(&mut self, pairs: Vec<(K, V)>) -> Result<()> {
+        if pairs.is_empty() {
+            return Ok(());
+        }
         if self.spill.is_none() {
             self.spill = Some(TempFile::new("blaze-run").context("creating run spill file")?);
         }
-        let staged = std::mem::take(&mut self.staged);
         let file = self.spill.as_mut().expect("spill file just ensured").file();
         let start = self.write_pos;
         let mut pos = self.write_pos;
         let mut records = Encoder::with_capacity(self.block_cap + 64);
         let mut count = 0u64;
-        let items = staged.len() as u64;
-        for (k, v) in staged {
+        let items = pairs.len() as u64;
+        for (k, v) in pairs {
             k.encode(&mut records);
             v.encode(&mut records);
             count += 1;
@@ -248,25 +342,33 @@ where
         self.write_pos = pos;
         self.runs.push(RunSpan { start, end: pos, items });
         self.spilled_bytes += pos - start;
-        self.tracker.free(self.staged_bytes);
-        self.staged_bytes = 0;
         Ok(())
     }
 
     /// Sort the in-memory tail and hand every run over as a [`RunSet`].
+    /// Retained sorted chunks become in-memory runs (chunk arrival
+    /// order) ahead of the staged tail — chronological within each
+    /// staging family, which is what the merge's tie-break stability is
+    /// stated over (see [`RunWriter::push_sorted_run`] for the mixed
+    /// caveat).
     pub fn finish(mut self) -> Result<RunSet<K, V>> {
         self.sort_and_combine();
-        let mem_run = std::mem::take(&mut self.staged);
-        let mem_items = mem_run.len() as u64;
-        let charge =
-            Charge::transfer(self.tracker.clone(), std::mem::replace(&mut self.staged_bytes, 0));
+        let mut mem_runs = std::mem::take(&mut self.sorted_chunks);
+        let tail = std::mem::take(&mut self.staged);
+        if !tail.is_empty() {
+            mem_runs.push(tail);
+        }
+        let mem_items: u64 = mem_runs.iter().map(|r| r.len() as u64).sum();
+        let charge_bytes = std::mem::replace(&mut self.staged_bytes, 0)
+            + std::mem::replace(&mut self.sorted_bytes, 0);
+        let charge = Charge::transfer(self.tracker.clone(), charge_bytes);
         let spill = match self.spill.take() {
             Some(tf) => Some(SharedSpill::new(tf)?),
             None => None,
         };
         let disk_items: u64 = self.runs.iter().map(|r| r.items).sum();
         Ok(RunSet {
-            mem_run,
+            mem_runs,
             charge,
             spill,
             runs: std::mem::take(&mut self.runs),
@@ -280,15 +382,17 @@ where
 
 impl<K, V> Drop for RunWriter<'_, K, V> {
     fn drop(&mut self) {
-        self.tracker.free(self.staged_bytes);
+        self.tracker.free(self.staged_bytes + self.sorted_bytes);
     }
 }
 
 /// The finished output of a [`RunWriter`]: zero or more key-ordered
-/// disk runs plus the key-ordered in-memory tail run. Consume it with
+/// disk runs plus zero or more key-ordered in-memory runs (retained
+/// presorted chunks, then the staged tail). Consume it with
 /// [`RunSet::into_merge`] to get one globally key-ordered stream.
 pub struct RunSet<K, V> {
-    pub(crate) mem_run: Vec<(K, V)>,
+    /// Non-empty in-memory runs, chronological order.
+    pub(crate) mem_runs: Vec<Vec<(K, V)>>,
     pub(crate) charge: Charge,
     pub(crate) spill: Option<SharedSpill>,
     pub(crate) runs: Vec<RunSpan>,
@@ -303,9 +407,9 @@ where
     K: FastSerialize + Ord,
     V: FastSerialize,
 {
-    /// Disk runs + the in-memory tail (when non-empty).
+    /// Disk runs + in-memory runs (all non-empty by construction).
     pub fn num_runs(&self) -> usize {
-        self.runs.len() + usize::from(!self.mem_run.is_empty())
+        self.runs.len() + self.mem_runs.len()
     }
 
     pub fn spilled_bytes(&self) -> u64 {
@@ -329,8 +433,8 @@ where
     #[allow(clippy::type_complexity)]
     pub(crate) fn into_parts(
         self,
-    ) -> (Vec<(K, V)>, Charge, Option<SharedSpill>, Vec<RunSpan>, Arc<PeakTracker>) {
-        (self.mem_run, self.charge, self.spill, self.runs, self.tracker)
+    ) -> (Vec<Vec<(K, V)>>, Charge, Option<SharedSpill>, Vec<RunSpan>, Arc<PeakTracker>) {
+        (self.mem_runs, self.charge, self.spill, self.runs, self.tracker)
     }
 }
 
@@ -506,6 +610,143 @@ mod tests {
         assert_eq!(set.num_runs(), 0);
         let mut m = set.into_merge().unwrap();
         assert!(m.next().unwrap().is_none());
+    }
+
+    /// Key whose `Ord` counts comparisons (sorts and merges route
+    /// through `cmp`); `PartialOrd` is implemented directly so the
+    /// writer's sortedness `debug_assert` does not distort the counts.
+    #[derive(Debug, Clone, PartialEq, Eq, Hash)]
+    struct CountKey(u64);
+
+    static KEY_CMPS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+    fn key_cmps() -> u64 {
+        KEY_CMPS.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    impl PartialOrd for CountKey {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.0.cmp(&other.0))
+        }
+    }
+
+    impl Ord for CountKey {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            KEY_CMPS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.0.cmp(&other.0)
+        }
+    }
+
+    impl FastSerialize for CountKey {
+        fn encode(&self, enc: &mut Encoder) {
+            enc.put_varint(self.0);
+        }
+        fn decode(dec: &mut Decoder<'_>) -> Result<Self> {
+            Ok(CountKey(dec.get_varint()?))
+        }
+        fn size_hint(&self) -> usize {
+            9
+        }
+    }
+
+    #[test]
+    fn presorted_chunks_restage_without_comparisons_and_match_per_pair_push() {
+        // The receiver-side-restage satellite, measured: the same chunk
+        // stream staged (a) pair by pair (sorted at spill time, the old
+        // restage shape) and (b) via push_sorted_run. Outputs must be
+        // byte-identical — same pairs, same within-key value order — and
+        // path (b) must cost strictly fewer key comparisons, with ZERO
+        // spent during staging itself.
+        let chunks: Vec<Vec<(CountKey, u64)>> = (0..12)
+            .map(|c: u64| (0..40).map(|i: u64| (CountKey(i), c * 100 + i)).collect())
+            .collect();
+        let budget = 600u64;
+        let drain = |set: RunSet<CountKey, u64>| {
+            let mut m = set.into_merge().unwrap();
+            let mut out = Vec::new();
+            while let Some(p) = m.next().unwrap() {
+                out.push(p);
+            }
+            out
+        };
+
+        let t = PeakTracker::new();
+        let base = key_cmps();
+        let mut w: RunWriter<'_, CountKey, u64> = RunWriter::new(budget, t.clone());
+        for chunk in chunks.clone() {
+            w.push_sorted_run(chunk).unwrap();
+        }
+        let presorted_set = w.finish().unwrap();
+        let presorted_stage_cmps = key_cmps() - base;
+        let presorted_out = drain(presorted_set);
+        let presorted_total_cmps = key_cmps() - base;
+
+        let base = key_cmps();
+        let mut w: RunWriter<'_, CountKey, u64> = RunWriter::new(budget, t.clone());
+        for chunk in chunks.clone() {
+            for (k, v) in chunk {
+                w.push(k, v).unwrap();
+            }
+        }
+        let pushed_set = w.finish().unwrap();
+        let pushed_stage_cmps = key_cmps() - base;
+        let pushed_out = drain(pushed_set);
+        let pushed_total_cmps = key_cmps() - base;
+
+        assert_eq!(presorted_out, pushed_out, "byte-identical merged stream");
+        assert_eq!(presorted_stage_cmps, 0, "presorted restage must not compare keys");
+        assert!(pushed_stage_cmps > 0, "per-pair staging sorts at spill time");
+        assert!(
+            presorted_total_cmps < pushed_total_cmps,
+            "restage comparisons must drop: {presorted_total_cmps} vs {pushed_total_cmps}"
+        );
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn presorted_chunks_stay_in_memory_under_unlimited_budget() {
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(u64::MAX, t.clone());
+        w.push_sorted_run(vec![(2, 20), (4, 40)]).unwrap();
+        w.push_sorted_run(Vec::new()).unwrap(); // empty chunk: dropped
+        w.push_sorted_run(vec![(1, 10), (2, 21)]).unwrap();
+        let set = w.finish().unwrap();
+        assert_eq!(set.num_runs(), 2, "one mem run per non-empty chunk");
+        assert_eq!(set.spilled_bytes(), 0);
+        let got = drain_merge(set);
+        // Global key order; run order (chunk arrival) within equal keys.
+        assert_eq!(got, vec![(1, 10), (2, 20), (2, 21), (4, 40)]);
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn presorted_chunk_combiner_folds_adjacent_equal_keys() {
+        let t = PeakTracker::new();
+        let combine = |acc: &mut u64, v: u64| *acc += v;
+        let mut w: RunWriter<'_, u64, u64> =
+            RunWriter::new(u64::MAX, t.clone()).with_combiner(&combine);
+        w.push_sorted_run((0..90).map(|i| (i / 30, 1)).collect()).unwrap();
+        let set = w.finish().unwrap();
+        assert!(set.combined_bytes() > 0);
+        assert_eq!(set.total_items(), 3, "30 values folded per key");
+        let got = drain_merge(set);
+        assert_eq!(got, vec![(0, 30), (1, 30), (2, 30)]);
+        assert_eq!(t.current_bytes(), 0);
+    }
+
+    #[test]
+    fn mixed_push_and_presorted_chunks_merge_key_ordered() {
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(400, t.clone());
+        for i in (0..120u64).rev() {
+            w.push(i, i).unwrap();
+        }
+        w.push_sorted_run((0..60).map(|i| (i * 2, 1000 + i)).collect()).unwrap();
+        let set = w.finish().unwrap();
+        let got = drain_merge(set);
+        assert_eq!(got.len(), 180);
+        assert!(got.windows(2).all(|w| w[0].0 <= w[1].0), "globally key-ordered");
+        assert_eq!(t.current_bytes(), 0);
     }
 
     #[test]

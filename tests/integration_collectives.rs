@@ -1,0 +1,328 @@
+//! The collective-equivalence suite (ISSUE 4 acceptance): Star, Tree and
+//! Hierarchical collectives must produce **byte-identical** results for
+//! bcast / gather / allgather / allreduce / alltoallv at randomized
+//! widths (1..=16), skewed payload sizes, and subset-width jobs on warm
+//! `RankPool`s — every property case is another job on the same warm
+//! threads, so this also workouts collective-tag realignment across
+//! algorithms. Plus the traffic-shape assertions: a tree allreduce
+//! touches the root `O(log P)` times where the star touches it `O(P)`
+//! times, and hierarchical alltoallv coalesces cross-node messages to
+//! one bundle per (rank, remote node).
+
+use blaze_rs::cluster::NetworkModel;
+use blaze_rs::mpi::{CollectiveAlgo, Rank, RankPool, Topology, Universe};
+use blaze_rs::util::prop::{for_all, size, vec_of};
+use blaze_rs::util::rng::Rng;
+
+/// 4 nodes x 4 slots: wide enough for real trees, multi-rank nodes for
+/// the hierarchical (node-leader) paths.
+const POOL_RANKS: usize = 16;
+
+fn pool(algo: CollectiveAlgo) -> RankPool {
+    RankPool::new(
+        Universe::new(Topology::block(4, 4), NetworkModel::free()).with_collective_algo(algo),
+    )
+}
+
+/// One warm pool per algorithm, shared by every case of a property.
+fn pools() -> Vec<(CollectiveAlgo, RankPool)> {
+    CollectiveAlgo::ALL.iter().map(|a| (*a, pool(*a))).collect()
+}
+
+/// A skewed payload: log-uniform length up to `max` random bytes.
+fn payload(r: &mut Rng, max: usize) -> Vec<u8> {
+    vec_of(r, max, |r| r.next_u64() as u8)
+}
+
+fn ceil_log2(n: usize) -> u64 {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n as u64 - 1).leading_zeros() as u64
+    }
+}
+
+#[test]
+fn prop_bcast_identical_across_algos() {
+    let pools = pools();
+    for_all(
+        "bcast: star == tree == hierarchical",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            let root = r.below(width as u64) as usize;
+            (width, root, payload(r, 2_000))
+        },
+        |(width, root, data)| {
+            let outs: Vec<Vec<Vec<u8>>> = pools
+                .iter()
+                .map(|(_, p)| {
+                    p.run_on(*width, |c| {
+                        let v = if c.rank().0 == *root { data.clone() } else { Vec::new() };
+                        c.bcast(Rank(*root), v).unwrap()
+                    })
+                })
+                .collect();
+            outs[1] == outs[0]
+                && outs[2] == outs[0]
+                && outs[0].iter().all(|b| b == data)
+        },
+    );
+}
+
+#[test]
+fn prop_gather_identical_across_algos() {
+    let pools = pools();
+    for_all(
+        "gather: star == tree == hierarchical, rank order at any root",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            let root = r.below(width as u64) as usize;
+            let per_rank: Vec<Vec<u8>> = (0..width).map(|_| payload(r, 600)).collect();
+            (width, root, per_rank)
+        },
+        |(width, root, per_rank)| {
+            let outs: Vec<Vec<Option<Vec<Vec<u8>>>>> = pools
+                .iter()
+                .map(|(_, p)| {
+                    p.run_on(*width, |c| {
+                        c.gather(Rank(*root), per_rank[c.rank().0].clone()).unwrap()
+                    })
+                })
+                .collect();
+            outs[1] == outs[0]
+                && outs[2] == outs[0]
+                && outs[0][*root].as_ref() == Some(per_rank)
+                && outs[0].iter().enumerate().all(|(i, o)| (i == *root) != o.is_none())
+        },
+    );
+}
+
+#[test]
+fn prop_allgather_identical_across_algos() {
+    let pools = pools();
+    for_all(
+        "allgather: star == tree == hierarchical, everywhere",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            let per_rank: Vec<Vec<u8>> = (0..width).map(|_| payload(r, 600)).collect();
+            (width, per_rank)
+        },
+        |(width, per_rank)| {
+            let outs: Vec<Vec<Vec<Vec<u8>>>> = pools
+                .iter()
+                .map(|(_, p)| {
+                    p.run_on(*width, |c| {
+                        c.allgather(per_rank[c.rank().0].clone()).unwrap()
+                    })
+                })
+                .collect();
+            outs[1] == outs[0]
+                && outs[2] == outs[0]
+                && outs[0].iter().all(|got| got == per_rank)
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_identical_across_algos_even_non_commutative() {
+    // String concatenation is associative but NOT commutative: identical
+    // results across algorithms pin the rank-order root fold (the
+    // bit-identity contract that keeps float reductions stable too).
+    let pools = pools();
+    for_all(
+        "allreduce: star == tree == hierarchical, rank-order fold",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            let words: Vec<String> =
+                (0..width).map(|i| format!("r{i}:{};", size(r, 500))).collect();
+            (width, words)
+        },
+        |(width, words)| {
+            let expect: String = words.concat();
+            let sums: u64 = (0..*width as u64).sum();
+            let outs: Vec<Vec<(String, u64)>> = pools
+                .iter()
+                .map(|(_, p)| {
+                    p.run_on(*width, |c| {
+                        let cat = c
+                            .allreduce(words[c.rank().0].clone(), |a, b| a + &b)
+                            .unwrap();
+                        let sum = c.allreduce_sum_u64(c.rank().0 as u64).unwrap();
+                        (cat, sum)
+                    })
+                })
+                .collect();
+            outs[1] == outs[0]
+                && outs[2] == outs[0]
+                && outs[0].iter().all(|(cat, sum)| cat == &expect && *sum == sums)
+        },
+    );
+}
+
+#[test]
+fn prop_alltoallv_identical_across_algos() {
+    let pools = pools();
+    for_all(
+        "alltoallv: star == tree == hierarchical, exact transpose",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            // Skewed (src, dst) payload matrix, many empty cells.
+            let matrix: Vec<Vec<Vec<u8>>> = (0..width)
+                .map(|_| (0..width).map(|_| payload(r, 300)).collect())
+                .collect();
+            (width, matrix)
+        },
+        |(width, matrix)| {
+            let outs: Vec<Vec<Vec<Vec<u8>>>> = pools
+                .iter()
+                .map(|(_, p)| {
+                    p.run_on(*width, |c| {
+                        c.alltoallv(matrix[c.rank().0].clone()).unwrap()
+                    })
+                })
+                .collect();
+            // received[dst][src] must equal matrix[src][dst], identically
+            // under every algorithm.
+            outs[1] == outs[0]
+                && outs[2] == outs[0]
+                && outs[0].iter().enumerate().all(|(dst, row)| {
+                    row.iter().enumerate().all(|(src, buf)| buf == &matrix[src][dst])
+                })
+        },
+    );
+}
+
+#[test]
+fn prop_mixed_collective_sequences_stay_aligned_on_warm_pools() {
+    // A whole SPMD program per case — interleaved collectives at a random
+    // width, repeated on the same warm pools. Any tag misalignment across
+    // algorithms or leftover state between pooled jobs deadlocks or
+    // diverges here.
+    let pools = pools();
+    for_all(
+        "mixed sequence: identical transcript across algos",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            let rounds = 1 + r.below(4);
+            (width, rounds, payload(r, 200))
+        },
+        |(width, rounds, data)| {
+            let outs: Vec<Vec<(u64, Vec<u8>, u64)>> = pools
+                .iter()
+                .map(|(_, p)| {
+                    p.run_on(*width, |c| {
+                        let mut acc = 0u64;
+                        let mut blob = Vec::new();
+                        for round in 0..*rounds {
+                            acc = acc.wrapping_add(
+                                c.allreduce_sum_u64(c.rank().0 as u64 + round).unwrap(),
+                            );
+                            let v = if c.is_root() { data.clone() } else { Vec::new() };
+                            blob = c.bcast(Rank::ROOT, v).unwrap();
+                            c.barrier().unwrap();
+                        }
+                        let total = c.exscan_sum(1).unwrap();
+                        (acc, blob, total)
+                    })
+                })
+                .collect();
+            outs[1] == outs[0] && outs[2] == outs[0]
+        },
+    );
+}
+
+#[test]
+fn tree_allreduce_root_messages_are_log_p_at_every_width() {
+    // The O(log P) traffic assertion, swept across widths on warm pools:
+    // the tree root sends/receives exactly 2*ceil(log2 P) messages per
+    // allreduce; the star root pays 2*(P-1).
+    let star = pool(CollectiveAlgo::Star);
+    let tree = pool(CollectiveAlgo::Tree);
+    for width in [2usize, 3, 5, 8, 13, 16] {
+        let count = |p: &RankPool| {
+            p.run_on(width, |c| {
+                c.allreduce_sum_u64(1).unwrap();
+                c.sent_messages() + c.received_messages()
+            })[0]
+        };
+        let star_msgs = count(&star);
+        let tree_msgs = count(&tree);
+        assert_eq!(star_msgs, 2 * (width as u64 - 1), "star root at width {width}");
+        assert_eq!(tree_msgs, 2 * ceil_log2(width), "tree root at width {width}");
+        if width >= 4 {
+            assert!(tree_msgs < star_msgs, "tree must beat star at width {width}");
+        }
+    }
+}
+
+#[test]
+fn hierarchical_alltoallv_coalesces_cross_node_traffic() {
+    // Surfaced through the pool's per-job traffic delta (what JobStats
+    // reads): full-width and subset-width shuffles cross node boundaries
+    // in one bundle per (rank, remote node) under Hierarchical.
+    let star = pool(CollectiveAlgo::Star);
+    let hier = pool(CollectiveAlgo::Hierarchical);
+    for width in [16usize, 6] {
+        let run = |p: &RankPool| {
+            p.run_job(width, |c| {
+                let bufs: Vec<Vec<u8>> =
+                    (0..c.size()).map(|j| vec![c.rank().0 as u8; j + 1]).collect();
+                let got = c.alltoallv(bufs).unwrap();
+                let ok = got
+                    .iter()
+                    .enumerate()
+                    .all(|(src, b)| b.len() == c.rank().0 + 1 && b.iter().all(|&x| x == src as u8));
+                assert!(ok, "transpose intact");
+            })
+        };
+        let star_remote = run(&star).traffic.remote_messages;
+        let hier_remote = run(&hier).traffic.remote_messages;
+        assert!(
+            hier_remote < star_remote,
+            "width {width}: hier {hier_remote} vs star {star_remote} remote messages"
+        );
+        if width == 16 {
+            // 16 ranks x 12 remote peers pairwise vs 16 ranks x 3 bundles.
+            assert_eq!(star_remote, 16 * 12);
+            assert_eq!(hier_remote, 16 * 3);
+        }
+    }
+}
+
+#[test]
+fn equivalence_holds_across_engine_jobs_on_warm_pools() {
+    // End-to-end: the same wordcount on one warm pool per algorithm (the
+    // pools model the SAME cluster shape apart from the algo) must give
+    // identical results — collectives are invisible to the job output.
+    use blaze_rs::cluster::ClusterConfig;
+    use blaze_rs::core::{MapReduceJob, ReductionMode};
+
+    let lines: Vec<String> =
+        (0..240).map(|i| format!("w{} w{} shared", i % 17, i % 5)).collect();
+    let wc_map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+        for w in line.split_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    };
+    let mut baseline = None;
+    for algo in CollectiveAlgo::ALL {
+        let cluster = ClusterConfig::builder()
+            .nodes(2)
+            .slots_per_node(2)
+            .seed(11)
+            .collective_algo(algo)
+            .build();
+        let pool = RankPool::from_config(&cluster);
+        for mode in ReductionMode::ALL {
+            let out = MapReduceJob::new(&cluster, &lines)
+                .with_mode(mode)
+                .with_pool(&pool)
+                .run_monoid(wc_map, |a: u64, b| a + b)
+                .unwrap();
+            match &baseline {
+                None => baseline = Some(out.result),
+                Some(truth) => assert_eq!(&out.result, truth, "{algo}/{mode} diverged"),
+            }
+        }
+    }
+}
