@@ -9,7 +9,8 @@
 
 use std::collections::HashMap;
 
-use blaze_rs::dist::ShardRouter;
+use blaze_rs::dist::{BucketRouter, DistHashMap, ShardRouter};
+use blaze_rs::metrics::PeakTracker;
 use blaze_rs::mpi::{run_ranks, RankPool, Universe};
 use blaze_rs::serial::{from_bytes, to_bytes, Encoder, FastSerialize};
 use blaze_rs::util::bench::{bench, black_box};
@@ -202,6 +203,38 @@ fn main() {
                 },
             ));
         }
+    }
+
+    // --- iterative delta shuffle (DistHashMap path) ----------------------
+    // One PageRank-shaped wave's container traffic: 10k staged deltas
+    // over 512 hot keys, flushed raw vs with the stage-side pre-fold
+    // (`flush_combining`) the iterative engine uses. The fold pays a
+    // local hash pass to collapse the wire to one delta per (rank, key).
+    {
+        let pool = RankPool::local(4);
+        let run_flush = |fold: bool| {
+            pool.run(|c| {
+                let mut dm: DistHashMap<u32, f64, BucketRouter> = DistHashMap::from_local(
+                    c,
+                    BucketRouter::new(c.size(), 7),
+                    HashMap::new(),
+                    PeakTracker::new(),
+                );
+                for i in 0..10_000u32 {
+                    dm.stage(i % 512, 1.0);
+                }
+                if fold {
+                    dm.flush_combining(|a, b| *a += b).unwrap();
+                } else {
+                    dm.flush(|a, b| *a += b).unwrap();
+                }
+                dm.len_local()
+            })
+        };
+        results.push(bench("dist/flush 10k deltas raw (4 ranks)", 3, 10, || run_flush(false)));
+        results.push(bench("dist/flush 10k deltas pre-folded (4 ranks)", 3, 10, || {
+            run_flush(true)
+        }));
     }
 
     // --- end-to-end tiny job (engine overhead floor) ---------------------

@@ -1,0 +1,235 @@
+//! Connected components by min-label propagation — the second iterative
+//! workload on the in-memory engine (§VI "a lot more algorithms"), and
+//! the one that makes the determinism story exact: labels are integers
+//! and the delta fold is `min`, so results are **bit-identical** across
+//! widths, resizes, and collective algorithms, not just within float
+//! tolerance.
+//!
+//! Each vertex holds `(neighbors, label, changed)` pinned rank-local in
+//! an [`IterativeJob`]; a wave sends every neighbor the vertex's current
+//! label (pre-folded to one `min` per `(rank, target)` by the delta
+//! shuffle), and `update` keeps the minimum. The `measure` allreduce
+//! counts changed labels, so the driver stops one settling wave after
+//! the flood stops — no extra convergence round.
+
+use anyhow::Result;
+
+use crate::cluster::ElasticCluster;
+use crate::core::{apply_resizes, IterationStats, IterativeJob, JobStats, MigrationStats};
+
+use super::pagerank::Graph;
+
+/// Result of a [`run_dist`] label-propagation session.
+#[derive(Debug, Clone)]
+pub struct ComponentsResult {
+    /// `labels[v]` = smallest vertex id in `v`'s component.
+    pub labels: Vec<u32>,
+    /// Waves actually run (≤ the `max_iterations` cap).
+    pub iterations: usize,
+    /// Whether the flood settled (a wave changed nothing) within the cap.
+    pub converged: bool,
+    pub stats: JobStats,
+    pub per_iteration: Vec<IterationStats>,
+    pub migrations: Vec<MigrationStats>,
+}
+
+/// Undirected adjacency from a directed [`Graph`]: every edge is
+/// mirrored, lists sorted + deduped, self-loops dropped.
+pub fn symmetric_adjacency(graph: &Graph) -> Vec<Vec<u32>> {
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); graph.vertices];
+    for (u, out) in graph.edges.iter().enumerate() {
+        for &v in out {
+            if u as u32 != v {
+                adj[u].push(v);
+                adj[v as usize].push(u as u32);
+            }
+        }
+    }
+    for list in &mut adj {
+        list.sort_unstable();
+        list.dedup();
+    }
+    adj
+}
+
+/// `chains` disjoint directed chains of `len` vertices each — a graph
+/// with a known component structure (component `c` = vertices
+/// `c*len .. (c+1)*len`, label `c*len`) and diameter `len - 1`, which is
+/// what the propagation bound tests pin.
+pub fn chain_graph(chains: usize, len: usize) -> Graph {
+    assert!(chains > 0 && len > 0);
+    let vertices = chains * len;
+    let mut edges: Vec<Vec<u32>> = vec![Vec::new(); vertices];
+    for c in 0..chains {
+        for i in 0..len - 1 {
+            let u = c * len + i;
+            edges[u].push((u + 1) as u32);
+        }
+    }
+    Graph { vertices, edges }
+}
+
+/// Label propagation on the iterative engine. `resizes` is the same
+/// mid-run elasticity plan [`super::pagerank::run_dist`] takes:
+/// `(iteration, node_delta)` pairs applied before that iteration's wave.
+pub fn run_dist(
+    elastic: &mut ElasticCluster,
+    graph: &Graph,
+    max_iterations: usize,
+    resizes: &[(usize, i64)],
+) -> Result<ComponentsResult> {
+    let n = graph.vertices;
+    anyhow::ensure!(n > 0, "empty graph");
+    let wall = std::time::Instant::now();
+    let adj = symmetric_adjacency(graph);
+
+    let mut job: IterativeJob<u32, (Vec<u32>, u32, bool)> = IterativeJob::load(
+        elastic,
+        0x434F_4D50, // "COMP"
+        (0..n as u32).map(|u| (u, (adj[u as usize].clone(), u, false))),
+    );
+
+    let mut converged = false;
+    let mut iterations = 0;
+    for it in 0..max_iterations {
+        apply_resizes(elastic, resizes, it)?;
+        let stats = job.step(
+            elastic,
+            |_u: &u32, state: &(Vec<u32>, u32, bool), emit: &mut dyn FnMut(u32, u32)| {
+                for &v in &state.0 {
+                    emit(v, state.1);
+                }
+            },
+            |acc: &mut u32, v: u32| {
+                if v < *acc {
+                    *acc = v;
+                }
+            },
+            |_u: &u32, state: &mut (Vec<u32>, u32, bool), delta: Option<u32>| {
+                let before = state.1;
+                if let Some(m) = delta {
+                    if m < state.1 {
+                        state.1 = m;
+                    }
+                }
+                state.2 = state.1 != before;
+            },
+            |_u: &u32, state: &(Vec<u32>, u32, bool)| {
+                if state.2 {
+                    1.0
+                } else {
+                    0.0
+                }
+            },
+        )?;
+        iterations = it + 1;
+        if stats.aggregate == 0.0 {
+            converged = true;
+            break;
+        }
+    }
+
+    let mut labels = vec![0u32; n];
+    job.for_each_state(|&u, state| labels[u as usize] = state.1);
+    let mut stats = job.job_stats();
+    stats.startup_ms = elastic.config().deployment.profile().startup_ms as f64;
+    stats.host_wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+    Ok(ComponentsResult {
+        labels,
+        iterations,
+        converged,
+        stats,
+        per_iteration: job.per_iteration().to_vec(),
+        migrations: job.migrations().to_vec(),
+    })
+}
+
+/// Serial ground truth: union-find (union-by-min, path halving), so each
+/// vertex's root is exactly the smallest id in its component.
+pub fn reference(graph: &Graph) -> Vec<u32> {
+    let n = graph.vertices;
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            let gp = parent[parent[x as usize] as usize];
+            parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+    for (u, out) in graph.edges.iter().enumerate() {
+        for &v in out {
+            let ru = find(&mut parent, u as u32);
+            let rv = find(&mut parent, v);
+            if ru < rv {
+                parent[rv as usize] = ru;
+            } else if rv < ru {
+                parent[ru as usize] = rv;
+            }
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn elastic(ranks: usize) -> ElasticCluster {
+        ElasticCluster::new(ClusterConfig::builder().ranks(ranks).build())
+    }
+
+    #[test]
+    fn chain_graph_shape_and_reference_labels() {
+        let g = chain_graph(3, 5);
+        assert_eq!(g.vertices, 15);
+        assert_eq!(g.edge_count(), 12);
+        let want: Vec<u32> = (0..15).map(|v| (v / 5 * 5) as u32).collect();
+        assert_eq!(reference(&g), want);
+    }
+
+    #[test]
+    fn matches_union_find_on_chains() {
+        let g = chain_graph(4, 12);
+        let got = run_dist(&mut elastic(4), &g, 40, &[]).unwrap();
+        assert!(got.converged, "flood must settle within the cap");
+        assert_eq!(got.labels, reference(&g));
+        // Min labels flood one hop per wave: diameter + 1 settling wave.
+        assert!(got.iterations <= 12, "took {} waves", got.iterations);
+    }
+
+    #[test]
+    fn matches_union_find_on_random_graph() {
+        let g = Graph::random(150, 3, 11);
+        let got = run_dist(&mut elastic(3), &g, 200, &[]).unwrap();
+        assert!(got.converged);
+        assert_eq!(got.labels, reference(&g));
+        // Every vertex of Graph::random reaches an earlier one, so the
+        // undirected graph is one component rooted at 0.
+        assert!(got.labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn labels_are_bit_identical_across_a_mid_run_resize() {
+        let g = chain_graph(5, 10);
+        let straight = run_dist(&mut elastic(2), &g, 40, &[]).unwrap();
+        let mut resized_cluster = elastic(2);
+        let resized = run_dist(&mut resized_cluster, &g, 40, &[(3, 2), (6, -1)]).unwrap();
+        assert_eq!(straight.labels, resized.labels, "integer min is width-invariant");
+        assert_eq!(resized.labels, reference(&g));
+        assert_eq!(resized.migrations.len(), 2);
+        assert!(resized.stats.migrated_bytes > 0);
+        assert_eq!(straight.iterations, resized.iterations);
+    }
+
+    #[test]
+    fn isolated_vertices_keep_their_own_label() {
+        // A graph with no edges at all: one wave, nothing changes.
+        let g = Graph { vertices: 7, edges: vec![Vec::new(); 7] };
+        let got = run_dist(&mut elastic(2), &g, 5, &[]).unwrap();
+        assert!(got.converged);
+        assert_eq!(got.iterations, 1);
+        assert_eq!(got.labels, (0..7).collect::<Vec<u32>>());
+    }
+}

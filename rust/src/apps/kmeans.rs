@@ -166,6 +166,7 @@ pub fn run_on_pool(
             peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
             spilled_bytes: 0,
             combined_bytes: 0,
+            migrated_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })
@@ -258,6 +259,7 @@ pub fn run_wave_jobs(
             peak_mem_bytes: ((k * d + k) * 4 * ranks + points.data.len() * 4) as u64,
             spilled_bytes: 0,
             combined_bytes: 0,
+            migrated_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })

@@ -162,6 +162,7 @@ pub fn run_on_pool(
             peak_mem_bytes: ((d + 1) * 4 * ranks) as u64 + (data.x.len() * 4) as u64,
             spilled_bytes: 0,
             combined_bytes: 0,
+            migrated_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })

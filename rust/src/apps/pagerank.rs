@@ -11,12 +11,23 @@
 //! the damping affine step per key, which is exactly the shape the paper
 //! says eager reduction could not express cleanly (the combine is not the
 //! whole reduction).
+//!
+//! Two distributed paths:
+//!  * [`run`] — one engine job per iteration (the Hadoop shape): scores
+//!    and keep-alive pairs re-shuffle every wave;
+//!  * [`run_dist`] — the in-memory iterative engine ([`IterativeJob`]):
+//!    adjacency + score pinned rank-local, delta-only waves, mid-run
+//!    `ElasticCluster` grow/shrink with live shard migration. The e12
+//!    `iterative-ablation` figure compares the two per iteration.
 
 
 use anyhow::Result;
 
-use crate::cluster::ClusterConfig;
-use crate::core::{JobStats, MapReduceJob, ReductionMode};
+use crate::cluster::{ClusterConfig, ElasticCluster};
+use crate::core::{
+    apply_resizes, IterationStats, IterativeJob, JobStats, MapReduceJob, MigrationStats,
+    ReductionMode,
+};
 use crate::mpi::RankPool;
 use crate::util::rng::Rng;
 
@@ -62,7 +73,13 @@ pub struct PageRankResult {
     pub iterations: usize,
     /// L1 movement of the last iteration (convergence signal).
     pub last_delta: f64,
+    /// Stats of the last iteration's job.
     pub stats: JobStats,
+    /// Wire bytes per iteration (one engine job each) — what the e12
+    /// `iterative-ablation` figure compares against the DistHashMap path.
+    pub per_iteration_shuffle_bytes: Vec<u64>,
+    /// Modeled clock per iteration.
+    pub per_iteration_modeled_ms: Vec<f64>,
 }
 
 /// Run `iterations` of PageRank with damping `d` (0.85 classic) under the
@@ -93,6 +110,8 @@ pub fn run(
 
     let mut last_stats = JobStats::default();
     let mut last_delta = f64::INFINITY;
+    let mut per_iteration_shuffle_bytes = Vec::with_capacity(iterations);
+    let mut per_iteration_modeled_ms = Vec::with_capacity(iterations);
     for _ in 0..iterations {
         let ranks_in = ranks.clone();
         let job = MapReduceJob::new(cluster, &vertex_ids).with_mode(mode).with_pool(&pool);
@@ -126,9 +145,104 @@ pub fn run(
         }
         last_delta = ranks.iter().zip(&next).map(|(a, b)| (a - b).abs()).sum();
         ranks = next;
+        per_iteration_shuffle_bytes.push(out.stats.shuffle_bytes);
+        per_iteration_modeled_ms.push(out.stats.modeled_ms);
         last_stats = out.stats;
     }
-    Ok(PageRankResult { ranks, iterations, last_delta, stats: last_stats })
+    Ok(PageRankResult {
+        ranks,
+        iterations,
+        last_delta,
+        stats: last_stats,
+        per_iteration_shuffle_bytes,
+        per_iteration_modeled_ms,
+    })
+}
+
+/// Result of a [`run_dist`] PageRank session.
+#[derive(Debug, Clone)]
+pub struct DistPageRankResult {
+    pub ranks: Vec<f64>,
+    pub iterations: usize,
+    /// Session totals; per-iteration delta-shuffle bytes sum into
+    /// `shuffle_bytes`, resize migrations into `migrated_bytes`.
+    pub stats: JobStats,
+    pub per_iteration: Vec<IterationStats>,
+    pub migrations: Vec<MigrationStats>,
+}
+
+/// PageRank on the in-memory iterative engine ([`IterativeJob`]): every
+/// vertex's adjacency list and score are pinned rank-local for the whole
+/// run, keyed by the delta-shuffle's own `BucketRouter`, so an iteration
+/// exchanges only `(target, contribution)` deltas — pre-folded per
+/// `(rank, target)` before the wire — instead of re-shuffling scores and
+/// keep-alive pairs through the engine (the M3R ownership win).
+///
+/// Scores are held *unnormalized*; the dangling-mass normalizer the
+/// reference divides by each iteration rides the step's `measure`
+/// allreduce, so normalization costs no extra wave.
+///
+/// `resizes` is a mid-run elasticity plan: at the start of iteration
+/// `at`, apply `delta` nodes (`> 0` grows, `< 0` shrinks) to `elastic` —
+/// the next wave migrates the affected shards and resumes at the new
+/// width. Results match [`reference`] within ulp-accumulation (the 1e-9
+/// acceptance bound with wide margin), resized or not.
+pub fn run_dist(
+    elastic: &mut ElasticCluster,
+    graph: &Graph,
+    iterations: usize,
+    damping: f64,
+    resizes: &[(usize, i64)],
+) -> Result<DistPageRankResult> {
+    let n = graph.vertices;
+    anyhow::ensure!(n > 0, "empty graph");
+    let wall = std::time::Instant::now();
+    let base = (1.0 - damping) / n as f64;
+
+    let mut job: IterativeJob<u32, (Vec<u32>, f64)> = IterativeJob::load(
+        elastic,
+        0x5047_524B, // "PGRK"
+        (0..n as u32).map(|u| (u, (graph.edges[u as usize].clone(), 1.0 / n as f64))),
+    );
+
+    // Sum of the unnormalized scores; exactly 1.0 going in because the
+    // first reference iteration also divides by nothing.
+    let mut total = 1.0f64;
+    for it in 0..iterations {
+        apply_resizes(elastic, resizes, it)?;
+        let t = total;
+        let stats = job.step(
+            elastic,
+            |_u: &u32, state: &(Vec<u32>, f64), emit: &mut dyn FnMut(u32, f64)| {
+                let (out, score) = state;
+                if !out.is_empty() {
+                    let share = (*score / t) / out.len() as f64;
+                    for &v in out {
+                        emit(v, share);
+                    }
+                }
+            },
+            |acc: &mut f64, v: f64| *acc += v,
+            |_u: &u32, state: &mut (Vec<u32>, f64), delta: Option<f64>| {
+                state.1 = base + damping * delta.unwrap_or(0.0);
+            },
+            |_u: &u32, state: &(Vec<u32>, f64)| state.1,
+        )?;
+        total = stats.aggregate;
+    }
+
+    let mut ranks = vec![0.0f64; n];
+    job.for_each_state(|&u, state| ranks[u as usize] = state.1 / total);
+    let mut stats = job.job_stats();
+    stats.startup_ms = elastic.config().deployment.profile().startup_ms as f64;
+    stats.host_wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+    Ok(DistPageRankResult {
+        ranks,
+        iterations,
+        stats,
+        per_iteration: job.per_iteration().to_vec(),
+        migrations: job.migrations().to_vec(),
+    })
 }
 
 /// Serial reference for tests.
@@ -201,6 +315,75 @@ mod tests {
         let cluster = ClusterConfig::builder().ranks(2).build();
         let err = run(&cluster, &g, 1, 0.85, ReductionMode::Eager).unwrap_err();
         assert!(format!("{err:#}").contains("eager reduction cannot express"));
+    }
+
+    #[test]
+    fn dist_path_matches_serial_reference() {
+        let g = graph();
+        let mut elastic = ElasticCluster::new(ClusterConfig::builder().ranks(4).build());
+        let got = run_dist(&mut elastic, &g, 10, 0.85, &[]).unwrap();
+        let want = reference(&g, 10, 0.85);
+        for (a, b) in got.ranks.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        let total: f64 = got.ranks.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "normalized distribution, got {total}");
+        assert_eq!(got.per_iteration.len(), 10);
+        assert!(got.migrations.is_empty());
+        assert_eq!(got.stats.migrated_bytes, 0);
+        assert!(got.per_iteration.iter().all(|it| it.orphan_deltas == 0));
+    }
+
+    #[test]
+    fn dist_path_exchanges_fewer_bytes_per_iteration_than_engine_path() {
+        let g = graph();
+        let cluster = ClusterConfig::builder().ranks(4).build();
+        let engine = run(&cluster, &g, 6, 0.85, ReductionMode::Delayed).unwrap();
+        let mut elastic = ElasticCluster::new(cluster);
+        let dist = run_dist(&mut elastic, &g, 6, 0.85, &[]).unwrap();
+        let min_engine = engine.per_iteration_shuffle_bytes.iter().min().copied().unwrap();
+        for it in &dist.per_iteration {
+            assert!(
+                it.shuffled_bytes < min_engine,
+                "iteration {}: dist {} >= engine {}",
+                it.iteration,
+                it.shuffled_bytes,
+                min_engine
+            );
+        }
+    }
+
+    #[test]
+    fn dist_path_survives_mid_run_grow_and_shrink() {
+        let g = graph();
+        let make = || ElasticCluster::new(ClusterConfig::builder().ranks(3).build());
+        let straight = run_dist(&mut make(), &g, 12, 0.85, &[]).unwrap();
+        let mut elastic = make();
+        let resized = run_dist(&mut elastic, &g, 12, 0.85, &[(4, 2), (8, -3)]).unwrap();
+        // Same distribution as the unresized run (ulp-level re-association
+        // only) and still within the reference bound.
+        for (a, b) in resized.ranks.iter().zip(&straight.ranks) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        let want = reference(&g, 12, 0.85);
+        for (a, b) in resized.ranks.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert_eq!(resized.migrations.len(), 2);
+        assert_eq!(resized.migrations[0].to_ranks, 5);
+        assert_eq!(resized.migrations[1].to_ranks, 2);
+        assert!(resized.migrations.iter().all(|m| m.moved_bytes > 0 && m.moved_keys > 0));
+        assert_eq!(
+            resized.stats.migrated_bytes,
+            resized.migrations.iter().map(|m| m.moved_bytes).sum::<u64>()
+        );
+        assert_eq!(elastic.ranks(), 2);
+        // The waves really changed width mid-run.
+        assert_eq!(resized.per_iteration[0].ranks, 3);
+        assert_eq!(resized.per_iteration[5].ranks, 5);
+        assert_eq!(resized.per_iteration[11].ranks, 2);
+        assert_eq!(resized.per_iteration[11].epoch, 2);
+        assert_eq!(straight.stats.migrated_bytes, 0);
     }
 
     #[test]

@@ -164,6 +164,7 @@ pub fn run_kernel(
             peak_mem_bytes: (KERNEL_TILE * 2 * 4 * ranks) as u64,
             spilled_bytes: 0,
             combined_bytes: 0,
+            migrated_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })

@@ -189,6 +189,7 @@ pub fn run_segsum_kernel(
             peak_mem_bytes: (SEGSUM_KEYS as u64) * 4 * cluster.ranks() as u64,
             spilled_bytes: 0,
             combined_bytes: 0,
+            migrated_bytes: 0,
             host_wall_ms: wall.elapsed().as_secs_f64() * 1e3,
         },
     })

@@ -25,9 +25,12 @@ pub enum ElasticEvent {
 /// session-owned [`RankPool`] ([`ElasticCluster::pool_for_wave`]): while
 /// membership is stable, every wave reuses the same warm rank threads;
 /// a grow/shrink rebuilds the pool at the next wave boundary so the cost
-/// model reflects the *current* placement. Shard maps are recomputed so
-/// `DistHashMap` data lands on the right owner after a resize (see
-/// `dist::balance::rebalance_plan`).
+/// model reflects the *current* placement. Live containers follow the
+/// data: `core::IterativeJob` notices the width change at its next wave,
+/// applies `dist::rebalance_plan` (through `BucketRouter::resize`) to
+/// its pinned shards, migrates the minimal-move set over `alltoallv`,
+/// and resumes the iteration at the new width — elasticity observable
+/// *inside* a session, not just across runs.
 #[derive(Debug)]
 pub struct ElasticCluster {
     config: ClusterConfig,
@@ -80,6 +83,13 @@ impl ElasticCluster {
         &self.log
     }
 
+    /// Resizes so far (the audit-log length) — the session-level twin of
+    /// the `BucketRouter` epoch: a live container whose router epoch
+    /// lags this count has a migration pending at the next wave.
+    pub fn resizes(&self) -> usize {
+        self.log.len()
+    }
+
     /// The warm [`RankPool`] for the next wave. Reused verbatim while the
     /// membership (and therefore topology/network model/collective
     /// algorithm) is unchanged; rebuilt lazily after a
@@ -127,6 +137,7 @@ mod tests {
         assert_eq!(c.ranks(), 8);
         c.shrink(3).unwrap();
         assert_eq!(c.nodes(), 1);
+        assert_eq!(c.resizes(), 2);
         assert_eq!(
             c.events(),
             &[

@@ -259,6 +259,7 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             peak_mem_bytes: tracker.peak_bytes(),
             spilled_bytes: spilled,
             combined_bytes: combined,
+            migrated_bytes: 0,
             host_wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
         };
         Ok(JobResult { result: merged, stats })

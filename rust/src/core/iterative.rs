@@ -1,0 +1,651 @@
+//! The in-memory iterative engine: per-key state pinned rank-local
+//! across iterations, with only contribution **deltas** crossing the
+//! wire each wave — and live elastic rebalancing when the cluster grows
+//! or shrinks mid-run.
+//!
+//! This is the M3R lesson applied to our stack (and the reason the dist
+//! layer exists, per ROADMAP): the batch engines re-shuffle the world
+//! every job, so an iterative app (PageRank, label propagation, k-means)
+//! pays the full input+state exchange per iteration even though the
+//! partitioning never changes. [`IterativeJob`] instead keys every
+//! per-item state by one [`BucketRouter`] for the whole session:
+//!
+//! 1. [`IterativeJob::load`] partitions `(K, S)` states onto the ranks
+//!    the router names — after that the state never moves (except for
+//!    resizes, below).
+//! 2. [`IterativeJob::step`] runs one wave on the session's warm
+//!    [`crate::mpi::RankPool`]: each rank walks its own states in sorted
+//!    key order emitting `(K, D)` **deltas**, the deltas ride one
+//!    [`DistHashMap::flush_combining`] (stage-side pre-fold, so at most
+//!    one delta per `(rank, key)` hits the wire) to their owners — the
+//!    *same* router, so owner and state always coincide — and the owner
+//!    applies `update` in place. A per-step `measure` fold is
+//!    allreduced for free (convergence checks, normalizers).
+//! 3. On [`crate::cluster::ElasticCluster::grow`]/`shrink`, the next
+//!    `step` (or an explicit [`IterativeJob::rebalance`]) applies
+//!    [`crate::dist::rebalance_plan`] through [`BucketRouter::resize`]:
+//!    only the minimal-move bucket set migrates, over the same
+//!    `alltoallv` shuffle, the router epoch is bumped, and the iteration
+//!    resumes at the new width. Migrated bytes are reported per resize
+//!    and in [`JobStats::migrated_bytes`].
+//!
+//! Determinism: contributions are emitted in sorted-key order, the
+//! stage-side pre-fold accumulates per key in that order, and owners
+//! fold arrivals in source-rank order — so repeated runs are
+//! bit-identical, and runs across different widths/resizes differ only
+//! by floating-point re-association in `combine`/`aggregate` (exactly
+//! identical for integer deltas, ulp-level for `f64` sums).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::ElasticCluster;
+use crate::dist::{BucketRouter, DistHashMap, KeyRouter};
+use crate::metrics::PeakTracker;
+use crate::mpi::Communicator;
+use crate::serial::FastSerialize;
+
+use super::job::JobStats;
+
+/// Apply the entries of a mid-run elasticity plan due at `iteration` to
+/// `elastic`: each `(at, node_delta)` pair with `at == iteration` grows
+/// (`> 0`) or shrinks (`< 0`) the cluster by that many nodes. The shared
+/// driver-loop helper for iterative apps (`pagerank::run_dist`,
+/// `components::run_dist`): the next [`IterativeJob::step`] sees the new
+/// width and migrates.
+pub fn apply_resizes(
+    elastic: &mut ElasticCluster,
+    resizes: &[(usize, i64)],
+    iteration: usize,
+) -> Result<()> {
+    for &(at, delta) in resizes {
+        if at == iteration {
+            if delta > 0 {
+                elastic.grow(delta as usize);
+            } else if delta < 0 {
+                elastic.shrink(delta.unsigned_abs() as usize)?;
+            }
+            // delta == 0 is a no-op, not a phantom Grew{added: 0} event —
+            // the audit log and router epoch must stay in step.
+        }
+    }
+    Ok(())
+}
+
+/// What one [`IterativeJob::step`] cost and computed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationStats {
+    /// 0-based iteration index within the session.
+    pub iteration: usize,
+    /// Width the wave ran at.
+    pub ranks: usize,
+    /// Router epoch the wave ran under (bumps on every resize).
+    pub epoch: u64,
+    /// Owned states that received at least one delta this wave, summed
+    /// over all ranks (post-fold: a key hit by several ranks counts once
+    /// — wire volume lives in `shuffled_bytes`, not here). Orphans are
+    /// excluded.
+    pub delta_keys: u64,
+    /// Distinct delta keys addressed to states no rank holds — their
+    /// folded deltas are dropped after the wave (0 for well-formed apps:
+    /// graph contributions always target existing vertices).
+    pub orphan_deltas: u64,
+    /// Global sum of `measure` over every state, post-update.
+    pub aggregate: f64,
+    /// Bytes this iteration's delta shuffle (and its collectives) put on
+    /// the wire — the number the e12 figure compares to the engine path.
+    pub shuffled_bytes: u64,
+    pub messages: u64,
+    pub remote_messages: u64,
+    pub remote_bytes: u64,
+    /// Modeled wave time: slowest rank's virtual clock.
+    pub modeled_ms: f64,
+    pub compute_ms: f64,
+    pub net_ms: f64,
+}
+
+/// What one live shard migration (resize) cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationStats {
+    /// The iteration the migration happened before (== steps completed).
+    pub before_iteration: usize,
+    pub from_ranks: usize,
+    pub to_ranks: usize,
+    /// Router epoch after the resize.
+    pub epoch: u64,
+    /// Buckets the resize reassigned (the [`BucketRouter::resize`] moves).
+    pub buckets_moved: usize,
+    /// Keys that changed owner.
+    pub moved_keys: u64,
+    /// Bytes the migration shuffle put on the wire.
+    pub moved_bytes: u64,
+    pub messages: u64,
+    /// Modeled migration time: slowest rank's virtual clock.
+    pub modeled_ms: f64,
+}
+
+/// An iterative session over per-key state `S` keyed by `K` (see the
+/// module docs). Between waves the shards live with the driver (one slot
+/// per rank), so the warm pool's threads stay stateless and a resize can
+/// re-slot without a coordinator; *placement* is owned by the
+/// [`BucketRouter`] throughout, and inside a wave each rank only ever
+/// touches the shard that router says is its own.
+pub struct IterativeJob<K, S> {
+    router: BucketRouter,
+    /// One shard per rank; `Some` between waves, taken inside a wave.
+    slots: Vec<Mutex<Option<HashMap<K, S>>>>,
+    /// Session-wide memory tracker: every wave's shuffle buffers charge
+    /// here, so [`IterativeJob::job_stats`] reports a session peak.
+    tracker: Arc<PeakTracker>,
+    steps: usize,
+    per_iteration: Vec<IterationStats>,
+    migrations: Vec<MigrationStats>,
+}
+
+impl<K, S> IterativeJob<K, S>
+where
+    K: FastSerialize + Hash + Eq + Ord + Clone + Send,
+    S: FastSerialize + Send,
+{
+    /// Partition `states` onto `cluster.ranks()` shards under the
+    /// session router (salted with the cluster seed, like the engines'
+    /// shuffle). Driver-side: no communication happens until the first
+    /// [`IterativeJob::step`].
+    pub fn load(
+        cluster: &ElasticCluster,
+        salt: u64,
+        states: impl IntoIterator<Item = (K, S)>,
+    ) -> Self {
+        let ranks = cluster.ranks();
+        let router = BucketRouter::new(ranks, cluster.config().seed ^ salt);
+        let mut maps: Vec<HashMap<K, S>> = (0..ranks).map(|_| HashMap::new()).collect();
+        for (k, s) in states {
+            maps[router.route(&k).0].insert(k, s);
+        }
+        Self {
+            router,
+            slots: maps.into_iter().map(|m| Mutex::new(Some(m))).collect(),
+            tracker: PeakTracker::new(),
+            steps: 0,
+            per_iteration: Vec::new(),
+            migrations: Vec::new(),
+        }
+    }
+
+    /// The session router (placement + epoch).
+    pub fn router(&self) -> &BucketRouter {
+        &self.router
+    }
+
+    /// Current session width (ranks the state is sharded over).
+    pub fn ranks(&self) -> usize {
+        self.router.width()
+    }
+
+    /// Iterations completed.
+    pub fn steps_run(&self) -> usize {
+        self.steps
+    }
+
+    pub fn per_iteration(&self) -> &[IterationStats] {
+        &self.per_iteration
+    }
+
+    pub fn migrations(&self) -> &[MigrationStats] {
+        &self.migrations
+    }
+
+    /// Total states across all shards (driver-side).
+    pub fn len_global(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| s.lock().expect("slot lock").as_ref().expect("state present").len())
+            .sum()
+    }
+
+    /// Visit every `(K, S)` state (driver-side, between waves). Shard
+    /// order is rank order; order within a shard is unspecified.
+    pub fn for_each_state(&self, mut f: impl FnMut(&K, &S)) {
+        for slot in &self.slots {
+            let guard = slot.lock().expect("slot lock");
+            for (k, s) in guard.as_ref().expect("state present") {
+                f(k, s);
+            }
+        }
+    }
+
+    /// Dissolve the session, keeping every state.
+    pub fn into_states(self) -> Vec<(K, S)> {
+        self.slots
+            .into_iter()
+            .flat_map(|slot| slot.into_inner().expect("slot lock").expect("state present"))
+            .collect()
+    }
+
+    /// Session totals as a [`JobStats`]: sums over every iteration plus
+    /// every migration (migration bytes land in
+    /// [`JobStats::migrated_bytes`], *not* `shuffle_bytes`). The caller
+    /// fills `startup_ms`/`host_wall_ms`, which belong to its cluster
+    /// profile and wall clock.
+    pub fn job_stats(&self) -> JobStats {
+        let mut s = JobStats::default();
+        for it in &self.per_iteration {
+            s.modeled_ms += it.modeled_ms;
+            s.compute_ms += it.compute_ms;
+            s.net_ms += it.net_ms;
+            s.shuffle_bytes += it.shuffled_bytes;
+            s.messages += it.messages;
+            s.remote_messages += it.remote_messages;
+            s.remote_bytes += it.remote_bytes;
+        }
+        for m in &self.migrations {
+            s.modeled_ms += m.modeled_ms;
+            s.messages += m.messages;
+            s.migrated_bytes += m.moved_bytes;
+        }
+        s.peak_mem_bytes = self.tracker.peak_bytes();
+        s
+    }
+
+    /// Apply a pending [`ElasticCluster`] resize to the live shards: no-op
+    /// while the widths agree; otherwise [`BucketRouter::resize`] picks
+    /// the minimal-move bucket set from the live per-bucket loads, the
+    /// moving keys ride one `alltoallv` shuffle on the *new* pool, and
+    /// the router epoch bumps. [`IterativeJob::step`] calls this
+    /// implicitly, so a mid-run `grow`/`shrink` simply takes effect at
+    /// the next wave boundary — DELMA semantics, now including the data.
+    pub fn rebalance(&mut self, cluster: &mut ElasticCluster) -> Result<Option<MigrationStats>> {
+        let new_ranks = cluster.ranks();
+        let old_ranks = self.router.width();
+        if new_ranks == old_ranks {
+            return Ok(None);
+        }
+
+        // Bucket loads from the live shards (driver-side: state sits
+        // between waves, so no collective is needed to agree on them).
+        let mut loads = vec![0usize; self.router.buckets()];
+        for slot in &self.slots {
+            let guard = slot.lock().expect("slot lock");
+            for k in guard.as_ref().expect("state present").keys() {
+                loads[self.router.bucket_of(k)] += 1;
+            }
+        }
+        let moves = self.router.resize(new_ranks, &loads);
+
+        // Re-slot carried shards onto the new width. Shrunk-away slots
+        // ride along with a surviving holder; whatever the holder does
+        // not own under the new table is staged onto the wire below.
+        let old_slots = std::mem::take(&mut self.slots);
+        let mut carried: Vec<HashMap<K, S>> = (0..new_ranks).map(|_| HashMap::new()).collect();
+        for (r, slot) in old_slots.into_iter().enumerate() {
+            let map = slot.into_inner().expect("slot lock").expect("state present");
+            let dst = &mut carried[r % new_ranks];
+            if dst.is_empty() {
+                *dst = map;
+            } else {
+                dst.extend(map);
+            }
+        }
+        self.slots = carried.into_iter().map(|m| Mutex::new(Some(m))).collect();
+
+        // The migration wave: keep what the new table says is ours,
+        // flush the rest to its owner. Keys are globally unique, so no
+        // two arrivals collide (the combine is defensively
+        // last-writer-wins).
+        let router = &self.router;
+        let slots = &self.slots;
+        let tracker = &self.tracker;
+        let pool = cluster.pool_for_wave();
+        let out = pool.run_job(new_ranks, |comm: &Communicator| -> Result<u64> {
+            let me = comm.rank().0;
+            let held = slots[me].lock().expect("slot lock").take().expect("state present");
+            let (keep, movers) = comm.timed(|| {
+                let mut keep = HashMap::with_capacity(held.len());
+                let mut movers: Vec<(K, S)> = Vec::new();
+                for (k, s) in held {
+                    if router.route(&k) == comm.rank() {
+                        keep.insert(k, s);
+                    } else {
+                        movers.push((k, s));
+                    }
+                }
+                (keep, movers)
+            });
+            let moved = movers.len() as u64;
+            let mut shard: DistHashMap<'_, K, S, BucketRouter> =
+                DistHashMap::from_local(comm, router.clone(), keep, tracker.clone());
+            for (k, s) in movers {
+                shard.stage(k, s);
+            }
+            let flushed = shard.flush(|acc, v| *acc = v);
+            // Restore the slot either way: on a failed exchange the
+            // session is poisoned (the Err propagates, and movers that
+            // were in flight are gone with the wire — `DistHashMap::flush`
+            // semantics), but the kept states stay reachable and later
+            // calls error instead of panicking on a vacant slot.
+            *slots[me].lock().expect("slot lock") = Some(shard.into_local());
+            flushed?;
+            Ok(moved)
+        });
+
+        let mut moved_keys = 0u64;
+        for (i, r) in out.results.into_iter().enumerate() {
+            moved_keys += r.map_err(|e| anyhow!("rank {i} failed during migration: {e:#}"))?;
+        }
+        let slowest =
+            out.clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
+        let stats = MigrationStats {
+            before_iteration: self.steps,
+            from_ranks: old_ranks,
+            to_ranks: new_ranks,
+            epoch: self.router.epoch(),
+            buckets_moved: moves.len(),
+            moved_keys,
+            moved_bytes: out.traffic.bytes,
+            messages: out.traffic.messages,
+            modeled_ms: slowest.0 as f64 / 1e6,
+        };
+        self.migrations.push(stats.clone());
+        Ok(Some(stats))
+    }
+
+    /// Run one iteration wave (see the module docs):
+    ///
+    /// * `contribute(k, s, emit)` — emit `(target_key, delta)`
+    ///   contributions from one state; run in sorted-key order.
+    /// * `combine(acc, d)` — fold two deltas for the same key. Must be
+    ///   associative **and commutative**: it is applied stage-side
+    ///   (pre-wire) as well as owner-side.
+    /// * `update(k, s, folded)` — apply the folded delta (or `None` when
+    ///   nothing arrived for `k`) to the state, in place.
+    /// * `measure(k, s)` — per-state summand, folded globally post-update
+    ///   into [`IterationStats::aggregate`] (a convergence delta, a
+    ///   normalizer, a changed-count — one allreduce, no extra wave).
+    ///
+    /// A pending cluster resize is applied (shards migrated, epoch
+    /// bumped) before the wave runs.
+    pub fn step<D>(
+        &mut self,
+        cluster: &mut ElasticCluster,
+        contribute: impl Fn(&K, &S, &mut dyn FnMut(K, D)) + Sync,
+        combine: impl Fn(&mut D, D) + Sync,
+        update: impl Fn(&K, &mut S, Option<D>) + Sync,
+        measure: impl Fn(&K, &S) -> f64 + Sync,
+    ) -> Result<IterationStats>
+    where
+        D: FastSerialize + Send,
+    {
+        self.rebalance(cluster)?;
+        let ranks = self.router.width();
+        let iteration = self.steps;
+        let router = &self.router;
+        let slots = &self.slots;
+        let tracker = &self.tracker;
+        let contribute = &contribute;
+        let combine = &combine;
+        let update = &update;
+        let measure = &measure;
+        let pool = cluster.pool_for_wave();
+        let out = pool.run_job(ranks, |comm: &Communicator| -> Result<(u64, u64, f64)> {
+            let me = comm.rank().0;
+            let mut shard = slots[me].lock().expect("slot lock").take().expect("state present");
+            // Sorted-key wave order: deterministic emission, and the
+            // owner-side fold order below is source-rank order — so a
+            // rerun is bit-identical.
+            let mut keys: Vec<K> = shard.keys().cloned().collect();
+            comm.timed(|| keys.sort_unstable());
+            let mut deltas: DistHashMap<'_, K, D, BucketRouter> =
+                DistHashMap::from_local(comm, router.clone(), HashMap::new(), tracker.clone());
+            comm.timed(|| {
+                for k in &keys {
+                    contribute(k, &shard[k], &mut |dk, dv| deltas.stage(dk, dv));
+                }
+            });
+            if let Err(e) = deltas.flush_combining(combine) {
+                // Restore the (untouched) shard so the session surfaces
+                // the Err instead of panicking on a vacant slot later.
+                *slots[me].lock().expect("slot lock") = Some(shard);
+                return Err(e);
+            }
+            let arrived = deltas.len_local() as u64;
+            let mut folded = deltas.into_local();
+            let aggregate = comm.timed(|| {
+                let mut agg = 0.0f64;
+                for k in &keys {
+                    let s = shard.get_mut(k).expect("owned key");
+                    update(k, s, folded.remove(k));
+                    agg += measure(k, &*s);
+                }
+                agg
+            });
+            let orphans = folded.len() as u64;
+            let aggregate = match comm.allreduce(aggregate, |a, b| a + b) {
+                Ok(agg) => agg,
+                Err(e) => {
+                    *slots[me].lock().expect("slot lock") = Some(shard);
+                    return Err(e);
+                }
+            };
+            *slots[me].lock().expect("slot lock") = Some(shard);
+            // `arrived` counted every post-fold key on this owner before
+            // classification; orphans are not received-by-a-state.
+            Ok((arrived - orphans, orphans, aggregate))
+        });
+
+        let mut delta_keys = 0u64;
+        let mut orphans = 0u64;
+        let mut aggregate = 0.0f64;
+        for (i, r) in out.results.into_iter().enumerate() {
+            let (a, o, g) =
+                r.map_err(|e| anyhow!("rank {i} failed at iteration {iteration}: {e:#}"))?;
+            delta_keys += a;
+            orphans += o;
+            aggregate = g;
+        }
+        let slowest =
+            out.clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
+        let stats = IterationStats {
+            iteration,
+            ranks,
+            epoch: self.router.epoch(),
+            delta_keys,
+            orphan_deltas: orphans,
+            aggregate,
+            shuffled_bytes: out.traffic.bytes,
+            messages: out.traffic.messages,
+            remote_messages: out.traffic.remote_messages,
+            remote_bytes: out.traffic.remote_bytes,
+            modeled_ms: slowest.0 as f64 / 1e6,
+            compute_ms: slowest.1 as f64 / 1e6,
+            net_ms: slowest.2 as f64 / 1e6,
+        };
+        self.steps += 1;
+        self.per_iteration.push(stats.clone());
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn elastic(ranks: usize) -> ElasticCluster {
+        ElasticCluster::new(ClusterConfig::builder().ranks(ranks).build())
+    }
+
+    fn counting_job(cluster: &ElasticCluster, n: u32) -> IterativeJob<u32, u64> {
+        IterativeJob::load(cluster, 7, (0..n).map(|k| (k, k as u64)))
+    }
+
+    #[test]
+    fn load_places_every_state_with_its_router_owner() {
+        let cluster = elastic(3);
+        let job = counting_job(&cluster, 50);
+        assert_eq!(job.len_global(), 50);
+        assert_eq!(job.ranks(), 3);
+        let router = job.router().clone();
+        for (r, slot) in job.slots.iter().enumerate() {
+            let guard = slot.lock().unwrap();
+            for k in guard.as_ref().unwrap().keys() {
+                assert_eq!(router.route(k).0, r, "key {k} placed off-owner");
+            }
+        }
+    }
+
+    #[test]
+    fn step_exchanges_deltas_and_updates_in_place() {
+        // Each key sends its value to key+1 (mod n); update adds the
+        // arrival. A ring like this touches every rank pair over enough
+        // keys, and the result is exactly computable.
+        let n = 40u32;
+        let mut cluster = elastic(4);
+        let mut job = counting_job(&cluster, n);
+        let stats = job
+            .step(
+                &mut cluster,
+                |k: &u32, s: &u64, emit: &mut dyn FnMut(u32, u64)| emit((k + 1) % n, *s),
+                |acc: &mut u64, v: u64| *acc += v,
+                |_k: &u32, s: &mut u64, d: Option<u64>| *s += d.expect("ring covers every key"),
+                |_k: &u32, s: &u64| *s as f64,
+            )
+            .unwrap();
+        assert_eq!(stats.iteration, 0);
+        assert_eq!(stats.ranks, 4);
+        assert_eq!(stats.orphan_deltas, 0);
+        assert_eq!(stats.delta_keys, n as u64, "every key receives exactly one delta");
+        assert!(stats.shuffled_bytes > 0, "cross-rank deltas must hit the wire");
+        // New total = old total + every shipped value = 2 * sum(0..n).
+        let want = (0..n as u64).sum::<u64>() * 2;
+        assert_eq!(stats.aggregate, want as f64);
+        let mut got: Vec<(u32, u64)> = job.into_states();
+        got.sort_unstable();
+        let want_states: Vec<(u32, u64)> =
+            (0..n).map(|k| (k, k as u64 + ((k + n - 1) % n) as u64)).collect();
+        assert_eq!(got, want_states);
+    }
+
+    #[test]
+    fn steps_are_deterministic_across_reruns() {
+        let run = || {
+            let mut cluster = elastic(3);
+            let mut job = counting_job(&cluster, 64);
+            for _ in 0..4 {
+                job.step(
+                    &mut cluster,
+                    |k: &u32, s: &u64, emit: &mut dyn FnMut(u32, u64)| {
+                        emit(k.wrapping_mul(7) % 64, *s % 17)
+                    },
+                    |acc: &mut u64, v: u64| *acc = acc.wrapping_add(v),
+                    |_k, s: &mut u64, d: Option<u64>| {
+                        *s = s.wrapping_add(d.unwrap_or(0)).rotate_left(3)
+                    },
+                    |_k, s: &u64| (*s % 1024) as f64,
+                )
+                .unwrap();
+            }
+            let mut states = job.into_states();
+            states.sort_unstable();
+            states
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn rebalance_is_noop_without_a_resize() {
+        let mut cluster = elastic(2);
+        let mut job = counting_job(&cluster, 20);
+        assert!(job.rebalance(&mut cluster).unwrap().is_none());
+        assert!(job.migrations().is_empty());
+        assert_eq!(job.router().epoch(), 0);
+    }
+
+    #[test]
+    fn grow_then_shrink_preserves_every_state() {
+        let mut cluster = elastic(2);
+        let mut job = counting_job(&cluster, 100);
+        cluster.grow(2);
+        let grown = job.rebalance(&mut cluster).unwrap().expect("width changed");
+        assert_eq!(grown.from_ranks, 2);
+        assert_eq!(grown.to_ranks, 4);
+        assert_eq!(grown.epoch, 1);
+        assert!(grown.moved_keys > 0);
+        assert!(grown.moved_bytes > 0);
+        // Min-mass: growing 2 -> 4 should move about half, never ~all.
+        assert!(grown.moved_keys < 80, "moved {} of 100", grown.moved_keys);
+        cluster.shrink(3).unwrap();
+        job.rebalance(&mut cluster).unwrap().expect("width changed");
+        assert_eq!(job.ranks(), 1);
+        assert_eq!(job.len_global(), 100);
+        let mut got = job.into_states();
+        got.sort_unstable();
+        assert_eq!(got, (0..100u32).map(|k| (k, k as u64)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn step_applies_pending_resize_and_keeps_computing() {
+        let n = 60u32;
+        let compute = |job: &mut IterativeJob<u32, u64>, cluster: &mut ElasticCluster| {
+            job.step(
+                cluster,
+                |k: &u32, s: &u64, emit: &mut dyn FnMut(u32, u64)| emit((k + 3) % n, *s + 1),
+                |acc: &mut u64, v: u64| *acc += v,
+                |_k, s: &mut u64, d: Option<u64>| *s += d.unwrap_or(0),
+                |_k, s: &u64| *s as f64,
+            )
+            .unwrap()
+        };
+        // Resized run: grow mid-run, shrink later.
+        let mut cluster = elastic(2);
+        let mut job = counting_job(&cluster, n);
+        for it in 0..5 {
+            if it == 2 {
+                cluster.grow(2);
+            }
+            if it == 4 {
+                cluster.shrink(1).unwrap();
+            }
+            let stats = compute(&mut job, &mut cluster);
+            assert_eq!(stats.ranks, cluster.ranks(), "wave must run at the live width");
+        }
+        assert_eq!(job.migrations().len(), 2);
+        assert_eq!(job.router().epoch(), 2);
+        let mut resized = job.into_states();
+        resized.sort_unstable();
+        // Straight-through run: same program, no resizes.
+        let mut cluster2 = elastic(2);
+        let mut job2 = counting_job(&cluster2, n);
+        for _ in 0..5 {
+            compute(&mut job2, &mut cluster2);
+        }
+        let mut straight = job2.into_states();
+        straight.sort_unstable();
+        assert_eq!(resized, straight, "resize must be invisible to integer results");
+    }
+
+    #[test]
+    fn orphan_deltas_are_counted_not_lost() {
+        let mut cluster = elastic(2);
+        let mut job = counting_job(&cluster, 10);
+        let stats = job
+            .step(
+                &mut cluster,
+                // Key 3 contributes to a key nobody owns.
+                |k: &u32, _s: &u64, emit: &mut dyn FnMut(u32, u64)| {
+                    if *k == 3 {
+                        emit(999, 1);
+                    }
+                },
+                |acc: &mut u64, v: u64| *acc += v,
+                |_k, _s: &mut u64, d: Option<u64>| assert!(d.is_none()),
+                |_k, _s: &u64| 0.0,
+            )
+            .unwrap();
+        assert_eq!(stats.orphan_deltas, 1);
+        assert_eq!(stats.delta_keys, 0, "no owned state received anything");
+        assert_eq!(job.len_global(), 10, "owned states unaffected");
+    }
+}

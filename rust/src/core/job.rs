@@ -108,6 +108,13 @@ pub struct JobStats {
     /// Bytes the map-side combiner folded away before the wire
     /// (0 unless the job ran with a combiner).
     pub combined_bytes: u64,
+    /// Bytes moved between ranks by live elastic rebalancing —
+    /// [`crate::core::IterativeJob`] shard migrations after an
+    /// `ElasticCluster` grow/shrink. 0 for one-shot jobs. Kept separate
+    /// from `shuffle_bytes` so the per-iteration delta-shuffle cost and
+    /// the one-off resize cost stay individually visible (the e12
+    /// `iterative-ablation` figure plots both).
+    pub migrated_bytes: u64,
     /// Host wall-clock of the whole job (for harness sanity only —
     /// figures use `modeled_ms`).
     pub host_wall_ms: f64,

@@ -17,13 +17,17 @@
 //!
 //! [`engine`] wraps a mode dispatch + metrics + result collection around
 //! the SPMD bodies; [`scheduler`] adds dynamic task claiming (data-skew
-//! mitigation) and fault-tolerant waves on top.
+//! mitigation) and fault-tolerant waves on top. [`iterative`] is the
+//! in-memory iterative layer (M3R-style): per-key state pinned
+//! rank-local on a `BucketRouter`, delta-only waves, live elastic
+//! rebalancing.
 
 pub mod classic;
 pub mod context;
 pub mod delayed;
 pub mod eager;
 pub mod engine;
+pub mod iterative;
 pub mod job;
 pub mod partitioner;
 pub mod scheduler;
@@ -32,6 +36,7 @@ pub mod shuffle;
 pub use context::Emitter;
 pub use delayed::DelayedOutput;
 pub use engine::MapReduceJob;
+pub use iterative::{apply_resizes, IterationStats, IterativeJob, MigrationStats};
 pub use job::{JobConfig, JobResult, JobStats, ReductionMode, Scheduling};
 pub use partitioner::RangePartitioner;
 pub use scheduler::{FaultPlan, TaskFeed};

@@ -29,7 +29,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::dist::ShardRouter;
+use crate::dist::{KeyRouter, ShardRouter};
 use crate::metrics::PeakTracker;
 use crate::mpi::Communicator;
 use crate::serial::{Decoder, Encoder, FastSerialize};
@@ -37,21 +37,24 @@ use crate::store::{Combiner, RunSet, RunWriter};
 
 use super::scheduler::TaskFeed;
 
-/// COLLECTIVE: partition `pairs` by `router.owner(key)` and exchange.
+/// COLLECTIVE: partition `pairs` by `router.route(key)` and exchange.
 /// Returns the pairs this rank owns. Peak memory for the serialized
-/// buffers is charged to `tracker`.
-pub fn shuffle_pairs<K, V>(
+/// buffers is charged to `tracker`. Generic over the [`KeyRouter`]:
+/// the engines pass a [`ShardRouter`], the iterative layer a
+/// [`crate::dist::BucketRouter`] — same wire path either way.
+pub fn shuffle_pairs<K, V, R>(
     comm: &Communicator,
-    router: &ShardRouter,
+    router: &R,
     pairs: Vec<(K, V)>,
     tracker: &Arc<PeakTracker>,
 ) -> Result<Vec<(K, V)>>
 where
     K: FastSerialize + Hash + Eq,
     V: FastSerialize,
+    R: KeyRouter,
 {
     let n = comm.size();
-    debug_assert_eq!(router.shards(), n, "router/communicator size mismatch");
+    debug_assert_eq!(router.width(), n, "router/communicator size mismatch");
 
     // Serialize straight into per-destination encoders: no intermediate
     // per-destination Vec<(K,V)> (hot-path allocation kept linear).
@@ -62,7 +65,7 @@ where
     let mut encoders: Vec<Encoder> = (0..n).map(|_| Encoder::with_capacity(per_dest)).collect();
     let mut counts = vec![0u64; n];
     for (k, v) in &pairs {
-        let dst = router.owner(k).0;
+        let dst = router.route(k).0;
         counts[dst] += 1;
         k.encode(&mut encoders[dst]);
         v.encode(&mut encoders[dst]);

@@ -1,0 +1,303 @@
+//! `BucketRouter`: the epoch-versioned key→owner map that makes live
+//! elastic rebalancing cheap.
+//!
+//! [`super::ShardRouter`] is a pure function of `(shards, salt, key)`, so
+//! changing the shard count re-places almost every key — fine for a
+//! one-shot shuffle, fatal for an iterative job whose per-key state is
+//! pinned rank-local (the M3R ownership win). `BucketRouter` adds one
+//! level of indirection: keys hash into a fixed set of virtual
+//! **buckets**, and a versioned `bucket → rank` table says who owns each
+//! bucket. A [`BucketRouter::resize`] re-homes only the buckets that
+//! *must* move — everything stranded on removed ranks, plus the
+//! minimal-mass leveling set [`super::rebalance_plan`] picks — and bumps
+//! the router **epoch** so containers can tell a stale placement from a
+//! live one. Growing `P -> P+1` therefore migrates ~`1/(P+1)` of the
+//! keys instead of `P/(P+1)`.
+//!
+//! Everything is deterministic: the table is a pure function of the
+//! resize history and the bucket loads passed in, so every rank (or the
+//! driver, between waves) derives the identical placement with no
+//! coordinator round.
+
+use std::hash::{Hash, Hasher};
+
+use crate::mpi::Rank;
+use crate::util::hash::StableHasher;
+
+use super::balance::rebalance_plan;
+use super::router::KeyRouter;
+
+/// Stream constant folded into the salt so bucket hashes are independent
+/// of [`super::ShardRouter`]'s (and any other `StableHasher` user's).
+const BUCKET_STREAM: u64 = 0x4255_434B_4554_5221;
+
+/// Virtual buckets per router: enough granularity that leveling at
+/// bucket grain tracks the key-grain [`rebalance_plan`] closely, small
+/// enough that the table is a cache line or two.
+pub const DEFAULT_BUCKETS: usize = 128;
+
+/// One bucket reassignment from a [`BucketRouter::resize`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketMove {
+    /// The reassigned bucket.
+    pub bucket: usize,
+    /// Rank that owned it before the resize (may exceed the new width —
+    /// that is exactly the stranded-bucket case a shrink re-homes).
+    pub from: usize,
+    /// Rank that owns it after the resize (always `< new width`).
+    pub to: usize,
+}
+
+/// Epoch-versioned bucketed key→owner router (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketRouter {
+    salt: u64,
+    /// `assign[b]` = rank owning bucket `b`.
+    assign: Vec<usize>,
+    ranks: usize,
+    epoch: u64,
+}
+
+impl BucketRouter {
+    /// A router over `ranks` ranks with [`DEFAULT_BUCKETS`] buckets at
+    /// epoch 0, buckets dealt round-robin. Two routers built with the
+    /// same `(ranks, salt)` and taken through the same resize history
+    /// (same loads) agree on every key.
+    pub fn new(ranks: usize, salt: u64) -> Self {
+        Self::with_buckets(ranks, DEFAULT_BUCKETS, salt)
+    }
+
+    /// Like [`BucketRouter::new`] with an explicit bucket count.
+    /// `ranks > buckets` is allowed (some ranks own nothing until a
+    /// resize levels loads onto them).
+    pub fn with_buckets(ranks: usize, buckets: usize, salt: u64) -> Self {
+        assert!(ranks > 0, "router needs at least one rank");
+        assert!(buckets > 0, "router needs at least one bucket");
+        Self { salt, assign: (0..buckets).map(|b| b % ranks).collect(), ranks, epoch: 0 }
+    }
+
+    pub fn salt(&self) -> u64 {
+        self.salt
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Resizes survived so far — bumped once per [`BucketRouter::resize`].
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The rank currently owning bucket `b`.
+    pub fn rank_of_bucket(&self, b: usize) -> Rank {
+        Rank(self.assign[b])
+    }
+
+    /// The virtual bucket `key` hashes into — stable across resizes.
+    #[inline]
+    pub fn bucket_of<K: Hash + ?Sized>(&self, key: &K) -> usize {
+        let mut h = StableHasher::with_seed(self.salt ^ BUCKET_STREAM);
+        key.hash(&mut h);
+        (h.finish() % self.assign.len() as u64) as usize
+    }
+
+    /// Retarget the table at `new_ranks` ranks, moving as little mass as
+    /// possible. `loads[b]` is the current key population of bucket `b`
+    /// (the caller knows it: bucket contents live with their owners).
+    ///
+    /// Deterministic, two phases:
+    /// 1. buckets stranded on removed ranks go, heaviest first, to the
+    ///    lightest surviving rank (ties by index);
+    /// 2. the per-rank loads are leveled with the shared minimal-move
+    ///    [`rebalance_plan`], realized at bucket granularity — a move's
+    ///    mass is matched from the donor's heaviest buckets without ever
+    ///    overshooting, so no key travels that key-grain leveling would
+    ///    have kept in place.
+    ///
+    /// Bumps the epoch and returns the reassignments (empty when the
+    /// width is unchanged and loads are already level).
+    pub fn resize(&mut self, new_ranks: usize, loads: &[usize]) -> Vec<BucketMove> {
+        assert!(new_ranks > 0, "cannot resize to zero ranks");
+        assert_eq!(loads.len(), self.assign.len(), "one load per bucket");
+        let before = self.assign.clone();
+
+        let mut rank_load = vec![0usize; new_ranks];
+        let mut stranded: Vec<usize> = Vec::new();
+        for (b, &r) in self.assign.iter().enumerate() {
+            if r < new_ranks {
+                rank_load[r] += loads[b];
+            } else {
+                stranded.push(b);
+            }
+        }
+        // Phase 1: re-home stranded buckets, heaviest first onto the
+        // lightest rank (ties by index) — deterministic greedy.
+        stranded.sort_by(|&a, &b| loads[b].cmp(&loads[a]).then(a.cmp(&b)));
+        for b in stranded {
+            let r = (0..new_ranks).min_by_key(|&r| (rank_load[r], r)).expect("new_ranks > 0");
+            self.assign[b] = r;
+            rank_load[r] += loads[b];
+        }
+
+        // Phase 2: level with the minimal-move plan at bucket grain.
+        for m in &rebalance_plan(&rank_load) {
+            let mut remaining = m.count;
+            let mut donors: Vec<usize> =
+                (0..self.assign.len()).filter(|&b| self.assign[b] == m.from).collect();
+            donors.sort_by(|&a, &b| loads[b].cmp(&loads[a]).then(a.cmp(&b)));
+            for b in donors {
+                if remaining == 0 {
+                    break;
+                }
+                if loads[b] > 0 && loads[b] <= remaining {
+                    self.assign[b] = m.to;
+                    remaining -= loads[b];
+                }
+            }
+        }
+
+        self.ranks = new_ranks;
+        self.epoch += 1;
+        before
+            .into_iter()
+            .enumerate()
+            .filter(|&(b, old)| self.assign[b] != old)
+            .map(|(b, old)| BucketMove { bucket: b, from: old, to: self.assign[b] })
+            .collect()
+    }
+}
+
+impl KeyRouter for BucketRouter {
+    fn width(&self) -> usize {
+        self.ranks
+    }
+
+    #[inline]
+    fn route<K: Hash + ?Sized>(&self, key: &K) -> Rank {
+        Rank(self.assign[self.bucket_of(key)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads_for(router: &BucketRouter, keys: &[u64]) -> Vec<usize> {
+        let mut loads = vec![0usize; router.buckets()];
+        for k in keys {
+            loads[router.bucket_of(k)] += 1;
+        }
+        loads
+    }
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let a = BucketRouter::new(5, 9);
+        let b = BucketRouter::new(5, 9);
+        for k in 0..500u64 {
+            assert_eq!(a.route(&k), b.route(&k));
+            assert!(a.route(&k).0 < 5);
+        }
+    }
+
+    #[test]
+    fn initial_assignment_is_round_robin_balanced() {
+        let r = BucketRouter::with_buckets(4, 16, 0);
+        let mut per_rank = [0usize; 4];
+        for b in 0..16 {
+            per_rank[r.rank_of_bucket(b).0] += 1;
+        }
+        assert_eq!(per_rank, [4; 4]);
+        assert_eq!(r.epoch(), 0);
+    }
+
+    #[test]
+    fn grow_moves_a_minority_of_keys() {
+        let keys: Vec<u64> = (0..4_000).collect();
+        let mut router = BucketRouter::new(4, 7);
+        let before: Vec<_> = keys.iter().map(|k| router.route(k)).collect();
+        let loads = loads_for(&router, &keys);
+        let moves = router.resize(5, &loads);
+        assert!(!moves.is_empty(), "grow must hand the new rank some buckets");
+        assert_eq!(router.epoch(), 1);
+        let moved = keys.iter().zip(&before).filter(|(k, &b)| router.route(*k) != b).count();
+        // Min-mass target for 4 -> 5 ranks is ~1/5 of the keys; a mod-5
+        // rehash would move ~4/5. Allow slack for bucket granularity.
+        assert!(moved * 3 < keys.len(), "moved {moved}/{} keys", keys.len());
+        // Every moved key corresponds to a reported bucket move.
+        for (k, &b) in keys.iter().zip(&before) {
+            if router.route(k) != b {
+                assert!(moves.iter().any(|m| m.bucket == router.bucket_of(k)), "unreported move");
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_rehomes_every_stranded_bucket() {
+        let keys: Vec<u64> = (0..2_000).collect();
+        let mut router = BucketRouter::new(6, 3);
+        let loads = loads_for(&router, &keys);
+        router.resize(4, &loads);
+        for b in 0..router.buckets() {
+            assert!(router.rank_of_bucket(b).0 < 4, "bucket {b} stranded");
+        }
+        for k in &keys {
+            assert!(router.route(k).0 < 4);
+        }
+    }
+
+    #[test]
+    fn resize_levels_loads_to_bucket_granularity() {
+        let keys: Vec<u64> = (0..8_000).collect();
+        let mut router = BucketRouter::new(3, 11);
+        let loads = loads_for(&router, &keys);
+        router.resize(8, &loads);
+        let mut per_rank = vec![0usize; 8];
+        for k in &keys {
+            per_rank[router.route(k).0] += 1;
+        }
+        let max = *per_rank.iter().max().unwrap();
+        let min = *per_rank.iter().min().unwrap();
+        // Perfect leveling is 1000/rank; the never-overshoot rule leaves
+        // each mover short by at most ~one bucket (128 buckets, ~62 keys
+        // each), so the residual imbalance is a small bucket multiple.
+        assert!(max - min <= 4 * (8_000 / DEFAULT_BUCKETS), "{per_rank:?}");
+    }
+
+    #[test]
+    fn resize_history_is_reproducible() {
+        let keys: Vec<u64> = (0..1_000).collect();
+        let build = || {
+            let mut r = BucketRouter::new(4, 13);
+            let l1 = loads_for(&r, &keys);
+            r.resize(6, &l1);
+            let l2 = loads_for(&r, &keys);
+            r.resize(2, &l2);
+            r
+        };
+        assert_eq!(build(), build());
+        assert_eq!(build().epoch(), 2);
+    }
+
+    #[test]
+    fn same_width_resize_levels_skewed_buckets() {
+        // All mass sits on rank 0's 32 buckets (10 keys each): a
+        // same-width resize must deal them out 80 keys per rank.
+        let mut router = BucketRouter::new(4, 5);
+        let loads: Vec<usize> = (0..router.buckets())
+            .map(|b| if router.rank_of_bucket(b).0 == 0 { 10 } else { 0 })
+            .collect();
+        let moves = router.resize(4, &loads);
+        assert!(!moves.is_empty());
+        let mut per_rank = [0usize; 4];
+        for (b, &l) in loads.iter().enumerate() {
+            per_rank[router.rank_of_bucket(b).0] += l;
+        }
+        assert_eq!(per_rank, [80; 4], "{per_rank:?}");
+    }
+}

@@ -25,13 +25,16 @@ use crate::metrics::PeakTracker;
 use crate::mpi::{Communicator, Rank};
 use crate::serial::FastSerialize;
 
-use super::router::ShardRouter;
+use super::router::{KeyRouter, ShardRouter};
 
 /// A hash map sharded by key ownership across the ranks of one
-/// communicator.
-pub struct DistHashMap<'c, K, V> {
+/// communicator. Generic over the [`KeyRouter`] deciding placement:
+/// [`ShardRouter`] (the default — stateless, one-shot jobs) or
+/// [`crate::dist::BucketRouter`] (epoch-versioned — iterative jobs whose
+/// shards must survive elastic resizes).
+pub struct DistHashMap<'c, K, V, R = ShardRouter> {
     comm: &'c Communicator,
-    router: ShardRouter,
+    router: R,
     staged: Vec<(K, V)>,
     owned: HashMap<K, V>,
     tracker: Arc<PeakTracker>,
@@ -53,13 +56,31 @@ where
     /// shared tracker (e.g. the engine's per-job tracker) so container
     /// traffic shows up in job peak-memory accounting.
     pub fn with_tracker(comm: &'c Communicator, salt: u64, tracker: Arc<PeakTracker>) -> Self {
-        Self {
-            comm,
-            router: ShardRouter::new(comm.size(), salt),
-            staged: Vec::new(),
-            owned: HashMap::new(),
-            tracker,
-        }
+        Self::from_local(comm, ShardRouter::new(comm.size(), salt), HashMap::new(), tracker)
+    }
+}
+
+impl<'c, K, V, R> DistHashMap<'c, K, V, R>
+where
+    K: FastSerialize + Hash + Eq,
+    V: FastSerialize,
+    R: KeyRouter,
+{
+    /// Wrap an already-owned shard under an explicit router — the way
+    /// [`crate::core::IterativeJob`] re-enters its pinned per-rank state
+    /// each wave. Every rank must pass an identical router, and every
+    /// key in `owned` must route to this rank.
+    pub fn from_local(
+        comm: &'c Communicator,
+        router: R,
+        owned: HashMap<K, V>,
+        tracker: Arc<PeakTracker>,
+    ) -> Self {
+        debug_assert!(
+            owned.keys().all(|k| router.route(k) == comm.rank()),
+            "from_local shard holds keys this rank does not own"
+        );
+        Self { comm, router, staged: Vec::new(), owned, tracker }
     }
 
     /// The tracker flush shuffle buffers are charged to.
@@ -67,13 +88,13 @@ where
         &self.tracker
     }
 
-    pub fn router(&self) -> &ShardRouter {
+    pub fn router(&self) -> &R {
         &self.router
     }
 
     /// The rank that owns `key` after a flush.
     pub fn owner(&self, key: &K) -> Rank {
-        self.router.owner(key)
+        self.router.route(key)
     }
 
     /// Buffer a pair locally — any rank may stage any key.
@@ -124,7 +145,7 @@ where
         let staged = std::mem::take(&mut self.staged);
         let incoming = shuffle_pairs(self.comm, &self.router, staged, &self.tracker)?;
         for (k, v) in incoming {
-            debug_assert_eq!(self.router.owner(&k), self.comm.rank(), "shuffle misroute");
+            debug_assert_eq!(self.router.route(&k), self.comm.rank(), "shuffle misroute");
             match self.owned.entry(k) {
                 Entry::Occupied(mut e) => combine(e.get_mut(), v),
                 Entry::Vacant(e) => {
@@ -133,6 +154,30 @@ where
             }
         }
         Ok(())
+    }
+
+    /// COLLECTIVE: [`DistHashMap::flush`] with a **stage-side pre-fold**
+    /// — equal-key staged pairs are combined locally before the shuffle
+    /// (the eager-reduction trick applied to container traffic), so at
+    /// most one value per (rank, key) crosses the wire. `combine` must
+    /// therefore be associative and commutative; the owner-side fold per
+    /// key still happens in source-rank order, so repeated runs are
+    /// deterministic. This is the delta-shuffle the iterative engine
+    /// rides: a vertex contributing to a hot key many times pays the
+    /// wire once.
+    pub fn flush_combining(&mut self, combine: impl Fn(&mut V, V)) -> Result<()> {
+        let staged = std::mem::take(&mut self.staged);
+        let mut cache: HashMap<K, V> = HashMap::with_capacity(staged.len().min(4096));
+        for (k, v) in staged {
+            match cache.entry(k) {
+                Entry::Occupied(mut e) => combine(e.get_mut(), v),
+                Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+            }
+        }
+        self.staged = cache.into_iter().collect();
+        self.flush(combine)
     }
 }
 
@@ -177,6 +222,49 @@ mod tests {
         let owners: Vec<u64> = got.iter().filter_map(|(v, _)| *v).collect();
         assert_eq!(owners, vec![4], "exactly one owner folding all 4 stages");
         assert!(got.iter().all(|&(_, global)| global == 1));
+    }
+
+    #[test]
+    fn flush_combining_matches_flush_and_cuts_wire_pairs() {
+        use crate::dist::BucketRouter;
+        let got = pool_run(3, |c| {
+            // 600 stages over 6 hot keys per rank: the pre-fold should
+            // ship at most one pair per (rank, key).
+            let combine = |acc: &mut u64, v: u64| *acc += v;
+            let tracker = PeakTracker::new();
+            let mut raw: DistHashMap<'_, u32, u64, BucketRouter> = DistHashMap::from_local(
+                c,
+                BucketRouter::new(c.size(), 9),
+                HashMap::new(),
+                tracker.clone(),
+            );
+            for i in 0..600u32 {
+                raw.stage(i % 6, 1);
+            }
+            raw.flush(combine).unwrap();
+            let raw_bytes = c.sent_bytes();
+            let mut folded: DistHashMap<'_, u32, u64, BucketRouter> =
+                DistHashMap::from_local(c, BucketRouter::new(c.size(), 9), HashMap::new(), tracker);
+            for i in 0..600u32 {
+                folded.stage(i % 6, 1);
+            }
+            folded.flush_combining(combine).unwrap();
+            let folded_bytes = c.sent_bytes() - raw_bytes;
+            (raw.into_local(), folded.into_local(), raw_bytes, folded_bytes)
+        });
+        let mut raw_merged: HashMap<u32, u64> = HashMap::new();
+        let mut folded_merged: HashMap<u32, u64> = HashMap::new();
+        for (raw, folded, raw_bytes, folded_bytes) in got {
+            assert!(
+                folded_bytes * 4 < raw_bytes,
+                "pre-fold must collapse the wire volume ({folded_bytes} vs {raw_bytes})"
+            );
+            raw_merged.extend(raw);
+            folded_merged.extend(folded);
+        }
+        assert_eq!(raw_merged, folded_merged, "pre-fold may never change the result");
+        assert_eq!(raw_merged.len(), 6);
+        assert!(raw_merged.values().all(|&v| v == 300), "{raw_merged:?}");
     }
 
     #[test]

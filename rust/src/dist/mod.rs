@@ -12,6 +12,14 @@
 //!   shuffle and container shares. Same salt + shard count ⇒ same
 //!   placement on every rank, with no negotiation (the determinism
 //!   property `tests/prop_invariants.rs` checks).
+//! * [`BucketRouter`] — the epoch-versioned bucketed router behind live
+//!   elastic rebalancing: keys hash into fixed virtual buckets, a
+//!   versioned bucket→rank table owns placement, and
+//!   [`BucketRouter::resize`] re-homes only the minimal-move set
+//!   [`rebalance_plan`] picks. [`crate::core::IterativeJob`] keys its
+//!   pinned per-key state (and its delta shuffle) by it.
+//! * [`KeyRouter`] — the trait both routers implement; the shuffle and
+//!   [`DistHashMap`] are generic over it.
 //! * [`DistVector`] — a rank-sharded `Vec`: local pushes are free, global
 //!   length/offset are one collective away, and [`DistVector::rebalance`]
 //!   levels shard sizes using a [`rebalance_plan`].
@@ -27,11 +35,13 @@
 //! the MPI collectives they are built from.
 
 mod balance;
+mod bucket;
 mod hashmap;
 mod router;
 mod vector;
 
 pub use balance::{rebalance_plan, Move};
+pub use bucket::{BucketMove, BucketRouter, DEFAULT_BUCKETS};
 pub use hashmap::DistHashMap;
-pub use router::ShardRouter;
+pub use router::{KeyRouter, ShardRouter};
 pub use vector::DistVector;

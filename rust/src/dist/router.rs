@@ -18,6 +18,25 @@ use crate::util::hash::StableHasher;
 /// of other `StableHasher` users sharing a seed.
 const ROUTER_STREAM: u64 = 0x5248_4F55_5445_5221;
 
+/// Key→owner placement: the capability every shuffle-like exchange needs
+/// from a router. Implemented by [`ShardRouter`] (stateless hash mod
+/// shard count — placement is a pure function, moves ~everything on a
+/// width change) and [`crate::dist::BucketRouter`] (epoch-versioned
+/// bucket table — placement survives resizes with minimal-move
+/// migration). [`crate::core::shuffle::shuffle_pairs`] and
+/// [`crate::dist::DistHashMap`] are generic over it, which is how the
+/// iterative engine's delta shuffle rides the exact same exchange as the
+/// batch engines.
+pub trait KeyRouter {
+    /// Number of ranks the router maps keys into — the communicator
+    /// width any exchange using this router must run at.
+    fn width(&self) -> usize;
+
+    /// Owning rank of `key`. Deterministic: every rank computes the same
+    /// owner without negotiation.
+    fn route<K: Hash + ?Sized>(&self, key: &K) -> Rank;
+}
+
 /// Deterministic salted key→shard router (one shard per reducer rank).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardRouter {
@@ -47,6 +66,17 @@ impl ShardRouter {
         let mut h = StableHasher::with_seed(self.salt ^ ROUTER_STREAM);
         key.hash(&mut h);
         Rank((h.finish() % self.shards as u64) as usize)
+    }
+}
+
+impl KeyRouter for ShardRouter {
+    fn width(&self) -> usize {
+        self.shards
+    }
+
+    #[inline]
+    fn route<K: Hash + ?Sized>(&self, key: &K) -> Rank {
+        ShardRouter::owner(self, key)
     }
 }
 

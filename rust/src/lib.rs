@@ -37,8 +37,8 @@ pub mod util;
 /// Most-used types, re-exported for `use blaze_rs::prelude::*`.
 pub mod prelude {
     pub use crate::cluster::{ClusterConfig, DeploymentKind};
-    pub use crate::core::{JobConfig, JobResult, ReductionMode};
-    pub use crate::dist::{DistHashMap, DistVector};
+    pub use crate::core::{IterativeJob, JobConfig, JobResult, ReductionMode};
+    pub use crate::dist::{BucketRouter, DistHashMap, DistVector};
     pub use crate::mpi::{Communicator, Rank, RankPool};
     pub use crate::serial::{Decoder, Encoder, FastSerialize};
 }

@@ -4,7 +4,8 @@
 //! blaze run --app wordcount [--mode eager] [--ranks 4] [--deployment vm]
 //!           [--cluster cluster.toml] [--kernel] [app-specific sizes]
 //! blaze bench-figure <fig8|fig9|fig10|fig11|fig12|fig13|ablation-reduction|
-//!                     deployment|pool-ablation|spill-crossover|tree-ablation|all>
+//!                     deployment|pool-ablation|spill-crossover|tree-ablation|
+//!                     iterative-ablation|all>
 //!                    [--quick] [--json-dir target/figures]
 //! blaze inspect-artifacts [--dir artifacts]
 //! blaze cluster-info [--cluster cluster.toml | --ranks N --deployment K]
@@ -135,7 +136,7 @@ fn print_usage() {
          --dims D --k K --iters I\n  pi: --samples N\n  matmul: --size N\n  \
          linreg: --rows N --dims D --iters I --lr F\n\n\
          FIGURES: fig8 fig9 fig10 fig11 fig12 fig13 ablation-reduction deployment pool-ablation \
-         spill-crossover tree-ablation"
+         spill-crossover tree-ablation iterative-ablation"
     );
 }
 
@@ -257,7 +258,7 @@ fn cmd_bench_figure(args: &Args) -> Result<()> {
         .map(String::as_str)
         .context(
             "which figure? (fig8..fig13, ablation-reduction, deployment, pool-ablation, \
-             spill-crossover, tree-ablation, all)",
+             spill-crossover, tree-ablation, iterative-ablation, all)",
         )?;
     let quick = args.has("quick");
     let ids: Vec<FigureId> = if which == "all" {

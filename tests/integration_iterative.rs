@@ -1,0 +1,144 @@
+//! End-to-end tests of the in-memory iterative engine (ISSUE 5): the
+//! tentpole contracts that PageRank on `IterativeJob`/`DistHashMap`
+//! matches the serial reference, beats the engine path on per-iteration
+//! wire bytes, and survives live `ElasticCluster` resizes with the
+//! results intact — plus the same for label-propagation components,
+//! where integer deltas make the cross-width guarantee *bit*-exact.
+
+use blaze_rs::apps::{components, pagerank};
+use blaze_rs::cluster::{ClusterConfig, DeploymentKind, ElasticCluster};
+use blaze_rs::core::{IterativeJob, ReductionMode};
+
+fn local_elastic(ranks: usize) -> ElasticCluster {
+    ElasticCluster::new(ClusterConfig::builder().ranks(ranks).build())
+}
+
+fn container_elastic(nodes: usize, slots: usize) -> ElasticCluster {
+    ElasticCluster::new(
+        ClusterConfig::builder()
+            .deployment(DeploymentKind::Container)
+            .nodes(nodes)
+            .slots_per_node(slots)
+            .build(),
+    )
+}
+
+#[test]
+fn dist_pagerank_matches_reference_for_ten_plus_iterations() {
+    // The acceptance bound: within 1e-9 of the serial reference for
+    // >= 10 iterations.
+    let g = pagerank::Graph::random(400, 4, 5);
+    let mut elastic = local_elastic(4);
+    let got = pagerank::run_dist(&mut elastic, &g, 12, 0.85, &[]).unwrap();
+    let want = pagerank::reference(&g, 12, 0.85);
+    for (v, (a, b)) in got.ranks.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-9, "vertex {v}: {a} vs {b}");
+    }
+    let total: f64 = got.ranks.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9);
+    assert_eq!(got.per_iteration.len(), 12);
+    assert!(got.per_iteration.iter().all(|it| it.shuffled_bytes > 0 && it.orphan_deltas == 0));
+    assert!(got.migrations.is_empty());
+}
+
+#[test]
+fn dist_pagerank_beats_engine_path_bytes_every_iteration() {
+    // The tentpole claim at app level: holding scores + adjacency
+    // rank-local and shipping only pre-folded deltas must move strictly
+    // fewer bytes than the engine path's per-iteration re-shuffle.
+    let g = pagerank::Graph::random(400, 4, 5);
+    let cluster = ClusterConfig::builder().ranks(4).build();
+    let engine = pagerank::run(&cluster, &g, 8, 0.85, ReductionMode::Delayed).unwrap();
+    let mut elastic = ElasticCluster::new(cluster);
+    let dist = pagerank::run_dist(&mut elastic, &g, 8, 0.85, &[]).unwrap();
+    for (a, b) in engine.ranks.iter().zip(&dist.ranks) {
+        assert!((a - b).abs() < 1e-12, "paths must agree: {a} vs {b}");
+    }
+    let min_engine = engine.per_iteration_shuffle_bytes.iter().min().copied().unwrap();
+    for it in &dist.per_iteration {
+        assert!(
+            it.shuffled_bytes < min_engine,
+            "iteration {}: dist {} B >= engine {} B",
+            it.iteration,
+            it.shuffled_bytes,
+            min_engine
+        );
+    }
+}
+
+#[test]
+fn dist_pagerank_survives_grow_and_shrink_mid_run() {
+    let g = pagerank::Graph::random(300, 4, 9);
+    let straight = pagerank::run_dist(&mut container_elastic(2, 2), &g, 10, 0.85, &[]).unwrap();
+    let mut elastic = container_elastic(2, 2);
+    let resized =
+        pagerank::run_dist(&mut elastic, &g, 10, 0.85, &[(3, 1), (7, -2)]).unwrap();
+    // 4 ranks -> grow to 6 -> shrink to 2, results indistinguishable
+    // beyond float re-association.
+    for (a, b) in resized.ranks.iter().zip(&straight.ranks) {
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+    }
+    let want = pagerank::reference(&g, 10, 0.85);
+    for (a, b) in resized.ranks.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+    assert_eq!(resized.migrations.len(), 2);
+    assert_eq!(resized.migrations[0].from_ranks, 4);
+    assert_eq!(resized.migrations[0].to_ranks, 6);
+    assert_eq!(resized.migrations[1].to_ranks, 2);
+    assert!(resized.stats.migrated_bytes > 0);
+    assert_eq!(elastic.resizes(), 2);
+    // Waves after each resize ran at the new width, same session.
+    assert_eq!(resized.per_iteration[2].ranks, 4);
+    assert_eq!(resized.per_iteration[3].ranks, 6);
+    assert_eq!(resized.per_iteration[9].ranks, 2);
+}
+
+#[test]
+fn migration_moves_a_minority_of_keys_on_grow() {
+    // The BucketRouter promise at session level: growing 4 -> 5 ranks
+    // migrates roughly 1/5 of the state, nothing like a full re-shard.
+    let n = 1_000u32;
+    let mut elastic = local_elastic(4);
+    let mut job: IterativeJob<u32, u64> =
+        IterativeJob::load(&elastic, 3, (0..n).map(|k| (k, u64::from(k))));
+    elastic.grow(1);
+    let m = job.rebalance(&mut elastic).unwrap().expect("width changed");
+    assert!(m.moved_keys > 0);
+    assert!(
+        m.moved_keys < u64::from(n) / 2,
+        "grow 4->5 moved {} of {n} keys — that is a re-shard, not a rebalance",
+        m.moved_keys
+    );
+    assert_eq!(job.len_global(), n as usize);
+}
+
+#[test]
+fn components_match_union_find_and_stay_exact_across_resize() {
+    let g = components::chain_graph(6, 8);
+    let straight = components::run_dist(&mut local_elastic(3), &g, 30, &[]).unwrap();
+    let mut elastic = local_elastic(3);
+    let resized = components::run_dist(&mut elastic, &g, 30, &[(2, 2), (5, -4)]).unwrap();
+    assert_eq!(straight.labels, components::reference(&g));
+    // Integer min-deltas: the resized run is BIT-identical, not merely
+    // within tolerance.
+    assert_eq!(resized.labels, straight.labels);
+    assert_eq!(resized.iterations, straight.iterations);
+    assert!(resized.converged && straight.converged);
+    assert_eq!(resized.migrations.len(), 2);
+    assert_eq!(elastic.ranks(), 1);
+}
+
+#[test]
+fn session_stats_account_shuffle_and_migration_separately() {
+    let g = pagerank::Graph::random(200, 4, 1);
+    let mut elastic = local_elastic(3);
+    let got = pagerank::run_dist(&mut elastic, &g, 6, 0.85, &[(3, 1)]).unwrap();
+    let iter_sum: u64 = got.per_iteration.iter().map(|it| it.shuffled_bytes).sum();
+    let mig_sum: u64 = got.migrations.iter().map(|m| m.moved_bytes).sum();
+    assert_eq!(got.stats.shuffle_bytes, iter_sum, "shuffle_bytes = delta waves only");
+    assert_eq!(got.stats.migrated_bytes, mig_sum, "migrated_bytes = resizes only");
+    assert!(mig_sum > 0);
+    assert!(got.stats.peak_mem_bytes > 0, "session tracker must see the wave buffers");
+    assert!(got.stats.modeled_ms > 0.0);
+}
