@@ -237,6 +237,40 @@ fn main() {
         }));
     }
 
+    // --- elastic rebalance + checkpoint round trip (ISSUE 6) -------------
+    // The recovery-path hot loops, host wall clock: (a) a live resize of
+    // a loaded session (bucket plan + key migration through the wire),
+    // (b) snapshotting 10k states into the run store, (c) recovering the
+    // snapshot onto a wider cluster (read + resize + placement).
+    {
+        use blaze_rs::cluster::ElasticCluster;
+        use blaze_rs::core::IterativeJob;
+        use blaze_rs::store::CheckpointStore;
+        let base = blaze_rs::cluster::ClusterConfig::builder().ranks(4).build();
+        results.push(bench("dist/rebalance 10k states, grow 4 -> 5 ranks", 2, 10, || {
+            let mut elastic = ElasticCluster::new(base.clone());
+            let mut job: IterativeJob<u32, u64> =
+                IterativeJob::load(&elastic, 5, (0..10_000u32).map(|k| (k, k as u64)));
+            elastic.grow(1);
+            job.rebalance(&mut elastic).unwrap().expect("width changed").moved_keys
+        }));
+        let elastic = ElasticCluster::new(base.clone());
+        let mut job: IterativeJob<u32, u64> =
+            IterativeJob::load(&elastic, 5, (0..10_000u32).map(|k| (k, k as u64)));
+        let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+        results.push(bench("store/checkpoint 10k states (bucket+sort+spill)", 2, 10, || {
+            job.checkpoint_now(&store).unwrap().bytes
+        }));
+        let wide =
+            ElasticCluster::new(blaze_rs::cluster::ClusterConfig::builder().ranks(8).build());
+        results.push(bench("store/recover 10k states onto 8 ranks", 2, 10, || {
+            IterativeJob::<u32, u64>::recover_from(&wide, &store)
+                .unwrap()
+                .expect("snapshot present")
+                .len_global()
+        }));
+    }
+
     // --- end-to-end tiny job (engine overhead floor) ---------------------
     let corpus = blaze_rs::apps::wordcount::generate_corpus(1_000, 8, 200, 3);
     let cluster = blaze_rs::cluster::ClusterConfig::builder().ranks(4).build();

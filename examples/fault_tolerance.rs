@@ -8,7 +8,7 @@
 
 use blaze_rs::apps::wordcount;
 use blaze_rs::cluster::{ClusterConfig, FaultTracker};
-use blaze_rs::core::{FaultPlan, MapReduceJob};
+use blaze_rs::core::{TaskFault, MapReduceJob};
 use blaze_rs::mpi::Rank;
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     // Kill rank 2 after it completes one task: its remaining tasks are
     // reclaimed by the completion table and re-claimed by survivors.
     let faulty = MapReduceJob::new(&cluster, &corpus)
-        .with_fault(FaultPlan { rank: Rank(2), after_tasks: 1 })
+        .with_fault(TaskFault { rank: Rank(2), after_tasks: 1 })
         .run_eager(wordcount::map_line, |a: &mut u64, b| *a += b)?;
     assert_eq!(faulty.result, truth);
     println!("rank2 died after 1 task: result still exact ✓");

@@ -15,9 +15,16 @@
 use anyhow::Result;
 
 use crate::cluster::ElasticCluster;
-use crate::core::{apply_resizes, IterationStats, IterativeJob, JobStats, MigrationStats};
+use crate::core::{
+    apply_resizes, IterationStats, IterativeJob, JobStats, MigrationStats, RecoveryStats,
+    WaveKilled,
+};
+use crate::store::{CheckpointStats, CheckpointStore};
 
 use super::pagerank::Graph;
+
+/// One vertex state: `(neighbors, label, changed-last-wave)`.
+type VertexState = (Vec<u32>, u32, bool);
 
 /// Result of a [`run_dist`] label-propagation session.
 #[derive(Debug, Clone)]
@@ -31,6 +38,12 @@ pub struct ComponentsResult {
     pub stats: JobStats,
     pub per_iteration: Vec<IterationStats>,
     pub migrations: Vec<MigrationStats>,
+    /// Shard snapshots written at the configured cadence (empty when
+    /// checkpointing is off).
+    pub checkpoints: Vec<CheckpointStats>,
+    /// Checkpoint restores performed after injected kills (empty for a
+    /// fault-free run).
+    pub recoveries: Vec<RecoveryStats>,
 }
 
 /// Undirected adjacency from a directed [`Graph`]: every edge is
@@ -69,6 +82,92 @@ pub fn chain_graph(chains: usize, len: usize) -> Graph {
     Graph { vertices, edges }
 }
 
+fn load_job(elastic: &ElasticCluster, adj: &[Vec<u32>]) -> IterativeJob<u32, VertexState> {
+    IterativeJob::load(
+        elastic,
+        0x434F_4D50, // "COMP"
+        (0..adj.len() as u32).map(|u| (u, (adj[u as usize].clone(), u, false))),
+    )
+}
+
+/// One propagation wave: flood min labels one hop, return the global
+/// changed-vertex count (exact — the measure monoid carrier is `u64`).
+fn step_once(job: &mut IterativeJob<u32, VertexState>, elastic: &mut ElasticCluster) -> Result<u64> {
+    let out = job.step(
+        elastic,
+        |_u: &u32, state: &VertexState, emit: &mut dyn FnMut(u32, u32)| {
+            for &v in &state.0 {
+                emit(v, state.1);
+            }
+        },
+        |acc: &mut u32, v: u32| {
+            if v < *acc {
+                *acc = v;
+            }
+        },
+        |_u: &u32, state: &mut VertexState, delta: Option<u32>| {
+            let before = state.1;
+            if let Some(m) = delta {
+                if m < state.1 {
+                    state.1 = m;
+                }
+            }
+            state.2 = state.1 != before;
+        },
+        |_u: &u32, state: &VertexState| u64::from(state.2),
+    )?;
+    Ok(out.aggregate)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    job: IterativeJob<u32, VertexState>,
+    elastic: &ElasticCluster,
+    n: usize,
+    iterations: usize,
+    converged: bool,
+    wall: std::time::Instant,
+    mut history: Vec<IterationStats>,
+    mut migrations: Vec<MigrationStats>,
+    mut checkpoints: Vec<CheckpointStats>,
+    recoveries: Vec<RecoveryStats>,
+) -> ComponentsResult {
+    let mut labels = vec![0u32; n];
+    job.for_each_state(|&u, state| labels[u as usize] = state.1);
+    let mut stats = job.job_stats();
+    // Waves, migrations, checkpoints and recoveries performed by jobs
+    // that died mid-session still cost modeled time; fold the banked
+    // records back in (the surviving job's own are already counted).
+    stats.modeled_ms += history.iter().map(|s| s.modeled_ms).sum::<f64>()
+        + migrations.iter().map(|m| m.modeled_ms).sum::<f64>()
+        + checkpoints.iter().map(|c| c.modeled_ms).sum::<f64>()
+        + recoveries.iter().map(|r| r.modeled_ms).sum::<f64>()
+        - job.recovery().map_or(0.0, |r| r.modeled_ms);
+    stats.compute_ms += history.iter().map(|s| s.compute_ms).sum::<f64>();
+    stats.net_ms += history.iter().map(|s| s.net_ms).sum::<f64>();
+    stats.shuffle_bytes += history.iter().map(|s| s.shuffled_bytes).sum::<u64>();
+    stats.messages += history.iter().map(|s| s.messages).sum::<u64>()
+        + migrations.iter().map(|m| m.messages).sum::<u64>();
+    stats.remote_messages += history.iter().map(|s| s.remote_messages).sum::<u64>();
+    stats.remote_bytes += history.iter().map(|s| s.remote_bytes).sum::<u64>();
+    stats.migrated_bytes += migrations.iter().map(|m| m.moved_bytes).sum::<u64>();
+    history.extend(job.per_iteration().iter().cloned());
+    migrations.extend(job.migrations().iter().cloned());
+    checkpoints.extend(job.checkpoints().iter().cloned());
+    stats.startup_ms = elastic.config().deployment.profile().startup_ms as f64;
+    stats.host_wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+    ComponentsResult {
+        labels,
+        iterations,
+        converged,
+        stats,
+        per_iteration: history,
+        migrations,
+        checkpoints,
+        recoveries,
+    }
+}
+
 /// Label propagation on the iterative engine. `resizes` is the same
 /// mid-run elasticity plan [`super::pagerank::run_dist`] takes:
 /// `(iteration, node_delta)` pairs applied before that iteration's wave.
@@ -82,66 +181,92 @@ pub fn run_dist(
     anyhow::ensure!(n > 0, "empty graph");
     let wall = std::time::Instant::now();
     let adj = symmetric_adjacency(graph);
-
-    let mut job: IterativeJob<u32, (Vec<u32>, u32, bool)> = IterativeJob::load(
-        elastic,
-        0x434F_4D50, // "COMP"
-        (0..n as u32).map(|u| (u, (adj[u as usize].clone(), u, false))),
-    );
+    let mut job = load_job(elastic, &adj);
 
     let mut converged = false;
     let mut iterations = 0;
     for it in 0..max_iterations {
         apply_resizes(elastic, resizes, it)?;
-        let stats = job.step(
-            elastic,
-            |_u: &u32, state: &(Vec<u32>, u32, bool), emit: &mut dyn FnMut(u32, u32)| {
-                for &v in &state.0 {
-                    emit(v, state.1);
-                }
-            },
-            |acc: &mut u32, v: u32| {
-                if v < *acc {
-                    *acc = v;
-                }
-            },
-            |_u: &u32, state: &mut (Vec<u32>, u32, bool), delta: Option<u32>| {
-                let before = state.1;
-                if let Some(m) = delta {
-                    if m < state.1 {
-                        state.1 = m;
-                    }
-                }
-                state.2 = state.1 != before;
-            },
-            |_u: &u32, state: &(Vec<u32>, u32, bool)| {
-                if state.2 {
-                    1.0
-                } else {
-                    0.0
-                }
-            },
-        )?;
+        let changed = step_once(&mut job, elastic)?;
         iterations = it + 1;
-        if stats.aggregate == 0.0 {
+        if changed == 0 {
             converged = true;
             break;
         }
     }
-
-    let mut labels = vec![0u32; n];
-    job.for_each_state(|&u, state| labels[u as usize] = state.1);
-    let mut stats = job.job_stats();
-    stats.startup_ms = elastic.config().deployment.profile().startup_ms as f64;
-    stats.host_wall_ms = wall.elapsed().as_secs_f64() * 1e3;
-    Ok(ComponentsResult {
-        labels,
+    Ok(finish(
+        job,
+        elastic,
+        n,
         iterations,
         converged,
-        stats,
-        per_iteration: job.per_iteration().to_vec(),
-        migrations: job.migrations().to_vec(),
-    })
+        wall,
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
+    ))
+}
+
+/// Label propagation that survives the cluster's [`crate::cluster::FaultPlan`]:
+/// shards checkpoint every `checkpoint_every` waves, and when a scheduled
+/// kill lands the driver replaces the dead node (`replace_delta` adjusts
+/// the node count — 0 replaces in kind) and re-enters the wave loop from
+/// the last checkpoint. Because labels are integers and the wave is
+/// deterministic, the recovered run's labels are **bit-identical** to an
+/// uninterrupted run at any recovery width.
+pub fn run_dist_faulty(
+    elastic: &mut ElasticCluster,
+    graph: &Graph,
+    max_iterations: usize,
+    checkpoint_every: usize,
+    replace_delta: i64,
+) -> Result<ComponentsResult> {
+    let n = graph.vertices;
+    anyhow::ensure!(n > 0, "empty graph");
+    let wall = std::time::Instant::now();
+    let adj = symmetric_adjacency(graph);
+    let store: CheckpointStore<u32, VertexState> = CheckpointStore::new();
+    let mut job = load_job(elastic, &adj);
+    job.checkpoint_every(store.clone(), checkpoint_every);
+
+    let mut history: Vec<IterationStats> = Vec::new();
+    let mut migrations: Vec<MigrationStats> = Vec::new();
+    let mut checkpoints: Vec<CheckpointStats> = Vec::new();
+    let mut recoveries: Vec<RecoveryStats> = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+    while iterations < max_iterations {
+        match step_once(&mut job, elastic) {
+            Ok(changed) => {
+                iterations = job.steps_run();
+                if changed == 0 {
+                    converged = true;
+                    break;
+                }
+            }
+            Err(e) if e.downcast_ref::<WaveKilled>().is_some() => {
+                // The dying job's completed waves still cost modeled
+                // time; bank its records before dropping it.
+                history.extend(job.per_iteration().iter().cloned());
+                migrations.extend(job.migrations().iter().cloned());
+                checkpoints.extend(job.checkpoints().iter().cloned());
+                elastic.kill_and_replace(replace_delta)?;
+                job = match IterativeJob::recover_from(elastic, &store)? {
+                    Some(recovered) => recovered,
+                    // Killed before the first checkpoint: start over.
+                    None => load_job(elastic, &adj),
+                };
+                job.checkpoint_every(store.clone(), checkpoint_every);
+                recoveries.extend(job.recovery().cloned());
+                iterations = job.steps_run();
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(finish(
+        job, elastic, n, iterations, converged, wall, history, migrations, checkpoints, recoveries,
+    ))
 }
 
 /// Serial ground truth: union-find (union-by-min, path halving), so each

@@ -26,10 +26,14 @@ use anyhow::Result;
 use crate::cluster::{ClusterConfig, ElasticCluster};
 use crate::core::{
     apply_resizes, IterationStats, IterativeJob, JobStats, MapReduceJob, MigrationStats,
-    ReductionMode,
+    RecoveryStats, ReductionMode, WaveKilled,
 };
 use crate::mpi::RankPool;
+use crate::store::{CheckpointStats, CheckpointStore};
 use crate::util::rng::Rng;
+
+/// One vertex state on the iterative path: `(out-edges, unnormalized score)`.
+type PrState = (Vec<u32>, f64);
 
 /// Adjacency-list graph with contiguous u32 vertex ids.
 #[derive(Debug, Clone)]
@@ -169,6 +173,12 @@ pub struct DistPageRankResult {
     pub stats: JobStats,
     pub per_iteration: Vec<IterationStats>,
     pub migrations: Vec<MigrationStats>,
+    /// Shard snapshots written at the configured cadence (empty when
+    /// checkpointing is off).
+    pub checkpoints: Vec<CheckpointStats>,
+    /// Checkpoint restores performed after injected kills (empty for a
+    /// fault-free run).
+    pub recoveries: Vec<RecoveryStats>,
 }
 
 /// PageRank on the in-memory iterative engine ([`IterativeJob`]): every
@@ -198,51 +208,170 @@ pub fn run_dist(
     anyhow::ensure!(n > 0, "empty graph");
     let wall = std::time::Instant::now();
     let base = (1.0 - damping) / n as f64;
-
-    let mut job: IterativeJob<u32, (Vec<u32>, f64)> = IterativeJob::load(
-        elastic,
-        0x5047_524B, // "PGRK"
-        (0..n as u32).map(|u| (u, (graph.edges[u as usize].clone(), 1.0 / n as f64))),
-    );
+    let mut job = load_job(elastic, graph);
 
     // Sum of the unnormalized scores; exactly 1.0 going in because the
     // first reference iteration also divides by nothing.
     let mut total = 1.0f64;
     for it in 0..iterations {
         apply_resizes(elastic, resizes, it)?;
-        let t = total;
-        let stats = job.step(
-            elastic,
-            |_u: &u32, state: &(Vec<u32>, f64), emit: &mut dyn FnMut(u32, f64)| {
-                let (out, score) = state;
-                if !out.is_empty() {
-                    let share = (*score / t) / out.len() as f64;
-                    for &v in out {
-                        emit(v, share);
-                    }
-                }
-            },
-            |acc: &mut f64, v: f64| *acc += v,
-            |_u: &u32, state: &mut (Vec<u32>, f64), delta: Option<f64>| {
-                state.1 = base + damping * delta.unwrap_or(0.0);
-            },
-            |_u: &u32, state: &(Vec<u32>, f64)| state.1,
-        )?;
-        total = stats.aggregate;
+        total = step_once(&mut job, elastic, base, damping, total)?;
     }
+    Ok(finish(job, elastic, n, iterations, total, wall, Vec::new(), Vec::new(), Vec::new(), Vec::new()))
+}
 
+/// PageRank that survives the cluster's [`crate::cluster::FaultPlan`]:
+/// shards checkpoint every `checkpoint_every` waves (each snapshot also
+/// carries the wave's normalizer aggregate, so the restored loop resumes
+/// with the exact `total` the uninterrupted loop had), and when a
+/// scheduled kill lands the driver replaces the dead node
+/// (`replace_delta` adjusts the node count — 0 replaces in kind) and
+/// re-enters the wave loop from the last checkpoint. Same-width recovery
+/// is bit-identical to an uninterrupted run; cross-width recovery
+/// re-associates float sums (≤ ulp accumulation, the 1e-12 test bound).
+pub fn run_dist_faulty(
+    elastic: &mut ElasticCluster,
+    graph: &Graph,
+    iterations: usize,
+    damping: f64,
+    checkpoint_every: usize,
+    replace_delta: i64,
+) -> Result<DistPageRankResult> {
+    let n = graph.vertices;
+    anyhow::ensure!(n > 0, "empty graph");
+    let wall = std::time::Instant::now();
+    let base = (1.0 - damping) / n as f64;
+    let store: CheckpointStore<u32, PrState> = CheckpointStore::new();
+    let mut job = load_job(elastic, graph);
+    job.checkpoint_every(store.clone(), checkpoint_every);
+
+    let mut history: Vec<IterationStats> = Vec::new();
+    let mut migrations: Vec<MigrationStats> = Vec::new();
+    let mut checkpoints: Vec<CheckpointStats> = Vec::new();
+    let mut recoveries: Vec<RecoveryStats> = Vec::new();
+    let mut total = 1.0f64;
+    let mut it = 0;
+    while it < iterations {
+        match step_once(&mut job, elastic, base, damping, total) {
+            Ok(new_total) => {
+                total = new_total;
+                it = job.steps_run();
+            }
+            Err(e) if e.downcast_ref::<WaveKilled>().is_some() => {
+                // Bank the dying job's records, replace the node, and
+                // resume from the last snapshot.
+                history.extend(job.per_iteration().iter().cloned());
+                migrations.extend(job.migrations().iter().cloned());
+                checkpoints.extend(job.checkpoints().iter().cloned());
+                elastic.kill_and_replace(replace_delta)?;
+                job = match IterativeJob::recover_from(elastic, &store)? {
+                    Some(recovered) => {
+                        total = store
+                            .latest_aggregate::<f64>()?
+                            .expect("checkpoint carries the normalizer");
+                        recovered
+                    }
+                    // Killed before the first checkpoint: start over.
+                    None => {
+                        total = 1.0;
+                        load_job(elastic, graph)
+                    }
+                };
+                job.checkpoint_every(store.clone(), checkpoint_every);
+                recoveries.extend(job.recovery().cloned());
+                it = job.steps_run();
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(finish(job, elastic, n, iterations, total, wall, history, migrations, checkpoints, recoveries))
+}
+
+fn load_job(elastic: &ElasticCluster, graph: &Graph) -> IterativeJob<u32, PrState> {
+    let n = graph.vertices;
+    IterativeJob::load(
+        elastic,
+        0x5047_524B, // "PGRK"
+        (0..n as u32).map(|u| (u, (graph.edges[u as usize].clone(), 1.0 / n as f64))),
+    )
+}
+
+/// One PageRank wave; returns the new global score sum (the normalizer),
+/// folded by the step's f64 measure monoid on the allreduce.
+fn step_once(
+    job: &mut IterativeJob<u32, PrState>,
+    elastic: &mut ElasticCluster,
+    base: f64,
+    damping: f64,
+    total: f64,
+) -> Result<f64> {
+    let t = total;
+    let out = job.step(
+        elastic,
+        move |_u: &u32, state: &PrState, emit: &mut dyn FnMut(u32, f64)| {
+            let (out, score) = state;
+            if !out.is_empty() {
+                let share = (*score / t) / out.len() as f64;
+                for &v in out {
+                    emit(v, share);
+                }
+            }
+        },
+        |acc: &mut f64, v: f64| *acc += v,
+        move |_u: &u32, state: &mut PrState, delta: Option<f64>| {
+            state.1 = base + damping * delta.unwrap_or(0.0);
+        },
+        |_u: &u32, state: &PrState| state.1,
+    )?;
+    Ok(out.aggregate)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    job: IterativeJob<u32, PrState>,
+    elastic: &ElasticCluster,
+    n: usize,
+    iterations: usize,
+    total: f64,
+    wall: std::time::Instant,
+    mut history: Vec<IterationStats>,
+    mut migrations: Vec<MigrationStats>,
+    mut checkpoints: Vec<CheckpointStats>,
+    recoveries: Vec<RecoveryStats>,
+) -> DistPageRankResult {
     let mut ranks = vec![0.0f64; n];
     job.for_each_state(|&u, state| ranks[u as usize] = state.1 / total);
     let mut stats = job.job_stats();
+    // Waves, migrations, checkpoints and recoveries performed by jobs
+    // that died mid-session still cost modeled time; fold the banked
+    // records back in (the surviving job's own are already counted).
+    stats.modeled_ms += history.iter().map(|s| s.modeled_ms).sum::<f64>()
+        + migrations.iter().map(|m| m.modeled_ms).sum::<f64>()
+        + checkpoints.iter().map(|c| c.modeled_ms).sum::<f64>()
+        + recoveries.iter().map(|r| r.modeled_ms).sum::<f64>()
+        - job.recovery().map_or(0.0, |r| r.modeled_ms);
+    stats.compute_ms += history.iter().map(|s| s.compute_ms).sum::<f64>();
+    stats.net_ms += history.iter().map(|s| s.net_ms).sum::<f64>();
+    stats.shuffle_bytes += history.iter().map(|s| s.shuffled_bytes).sum::<u64>();
+    stats.messages += history.iter().map(|s| s.messages).sum::<u64>()
+        + migrations.iter().map(|m| m.messages).sum::<u64>();
+    stats.remote_messages += history.iter().map(|s| s.remote_messages).sum::<u64>();
+    stats.remote_bytes += history.iter().map(|s| s.remote_bytes).sum::<u64>();
+    stats.migrated_bytes += migrations.iter().map(|m| m.moved_bytes).sum::<u64>();
+    history.extend(job.per_iteration().iter().cloned());
+    migrations.extend(job.migrations().iter().cloned());
+    checkpoints.extend(job.checkpoints().iter().cloned());
     stats.startup_ms = elastic.config().deployment.profile().startup_ms as f64;
     stats.host_wall_ms = wall.elapsed().as_secs_f64() * 1e3;
-    Ok(DistPageRankResult {
+    DistPageRankResult {
         ranks,
         iterations,
         stats,
-        per_iteration: job.per_iteration().to_vec(),
-        migrations: job.migrations().to_vec(),
-    })
+        per_iteration: history,
+        migrations,
+        checkpoints,
+        recoveries,
+    }
 }
 
 /// Serial reference for tests.

@@ -51,10 +51,14 @@ pub enum FigureId {
     /// `ElasticCluster` grow whose shard-migration bytes are plotted as
     /// their own series.
     IterativeAblation,
+    /// E13 — fault ablation: checkpoint overhead per cadence `k`, and
+    /// recover-from-checkpoint vs re-run-from-scratch modeled time as a
+    /// function of where in the run the kill lands.
+    FaultAblation,
 }
 
 impl FigureId {
-    pub const ALL: [FigureId; 12] = [
+    pub const ALL: [FigureId; 13] = [
         FigureId::Fig8,
         FigureId::Fig9,
         FigureId::Fig10,
@@ -67,6 +71,7 @@ impl FigureId {
         FigureId::SpillCrossover,
         FigureId::TreeAblation,
         FigureId::IterativeAblation,
+        FigureId::FaultAblation,
     ];
 
     pub fn parse(s: &str) -> Option<FigureId> {
@@ -83,6 +88,7 @@ impl FigureId {
             "spill-crossover" | "e10" => FigureId::SpillCrossover,
             "tree-ablation" | "e11" => FigureId::TreeAblation,
             "iterative-ablation" | "e12" => FigureId::IterativeAblation,
+            "fault-ablation" | "e13" => FigureId::FaultAblation,
             _ => return None,
         })
     }
@@ -101,6 +107,7 @@ impl FigureId {
             FigureId::SpillCrossover => "spill-crossover",
             FigureId::TreeAblation => "tree-ablation",
             FigureId::IterativeAblation => "iterative-ablation",
+            FigureId::FaultAblation => "fault-ablation",
         }
     }
 }
@@ -131,6 +138,7 @@ pub fn run_figure(id: FigureId, quick: bool) -> Result<Report> {
         FigureId::SpillCrossover => spill_crossover(quick),
         FigureId::TreeAblation => tree_ablation(quick),
         FigureId::IterativeAblation => iterative_ablation(quick),
+        FigureId::FaultAblation => fault_ablation(quick),
     }
 }
 
@@ -632,6 +640,91 @@ fn iterative_ablation(quick: bool) -> Result<Report> {
     Ok(report)
 }
 
+/// E13 — the fault ablation (ISSUE 6 tentpole). Part 1: what
+/// checkpointing *costs* — the same connected-components session run at
+/// cadence k ∈ {1, 2, 4, 8}, plotting total snapshot bytes and modeled
+/// checkpoint-write time per cadence (both shrink as k grows). Part 2:
+/// what checkpointing *buys* — a kill swept across the run, comparing
+/// the checkpointed session's total modeled time (prefix + snapshot
+/// writes + recovery read + suffix) against the rerun-from-scratch
+/// strategy (the wasted prefix plus a full uninterrupted run). Early
+/// kills favour rerun (little work lost, and the checkpointed session
+/// still pays its snapshot overhead); kills past the midpoint must
+/// favour recovery — that crossover is the figure's pinned claim.
+fn fault_ablation(quick: bool) -> Result<Report> {
+    use crate::apps::components;
+    use crate::cluster::{ElasticCluster, FaultPlan, WavePhase};
+
+    let (chains, len) = if quick { (4, 12) } else { (8, 40) };
+    let g = components::chain_graph(chains, len);
+    let cap = len + 4; // flood needs ~len waves to settle
+    let cluster = |seed| {
+        ClusterConfig::builder()
+            .deployment(DeploymentKind::Vm)
+            .nodes(4)
+            .slots_per_node(1)
+            .seed(seed)
+            .build()
+    };
+
+    let mut report = Report::new(
+        "E13 — fault ablation: checkpoint overhead per cadence; recovery vs rerun-from-scratch",
+    );
+
+    // Part 1: overhead vs cadence (no kill — the plan stays empty).
+    let mut ck_bytes = Series::new("checkpoint KiB", "cadence k", "KiB");
+    let mut ck_ms = Series::new("checkpoint write ms (modeled)", "cadence k", "ms");
+    for k in [1usize, 2, 4, 8] {
+        let mut elastic = ElasticCluster::new(cluster(51));
+        let r = components::run_dist_faulty(&mut elastic, &g, cap, k, 0)?;
+        anyhow::ensure!(r.converged && r.recoveries.is_empty());
+        let bytes: u64 = r.checkpoints.iter().map(|c| c.bytes).sum();
+        let ms: f64 = r.checkpoints.iter().map(|c| c.modeled_ms).sum();
+        ck_bytes.push(k as f64, bytes as f64 / 1024.0);
+        ck_ms.push(k as f64, ms);
+        if k == 1 {
+            report.note(format!(
+                "cadence 1: {} snapshots, {:.1} KiB, {:.3} ms modeled write time",
+                r.checkpoints.len(),
+                bytes as f64 / 1024.0,
+                ms
+            ));
+        }
+    }
+
+    // Part 2: recovery vs rerun across kill points. The baseline run is
+    // checkpoint-free — rerun-from-scratch pays no snapshot overhead.
+    let baseline = components::run_dist(&mut ElasticCluster::new(cluster(51)), &g, cap, &[])?;
+    anyhow::ensure!(baseline.converged);
+    let total = baseline.iterations;
+    let full_ms = baseline.stats.modeled_ms;
+    let mut recover = Series::new("recover from checkpoint", "kill iteration", "modeled_ms");
+    let mut rerun = Series::new("rerun from scratch", "kill iteration", "modeled_ms");
+    for frac in [1, 2, 4, 6, 7] {
+        let kill_at = (total * frac / 8).min(total - 1);
+        let mut elastic = ElasticCluster::new(cluster(51));
+        elastic.set_fault_plan(FaultPlan::new().with_kill(kill_at, WavePhase::Flush, 1));
+        let r = components::run_dist_faulty(&mut elastic, &g, cap, 1, 0)?;
+        anyhow::ensure!(r.converged && r.labels == baseline.labels);
+        anyhow::ensure!(!r.recoveries.is_empty(), "kill at {kill_at} must fire");
+        let wasted_prefix: f64 =
+            baseline.per_iteration[..kill_at].iter().map(|it| it.modeled_ms).sum();
+        recover.push(kill_at as f64, r.stats.modeled_ms);
+        rerun.push(kill_at as f64, wasted_prefix + full_ms);
+    }
+    let last = recover.points.len() - 1;
+    report.note(format!(
+        "kill at iteration {} of {}: recover {:.2} ms vs rerun {:.2} ms — checkpointing pays \
+         for itself once the wasted prefix outweighs snapshot + restore overhead",
+        recover.points[last].0, total, recover.points[last].1, rerun.points[last].1
+    ));
+    report.add(ck_bytes);
+    report.add(ck_ms);
+    report.add(recover);
+    report.add(rerun);
+    Ok(report)
+}
+
 /// E8 — §III deployment comparison: the same WordCount under the three
 /// proposed architectures (Figs 3-5) + Local reference.
 fn deployment(quick: bool) -> Result<Report> {
@@ -739,6 +832,40 @@ mod tests {
         assert_eq!(migrated.points.len(), 1);
         assert!(migrated.points[0].1 > 0.0, "migration must move bytes");
         assert_eq!(r.notes.len(), 2);
+    }
+
+    #[test]
+    fn fault_ablation_quick_recovery_beats_rerun_past_midpoint() {
+        let r = run_figure(FigureId::FaultAblation, true).unwrap();
+        assert_eq!(r.series.len(), 4, "2 overhead + 2 strategy series");
+        // Part 1: snapshot volume shrinks (weakly) as the cadence widens.
+        let bytes = &r.series[0];
+        for w in bytes.points.windows(2) {
+            assert!(
+                w[1].1 <= w[0].1,
+                "checkpoint KiB must not grow with k: {} -> {}",
+                w[0].1,
+                w[1].1
+            );
+        }
+        assert!(bytes.points[0].1 > 0.0, "cadence 1 must write snapshots");
+        // Part 2 — the pinned claim: for every kill past the midpoint,
+        // recovering from the checkpoint beats re-running from scratch.
+        let recover = &r.series[2];
+        let rerun = &r.series[3];
+        assert_eq!(recover.points.len(), rerun.points.len());
+        let total = recover.points.last().unwrap().0;
+        let mut past_midpoint = 0;
+        for ((kill, rec), (_, rr)) in recover.points.iter().zip(&rerun.points) {
+            if *kill * 2.0 > total {
+                past_midpoint += 1;
+                assert!(
+                    rec < rr,
+                    "kill at {kill}: recover {rec:.3} ms must beat rerun {rr:.3} ms"
+                );
+            }
+        }
+        assert!(past_midpoint >= 2, "sweep must sample past the midpoint");
     }
 
     #[test]

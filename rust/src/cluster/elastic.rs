@@ -8,9 +8,12 @@
 //! (`dist::balance`) onto the new shard count. This module owns that
 //! lifecycle and its audit log.
 
+use std::collections::HashSet;
+
 use crate::mpi::{RankPool, Topology, Universe};
 
 use super::config::ClusterConfig;
+use super::fault::{FaultPlan, RankKill};
 
 /// One membership change, for the audit log / tests.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -19,6 +22,10 @@ pub enum ElasticEvent {
     Grew { added: usize, nodes: usize },
     /// Nodes removed (count after).
     Shrank { removed: usize, nodes: usize },
+    /// A kill-and-replace: the warm pool was torn down (a rank died
+    /// mid-wave) and membership re-formed at `nodes` nodes. Not a
+    /// resize — [`ElasticCluster::resizes`] does not count it.
+    Replaced { nodes: usize },
 }
 
 /// A cluster whose node count can change between waves. Waves run on a
@@ -37,19 +44,37 @@ pub struct ElasticCluster {
     log: Vec<ElasticEvent>,
     /// Warm rank threads for the current membership; lazily (re)built.
     pool: Option<RankPool>,
+    /// Deterministic fault schedule for the session, if any.
+    fault_plan: Option<FaultPlan>,
+    /// Indices into `fault_plan.kills()` already consumed — a recovered
+    /// session replaying the kill iteration must not die again.
+    fired_kills: HashSet<usize>,
 }
 
 impl Clone for ElasticCluster {
-    /// Clones membership and audit log; the warm thread pool stays with
-    /// the original and the clone builds its own on first wave.
+    /// Clones membership, audit log and fault schedule (including which
+    /// kills already fired); the warm thread pool stays with the
+    /// original and the clone builds its own on first wave.
     fn clone(&self) -> Self {
-        Self { config: self.config.clone(), log: self.log.clone(), pool: None }
+        Self {
+            config: self.config.clone(),
+            log: self.log.clone(),
+            pool: None,
+            fault_plan: self.fault_plan.clone(),
+            fired_kills: self.fired_kills.clone(),
+        }
     }
 }
 
 impl ElasticCluster {
     pub fn new(config: ClusterConfig) -> Self {
-        Self { config, log: Vec::new(), pool: None }
+        Self {
+            config,
+            log: Vec::new(),
+            pool: None,
+            fault_plan: None,
+            fired_kills: HashSet::new(),
+        }
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -83,11 +108,68 @@ impl ElasticCluster {
         &self.log
     }
 
-    /// Resizes so far (the audit-log length) — the session-level twin of
-    /// the `BucketRouter` epoch: a live container whose router epoch
-    /// lags this count has a migration pending at the next wave.
+    /// Resizes so far (grows + shrinks; `Replaced` events do not count)
+    /// — the session-level twin of the `BucketRouter` epoch: a live
+    /// container whose router epoch lags this count has a migration
+    /// pending at the next wave.
     pub fn resizes(&self) -> usize {
-        self.log.len()
+        self.log
+            .iter()
+            .filter(|e| matches!(e, ElasticEvent::Grew { .. } | ElasticEvent::Shrank { .. }))
+            .count()
+    }
+
+    /// Attach a deterministic fault schedule (see [`FaultPlan`]). The
+    /// plan's kills are consumed exactly once each as waves arm them.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_plan = Some(plan);
+        self.fired_kills.clear();
+    }
+
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault_plan.as_ref()
+    }
+
+    /// Consume the first unfired kill scheduled for `iteration`, if any.
+    /// Called by the iterative wave loop *before* dispatching the wave,
+    /// so the kill is globally known and every rank can abort at the
+    /// same phase point (victim panics, survivors return early) instead
+    /// of wedging in a collective. A kill naming a rank `>= width` is
+    /// consumed but dropped — recovery onto a narrower cluster must not
+    /// leave a time bomb armed forever.
+    pub(crate) fn arm_kill(&mut self, iteration: usize, width: usize) -> Option<RankKill> {
+        let plan = self.fault_plan.as_ref()?;
+        let (idx, kill) = plan
+            .kills()
+            .iter()
+            .enumerate()
+            .find(|(i, k)| k.iteration == iteration && !self.fired_kills.contains(i))
+            .map(|(i, k)| (i, *k))?;
+        self.fired_kills.insert(idx);
+        (kill.rank < width).then_some(kill)
+    }
+
+    /// The recovery half of fault injection: tear down the warm pool
+    /// (the dead rank's thread pool is never reused — replacement ranks
+    /// are fresh threads), adjust membership by `node_delta`, and log a
+    /// [`ElasticEvent::Replaced`]. The caller then rebuilds its state
+    /// from a checkpoint (`core::IterativeJob::recover_from`); at least
+    /// one node always survives.
+    pub fn kill_and_replace(&mut self, node_delta: i64) -> anyhow::Result<()> {
+        if node_delta < 0 {
+            let d = node_delta.unsigned_abs() as usize;
+            anyhow::ensure!(
+                d < self.config.nodes,
+                "cannot replace {} nodes with a {d}-node deficit",
+                self.config.nodes
+            );
+            self.config.nodes -= d;
+        } else {
+            self.config.nodes += node_delta as usize;
+        }
+        self.pool = None;
+        self.log.push(ElasticEvent::Replaced { nodes: self.config.nodes });
+        Ok(())
     }
 
     /// The warm [`RankPool`] for the next wave. Reused verbatim while the
@@ -175,6 +257,44 @@ mod tests {
 
         c.shrink(2).unwrap();
         assert_eq!(c.pool_for_wave().size(), 2);
+    }
+
+    #[test]
+    fn kill_and_replace_rebuilds_pool_and_is_not_a_resize() {
+        let mut c = cluster(2); // 4 ranks
+        c.pool_for_wave().run(|comm| comm.barrier().unwrap());
+        assert_eq!(c.pool_for_wave().jobs_run(), 1);
+        c.kill_and_replace(1).unwrap();
+        assert_eq!(c.nodes(), 3);
+        assert_eq!(c.resizes(), 0, "Replaced is not a resize");
+        assert_eq!(c.events(), &[ElasticEvent::Replaced { nodes: 3 }]);
+        let pool = c.pool_for_wave();
+        assert_eq!(pool.jobs_run(), 0, "replacement ranks are fresh threads");
+        assert_eq!(pool.size(), 6);
+        // Same-width replacement still tears the pool down.
+        c.kill_and_replace(0).unwrap();
+        assert_eq!(c.pool_for_wave().jobs_run(), 0);
+        assert!(c.kill_and_replace(-3).is_err(), "at least one node survives");
+    }
+
+    #[test]
+    fn arm_kill_fires_each_scheduled_kill_exactly_once() {
+        use crate::cluster::{FaultPlan, WavePhase};
+        let mut c = cluster(2);
+        assert!(c.arm_kill(0, 4).is_none(), "no plan, no kills");
+        c.set_fault_plan(
+            FaultPlan::new()
+                .with_kill(2, WavePhase::Flush, 1)
+                .with_kill(5, WavePhase::Update, 9),
+        );
+        assert!(c.arm_kill(0, 4).is_none());
+        let k = c.arm_kill(2, 4).expect("scheduled kill fires");
+        assert_eq!((k.iteration, k.rank), (2, 1));
+        assert_eq!(k.phase, WavePhase::Flush);
+        assert!(c.arm_kill(2, 4).is_none(), "replay of the kill iteration must not re-fire");
+        // Kill naming rank 9 on a width-4 cluster: consumed, dropped.
+        assert!(c.arm_kill(5, 4).is_none());
+        assert!(c.arm_kill(5, 16).is_none(), "dropped kill stays consumed");
     }
 
     #[test]

@@ -8,12 +8,118 @@
 //! (task id), like Mariane — not by re-splitting input like Hadoop. The
 //! engine consults the tracker between waves; within a wave MPI semantics
 //! (crash = job abort) still hold, matching the paper's §VI honesty.
+//!
+//! [`FaultPlan`] is the deterministic fault-injection seam on top: a
+//! seeded schedule of rank kills pinned to `(iteration, wave phase)`
+//! points plus per-rank virtual-clock slowdowns. An
+//! [`super::ElasticCluster`] carries the plan; `core::IterativeJob`
+//! arms one kill per wave (consumed exactly once, so a post-recovery
+//! replay of the same iteration does *not* re-fire) and applies the
+//! slowdowns to the wave's modeled clock. Kills are globally known
+//! before the wave starts: the victim panics at the phase point while
+//! every survivor returns early *before entering any collective* —
+//! the only way to inject a mid-wave death without wedging peers in
+//! a recv (see `mpi/pool.rs` on the wedge hazard).
 
 use std::collections::HashMap;
 
 use std::sync::Mutex;
 
 use crate::mpi::Rank;
+
+/// Where inside a wave an injected kill fires (the phase points
+/// `core::IterativeJob::step` checks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WavePhase {
+    /// After the victim takes its shard, before any contribution is
+    /// emitted — the victim's in-memory state is genuinely lost.
+    Contribute,
+    /// After contributions are staged, before the delta shuffle.
+    Flush,
+    /// After deltas arrived, before update/allreduce.
+    Update,
+}
+
+/// One scheduled rank kill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankKill {
+    /// Iteration (0-based `steps_run()`) the kill fires at.
+    pub iteration: usize,
+    pub phase: WavePhase,
+    /// Victim rank; kills naming a rank outside the live width are
+    /// consumed but dropped.
+    pub rank: usize,
+}
+
+/// A deterministic fault schedule: seeded rank kills at
+/// `(iteration, phase)` points and per-rank virtual-clock slowdown
+/// factors. Pure data — threading it through the cluster costs nothing
+/// until a wave arms a kill.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    kills: Vec<RankKill>,
+    slowdowns: Vec<(usize, f64)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Derive a one-kill schedule from `seed`: kill point drawn
+    /// uniformly over `iterations × {Contribute, Flush, Update} × ranks`.
+    /// Same seed ⇒ same schedule, which is what lets the CI fault leg
+    /// pin `BLAZE_FAULT_SEED` and reproduce a failure exactly.
+    pub fn seeded(seed: u64, iterations: usize, ranks: usize) -> Self {
+        assert!(iterations > 0 && ranks > 0, "seeded plan needs a non-empty space");
+        let mut rng = crate::util::rng::Rng::with_stream(seed, 0xFA17);
+        let iteration = rng.below(iterations as u64) as usize;
+        let phase = match rng.below(3) {
+            0 => WavePhase::Contribute,
+            1 => WavePhase::Flush,
+            _ => WavePhase::Update,
+        };
+        let rank = rng.below(ranks as u64) as usize;
+        Self { seed, kills: vec![RankKill { iteration, phase, rank }], slowdowns: Vec::new() }
+    }
+
+    pub fn with_kill(mut self, iteration: usize, phase: WavePhase, rank: usize) -> Self {
+        self.kills.push(RankKill { iteration, phase, rank });
+        self
+    }
+
+    /// Slow `rank`'s modeled compute by `factor` (≥ 1.0) every wave —
+    /// the deterministic straggler that speculative re-execution chases.
+    pub fn with_slowdown(mut self, rank: usize, factor: f64) -> Self {
+        assert!(factor >= 1.0, "slowdown factor must be >= 1.0");
+        self.slowdowns.push((rank, factor));
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn kills(&self) -> &[RankKill] {
+        &self.kills
+    }
+
+    pub fn slowdowns(&self) -> &[(usize, f64)] {
+        &self.slowdowns
+    }
+
+    /// The `BLAZE_FAULT_SEED` env override (None when unset/unparsable):
+    /// the seed fault-injection tests feed [`FaultPlan::seeded`], so one
+    /// CI leg can sweep the whole suite under a pinned schedule.
+    pub fn env_seed() -> Option<u64> {
+        Self::resolve_env_seed(std::env::var("BLAZE_FAULT_SEED").ok().as_deref())
+    }
+
+    fn resolve_env_seed(env: Option<&str>) -> Option<u64> {
+        env.and_then(|s| s.trim().parse().ok())
+    }
+}
 
 /// Lifecycle of one task in the completion table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -272,5 +378,66 @@ mod tests {
             assert_eq!(pool.run(|c| c.allreduce_sum_u64(1).unwrap()), vec![3; 3]);
         }
         assert_eq!(pool.live_threads(), 3);
+    }
+
+    #[test]
+    fn rank_panic_is_contained_under_every_collective_algo() {
+        // PR 2's panic-recovery test above predates the Tree and
+        // Hierarchical collectives: their relay topology routes traffic
+        // *through* intermediate ranks, so containment has to hold for
+        // every shape, not just Star. A rank dies after the job's last
+        // collective completed (a genuinely mid-collective death would
+        // wedge peers in a recv — that hazard is exactly why injected
+        // kills are globally known, see the module docs) and the pool
+        // must keep serving full-width collectives afterwards.
+        use crate::cluster::ClusterConfig;
+        use crate::mpi::{CollectiveAlgo, RankPool};
+
+        for algo in CollectiveAlgo::ALL {
+            let mut cfg = ClusterConfig::builder().ranks(4).build();
+            cfg.collective_algo = Some(algo);
+            let pool = RankPool::from_config(&cfg);
+            assert_eq!(pool.collective_algo(), algo);
+            let err = pool
+                .try_run_on(4, |c| {
+                    let s = c.allreduce_sum_u64(c.rank().0 as u64).unwrap();
+                    if c.rank().0 == 2 {
+                        panic!("injected mid-job fault");
+                    }
+                    s
+                })
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("rank 2 panicked"), "{algo:?}: {err:#}");
+            for _ in 0..3 {
+                let got = pool.run(|c| c.allreduce_sum_u64(1).unwrap());
+                assert_eq!(got, vec![4; 4], "{algo:?}: pool must stay reusable");
+            }
+            assert_eq!(pool.live_threads(), 4, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_in_range() {
+        let a = FaultPlan::seeded(42, 10, 4);
+        assert_eq!(a, FaultPlan::seeded(42, 10, 4));
+        let k = a.kills()[0];
+        assert!(k.iteration < 10 && k.rank < 4);
+        // The schedule actually varies with the seed (space is 120
+        // points; 32 seeds must not collapse onto one).
+        let distinct: std::collections::HashSet<_> = (0..32u64)
+            .map(|s| {
+                let k = FaultPlan::seeded(s, 10, 4).kills()[0];
+                (k.iteration, k.rank, k.phase as u8)
+            })
+            .collect();
+        assert!(distinct.len() > 8, "only {} distinct schedules", distinct.len());
+    }
+
+    #[test]
+    fn env_seed_parses_and_ignores_garbage() {
+        assert_eq!(FaultPlan::resolve_env_seed(None), None);
+        assert_eq!(FaultPlan::resolve_env_seed(Some("1332")), Some(1332));
+        assert_eq!(FaultPlan::resolve_env_seed(Some(" 7 ")), Some(7));
+        assert_eq!(FaultPlan::resolve_env_seed(Some("nope")), None);
     }
 }

@@ -18,6 +18,6 @@ mod node;
 pub use config::{ClusterConfig, ClusterConfigBuilder};
 pub use deployment::{DeploymentKind, DeploymentProfile};
 pub use elastic::{ElasticCluster, ElasticEvent};
-pub use fault::{FaultTracker, TaskAttempt, TaskState};
+pub use fault::{FaultPlan, FaultTracker, RankKill, TaskAttempt, TaskState, WavePhase};
 pub use network::NetworkModel;
 pub use node::NodeSpec;

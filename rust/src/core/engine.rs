@@ -17,7 +17,7 @@ use super::classic::classic_rank;
 use super::delayed::delayed_rank;
 use super::eager::eager_rank;
 use super::job::{JobConfig, JobResult, JobStats, ReductionMode};
-use super::scheduler::{FaultPlan, TaskFeed};
+use super::scheduler::{TaskFault, TaskFeed};
 
 /// A configured MapReduce job over a borrowed input slice.
 ///
@@ -41,7 +41,7 @@ pub struct MapReduceJob<'i, I> {
     cluster: ClusterConfig,
     config: JobConfig,
     input: &'i [I],
-    fault: Option<FaultPlan>,
+    fault: Option<TaskFault>,
     pool: Option<&'i RankPool>,
 }
 
@@ -71,8 +71,8 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         self
     }
 
-    /// Inject a failure (Dynamic scheduling only): see [`FaultPlan`].
-    pub fn with_fault(mut self, fault: FaultPlan) -> Self {
+    /// Inject a failure (Dynamic scheduling only): see [`TaskFault`].
+    pub fn with_fault(mut self, fault: TaskFault) -> Self {
         self.fault = Some(fault);
         self
     }
@@ -322,7 +322,7 @@ mod tests {
             .run_eager(wc_map, |a, b| *a += b)
             .unwrap();
         let faulty = MapReduceJob::new(&cluster, &input)
-            .with_fault(FaultPlan { rank: Rank(2), after_tasks: 1 })
+            .with_fault(TaskFault { rank: Rank(2), after_tasks: 1 })
             .run_eager(wc_map, |a, b| *a += b)
             .unwrap();
         assert_eq!(healthy.result, faulty.result);

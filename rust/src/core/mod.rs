@@ -29,6 +29,7 @@ pub mod eager;
 pub mod engine;
 pub mod iterative;
 pub mod job;
+pub mod monoid;
 pub mod partitioner;
 pub mod scheduler;
 pub mod shuffle;
@@ -36,8 +37,12 @@ pub mod shuffle;
 pub use context::Emitter;
 pub use delayed::DelayedOutput;
 pub use engine::MapReduceJob;
-pub use iterative::{apply_resizes, IterationStats, IterativeJob, MigrationStats};
+pub use iterative::{
+    apply_resizes, IterationStats, IterativeJob, MigrationStats, RecoveryStats, SpeculationStats,
+    StepOutcome, WaveKilled,
+};
 pub use job::{JobConfig, JobResult, JobStats, ReductionMode, Scheduling};
+pub use monoid::Monoid;
 pub use partitioner::RangePartitioner;
-pub use scheduler::{FaultPlan, TaskFeed};
+pub use scheduler::{TaskFault, TaskFeed};
 pub use shuffle::shuffle_runs;

@@ -1,0 +1,73 @@
+//! `Monoid` — the typed aggregate for [`super::IterativeJob::step`]'s
+//! per-wave `measure` fold.
+//!
+//! The first cut of the iterative engine allreduced an ad-hoc `f64`
+//! sum, which forced integer apps (label propagation's changed-count)
+//! through float identity checks like `aggregate == 0.0`. A monoid
+//! bound names the contract the allreduce already relied on — an
+//! associative `combine` with an `identity` — and lets each app pick
+//! the carrier: `u64` for exact counters, `f64` for normalizers. The
+//! wave fold is still deterministic (gather-to-root in rank order, one
+//! broadcast), so checkpoint/recover tests can assert aggregate
+//! *continuity* across a recovery with plain `==` on integer carriers.
+
+use crate::serial::FastSerialize;
+
+/// An associative combine with an identity element. `combine` must be
+/// associative; the iterative wave additionally folds in a fixed
+/// (rank-major) order, so commutativity is *not* required for
+/// reproducibility — but floating-point carriers still re-associate
+/// across different widths (the usual ulp caveat).
+pub trait Monoid: FastSerialize + Send {
+    fn identity() -> Self;
+    fn combine(a: Self, b: Self) -> Self;
+}
+
+macro_rules! sum_monoid {
+    ($($t:ty => $zero:expr),* $(,)?) => {
+        $(impl Monoid for $t {
+            fn identity() -> Self {
+                $zero
+            }
+            fn combine(a: Self, b: Self) -> Self {
+                a + b
+            }
+        })*
+    };
+}
+
+sum_monoid!(u32 => 0, u64 => 0, i64 => 0, f64 => 0.0);
+
+impl Monoid for () {
+    fn identity() -> Self {}
+    fn combine(_: Self, _: Self) -> Self {}
+}
+
+impl<A: Monoid, B: Monoid> Monoid for (A, B) {
+    fn identity() -> Self {
+        (A::identity(), B::identity())
+    }
+    fn combine(a: Self, b: Self) -> Self {
+        (A::combine(a.0, b.0), B::combine(a.1, b.1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_sum_is_exact_and_identity_neutral() {
+        assert_eq!(u64::combine(u64::identity(), 7), 7);
+        assert_eq!(u64::combine(3, 4), 7);
+        assert_eq!(i64::combine(-3, 4), 1);
+    }
+
+    #[test]
+    fn pair_monoid_combines_componentwise() {
+        let a: (u64, f64) = (2, 0.5);
+        let b: (u64, f64) = (3, 0.25);
+        assert_eq!(<(u64, f64)>::combine(a, b), (5, 0.75));
+        assert_eq!(<(u64, f64)>::identity(), (0, 0.0));
+    }
+}

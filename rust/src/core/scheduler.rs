@@ -14,9 +14,11 @@ use crate::mpi::Rank;
 
 use super::job::Scheduling;
 
-/// Inject one failure: `rank` dies after completing `after_tasks` tasks.
+/// Inject one task-level failure: `rank` stops claiming after completing
+/// `after_tasks` tasks and its work is reassigned. (The wave-level
+/// schedule of rank kills and slowdowns is [`crate::cluster::FaultPlan`].)
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct FaultPlan {
+pub struct TaskFault {
     pub rank: Rank,
     pub after_tasks: usize,
 }
@@ -28,7 +30,7 @@ pub struct TaskFeed<'a, I> {
     scheduling: Scheduling,
     ranks: usize,
     tracker: FaultTracker,
-    fault: Option<FaultPlan>,
+    fault: Option<TaskFault>,
 }
 
 impl<'a, I> TaskFeed<'a, I> {
@@ -37,7 +39,7 @@ impl<'a, I> TaskFeed<'a, I> {
         ranks: usize,
         tasks_per_rank: usize,
         scheduling: Scheduling,
-        fault: Option<FaultPlan>,
+        fault: Option<TaskFault>,
     ) -> Self {
         let num_tasks = (ranks * tasks_per_rank.max(1)).max(1);
         let ranges = split_ranges(input.len(), num_tasks);
@@ -186,7 +188,7 @@ mod tests {
             2,
             4, // 8 tasks
             Scheduling::Dynamic,
-            Some(FaultPlan { rank: Rank(1), after_tasks: 1 }),
+            Some(TaskFault { rank: Rank(1), after_tasks: 1 }),
         );
         // Rank 1 claims one task, completes it, then dies.
         let mut r1 = feed.for_rank(Rank(1));

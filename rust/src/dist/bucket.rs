@@ -76,8 +76,29 @@ impl BucketRouter {
         Self { salt, assign: (0..buckets).map(|b| b % ranks).collect(), ranks, epoch: 0 }
     }
 
+    /// Reconstruct a router from persisted placement — the checkpoint
+    /// restore path ([`crate::store::CheckpointStore`]): the saved
+    /// `assign` table, salt, width and epoch come back verbatim, so a
+    /// same-width recovery places every key exactly where the
+    /// checkpointed session had it. A different-width recovery then
+    /// rides the ordinary [`BucketRouter::resize`].
+    pub fn restore(salt: u64, assign: Vec<usize>, ranks: usize, epoch: u64) -> Self {
+        assert!(ranks > 0, "router needs at least one rank");
+        assert!(!assign.is_empty(), "router needs at least one bucket");
+        assert!(
+            assign.iter().all(|&r| r < ranks),
+            "assign table names a rank outside 0..{ranks}"
+        );
+        Self { salt, assign, ranks, epoch }
+    }
+
     pub fn salt(&self) -> u64 {
         self.salt
+    }
+
+    /// The live `bucket → rank` table (what a checkpoint persists).
+    pub fn assignments(&self) -> &[usize] {
+        &self.assign
     }
 
     pub fn buckets(&self) -> usize {
@@ -282,6 +303,27 @@ mod tests {
         };
         assert_eq!(build(), build());
         assert_eq!(build().epoch(), 2);
+    }
+
+    #[test]
+    fn restore_round_trips_placement_salt_and_epoch() {
+        let keys: Vec<u64> = (0..1_000).collect();
+        let mut r = BucketRouter::new(4, 13);
+        let loads = loads_for(&r, &keys);
+        r.resize(6, &loads);
+        let back =
+            BucketRouter::restore(r.salt(), r.assignments().to_vec(), r.ranks(), r.epoch());
+        assert_eq!(back, r, "restore must reproduce the router verbatim");
+        for k in &keys {
+            assert_eq!(back.route(k), r.route(k));
+        }
+        assert_eq!(back.epoch(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn restore_rejects_out_of_range_assignment() {
+        let _ = BucketRouter::restore(0, vec![0, 5], 2, 0);
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Checkpoints for iterative sessions, stored as sorted runs: the PR 3
+//! block format *is* the checkpoint format.
+//!
+//! A [`CheckpointStore`] persists one snapshot of an iterative job's
+//! shards — one key-ordered run per non-empty **bucket** (the
+//! [`crate::dist::BucketRouter`] grain), written through the ordinary
+//! [`RunWriter`] with a zero byte budget so every bucket chunk spills
+//! immediately as its own on-disk run, in push order. Alongside the
+//! runs it keeps the placement needed to rebuild the router verbatim
+//! (salt, `bucket → rank` table, width, epoch), the iteration count,
+//! and the last allreduced aggregate (opaque encoded bytes, so the
+//! store stays untyped over the job's `Monoid`).
+//!
+//! Restoring is **non-consuming**: each [`CheckpointStore::restore`]
+//! opens fresh positional [`RunReader`]s over the shared spill file, so
+//! recovery can be attempted repeatedly (or onto several widths — the
+//! different-width case rides `BucketRouter::resize`, bucket loads
+//! coming straight from the per-run item counts). Only the latest
+//! checkpoint is retained; writing a new one unlinks the previous spill.
+//!
+//! Checkpoint I/O is modeled like the rest of the virtual-clock world:
+//! [`CHECKPOINT_DISK_NS_PER_BYTE`] per byte, sequential.
+
+use std::marker::PhantomData;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::metrics::PeakTracker;
+use crate::serial::{from_bytes, FastSerialize};
+
+use super::run::{RunReader, RunSpan, RunWriter, SharedSpill};
+
+/// Modeled sequential disk throughput for checkpoint write/read:
+/// 1 ns/byte ≈ 1 GB/s.
+pub const CHECKPOINT_DISK_NS_PER_BYTE: f64 = 1.0;
+
+/// Everything needed to rebuild the session router and resume position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointMeta {
+    /// Iterations completed when the snapshot was taken.
+    pub iteration: usize,
+    /// Router salt (already folded with the cluster seed).
+    pub salt: u64,
+    /// Router epoch at snapshot time.
+    pub epoch: u64,
+    /// Width the snapshot was sharded over.
+    pub ranks: usize,
+    /// The `bucket → rank` table, verbatim.
+    pub assign: Vec<usize>,
+}
+
+/// What one checkpoint write cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointStats {
+    /// Iterations completed when the snapshot was taken.
+    pub iteration: usize,
+    pub epoch: u64,
+    /// Non-empty bucket runs written.
+    pub runs: usize,
+    /// Pairs across all runs.
+    pub items: u64,
+    /// Bytes on disk.
+    pub bytes: u64,
+    /// Modeled write time ([`CHECKPOINT_DISK_NS_PER_BYTE`], sequential).
+    pub modeled_ms: f64,
+}
+
+/// A restored snapshot: meta + per-bucket sorted pairs, ready to place.
+pub struct RestoredCheckpoint<K, V> {
+    pub meta: CheckpointMeta,
+    /// `(bucket, key-ordered pairs)` for every non-empty bucket.
+    pub buckets: Vec<(usize, Vec<(K, V)>)>,
+    /// Encoded aggregate as of `meta.iteration` (empty when none saved).
+    pub aggregate: Vec<u8>,
+    /// Bytes read back.
+    pub bytes: u64,
+    /// Modeled read time.
+    pub modeled_ms: f64,
+}
+
+struct Saved<K, V> {
+    meta: CheckpointMeta,
+    /// Bucket id per span, parallel to `spans` (push order == span order
+    /// because the zero-budget writer spills each chunk immediately).
+    buckets: Vec<usize>,
+    spans: Vec<RunSpan>,
+    spill: Option<SharedSpill>,
+    aggregate: Vec<u8>,
+    bytes: u64,
+    _phantom: PhantomData<fn() -> (K, V)>,
+}
+
+struct Inner<K, V> {
+    written: u64,
+    bytes_total: u64,
+    latest: Option<Saved<K, V>>,
+}
+
+/// Shareable handle to the latest checkpoint of one iterative session
+/// (cheap to clone: the driver and the job hold the same store).
+pub struct CheckpointStore<K, V> {
+    inner: Arc<Mutex<Inner<K, V>>>,
+}
+
+impl<K, V> Clone for CheckpointStore<K, V> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<K, V> Default for CheckpointStore<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K, V> CheckpointStore<K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    pub fn new() -> Self {
+        Self { inner: Arc::new(Mutex::new(Inner { written: 0, bytes_total: 0, latest: None })) }
+    }
+
+    /// Persist one snapshot, replacing any previous one (the old spill
+    /// file is unlinked on drop). `bucket_chunks` must be key-ordered
+    /// within each bucket; empty buckets are skipped.
+    pub fn write(
+        &self,
+        meta: CheckpointMeta,
+        bucket_chunks: Vec<(usize, Vec<(K, V)>)>,
+        aggregate: Vec<u8>,
+    ) -> Result<CheckpointStats> {
+        // Budget 0: every pushed chunk overflows immediately and spills
+        // as its own disk run, so span order is exactly push order and
+        // `buckets[i]` tags `spans[i]`.
+        let mut writer: RunWriter<'_, K, V> = RunWriter::new(0, PeakTracker::new());
+        let mut buckets = Vec::new();
+        let mut items = 0u64;
+        for (b, chunk) in bucket_chunks {
+            if chunk.is_empty() {
+                continue;
+            }
+            items += chunk.len() as u64;
+            buckets.push(b);
+            writer.push_sorted_run(chunk)?;
+        }
+        let set = writer.finish()?;
+        let bytes = set.spilled_bytes();
+        let (mem_runs, _charge, spill, spans, _tracker) = set.into_parts();
+        debug_assert!(mem_runs.is_empty(), "zero-budget writer must spill everything");
+        debug_assert_eq!(spans.len(), buckets.len(), "one span per non-empty bucket");
+        let stats = CheckpointStats {
+            iteration: meta.iteration,
+            epoch: meta.epoch,
+            runs: spans.len(),
+            items,
+            bytes,
+            modeled_ms: bytes as f64 * CHECKPOINT_DISK_NS_PER_BYTE / 1e6,
+        };
+        let mut g = self.inner.lock().expect("checkpoint lock");
+        g.written += 1;
+        g.bytes_total += bytes;
+        g.latest =
+            Some(Saved { meta, buckets, spans, spill, aggregate, bytes, _phantom: PhantomData });
+        Ok(stats)
+    }
+
+    /// Read the latest snapshot back (non-consuming — fresh positional
+    /// readers per call). `Ok(None)` when nothing has been written yet.
+    /// Transient read-block memory charges `tracker`.
+    pub fn restore(&self, tracker: &Arc<PeakTracker>) -> Result<Option<RestoredCheckpoint<K, V>>> {
+        let g = self.inner.lock().expect("checkpoint lock");
+        let Some(saved) = g.latest.as_ref() else {
+            return Ok(None);
+        };
+        let mut buckets = Vec::with_capacity(saved.spans.len());
+        for (&b, span) in saved.buckets.iter().zip(&saved.spans) {
+            let file = saved
+                .spill
+                .as_ref()
+                .expect("non-empty checkpoint has a spill file")
+                .reader
+                .clone();
+            let mut reader: RunReader<K, V> =
+                RunReader::new(file, span.start, span.end, tracker.clone());
+            let mut pairs = Vec::with_capacity(span.items as usize);
+            while let Some(pair) = reader.next()? {
+                pairs.push(pair);
+            }
+            buckets.push((b, pairs));
+        }
+        Ok(Some(RestoredCheckpoint {
+            meta: saved.meta.clone(),
+            buckets,
+            aggregate: saved.aggregate.clone(),
+            bytes: saved.bytes,
+            modeled_ms: saved.bytes as f64 * CHECKPOINT_DISK_NS_PER_BYTE / 1e6,
+        }))
+    }
+
+    /// Iteration count of the latest snapshot, if any.
+    pub fn latest_iteration(&self) -> Option<usize> {
+        self.inner.lock().expect("checkpoint lock").latest.as_ref().map(|s| s.meta.iteration)
+    }
+
+    /// Router epoch of the latest snapshot, if any.
+    pub fn epoch(&self) -> Option<u64> {
+        self.inner.lock().expect("checkpoint lock").latest.as_ref().map(|s| s.meta.epoch)
+    }
+
+    /// Decode the aggregate saved with the latest snapshot. `Ok(None)`
+    /// when there is no snapshot or it carried no aggregate.
+    pub fn latest_aggregate<M: FastSerialize>(&self) -> Result<Option<M>> {
+        let g = self.inner.lock().expect("checkpoint lock");
+        match g.latest.as_ref() {
+            Some(s) if !s.aggregate.is_empty() => Ok(Some(from_bytes(&s.aggregate)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Snapshots written over the store's lifetime.
+    pub fn checkpoints_written(&self) -> u64 {
+        self.inner.lock().expect("checkpoint lock").written
+    }
+
+    /// Total bytes written over the store's lifetime (all snapshots,
+    /// including replaced ones).
+    pub fn bytes_written(&self) -> u64 {
+        self.inner.lock().expect("checkpoint lock").bytes_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serial::to_bytes;
+
+    fn meta(iteration: usize, epoch: u64, ranks: usize) -> CheckpointMeta {
+        CheckpointMeta {
+            iteration,
+            salt: 0xC0FFEE,
+            epoch,
+            ranks,
+            assign: (0..8).map(|b| b % ranks).collect(),
+        }
+    }
+
+    #[test]
+    fn write_restore_round_trips_buckets_in_order() {
+        let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+        let chunks = vec![
+            (3, vec![(1u32, 10u64), (5, 50)]),
+            (0, vec![(2, 20)]),
+            (6, Vec::new()), // empty bucket skipped
+            (7, vec![(4, 40), (9, 90), (11, 110)]),
+        ];
+        let stats = store.write(meta(5, 2, 4), chunks, Vec::new()).unwrap();
+        assert_eq!(stats.runs, 3);
+        assert_eq!(stats.items, 6);
+        assert!(stats.bytes > 0);
+        assert!(stats.modeled_ms > 0.0);
+
+        let got = store.restore(&PeakTracker::new()).unwrap().expect("snapshot present");
+        assert_eq!(got.meta, meta(5, 2, 4));
+        assert_eq!(got.bytes, stats.bytes);
+        assert_eq!(
+            got.buckets,
+            vec![
+                (3, vec![(1u32, 10u64), (5, 50)]),
+                (0, vec![(2, 20)]),
+                (7, vec![(4, 40), (9, 90), (11, 110)]),
+            ],
+            "span order must be push order (zero-budget spill)"
+        );
+    }
+
+    #[test]
+    fn restore_is_repeatable_and_empty_store_is_none() {
+        let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+        let tracker = PeakTracker::new();
+        assert!(store.restore(&tracker).unwrap().is_none());
+        assert_eq!(store.latest_iteration(), None);
+        store.write(meta(1, 0, 2), vec![(0, vec![(7u32, 7u64)])], Vec::new()).unwrap();
+        let a = store.restore(&tracker).unwrap().unwrap();
+        let b = store.restore(&tracker).unwrap().unwrap();
+        assert_eq!(a.buckets, b.buckets, "restore must not consume the snapshot");
+    }
+
+    #[test]
+    fn only_latest_snapshot_is_kept_and_aggregate_round_trips() {
+        let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+        store
+            .write(meta(1, 0, 2), vec![(0, vec![(1u32, 1u64)])], to_bytes(&0.25f64))
+            .unwrap();
+        store
+            .write(meta(4, 1, 2), vec![(1, vec![(2u32, 2u64)])], to_bytes(&0.5f64))
+            .unwrap();
+        assert_eq!(store.checkpoints_written(), 2);
+        assert_eq!(store.latest_iteration(), Some(4));
+        assert_eq!(store.epoch(), Some(1));
+        assert_eq!(store.latest_aggregate::<f64>().unwrap(), Some(0.5));
+        let got = store.restore(&PeakTracker::new()).unwrap().unwrap();
+        assert_eq!(got.buckets, vec![(1, vec![(2u32, 2u64)])]);
+        assert!(store.bytes_written() >= got.bytes);
+    }
+}

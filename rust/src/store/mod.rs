@@ -38,11 +38,22 @@
 //! for already key-ordered chunks (the shuffle's receiver-side
 //! restage): each chunk becomes its own run, in memory until the
 //! budget overflows and on disk after, with no re-sort either way.
+//!
+//! [`CheckpointStore`] reuses the very same block format as the
+//! iterative engine's checkpoint/restore medium: one run per non-empty
+//! [`crate::dist::BucketRouter`] bucket, tagged with the router epoch
+//! and placement table, so recovery is an elastic resize read straight
+//! off disk (see `core::IterativeJob::recover_from`).
 
+mod checkpoint;
 mod group;
 mod merge;
 mod run;
 
+pub use checkpoint::{
+    CheckpointMeta, CheckpointStats, CheckpointStore, RestoredCheckpoint,
+    CHECKPOINT_DISK_NS_PER_BYTE,
+};
 pub use group::GroupStream;
 pub use merge::{KWayMerge, RunCursor};
 pub use run::{block_cap, RunReader, RunSet, RunSpan, RunWriter, PAIR_OVERHEAD};

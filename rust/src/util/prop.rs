@@ -1,8 +1,10 @@
 //! Mini property-test runner (replaces proptest): seeded generators +
 //! a `for_all` driver that reports the failing seed for reproduction.
 //!
-//! No shrinking — cases are generated small-biased instead (sizes drawn
-//! log-uniform), which keeps counterexamples readable in practice.
+//! `for_all` does no shrinking — cases are generated small-biased
+//! instead (sizes drawn log-uniform), which keeps counterexamples
+//! readable in practice. [`for_all_shrink`] adds greedy shrinking for
+//! properties whose inputs have a natural candidate-set reducer.
 
 use super::rng::Rng;
 
@@ -29,6 +31,46 @@ pub fn for_all<T: std::fmt::Debug>(
                 "property {name:?} failed on case {case} (seed stream {case}):\n{input:#?}"
             );
         }
+    }
+}
+
+/// [`for_all`] plus greedy shrink-on-failure: when a case fails,
+/// `shrink(&input)` proposes smaller candidates; the first candidate
+/// that *still fails* replaces the input, repeatedly, until no candidate
+/// fails (a local minimum) or the step bound runs out. Panics with the
+/// minimized counterexample and the originating seed stream.
+pub fn for_all_shrink<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let cases = default_cases();
+    for case in 0..cases as u64 {
+        let mut rng = Rng::with_stream(0xB1A2_E000 ^ case, case);
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        let mut minimal = input;
+        let mut steps = 0;
+        'outer: while steps < 200 {
+            for candidate in shrink(&minimal) {
+                steps += 1;
+                if !prop(&candidate) {
+                    minimal = candidate;
+                    continue 'outer;
+                }
+                if steps >= 200 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property {name:?} failed on case {case} (seed stream {case}); \
+             shrunk over {steps} candidate(s) to:\n{minimal:#?}"
+        );
     }
 }
 
@@ -75,6 +117,47 @@ mod tests {
     #[should_panic(expected = "property \"always-false\" failed")]
     fn failing_property_reports_seed() {
         for_all("always-false", |r| r.next_u32(), |_| false);
+    }
+
+    #[test]
+    fn shrinking_reaches_the_minimal_counterexample() {
+        // Property: "no vec contains a 7". Shrinker drops one element at
+        // a time; the minimum failing case is exactly [7].
+        let err = std::panic::catch_unwind(|| {
+            for_all_shrink(
+                "no-sevens",
+                |r| {
+                    let mut v = vec_of(r, 20, |r| r.below(6) as u32);
+                    v.push(7); // every case fails
+                    r.shuffle(&mut v);
+                    v
+                },
+                |v: &Vec<u32>| {
+                    (0..v.len())
+                        .map(|i| {
+                            let mut w = v.clone();
+                            w.remove(i);
+                            w
+                        })
+                        .collect()
+                },
+                |v| !v.contains(&7),
+            );
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("panic payload");
+        assert!(msg.contains("no-sevens"), "{msg}");
+        assert!(msg.contains("[\n    7,\n]"), "not shrunk to [7]: {msg}");
+    }
+
+    #[test]
+    fn shrinking_passes_through_when_property_holds() {
+        for_all_shrink(
+            "sum-commutes",
+            |r| (r.below(1000), r.below(1000)),
+            |_| Vec::new(),
+            |&(a, b)| a + b == b + a,
+        );
     }
 
     #[test]

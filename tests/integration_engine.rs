@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use blaze_rs::apps::{matmul, pi, wordcount};
 use blaze_rs::cluster::{ClusterConfig, DeploymentKind};
-use blaze_rs::core::{FaultPlan, JobConfig, MapReduceJob, ReductionMode, Scheduling};
+use blaze_rs::core::{TaskFault, JobConfig, MapReduceJob, ReductionMode, Scheduling};
 use blaze_rs::mpi::Rank;
 
 fn wc_map(line: &String, emit: &mut dyn FnMut(String, u64)) {
@@ -68,7 +68,7 @@ fn fault_injection_every_victim_rank() {
     let cluster = ClusterConfig::builder().ranks(4).seed(13).build();
     for victim in 0..4 {
         let got = MapReduceJob::new(&cluster, &corpus)
-            .with_fault(FaultPlan { rank: Rank(victim), after_tasks: 1 })
+            .with_fault(TaskFault { rank: Rank(victim), after_tasks: 1 })
             .run_eager(wc_map, |a, b| *a += b)
             .unwrap();
         assert_eq!(got.result, truth, "victim rank {victim}");
@@ -81,7 +81,7 @@ fn immediate_death_before_any_task() {
     let truth = wordcount::count_serial(&corpus);
     let cluster = ClusterConfig::builder().ranks(3).build();
     let got = MapReduceJob::new(&cluster, &corpus)
-        .with_fault(FaultPlan { rank: Rank(1), after_tasks: 0 })
+        .with_fault(TaskFault { rank: Rank(1), after_tasks: 0 })
         .run_eager(wc_map, |a, b| *a += b)
         .unwrap();
     assert_eq!(got.result, truth);

@@ -1,0 +1,293 @@
+//! End-to-end fault-injection tests (ISSUE 6): checkpoint/recover for
+//! iterative jobs under a deterministic [`FaultPlan`], proved by
+//! bit-identity against uninterrupted runs.
+//!
+//! The acceptance pin: a components session killed at ANY iteration and
+//! recovered onto a RANDOM width in 1..=16 (checkpoint-every-1) must
+//! produce labels bit-identical to the uninterrupted run. PageRank gets
+//! the same treatment — bit-identical at the same width (the snapshot
+//! carries the normalizer aggregate), ≤ 1e-12 across widths (float
+//! re-association only). `BLAZE_FAULT_SEED` pins the randomized
+//! schedules for the CI fault-matrix leg.
+
+use blaze_rs::apps::{components, pagerank};
+use blaze_rs::cluster::{ClusterConfig, ElasticCluster, ElasticEvent, FaultPlan, WavePhase};
+use blaze_rs::core::{IterativeJob, WaveKilled};
+use blaze_rs::store::CheckpointStore;
+use blaze_rs::util::rng::Rng;
+
+fn local_elastic(ranks: usize) -> ElasticCluster {
+    ElasticCluster::new(ClusterConfig::builder().ranks(ranks).build())
+}
+
+fn phase_of(i: u64) -> WavePhase {
+    match i {
+        0 => WavePhase::Contribute,
+        1 => WavePhase::Flush,
+        _ => WavePhase::Update,
+    }
+}
+
+fn replaced(elastic: &ElasticCluster) -> bool {
+    elastic.events().iter().any(|e| matches!(e, ElasticEvent::Replaced { .. }))
+}
+
+#[test]
+fn components_killed_at_any_iteration_recover_bit_identical_at_random_widths() {
+    // 6 chains of 9 vertices: known components, converges in ~10 waves.
+    let g = components::chain_graph(6, 9);
+    let baseline = components::run_dist(&mut local_elastic(4), &g, 20, &[]).unwrap();
+    assert!(baseline.converged);
+
+    let seed = FaultPlan::env_seed().unwrap_or(0xB1A2);
+    for trial in 0..8u64 {
+        let mut rng = Rng::with_stream(seed, trial);
+        let kill_iter = rng.below(baseline.iterations as u64) as usize;
+        let phase = phase_of(rng.below(3));
+        let victim = rng.below(4) as usize;
+        let width2 = 1 + rng.below(16) as usize;
+
+        let mut elastic = local_elastic(4);
+        elastic.set_fault_plan(FaultPlan::new().with_kill(kill_iter, phase, victim));
+        let got =
+            components::run_dist_faulty(&mut elastic, &g, 20, 1, width2 as i64 - 4).unwrap();
+        assert!(got.converged, "trial {trial}: must still settle");
+        assert_eq!(
+            got.labels, baseline.labels,
+            "trial {trial}: kill at it {kill_iter} ({phase:?}, rank {victim}), \
+             recovered onto width {width2} — integer min must be bit-identical"
+        );
+        // Every kill scheduled inside the session's wave range fires.
+        assert!(replaced(&elastic), "trial {trial}: kill at {kill_iter} should have fired");
+        assert_eq!(elastic.ranks(), width2, "trial {trial}: replacement width");
+        if kill_iter > 0 {
+            // Checkpoint-every-1 ⇒ the snapshot is at the kill iteration.
+            assert_eq!(got.recoveries.len(), 1, "trial {trial}");
+            let r = &got.recoveries[0];
+            assert_eq!((r.iteration, r.from_ranks, r.to_ranks), (kill_iter, 4, width2));
+            if width2 == 4 {
+                assert_eq!(r.epoch, 0, "same-width recovery must not bump the epoch");
+            } else {
+                assert_eq!(r.epoch, 1, "cross-width recovery is an elastic resize");
+            }
+            assert!(r.items > 0 && r.bytes > 0 && r.modeled_ms > 0.0);
+        }
+        // Checkpoint-every-1 wrote one snapshot per completed wave.
+        assert!(!got.checkpoints.is_empty());
+    }
+}
+
+#[test]
+fn components_recovery_survives_every_phase_point() {
+    let g = components::chain_graph(4, 8);
+    let baseline = components::run_dist(&mut local_elastic(3), &g, 20, &[]).unwrap();
+    for phase in [WavePhase::Contribute, WavePhase::Flush, WavePhase::Update] {
+        let mut elastic = local_elastic(3);
+        elastic.set_fault_plan(FaultPlan::new().with_kill(2, phase, 1));
+        let got = components::run_dist_faulty(&mut elastic, &g, 20, 1, 0).unwrap();
+        assert_eq!(got.labels, baseline.labels, "{phase:?}");
+        assert_eq!(got.recoveries.len(), 1, "{phase:?}");
+        assert_eq!(got.recoveries[0].iteration, 2, "{phase:?}");
+        assert_eq!(got.iterations, baseline.iterations, "{phase:?}");
+    }
+}
+
+#[test]
+fn pagerank_same_width_recovery_is_bit_identical() {
+    let g = pagerank::Graph::random(200, 4, 3);
+    let baseline = pagerank::run_dist(&mut local_elastic(4), &g, 10, 0.85, &[]).unwrap();
+
+    let mut elastic = local_elastic(4);
+    elastic.set_fault_plan(FaultPlan::new().with_kill(5, WavePhase::Flush, 2));
+    let got = pagerank::run_dist_faulty(&mut elastic, &g, 10, 0.85, 1, 0).unwrap();
+    assert_eq!(got.iterations, 10);
+    assert_eq!(got.recoveries.len(), 1);
+    assert_eq!(got.recoveries[0].iteration, 5);
+    for (v, (a, b)) in got.ranks.iter().zip(&baseline.ranks).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "vertex {v}: same-width recovery must be bit-identical ({a} vs {b})"
+        );
+    }
+    // Checkpoints and the recovery read are real (modeled) session time.
+    assert!(got.stats.modeled_ms > baseline.stats.modeled_ms);
+    assert!(!got.checkpoints.is_empty());
+}
+
+#[test]
+fn pagerank_cross_width_recovery_stays_within_float_tolerance() {
+    let g = pagerank::Graph::random(200, 4, 3);
+    let baseline = pagerank::run_dist(&mut local_elastic(4), &g, 10, 0.85, &[]).unwrap();
+
+    let seed = FaultPlan::env_seed().unwrap_or(0x5047);
+    for trial in 0..4u64 {
+        let mut rng = Rng::with_stream(seed, trial);
+        let kill_iter = rng.below(10) as usize;
+        let phase = phase_of(rng.below(3));
+        let victim = rng.below(4) as usize;
+        let width2 = 1 + rng.below(16) as usize;
+
+        let mut elastic = local_elastic(4);
+        elastic.set_fault_plan(FaultPlan::new().with_kill(kill_iter, phase, victim));
+        let got = pagerank::run_dist_faulty(&mut elastic, &g, 10, 0.85, 1, width2 as i64 - 4)
+            .unwrap();
+        assert!(replaced(&elastic), "trial {trial}");
+        assert_eq!(elastic.ranks(), width2, "trial {trial}");
+        for (v, (a, b)) in got.ranks.iter().zip(&baseline.ranks).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "trial {trial}, vertex {v}: {a} vs {b} (kill at {kill_iter}, width {width2})"
+            );
+        }
+        let total: f64 = got.ranks.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "trial {trial}: still a distribution");
+    }
+}
+
+#[test]
+fn seeded_schedule_recovers_components_under_the_env_seed() {
+    // The CI fault-matrix leg pins BLAZE_FAULT_SEED; this test routes it
+    // through FaultPlan::seeded so the leg exercises a reproducible,
+    // seed-chosen kill point.
+    let g = components::chain_graph(5, 7);
+    let baseline = components::run_dist(&mut local_elastic(4), &g, 20, &[]).unwrap();
+    let seed = FaultPlan::env_seed().unwrap_or(1332);
+    let plan = FaultPlan::seeded(seed, baseline.iterations, 4);
+    assert_eq!(plan.kills().len(), 1);
+
+    let mut elastic = local_elastic(4);
+    elastic.set_fault_plan(plan);
+    let got = components::run_dist_faulty(&mut elastic, &g, 20, 1, 0).unwrap();
+    assert_eq!(got.labels, baseline.labels);
+    assert!(replaced(&elastic), "a seeded kill inside the wave range always fires");
+}
+
+#[test]
+fn slowdown_triggers_speculative_reexecution_without_changing_results() {
+    let n = 20_000u32;
+    let run = |plan: Option<FaultPlan>| {
+        let mut elastic = local_elastic(4);
+        if let Some(p) = plan {
+            elastic.set_fault_plan(p);
+        }
+        let mut job: IterativeJob<u32, u64> =
+            IterativeJob::load(&elastic, 9, (0..n).map(|k| (k, k as u64)));
+        for _ in 0..2 {
+            job.step(
+                &mut elastic,
+                |k: &u32, s: &u64, emit: &mut dyn FnMut(u32, u64)| emit((k + 1) % n, *s),
+                |acc: &mut u64, v: u64| *acc = acc.wrapping_add(v),
+                |_k, s: &mut u64, d: Option<u64>| *s = s.wrapping_add(d.unwrap_or(0)),
+                |_k, s: &u64| *s % 4096,
+            )
+            .unwrap();
+        }
+        let specs = job.speculations().to_vec();
+        let stats = job.per_iteration().to_vec();
+        let mut states = job.into_states();
+        states.sort_unstable();
+        (states, specs, stats)
+    };
+
+    let (plain_states, plain_specs, _) = run(None);
+    assert!(plain_specs.is_empty(), "no plan, no speculation");
+
+    // Rank 1 computes 1000x slower (virtual clock): a deterministic
+    // straggler every wave.
+    let (slow_states, specs, stats) = run(Some(FaultPlan::new().with_slowdown(1, 1000.0)));
+    assert_eq!(slow_states, plain_states, "slowdowns must not change results");
+    assert!(!specs.is_empty(), "a 1000x straggler must trip the 2x-median detector");
+    for sp in &specs {
+        assert_eq!(sp.straggler, 1);
+        assert_ne!(sp.backup, 1);
+        assert!(sp.backup_won, "backup path must beat waiting out a 1000x straggler");
+        assert!(sp.backup_ms < sp.straggler_ms);
+        // FaultTracker bookkeeping: the straggler's shard task shows a
+        // failed first attempt and a successful re-claim by the backup.
+        assert!(sp.attempts.iter().any(|a| a.task == 1 && !a.succeeded));
+        assert!(sp
+            .attempts
+            .iter()
+            .any(|a| a.task == 1 && a.succeeded && a.rank.0 == sp.backup && a.attempt == 2));
+        // The wave's modeled clock took the cheaper (backup) path.
+        let wave = &stats[sp.iteration];
+        assert!(wave.modeled_ms < sp.straggler_ms, "{} vs {}", wave.modeled_ms, sp.straggler_ms);
+    }
+}
+
+#[test]
+fn checkpoint_cadence_writes_every_k() {
+    let mut elastic = local_elastic(3);
+    let mut job: IterativeJob<u32, u64> =
+        IterativeJob::load(&elastic, 11, (0..500u32).map(|k| (k, 1u64)));
+    let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+    job.checkpoint_every(store.clone(), 2);
+    for _ in 0..5 {
+        job.step(
+            &mut elastic,
+            |k: &u32, s: &u64, emit: &mut dyn FnMut(u32, u64)| emit((k + 7) % 500, *s),
+            |acc: &mut u64, v: u64| *acc += v,
+            |_k, s: &mut u64, d: Option<u64>| *s += d.unwrap_or(0),
+            |_k, s: &u64| *s,
+        )
+        .unwrap();
+    }
+    // Waves 2 and 4 snapshot; wave 5 is off-cadence.
+    assert_eq!(store.checkpoints_written(), 2);
+    assert_eq!(job.checkpoints().len(), 2);
+    assert_eq!(store.latest_iteration(), Some(4));
+    assert!(store.latest_aggregate::<u64>().unwrap().is_some());
+    // An explicit snapshot is always allowed.
+    job.checkpoint_now(&store).unwrap();
+    assert_eq!(store.checkpoints_written(), 3);
+    assert_eq!(store.latest_iteration(), Some(5));
+    assert!(store.bytes_written() > 0);
+}
+
+#[test]
+fn wave_killed_error_downcasts_and_session_recovers() {
+    let mut elastic = local_elastic(4);
+    elastic.set_fault_plan(FaultPlan::new().with_kill(1, WavePhase::Update, 0));
+    let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+    let mut job: IterativeJob<u32, u64> =
+        IterativeJob::load(&elastic, 13, (0..300u32).map(|k| (k, k as u64)));
+    job.checkpoint_every(store.clone(), 1);
+
+    let step = |job: &mut IterativeJob<u32, u64>, elastic: &mut ElasticCluster| {
+        job.step(
+            elastic,
+            |k: &u32, s: &u64, emit: &mut dyn FnMut(u32, u64)| emit((k + 1) % 300, *s),
+            |acc: &mut u64, v: u64| *acc += v,
+            |_k, s: &mut u64, d: Option<u64>| *s += d.unwrap_or(0),
+            |_k, s: &u64| *s,
+        )
+    };
+    step(&mut job, &mut elastic).unwrap();
+    let err = step(&mut job, &mut elastic).unwrap_err();
+    let killed = err.downcast_ref::<WaveKilled>().expect("typed kill error");
+    assert_eq!(
+        *killed,
+        WaveKilled { rank: 0, iteration: 1, phase: WavePhase::Update }
+    );
+    assert!(format!("{killed}").contains("rank 0 killed at iteration 1"));
+
+    elastic.kill_and_replace(0).unwrap();
+    let recovered: IterativeJob<u32, u64> =
+        IterativeJob::recover_from(&elastic, &store).unwrap().expect("snapshot present");
+    assert_eq!(recovered.steps_run(), 1);
+    assert_eq!(recovered.len_global(), 300);
+    assert_eq!(recovered.recovery().unwrap().iteration, 1);
+    // The replayed kill iteration does not re-fire (consumed), so the
+    // session completes.
+    let mut recovered = recovered;
+    step(&mut recovered, &mut elastic).unwrap();
+    assert_eq!(recovered.steps_run(), 2);
+}
+
+#[test]
+fn recover_from_empty_store_is_none() {
+    let elastic = local_elastic(2);
+    let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+    assert!(IterativeJob::<u32, u64>::recover_from(&elastic, &store).unwrap().is_none());
+}

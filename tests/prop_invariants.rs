@@ -494,6 +494,62 @@ fn prop_classic_combiner_never_changes_the_result() {
 }
 
 #[test]
+fn prop_checkpoint_roundtrip_restores_onto_any_width() {
+    // The ISSUE 6 satellite: write a session's shards into the
+    // checkpoint store at width p, restore onto width p' in 1..=16 —
+    // the recovered job must hold the exact same key→value multiset,
+    // sit at the target width, and carry the right router epoch
+    // (unchanged for p == p', bumped once by the recovery resize
+    // otherwise). Shrinks on failure by dropping pairs and narrowing
+    // the target width, so a regression reports a minimal witness.
+    use blaze_rs::cluster::ElasticCluster;
+    use blaze_rs::core::IterativeJob;
+    use blaze_rs::store::CheckpointStore;
+    use blaze_rs::util::prop::for_all_shrink;
+
+    for_all_shrink(
+        "checkpoint(p) -> recover(p') keeps the multiset, width, epoch",
+        |r| {
+            let pairs = vec_of(r, 80, |r| (r.next_u32() >> 8, r.next_u64()));
+            (pairs, 1 + r.below(4) as usize, 1 + r.below(16) as usize, r.next_u64())
+        },
+        |(pairs, p, p2, salt)| {
+            let mut candidates: Vec<_> = (0..pairs.len())
+                .map(|i| {
+                    let mut fewer = pairs.clone();
+                    fewer.remove(i);
+                    (fewer, *p, *p2, *salt)
+                })
+                .collect();
+            if *p2 > 1 {
+                candidates.push((pairs.clone(), *p, 1, *salt));
+            }
+            candidates
+        },
+        |(pairs, p, p2, salt)| {
+            let want: HashMap<u32, u64> = pairs.iter().copied().collect();
+            let src = ElasticCluster::new(ClusterConfig::builder().ranks(*p).build());
+            let mut job: IterativeJob<u32, u64> = IterativeJob::load(&src, *salt, want.clone());
+            let store: CheckpointStore<u32, u64> = CheckpointStore::new();
+            job.checkpoint_now(&store).unwrap();
+
+            let dst = ElasticCluster::new(ClusterConfig::builder().ranks(*p2).build());
+            let back: IterativeJob<u32, u64> =
+                IterativeJob::recover_from(&dst, &store).unwrap().expect("snapshot present");
+            let r = back.recovery().expect("recovery stats recorded").clone();
+            let mut got: HashMap<u32, u64> = HashMap::new();
+            let disjoint =
+                back.into_states().into_iter().all(|(k, v)| got.insert(k, v).is_none());
+            disjoint
+                && got == want
+                && r.items == want.len() as u64
+                && (r.from_ranks, r.to_ranks) == (*p, *p2)
+                && r.epoch == u64::from(p != p2)
+        },
+    );
+}
+
+#[test]
 fn prop_varint_size_monotone() {
     use blaze_rs::serial::Encoder;
     for_all(
