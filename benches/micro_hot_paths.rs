@@ -205,6 +205,92 @@ fn main() {
         }
     }
 
+    // --- transport ablation: mailboxes vs real TCP workers (ISSUE 7) ----
+    // Same jobs, same 4-rank width; the only change is the Transport impl
+    // under the Communicator, so the gap IS the cost of the real message
+    // plane (driver -> worker -> worker -> driver, three kernel sockets
+    // per message). Results are byte-identical across transports by the
+    // integration_transport contract; this sweep records what the realism
+    // costs on the host clock and persists it as BENCH_7.json.
+    {
+        use blaze_rs::mpi::TransportKind;
+        use blaze_rs::util::bench::BenchResult;
+        let worker = std::env::var("BLAZE_WORKER_BIN")
+            .ok()
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| env!("CARGO_BIN_EXE_blaze").to_string());
+        let mut sweep: Vec<(TransportKind, BenchResult, BenchResult)> = Vec::new();
+        for kind in TransportKind::ALL {
+            let pool = RankPool::new(
+                Universe::local(4).with_transport(kind).with_worker_binary(worker.clone()),
+            );
+            let allreduce =
+                bench(&format!("mpi/allreduce x20, 4 ranks, {kind} transport"), 1, 10, || {
+                    pool.run(|c| {
+                        let mut acc = 0u64;
+                        for i in 0..20 {
+                            acc += c.allreduce_sum_u64(i).unwrap();
+                        }
+                        acc
+                    })
+                });
+            let alltoallv =
+                bench(&format!("mpi/alltoallv 4 ranks x 16KiB, {kind} transport"), 1, 10, || {
+                    pool.run(|c| {
+                        let bufs: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; 16 << 10]).collect();
+                        c.alltoallv(bufs).unwrap().len()
+                    })
+                });
+            results.push(allreduce.clone());
+            results.push(alltoallv.clone());
+            sweep.push((kind, allreduce, alltoallv));
+        }
+        let case = |kind: TransportKind, op: &str, r: &BenchResult| {
+            Json::obj([
+                ("op", Json::str(op)),
+                ("transport", Json::str(kind.to_string())),
+                ("ranks", Json::num(4.0)),
+                ("mean_ns", Json::num(r.mean_ns)),
+                ("median_ns", Json::num(r.median_ns)),
+                ("stddev_ns", Json::num(r.stddev_ns)),
+                ("iters", Json::num(r.iters as f64)),
+            ])
+        };
+        let report = Json::obj([
+            ("bench", Json::str("transport-ablation")),
+            ("pr", Json::num(7.0)),
+            ("harness", Json::str("cargo bench --bench micro_hot_paths (writes this file)")),
+            (
+                "note",
+                Json::str(
+                    "same jobs, same width; mailbox = in-process channels, tcp = spawned \
+                     blaze-worker processes on a loopback socket mesh. Results are \
+                     byte-identical across transports (tests/integration_transport.rs); \
+                     this records the host-time cost of the real message plane.",
+                ),
+            ),
+            (
+                "cases",
+                Json::arr(sweep.iter().flat_map(|(kind, ar, a2a)| {
+                    [
+                        case(*kind, "allreduce_sum_u64 x20", ar),
+                        case(*kind, "alltoallv 4x16KiB", a2a),
+                    ]
+                })),
+            ),
+            (
+                "tcp_over_mailbox",
+                Json::obj([
+                    ("allreduce", Json::num(sweep[1].1.mean_ns / sweep[0].1.mean_ns)),
+                    ("alltoallv", Json::num(sweep[1].2.mean_ns / sweep[0].2.mean_ns)),
+                ]),
+            ),
+        ]);
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_7.json");
+        std::fs::write(path, report.to_string_pretty()).unwrap();
+        println!("transport sweep written to {path}");
+    }
+
     // --- iterative delta shuffle (DistHashMap path) ----------------------
     // One PageRank-shaped wave's container traffic: 10k staged deltas
     // over 512 hot keys, flushed raw vs with the stage-side pre-fold

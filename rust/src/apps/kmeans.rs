@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::core::JobStats;
-use crate::mpi::{Communicator, RankPool, Topology, TrafficDelta, Universe};
+use crate::mpi::{Communicator, RankPool, TrafficDelta, Universe};
 use crate::runtime::{ComputeHandle, TensorArg};
 use crate::util::rng::Rng;
 
@@ -189,8 +189,6 @@ pub fn run_wave_jobs(
 ) -> Result<KmeansResult> {
     anyhow::ensure!(k > 0 && k <= points.n, "k={k} out of range");
     let ranks = cluster.ranks();
-    let topology = Topology::from_config(cluster);
-    let network = cluster.network_model();
     if let Some(pool) = pool {
         pool.ensure_models(cluster)?;
     }
@@ -220,11 +218,7 @@ pub fn run_wave_jobs(
             Some(pool) => pool.run_job(ranks, wave),
             // Spawn-per-wave: a throwaway pool per iteration, the old
             // `run_ranks` cost structure.
-            None => RankPool::new(
-                Universe::new(topology.clone(), network.clone())
-                    .with_collective_algo(cluster.collective_algo()),
-            )
-            .run_job(ranks, wave),
+            None => RankPool::new(Universe::from_cluster(cluster)).run_job(ranks, wave),
         };
         let (next, iner) = collapse_rank_results(out.results)?;
         centroids = next;

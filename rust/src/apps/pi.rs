@@ -15,7 +15,7 @@ use anyhow::{Context, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::core::{JobConfig, JobResult, MapReduceJob, ReductionMode};
-use crate::mpi::{run_ranks_with_universe, Topology, Universe};
+use crate::mpi::{run_ranks_with_universe, Universe};
 use crate::runtime::{ComputeHandle, TensorArg};
 use crate::util::rng::Rng;
 
@@ -101,9 +101,7 @@ pub fn run_kernel(
 ) -> Result<JobResult<f64>> {
     compute.warmup("pi_count")?;
     let total: u64 = chunks.iter().map(|c| c.samples as u64).sum();
-    let topology = Topology::from_config(cluster);
-    let universe = Universe::new(topology, cluster.network_model())
-        .with_collective_algo(cluster.collective_algo());
+    let universe = Universe::from_cluster(cluster);
     let stats = universe.stats();
     let wall = std::time::Instant::now();
 

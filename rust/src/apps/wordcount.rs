@@ -19,7 +19,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::core::{JobConfig, JobResult, MapReduceJob, ReductionMode};
-use crate::mpi::{run_ranks_with_universe, Topology, Universe};
+use crate::mpi::{run_ranks_with_universe, Universe};
 use crate::runtime::{ComputeHandle, TensorArg};
 use crate::util::rng::Rng;
 
@@ -97,9 +97,7 @@ pub fn run_segsum_kernel(
     compute: &ComputeHandle,
 ) -> Result<JobResult<HashMap<String, u64>>> {
     compute.warmup("wordcount_segsum")?;
-    let topology = Topology::from_config(cluster);
-    let universe = Universe::new(topology, cluster.network_model())
-        .with_collective_algo(cluster.collective_algo());
+    let universe = Universe::from_cluster(cluster);
     let stats = universe.stats();
     let wall = std::time::Instant::now();
 

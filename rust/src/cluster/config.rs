@@ -15,9 +15,11 @@
 //! mem-fraction = 0.6
 //! ```
 
+use std::path::PathBuf;
+
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::mpi::CollectiveAlgo;
+use crate::mpi::{CollectiveAlgo, TransportKind};
 use crate::util::toml_mini::TomlDoc;
 
 use super::deployment::DeploymentKind;
@@ -52,6 +54,12 @@ pub struct ClusterConfig {
     /// Explicit collective algorithm, if pinned (see
     /// [`ClusterConfig::collective_algo`] for the resolution order).
     pub collective_algo: Option<CollectiveAlgo>,
+    /// Explicit transport substrate, if pinned (see
+    /// [`ClusterConfig::transport`] for the resolution order).
+    pub transport: Option<TransportKind>,
+    /// Worker binary for the TCP transport (explicit beats the
+    /// `BLAZE_WORKER_BIN` env beats the current executable).
+    pub worker_bin: Option<PathBuf>,
     pub limits: Limits,
 }
 
@@ -79,6 +87,8 @@ impl ClusterConfig {
             slots_per_node: 1,
             seed: default_seed(),
             collective_algo: None,
+            transport: None,
+            worker_bin: None,
             limits: Limits::default(),
         };
         for (section, entries) in doc.sections() {
@@ -106,6 +116,19 @@ impl ClusterConfig {
                                 .parse()?,
                         );
                     }
+                    ("", "transport") => {
+                        cfg.transport = Some(
+                            value
+                                .as_str()
+                                .with_context(|| format!("{key}: expected string"))?
+                                .parse()?,
+                        );
+                    }
+                    ("", "worker-bin") => {
+                        cfg.worker_bin = Some(PathBuf::from(
+                            value.as_str().with_context(|| format!("{key}: expected string"))?,
+                        ));
+                    }
                     ("limits", "mem-fraction") => {
                         cfg.limits.mem_fraction =
                             value.as_float().with_context(|| format!("{key}: expected float"))?;
@@ -127,8 +150,16 @@ impl ClusterConfig {
             Some(a) => format!("collective-algo = \"{a}\"\n"),
             None => String::new(),
         };
+        let transport = match self.transport {
+            Some(t) => format!("transport = \"{t}\"\n"),
+            None => String::new(),
+        };
+        let worker_bin = match &self.worker_bin {
+            Some(p) => format!("worker-bin = \"{}\"\n", p.display()),
+            None => String::new(),
+        };
         format!(
-            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n{algo}\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
+            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n{algo}{transport}{worker_bin}\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
             self.deployment,
             self.nodes,
             self.slots_per_node,
@@ -215,6 +246,26 @@ impl ClusterConfig {
             None => CollectiveAlgo::resolve(env),
         }
     }
+
+    /// Transport substrate for this cluster's universes. Precedence
+    /// (mirroring [`ClusterConfig::collective_algo`]): an explicit
+    /// `transport` field, then the `BLAZE_TRANSPORT` environment
+    /// override (the TCP CI leg runs the whole suite with it set to
+    /// `tcp`), then [`TransportKind::Mailbox`].
+    pub fn transport(&self) -> TransportKind {
+        let env = std::env::var("BLAZE_TRANSPORT").ok();
+        self.resolve_transport(env.as_deref())
+    }
+
+    /// Resolution with the env override injected — tests exercise the
+    /// precedence without mutating process-global environment (setenv
+    /// races getenv across test threads).
+    fn resolve_transport(&self, env: Option<&str>) -> TransportKind {
+        match self.transport {
+            Some(t) => t,
+            None => TransportKind::resolve(env),
+        }
+    }
 }
 
 /// Builder for [`ClusterConfig`]. `ranks(n)` is shorthand for n single-slot
@@ -227,6 +278,8 @@ pub struct ClusterConfigBuilder {
     slots_per_node: Option<usize>,
     seed: Option<u64>,
     collective_algo: Option<CollectiveAlgo>,
+    transport: Option<TransportKind>,
+    worker_bin: Option<PathBuf>,
     limits: Option<Limits>,
 }
 
@@ -264,6 +317,18 @@ impl ClusterConfigBuilder {
         self
     }
 
+    /// Pin the transport substrate (beats the env override).
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Worker binary spawned per rank by the TCP transport.
+    pub fn worker_binary(mut self, bin: impl Into<PathBuf>) -> Self {
+        self.worker_bin = Some(bin.into());
+        self
+    }
+
     pub fn mem_fraction(mut self, f: f64) -> Self {
         self.limits.get_or_insert_with(Limits::default).mem_fraction = f;
         self
@@ -281,6 +346,8 @@ impl ClusterConfigBuilder {
             slots_per_node: self.slots_per_node.unwrap_or(1),
             seed: self.seed.unwrap_or_else(default_seed),
             collective_algo: self.collective_algo,
+            transport: self.transport,
+            worker_bin: self.worker_bin,
             limits: self.limits.unwrap_or_default(),
         };
         cfg.validate().expect("builder produced invalid config");
@@ -353,6 +420,34 @@ mod tests {
         assert_eq!(
             explicit.resolve_collective_algo(Some("tree")),
             CollectiveAlgo::Hierarchical,
+            "explicit beats env"
+        );
+    }
+
+    #[test]
+    fn toml_roundtrip_with_transport() {
+        let c = ClusterConfig::builder()
+            .nodes(2)
+            .transport(TransportKind::Tcp)
+            .worker_binary("/usr/local/bin/blaze")
+            .build();
+        let text = c.to_toml_string();
+        assert!(text.contains("transport = \"tcp\""), "{text}");
+        assert!(text.contains("worker-bin = \"/usr/local/bin/blaze\""), "{text}");
+        assert_eq!(ClusterConfig::from_toml_str(&text).unwrap(), c);
+        assert!(ClusterConfig::from_toml_str("transport = \"carrier-pigeon\"\n").is_err());
+    }
+
+    #[test]
+    fn explicit_transport_beats_env_beats_default() {
+        let derived = ClusterConfig::builder().build();
+        let explicit = ClusterConfig::builder().transport(TransportKind::Tcp).build();
+        assert_eq!(derived.resolve_transport(None), TransportKind::Mailbox);
+        assert_eq!(derived.resolve_transport(Some("tcp")), TransportKind::Tcp);
+        assert_eq!(derived.resolve_transport(Some("wat")), TransportKind::Mailbox);
+        assert_eq!(
+            explicit.resolve_transport(Some("mailbox")),
+            TransportKind::Tcp,
             "explicit beats env"
         );
     }

@@ -183,14 +183,13 @@ impl ElasticCluster {
         let topology = Topology::from_config(&self.config);
         let network = self.config.network_model();
         let algo = self.config.collective_algo();
+        let transport = self.config.transport();
         let stale = match &self.pool {
-            Some(pool) => !pool.matches(&topology, &network, algo),
+            Some(pool) => !pool.matches(&topology, &network, algo, transport),
             None => true,
         };
         if stale {
-            self.pool = Some(RankPool::new(
-                Universe::new(topology, network).with_collective_algo(algo),
-            ));
+            self.pool = Some(RankPool::new(Universe::from_cluster(&self.config)));
         }
         self.pool.as_ref().expect("just ensured")
     }

@@ -10,7 +10,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::metrics::PeakTracker;
-use crate::mpi::{Communicator, RankPool, Topology, Universe};
+use crate::mpi::{Communicator, RankPool, Universe};
 use crate::serial::FastSerialize;
 
 use super::classic::classic_rank;
@@ -216,14 +216,7 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             }
             // One-shot: a throwaway pool wired exactly like the old fresh
             // universe (same threads-per-job cost as before the refactor).
-            None => RankPool::new(
-                Universe::new(
-                    Topology::from_config(&self.cluster),
-                    self.cluster.network_model(),
-                )
-                .with_collective_algo(self.cluster.collective_algo()),
-            )
-            .run_job(ranks, rank_body),
+            None => RankPool::new(Universe::from_cluster(&self.cluster)).run_job(ranks, rank_body),
         };
         let (rank_results, clocks, traffic) = (out.results, out.clocks, out.traffic);
 

@@ -83,7 +83,12 @@ where
     }
     tracker.alloc(total);
 
-    let incoming = comm.alltoallv(bufs)?;
+    // Attach the tracker for the exchange so Hierarchical node-leader
+    // staging buffers are charged to the same job-level peak.
+    comm.set_memory_tracker(Some(tracker.clone()));
+    let incoming = comm.alltoallv(bufs);
+    comm.set_memory_tracker(None);
+    let incoming = incoming?;
     tracker.free(total);
 
     let in_total: u64 = incoming.iter().map(|b| b.len() as u64).sum();
@@ -224,7 +229,10 @@ where
         // Charged once assembled; the fill phase itself holds at most
         // the same bytes, so the high-water timing is the exchange.
         tracker.alloc(total);
-        let incoming = comm.alltoallv(bufs)?;
+        comm.set_memory_tracker(Some(tracker.clone()));
+        let incoming = comm.alltoallv(bufs);
+        comm.set_memory_tracker(None);
+        let incoming = incoming?;
         tracker.free(total);
 
         let in_total: u64 = incoming.iter().map(|b| b.len() as u64).sum();

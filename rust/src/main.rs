@@ -113,6 +113,7 @@ fn run(argv: &[String]) -> Result<()> {
         "bench-figure" => cmd_bench_figure(&args),
         "inspect-artifacts" => cmd_inspect_artifacts(&args),
         "cluster-info" => cmd_cluster_info(&args),
+        "worker" => cmd_worker(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -127,7 +128,8 @@ fn print_usage() {
          USAGE:\n  blaze run --app <wordcount|kmeans|pi|matmul|linreg> [opts]\n  \
          blaze bench-figure <id|all> [--quick] [--json-dir DIR]\n  \
          blaze inspect-artifacts [--dir artifacts]\n  \
-         blaze cluster-info [--cluster FILE | --ranks N --deployment KIND]\n\n\
+         blaze cluster-info [--cluster FILE | --ranks N --deployment KIND]\n  \
+         blaze worker --connect HOST:PORT   (internal: TCP-transport rank process)\n\n\
          COMMON OPTS:\n  --cluster FILE.toml | --ranks N --deployment \
          <local|bare-metal|vm|container> --slots-per-node S --seed X\n  \
          --mode <classic|eager|delayed>   reduction engine\n  --kernel  \
@@ -303,14 +305,25 @@ fn cmd_cluster_info(args: &Args) -> Result<()> {
     println!("{}", cluster.to_toml_string());
     let profile = cluster.deployment.profile();
     println!(
-        "# ranks={} | startup {} ms | net {} µs / {} Mbit/s | compute x{:.2} | spill at {} B/rank | {} collectives",
+        "# ranks={} | startup {} ms | net {} µs / {} Mbit/s | compute x{:.2} | spill at {} B/rank | {} collectives | {} transport",
         cluster.ranks(),
         profile.startup_ms,
         profile.net_latency_us,
         profile.net_bandwidth_mbps,
         profile.effective_compute_scale(),
         cluster.spill_threshold_bytes(),
-        cluster.collective_algo()
+        cluster.collective_algo(),
+        cluster.transport()
     );
     Ok(())
+}
+
+/// Internal: a rank endpoint process spawned by the TCP transport
+/// launcher. Connects back to the driver, performs the handshake, and
+/// relays frames until the driver closes the connection.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args
+        .get("connect")
+        .context("worker needs --connect HOST:PORT (spawned by the TCP launcher, not by hand)")?;
+    blaze_rs::mpi::tcp_worker_main(connect)
 }

@@ -512,10 +512,22 @@ impl Communicator {
             // are absorbed, the rest regrouped into one scatter per local
             // member (the second half of the coalescing win: members hear
             // one message per round, not one per remote rank).
+            //
+            // The inbound round is transiently resident on the leader —
+            // the memory half of the locality-for-memory trade — so it is
+            // charged against the job's [`PeakTracker`] when one is
+            // attached (the shuffle layer attaches its tracker around
+            // each exchange).
+            let tracker = self.memory_tracker();
+            let mut staged = 0u64;
             let remote = n - groups[gi].len();
             let mut for_member: HashMap<usize, Vec<(u64, Vec<u8>)>> = HashMap::new();
             for _ in 0..remote {
                 let (src, bytes) = self.recv_any(bundle_tag)?;
+                if let Some(t) = &tracker {
+                    t.alloc(bytes.len() as u64);
+                    staged += bytes.len() as u64;
+                }
                 let mut entries = Vec::new();
                 decode_entries_into(&bytes, &mut entries)?;
                 for (dst, payload) in entries {
@@ -529,6 +541,9 @@ impl Communicator {
             for &member in &groups[gi][1..] {
                 let list = for_member.remove(&member.0).unwrap_or_default();
                 self.send(member, scatter_tag, encode_entries(&list))?;
+            }
+            if let Some(t) = &tracker {
+                t.free(staged);
             }
         } else {
             let bytes = self.recv(leader, scatter_tag)?;

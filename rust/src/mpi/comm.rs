@@ -1,20 +1,24 @@
-//! The communicator: per-rank endpoint of the in-process message-passing
-//! universe, with virtual-clock cost accounting (see module docs in
-//! `mpi/mod.rs`).
+//! The communicator: per-rank endpoint of the message-passing universe,
+//! with virtual-clock cost accounting (see module docs in `mpi/mod.rs`).
+//! The substrate beneath it — in-process mailboxes or TCP rank
+//! processes — is a [`Transport`] chosen per universe.
 
 use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{ensure, Result};
 
-use crate::cluster::NetworkModel;
+use crate::cluster::{ClusterConfig, NetworkModel};
+use crate::metrics::PeakTracker;
 
 use super::collectives::CollectiveAlgo;
 use super::datatypes::{Message, Rank, Tag};
 use super::topology::Topology;
+use super::transport::{MailboxTransport, Transport, TransportKind};
 
 /// Whole-universe traffic counters (atomics — written by all ranks).
 #[derive(Debug, Default)]
@@ -41,21 +45,36 @@ pub struct Universe {
     topology: Topology,
     network: NetworkModel,
     algo: CollectiveAlgo,
+    transport: TransportKind,
+    worker_bin: Option<PathBuf>,
     stats: Arc<TrafficStats>,
 }
 
 impl Universe {
     /// A universe with the collective algorithm resolved from the
     /// `BLAZE_COLLECTIVE_ALGO` environment (default
-    /// [`CollectiveAlgo::Star`]); override with
-    /// [`Universe::with_collective_algo`].
+    /// [`CollectiveAlgo::Star`]) and the transport from `BLAZE_TRANSPORT`
+    /// (default [`TransportKind::Mailbox`]); override with
+    /// [`Universe::with_collective_algo`] / [`Universe::with_transport`].
     pub fn new(topology: Topology, network: NetworkModel) -> Self {
         Self {
             topology,
             network,
             algo: CollectiveAlgo::from_env_or_default(),
+            transport: TransportKind::from_env_or_default(),
+            worker_bin: None,
             stats: Arc::new(TrafficStats::default()),
         }
+    }
+
+    /// The universe a [`ClusterConfig`] describes: placement, network
+    /// model, collective algorithm, transport (and worker binary for
+    /// TCP), each following its own explicit > env > default resolution.
+    pub fn from_cluster(cfg: &ClusterConfig) -> Self {
+        Self::new(Topology::from_config(cfg), cfg.network_model())
+            .with_collective_algo(cfg.collective_algo())
+            .with_transport(cfg.transport())
+            .with_worker_binary_opt(cfg.worker_bin.clone())
     }
 
     /// A universe of `n` ranks on one Local-profile node — unit tests.
@@ -69,8 +88,29 @@ impl Universe {
         self
     }
 
+    /// Pin the transport substrate (explicit beats the env default).
+    pub fn with_transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// Worker binary for the TCP transport (explicit beats the
+    /// `BLAZE_WORKER_BIN` env beats the current executable).
+    pub fn with_worker_binary(self, bin: impl Into<PathBuf>) -> Self {
+        self.with_worker_binary_opt(Some(bin.into()))
+    }
+
+    pub(crate) fn with_worker_binary_opt(mut self, bin: Option<PathBuf>) -> Self {
+        self.worker_bin = bin;
+        self
+    }
+
     pub fn collective_algo(&self) -> CollectiveAlgo {
         self.algo
+    }
+
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport
     }
 
     pub fn size(&self) -> usize {
@@ -90,32 +130,56 @@ impl Universe {
     }
 
     /// Build one [`Communicator`] per rank. Consumes the universe; the
-    /// stats handle survives via [`Universe::stats`].
+    /// stats handle survives via [`Universe::stats`]. Panics if the TCP
+    /// fleet cannot be launched — use [`Universe::build`] for the
+    /// fallible form.
     pub fn communicators(self) -> Vec<Communicator> {
+        self.build().expect("building communicators").0
+    }
+
+    /// Fallible [`Universe::communicators`]: also returns the spawned
+    /// worker PIDs (empty for the mailbox transport) so shutdown tests
+    /// can assert no orphans outlive the pool.
+    pub fn build(self) -> Result<(Vec<Communicator>, Vec<u32>)> {
         let n = self.size();
-        let mut senders = Vec::with_capacity(n);
-        let mut receivers = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel::<Message>();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        let senders = Arc::new(senders);
+        let (transports, worker_pids): (Vec<Box<dyn Transport>>, Vec<u32>) = match self.transport
+        {
+            TransportKind::Mailbox => {
+                let mut senders = Vec::with_capacity(n);
+                let mut receivers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let (tx, rx) = channel::<Message>();
+                    senders.push(tx);
+                    receivers.push(rx);
+                }
+                let senders = Arc::new(senders);
+                let boxed = receivers
+                    .into_iter()
+                    .map(|rx| {
+                        Box::new(MailboxTransport::new(senders.clone(), rx)) as Box<dyn Transport>
+                    })
+                    .collect();
+                (boxed, Vec::new())
+            }
+            TransportKind::Tcp if n == 0 => (Vec::new(), Vec::new()),
+            TransportKind::Tcp => super::tcp::launch_fleet(n, self.worker_bin.as_deref())?,
+        };
         let topology = Arc::new(self.topology);
         let network = Arc::new(self.network);
-        receivers
+        let comms = transports
             .into_iter()
             .enumerate()
-            .map(|(i, rx)| Communicator {
+            .map(|(i, transport)| Communicator {
                 rank: Rank(i),
                 world: n,
                 active: Cell::new(n),
-                senders: senders.clone(),
-                rx,
+                transport,
                 pending: RefCell::new(HashMap::new()),
+                epoch: Cell::new(0),
                 topology: topology.clone(),
                 network: network.clone(),
                 stats: self.stats.clone(),
+                mem: RefCell::new(None),
                 clock_ns: Cell::new(0),
                 compute_ns: Cell::new(0),
                 net_wait_ns: Cell::new(0),
@@ -126,7 +190,8 @@ impl Universe {
                 sent_bytes: Cell::new(0),
                 received_messages: Cell::new(0),
             })
-            .collect()
+            .collect();
+        Ok((comms, worker_pids))
     }
 }
 
@@ -141,14 +206,26 @@ pub struct Communicator {
     /// one-shot universe; a [`crate::mpi::RankPool`] narrows it per job so
     /// a warm pool can run jobs smaller than the pool.
     active: Cell<usize>,
-    senders: Arc<Vec<Sender<Message>>>,
-    rx: Receiver<Message>,
+    /// The substrate moving bytes: in-process mailboxes or TCP rank
+    /// processes — everything above this field is transport-agnostic.
+    transport: Box<dyn Transport>,
     /// Out-of-order buffer: messages received while waiting for a
     /// different (src, tag).
     pending: RefCell<HashMap<(Rank, Tag), VecDeque<Message>>>,
+    /// Pooled-job generation. Sends stamp it into every message; recv
+    /// drops frames from older epochs. Over TCP a previous job's frame
+    /// can still be in flight through the worker mesh when the next job
+    /// starts (drain can't reach it), so the epoch — bumped in lockstep
+    /// by every rank during the pool's prepare barrier — is what makes
+    /// inter-job isolation exact on every transport.
+    epoch: Cell<u64>,
     topology: Arc<Topology>,
     network: Arc<NetworkModel>,
     stats: Arc<TrafficStats>,
+    /// Optional tracker charged for transport-internal staging buffers
+    /// (hierarchical alltoallv node leaders); attached by the shuffle
+    /// while a collective runs, cleared between pooled jobs.
+    mem: RefCell<Option<Arc<PeakTracker>>>,
     /// Virtual time (ns): compute charged via [`Communicator::advance`] /
     /// [`Communicator::timed`], network via message receipt.
     clock_ns: Cell<u64>,
@@ -256,8 +333,10 @@ impl Communicator {
     /// and before any rank of the next job starts — so nothing legitimate
     /// can still be in flight.
     pub(crate) fn reset_job_state(&self) {
-        while self.rx.try_recv().is_ok() {}
+        self.transport.drain();
+        self.epoch.set(self.epoch.get() + 1);
         self.pending.borrow_mut().clear();
+        self.mem.borrow_mut().take();
         self.clock_ns.set(0);
         self.compute_ns.set(0);
         self.net_wait_ns.set(0);
@@ -316,9 +395,16 @@ impl Communicator {
         let inject = self.network.injection_ns(payload.len(), same_node);
         self.clock_ns.set(self.clock_ns.get() + inject);
         self.net_wait_ns.set(self.net_wait_ns.get() + inject);
-        self.senders[dst.0]
-            .send(Message { src: self.rank, tag, clock_ns: self.clock_ns.get(), payload })
-            .map_err(|_| anyhow!("{dst} has hung up"))
+        self.transport.send(
+            dst,
+            Message {
+                src: self.rank,
+                tag,
+                epoch: self.epoch.get(),
+                clock_ns: self.clock_ns.get(),
+                payload,
+            },
+        )
     }
 
     /// Blocking receive matched on (src, tag). Advances the virtual clock
@@ -329,7 +415,10 @@ impl Communicator {
             return Ok(self.absorb(msg));
         }
         loop {
-            let msg = self.rx.recv().map_err(|_| anyhow!("universe torn down mid-recv"))?;
+            let msg = self.transport.recv()?;
+            if msg.epoch != self.epoch.get() {
+                continue; // stale frame from a previous pooled job
+            }
             if msg.src == src && msg.tag == tag {
                 return Ok(self.absorb(msg));
             }
@@ -344,13 +433,29 @@ impl Communicator {
             return Ok((src, self.absorb(msg)));
         }
         loop {
-            let msg = self.rx.recv().map_err(|_| anyhow!("universe torn down mid-recv"))?;
+            let msg = self.transport.recv()?;
+            if msg.epoch != self.epoch.get() {
+                continue; // stale frame from a previous pooled job
+            }
             if msg.tag == tag {
                 let src = msg.src;
                 return Ok((src, self.absorb(msg)));
             }
             self.push_pending(msg);
         }
+    }
+
+    /// Attach (or clear) a [`PeakTracker`] that transport-internal
+    /// staging buffers are charged to — today the hierarchical
+    /// `alltoallv` node-leader bundles. The shuffle sets this around its
+    /// collective calls so engine peak-memory accounting sees leader
+    /// staging; the pool clears it between jobs.
+    pub fn set_memory_tracker(&self, tracker: Option<Arc<PeakTracker>>) {
+        *self.mem.borrow_mut() = tracker;
+    }
+
+    pub(crate) fn memory_tracker(&self) -> Option<Arc<PeakTracker>> {
+        self.mem.borrow().clone()
     }
 
     /// Clock bookkeeping on message receipt:

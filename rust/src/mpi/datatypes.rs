@@ -49,12 +49,15 @@ impl Tag {
     }
 }
 
-/// A wire message: payload plus the sender's virtual clock (ns). The clock
-/// is how modeled network time propagates — see module docs.
+/// A wire message: payload plus the sender's virtual clock (ns, how
+/// modeled network time propagates — see module docs) and the pooled-job
+/// epoch it was sent in (how receivers discard stale in-flight frames
+/// from a previous job — see `Communicator`).
 #[derive(Debug)]
 pub struct Message {
     pub src: Rank,
     pub tag: Tag,
+    pub epoch: u64,
     pub clock_ns: u64,
     pub payload: Vec<u8>,
 }

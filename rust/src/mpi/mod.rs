@@ -40,17 +40,34 @@
 //! discipline. The collectives module docs spell out the shapes and the
 //! bit-identity contract ([`Communicator::allreduce`] folds at the root
 //! in rank order under every algorithm).
+//!
+//! ## Transports
+//!
+//! Beneath [`Communicator`] sits the [`Transport`] seam: the substrate
+//! that moves a [`Message`] between rank endpoints. Two substrates are
+//! wired in — [`TransportKind::Mailbox`] (the original in-process mpsc
+//! channels) and [`TransportKind::Tcp`] (length-framed TCP through
+//! spawned `blaze worker` rank processes, [`tcp`] module docs describe
+//! the handshake and relay). Selection mirrors every other knob:
+//! explicit > `BLAZE_TRANSPORT` env > Mailbox. The contract is
+//! byte-identity — results *and* virtual clocks are bit-equal on every
+//! transport, pinned by `tests/integration_transport.rs`.
 
 mod collectives;
 mod comm;
 mod datatypes;
 pub mod pool;
 mod process;
+pub mod tcp;
 mod topology;
+pub mod transport;
+pub mod wire;
 
 pub use collectives::CollectiveAlgo;
 pub use comm::{Communicator, TrafficStats, Universe};
 pub use datatypes::{Message, Rank, Tag};
 pub use pool::{JobOutput, RankPool, TrafficDelta};
 pub use process::{run_ranks, run_ranks_with_universe};
+pub use tcp::worker_main as tcp_worker_main;
 pub use topology::{Hostfile, Topology};
+pub use transport::{Transport, TransportKind};

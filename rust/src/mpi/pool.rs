@@ -70,6 +70,7 @@ use crate::cluster::{ClusterConfig, NetworkModel};
 use super::collectives::CollectiveAlgo;
 use super::comm::{Communicator, TrafficStats, Universe};
 use super::topology::Topology;
+use super::transport::TransportKind;
 
 /// A job body shipped to a rank thread. Lifetime-erased: see the SAFETY
 /// argument in [`RankPool::submit_raw`].
@@ -120,6 +121,12 @@ pub struct RankPool {
     /// the universe's algorithm no matter what the previous job switched
     /// to mid-flight.
     algo: CollectiveAlgo,
+    /// The substrate the pool's ranks are wired with; part of the pool's
+    /// identity (a mailbox pool must not stand in for a tcp cluster).
+    transport: TransportKind,
+    /// PIDs of spawned `blaze worker` processes (empty for mailbox) —
+    /// shutdown tests assert none outlive the pool.
+    worker_pids: Vec<u32>,
     stats: Arc<TrafficStats>,
     /// Serializes jobs: one at a time, whole-pool granularity.
     submit: Mutex<()>,
@@ -154,14 +161,17 @@ fn worker_loop(comm: Communicator, rx: Receiver<Command>) {
 }
 
 impl RankPool {
-    /// Start one persistent thread per rank of `universe`.
+    /// Start one persistent thread per rank of `universe`. Panics if the
+    /// universe's transport cannot be brought up (e.g. the TCP worker
+    /// fleet fails its handshake).
     pub fn new(universe: Universe) -> Self {
         let topology = universe.topology().clone();
         let network = universe.network().clone();
         let algo = universe.collective_algo();
+        let transport = universe.transport_kind();
         let stats = universe.stats();
-        let workers = universe
-            .communicators()
+        let (comms, worker_pids) = universe.build().expect("wiring rank transports");
+        let workers = comms
             .into_iter()
             .map(|comm| {
                 let (tx, rx) = channel::<Command>();
@@ -177,6 +187,8 @@ impl RankPool {
             topology,
             network,
             algo,
+            transport,
+            worker_pids,
             stats,
             submit: Mutex::new(()),
             jobs_run: AtomicU64::new(0),
@@ -191,15 +203,25 @@ impl RankPool {
     /// Pool wired exactly like the one-shot universe `MapReduceJob` would
     /// build for `cfg` — the way sessions share threads across jobs.
     pub fn from_config(cfg: &ClusterConfig) -> Self {
-        Self::new(
-            Universe::new(Topology::from_config(cfg), cfg.network_model())
-                .with_collective_algo(cfg.collective_algo()),
-        )
+        Self::new(Universe::from_cluster(cfg))
     }
 
     /// The collective algorithm pooled jobs start with.
     pub fn collective_algo(&self) -> CollectiveAlgo {
         self.algo
+    }
+
+    /// The substrate this pool's ranks are wired with.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport
+    }
+
+    /// PIDs of the spawned `blaze worker` processes backing a TCP pool
+    /// (empty for the mailbox transport). After the pool drops, none of
+    /// these may still be alive — `tests/integration_transport.rs` holds
+    /// the launcher to that.
+    pub fn worker_pids(&self) -> &[u32] {
+        &self.worker_pids
     }
 
     /// Number of warm rank threads (the maximum job width).
@@ -222,15 +244,19 @@ impl RankPool {
             .count()
     }
 
-    /// Does this pool model exactly this placement, network, and
-    /// collective algorithm?
+    /// Does this pool model exactly this placement, network, collective
+    /// algorithm, and transport substrate?
     pub fn matches(
         &self,
         topology: &Topology,
         network: &NetworkModel,
         algo: CollectiveAlgo,
+        transport: TransportKind,
     ) -> bool {
-        self.network == *network && self.algo == algo && self.topology == *topology
+        self.network == *network
+            && self.algo == algo
+            && self.transport == transport
+            && self.topology == *topology
     }
 
     /// Loud guard for pool-backed entry points: error unless this pool
@@ -244,29 +270,34 @@ impl RankPool {
                 &Topology::from_config(cluster),
                 &cluster.network_model(),
                 cluster.collective_algo(),
+                cluster.transport(),
                 ranks
             ),
-            "rank pool ({} ranks, {} collectives) does not model this cluster's first {ranks} \
-             ranks — build it with RankPool::from_config(&cluster)",
+            "rank pool ({} ranks, {} collectives, {} transport) does not model this cluster's \
+             first {ranks} ranks — build it with RankPool::from_config(&cluster)",
             self.size(),
-            self.algo
+            self.algo,
+            self.transport
         );
         Ok(())
     }
 
     /// Can this pool stand in for a fresh `nranks`-rank universe with the
-    /// given placement/network/algorithm? True when the models agree on
-    /// the first `nranks` ranks — the prefix a narrowed job runs on.
+    /// given placement/network/algorithm/transport? True when the models
+    /// agree on the first `nranks` ranks — the prefix a narrowed job runs
+    /// on.
     pub fn matches_prefix(
         &self,
         topology: &Topology,
         network: &NetworkModel,
         algo: CollectiveAlgo,
+        transport: TransportKind,
         nranks: usize,
     ) -> bool {
         nranks <= self.size()
             && self.network == *network
             && self.algo == algo
+            && self.transport == transport
             && self.topology.agrees_on_prefix(topology, nranks)
     }
 

@@ -1,0 +1,408 @@
+//! Length-framed TCP transport over spawned `blaze worker` rank processes.
+//!
+//! The deployment model (README "Real deployment"): the driver process
+//! keeps the SPMD rank closures on its own [`super::RankPool`] threads,
+//! but wires each rank's endpoint to a dedicated worker **process** over
+//! TCP. Workers form a full socket mesh among themselves, so a message
+//! from rank `i` to rank `j` crosses three real sockets:
+//! driver → worker<sub>i</sub> → worker<sub>j</sub> → driver. Every
+//! inter-rank byte therefore transits real kernel sockets between real
+//! OS processes, while results and virtual clocks stay byte-identical to
+//! the in-process mailboxes (frames carry the sender clock bit-exactly;
+//! all cost modeling stays in [`super::Communicator`]).
+//!
+//! Handshake, in order, all messages length-framed serial blobs:
+//!
+//! 1. launcher binds `127.0.0.1:0`, spawns `n` × `blaze worker
+//!    --connect ADDR`;
+//! 2. each worker binds its own mesh listener, connects back, sends
+//!    `Hello { mesh_port }`; ranks are assigned in accept order;
+//! 3. launcher sends every worker `Assign { rank, world, mesh_ports }`;
+//! 4. worker `r` connects to every peer `s < r` (sending
+//!    `MeshHello { from }`) and accepts the rest, then sends `Ready`;
+//! 5. the control stream becomes the data stream: driver-written frames
+//!    are routed by the worker (to itself or a mesh peer); frames
+//!    addressed to the worker's rank flow back up the same stream.
+//!
+//! Shutdown is EOF-driven: dropping a rank's endpoint closes its stream,
+//! the worker's router sees EOF and the process exits; the fleet handle
+//! reaps children on drop (kill after a grace period), so suites leave
+//! no orphans — `tests/integration_transport.rs` asserts exactly that.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::serial::{Decoder, Encoder};
+
+use super::datatypes::{Message, Rank};
+use super::transport::Transport;
+use super::wire::{frame_dst, write_frame, write_frame_body, FrameReader, WireFrame};
+
+/// Whole-handshake deadline; also the per-read timeout while shaking.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Grace period for workers to exit on EOF before the fleet kills them.
+const REAP_TIMEOUT: Duration = Duration::from_secs(5);
+/// Sanity cap on handshake blobs (they are tens of bytes).
+const MAX_HANDSHAKE_BYTES: usize = 1 << 16;
+
+const MAGIC_HELLO: u64 = 0xB1A2_E701;
+const MAGIC_ASSIGN: u64 = 0xB1A2_E702;
+const MAGIC_MESH: u64 = 0xB1A2_E703;
+const MAGIC_READY: u64 = 0xB1A2_E704;
+
+// ---------------------------------------------------------------- blobs
+
+fn write_blob(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+fn read_blob(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut header = [0u8; 4];
+    r.read_exact(&mut header).context("reading handshake header")?;
+    let len = u32::from_le_bytes(header) as usize;
+    ensure!(len <= MAX_HANDSHAKE_BYTES, "handshake blob of {len} bytes exceeds cap");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading handshake body")?;
+    Ok(body)
+}
+
+fn tagged(magic: u64, fields: &[u64]) -> Vec<u8> {
+    let mut enc = Encoder::with_capacity(16 + fields.len() * 10);
+    enc.put_varint(magic);
+    for f in fields {
+        enc.put_varint(*f);
+    }
+    enc.into_bytes()
+}
+
+fn expect_magic(dec: &mut Decoder<'_>, want: u64, what: &str) -> Result<()> {
+    let got = dec.get_varint()?;
+    ensure!(got == want, "bad {what} magic {got:#x} (is the worker binary the blaze CLI?)");
+    Ok(())
+}
+
+// ------------------------------------------------------------- launcher
+
+/// Owns the spawned worker processes; the last endpoint to drop reaps
+/// them (workers exit on stream EOF; stragglers are killed after
+/// [`REAP_TIMEOUT`]).
+struct TcpFleet {
+    children: Mutex<Vec<Child>>,
+}
+
+impl Drop for TcpFleet {
+    fn drop(&mut self) {
+        let mut children = match self.children.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let deadline = Instant::now() + REAP_TIMEOUT;
+        for child in children.iter_mut() {
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) | Err(_) => break,
+                    Ok(None) if Instant::now() >= deadline => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                    Ok(None) => thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        }
+    }
+}
+
+/// One rank's endpoint: the driver side of that rank's worker stream.
+/// Stream halves are declared before the fleet handle on purpose: when
+/// the last endpoint drops, every stream is already closed (workers see
+/// EOF and exit) before the fleet waits on the children.
+pub(crate) struct TcpEndpoint {
+    reader: std::cell::RefCell<FrameReader<TcpStream>>,
+    writer: std::cell::RefCell<TcpStream>,
+    world: usize,
+    _fleet: Arc<TcpFleet>,
+}
+
+impl Transport for TcpEndpoint {
+    fn send(&self, dst: Rank, msg: Message) -> Result<()> {
+        ensure!(dst.0 < self.world, "send to {dst} outside universe of {}", self.world);
+        let frame = WireFrame::from_message(dst, msg);
+        write_frame(&mut *self.writer.borrow_mut(), &frame)
+            .with_context(|| format!("tcp send to {dst} (worker hung up?)"))
+    }
+
+    fn recv(&self) -> Result<Message> {
+        match self.reader.borrow_mut().read_frame()? {
+            Some(frame) => Ok(frame.into_message()),
+            None => bail!("transport peer hung up mid-recv (worker exited)"),
+        }
+    }
+
+    fn drain(&self) {
+        // Nothing to do: frames still in flight through the worker mesh
+        // cannot be snatched back; the communicator's epoch filter is
+        // what discards them on arrival.
+    }
+}
+
+fn resolve_worker_bin(explicit: Option<&Path>) -> Result<PathBuf> {
+    if let Some(path) = explicit {
+        return Ok(path.to_path_buf());
+    }
+    if let Ok(path) = std::env::var("BLAZE_WORKER_BIN") {
+        if !path.trim().is_empty() {
+            return Ok(PathBuf::from(path));
+        }
+    }
+    std::env::current_exe().context("resolving current executable as the worker binary")
+}
+
+/// Spawn `n` worker processes, run the handshake, and return one
+/// connected endpoint per rank plus the worker PIDs (for shutdown
+/// tests). `worker_bin` resolution: explicit > `BLAZE_WORKER_BIN` env >
+/// the current executable (the `mpirun` model: the driver binary is the
+/// worker binary).
+pub(crate) fn launch_fleet(
+    n: usize,
+    worker_bin: Option<&Path>,
+) -> Result<(Vec<Box<dyn Transport>>, Vec<u32>)> {
+    ensure!(n >= 1, "a tcp fleet needs at least one rank");
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding launcher listener")?;
+    let addr = listener.local_addr()?;
+    let bin = resolve_worker_bin(worker_bin)?;
+
+    let mut children = Vec::with_capacity(n);
+    let mut pids = Vec::with_capacity(n);
+    for i in 0..n {
+        let child = Command::new(&bin)
+            .arg("worker")
+            .arg("--connect")
+            .arg(addr.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker {i} from {}", bin.display()))?;
+        pids.push(child.id());
+        children.push(child);
+    }
+    let fleet = Arc::new(TcpFleet { children: Mutex::new(children) });
+
+    // Accept with a deadline, failing fast if a worker dies during the
+    // handshake (e.g. BLAZE_WORKER_BIN points at a non-blaze binary).
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    let mut streams: Vec<TcpStream> = Vec::with_capacity(n);
+    while streams.len() < n {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true)?;
+                stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+                streams.push(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!("worker handshake timed out: {}/{n} workers connected", streams.len());
+                }
+                let mut children = fleet.children.lock().unwrap();
+                for child in children.iter_mut() {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        bail!(
+                            "worker exited during handshake ({status}) — is {} the blaze CLI?",
+                            bin.display()
+                        );
+                    }
+                }
+                drop(children);
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting worker connection"),
+        }
+    }
+
+    // Hello: rank = accept order; collect each worker's mesh port.
+    let mut mesh_ports = Vec::with_capacity(n);
+    for (rank, stream) in streams.iter_mut().enumerate() {
+        let blob = read_blob(stream).with_context(|| format!("hello from rank{rank}"))?;
+        let mut dec = Decoder::new(&blob);
+        expect_magic(&mut dec, MAGIC_HELLO, "hello")?;
+        mesh_ports.push(dec.get_varint()? as u64);
+    }
+
+    // Assign + mesh ports, then wait for every Ready.
+    for (rank, stream) in streams.iter_mut().enumerate() {
+        let mut fields = vec![rank as u64, n as u64];
+        fields.extend_from_slice(&mesh_ports);
+        write_blob(stream, &tagged(MAGIC_ASSIGN, &fields))?;
+    }
+    for (rank, stream) in streams.iter_mut().enumerate() {
+        let blob = read_blob(stream).with_context(|| format!("ready from rank{rank}"))?;
+        let mut dec = Decoder::new(&blob);
+        expect_magic(&mut dec, MAGIC_READY, "ready")?;
+    }
+
+    let mut endpoints: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    for stream in streams {
+        stream.set_read_timeout(None)?;
+        let reader = stream.try_clone().context("cloning worker stream")?;
+        endpoints.push(Box::new(TcpEndpoint {
+            reader: std::cell::RefCell::new(FrameReader::new(reader)),
+            writer: std::cell::RefCell::new(stream),
+            world: n,
+            _fleet: fleet.clone(),
+        }));
+    }
+    Ok((endpoints, pids))
+}
+
+// --------------------------------------------------------------- worker
+
+/// Entry point of the `blaze worker` subcommand: connect back to the
+/// launcher at `connect`, complete the handshake, then relay frames
+/// until the driver closes the stream (normal shutdown).
+pub fn worker_main(connect: &str) -> Result<()> {
+    let driver = TcpStream::connect(connect)
+        .with_context(|| format!("worker connecting back to launcher at {connect}"))?;
+    driver.set_nodelay(true)?;
+    driver.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+
+    let mesh_listener = TcpListener::bind("127.0.0.1:0").context("binding mesh listener")?;
+    let mesh_port = mesh_listener.local_addr()?.port();
+
+    let mut driver_w = driver.try_clone()?;
+    let mut driver_r = driver;
+    write_blob(&mut driver_w, &tagged(MAGIC_HELLO, &[mesh_port as u64]))?;
+
+    let assign = read_blob(&mut driver_r).context("reading rank assignment")?;
+    let mut dec = Decoder::new(&assign);
+    expect_magic(&mut dec, MAGIC_ASSIGN, "assign")?;
+    let rank = dec.get_varint()? as usize;
+    let world = dec.get_varint()? as usize;
+    let mut mesh_ports = Vec::with_capacity(world);
+    for _ in 0..world {
+        mesh_ports.push(dec.get_varint()? as u16);
+    }
+
+    // Full mesh: initiate to lower ranks, accept from higher ones.
+    let mut peers: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+    for (peer, &port) in mesh_ports.iter().enumerate().take(rank) {
+        let mut stream = TcpStream::connect(("127.0.0.1", port))
+            .with_context(|| format!("rank{rank} connecting to rank{peer} mesh"))?;
+        stream.set_nodelay(true)?;
+        write_blob(&mut stream, &tagged(MAGIC_MESH, &[rank as u64]))?;
+        peers[peer] = Some(stream);
+    }
+    mesh_listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    let mut accepted = 0;
+    while accepted < world - rank - 1 {
+        match mesh_listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true)?;
+                stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+                let hello = read_blob(&mut stream).context("reading mesh hello")?;
+                let mut dec = Decoder::new(&hello);
+                expect_magic(&mut dec, MAGIC_MESH, "mesh hello")?;
+                let from = dec.get_varint()? as usize;
+                ensure!(from < world && peers[from].is_none(), "bad mesh peer rank{from}");
+                stream.set_read_timeout(None)?;
+                peers[from] = Some(stream);
+                accepted += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                ensure!(Instant::now() < deadline, "rank{rank} mesh handshake timed out");
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e).context("accepting mesh connection"),
+        }
+    }
+
+    write_blob(&mut driver_w, &tagged(MAGIC_READY, &[rank as u64]))?;
+    driver_r.set_read_timeout(None)?;
+    run_data_plane(rank, driver_r, driver_w, peers)
+}
+
+/// The worker's steady state: route driver frames to self or mesh
+/// peers, pump mesh-inbound (and self-addressed) frames back up to the
+/// driver. Returns on driver EOF — the process then exits, which is the
+/// fleet's shutdown signal.
+fn run_data_plane(
+    rank: usize,
+    driver_r: TcpStream,
+    driver_w: TcpStream,
+    peers: Vec<Option<TcpStream>>,
+) -> Result<()> {
+    // Unbounded local queue: mesh readers and the router enqueue frames
+    // bound for this rank's driver endpoint; one pump thread writes
+    // them. The always-draining queue is what keeps the relay
+    // deadlock-free under any traffic pattern (kernel-buffer
+    // backpressure is always transient).
+    let (to_driver, inbound) = mpsc::channel::<Vec<u8>>();
+
+    let mut mesh_writers: Vec<Option<TcpStream>> = Vec::with_capacity(peers.len());
+    for peer in peers {
+        match peer {
+            Some(stream) => {
+                let read_half = stream.try_clone()?;
+                mesh_writers.push(Some(stream));
+                let queue = to_driver.clone();
+                thread::spawn(move || {
+                    let mut frames = FrameReader::new(read_half);
+                    while let Ok(Some(body)) = frames.read_frame_body() {
+                        if queue.send(body).is_err() {
+                            break;
+                        }
+                    }
+                    // Peer EOF is normal teardown; our own exit is
+                    // driven by driver EOF on the router below.
+                });
+            }
+            None => mesh_writers.push(None),
+        }
+    }
+
+    thread::spawn(move || {
+        let mut w = driver_w;
+        while let Ok(body) = inbound.recv() {
+            if write_frame_body(&mut w, &body).is_err() {
+                break;
+            }
+        }
+    });
+
+    // Router on the worker's main thread: returning ends the process.
+    let mut frames = FrameReader::new(driver_r);
+    loop {
+        match frames.read_frame_body()? {
+            None => return Ok(()), // driver hung up: normal shutdown
+            Some(body) => {
+                let dst = frame_dst(&body)?;
+                if dst == rank {
+                    if to_driver.send(body).is_err() {
+                        return Ok(());
+                    }
+                } else {
+                    let writer = mesh_writers
+                        .get_mut(dst)
+                        .and_then(|slot| slot.as_mut())
+                        .ok_or_else(|| anyhow!("rank{rank}: frame for unknown rank{dst}"))?;
+                    write_frame_body(writer, &body)
+                        .with_context(|| format!("rank{rank} relaying to rank{dst}"))?;
+                }
+            }
+        }
+    }
+}

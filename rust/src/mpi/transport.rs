@@ -1,0 +1,172 @@
+//! The transport seam beneath [`crate::mpi::Communicator`].
+//!
+//! Everything above this line — collectives, shuffle, the engines — is
+//! written against [`Communicator`]'s send/recv. Everything below it is a
+//! [`Transport`]: the substrate that actually moves a [`Message`] from
+//! one rank's endpoint to another's. Two substrates exist:
+//!
+//! - [`MailboxTransport`] — the original in-process wiring: one unbounded
+//!   mpsc channel per rank, senders shared by every endpoint.
+//! - [`super::tcp`]'s `TcpEndpoint` — length-framed TCP to a spawned
+//!   `blaze worker` process per rank; inter-rank bytes cross a real
+//!   socket mesh between real OS processes.
+//!
+//! The contract is byte-identity: a program must produce bit-identical
+//! results (and virtual clocks) on every transport. The cross-transport
+//! equivalence suite in `tests/integration_transport.rs` pins that.
+//!
+//! [`Communicator`]: super::Communicator
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::datatypes::{Message, Rank};
+
+/// Point-to-point substrate for one rank's endpoint.
+///
+/// Semantics every implementation must provide (the collectives and the
+/// pool's inter-job reset are built on exactly these):
+///
+/// - **Eager, unbounded send.** [`Transport::send`] buffers and returns
+///   without waiting for a matching receive — MPI's eager protocol at
+///   our message sizes. A send may only fail if the destination endpoint
+///   is gone (hung up), never because the destination has not posted a
+///   receive.
+/// - **Blocking, ordered receive.** [`Transport::recv`] blocks for the
+///   next message addressed to this rank. Messages from one source
+///   arrive in the order they were sent (per-pair FIFO); no ordering is
+///   promised across sources. Tag matching and out-of-order buffering
+///   live above the seam, in `Communicator`.
+/// - **Faithful envelopes.** The delivered [`Message`] carries `src`,
+///   `tag`, `epoch` and `clock_ns` bit-exactly as sent — the virtual
+///   clock protocol rides the transport, so byte-identity of results
+///   *and clocks* across transports depends on it.
+/// - **Best-effort drain.** [`Transport::drain`] discards whatever
+///   backlog is locally available without blocking. It need not catch
+///   messages still in flight; the `Communicator`'s epoch filter (bumped
+///   each pooled job) is what makes stragglers harmless.
+///
+/// Implementations must be `Send` (an endpoint moves to its rank's
+/// thread) but are used from exactly one thread at a time, so interior
+/// mutability without locking (e.g. `RefCell`) is fine.
+pub trait Transport: Send {
+    /// Deliver `msg` to rank `dst`'s endpoint. Non-blocking (eager).
+    fn send(&self, dst: Rank, msg: Message) -> Result<()>;
+
+    /// Block for the next message addressed to this rank.
+    fn recv(&self) -> Result<Message>;
+
+    /// Discard any locally-available backlog (inter-job reset).
+    fn drain(&self);
+}
+
+/// Which substrate a universe wires its ranks with. Resolution order
+/// everywhere the selector is threaded (mirroring
+/// [`super::CollectiveAlgo`] and the spill threshold): an explicit
+/// choice beats the `BLAZE_TRANSPORT` environment override beats the
+/// [`TransportKind::Mailbox`] default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TransportKind {
+    /// In-process mpsc mailboxes — ranks are threads, zero copies cross
+    /// a socket. The fast path for tests and single-host runs.
+    #[default]
+    Mailbox,
+    /// Length-framed TCP to spawned `blaze worker` rank processes; every
+    /// inter-rank byte crosses a real socket between real OS processes.
+    Tcp,
+}
+
+impl TransportKind {
+    pub const ALL: [TransportKind; 2] = [TransportKind::Mailbox, TransportKind::Tcp];
+
+    /// The `BLAZE_TRANSPORT` override, or the Mailbox default.
+    /// Unparseable values are ignored (same forgiveness as the
+    /// collective-algo and spill-threshold overrides).
+    pub fn from_env_or_default() -> TransportKind {
+        let env = std::env::var("BLAZE_TRANSPORT").ok();
+        Self::resolve(env.as_deref())
+    }
+
+    /// Resolution with the env value injected — tests exercise the
+    /// precedence without mutating process-global environment.
+    pub(crate) fn resolve(env: Option<&str>) -> TransportKind {
+        env.and_then(|s| s.trim().parse().ok()).unwrap_or_default()
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            TransportKind::Mailbox => "mailbox",
+            TransportKind::Tcp => "tcp",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "mailbox" | "mem" | "in-memory" | "inmemory" => Ok(TransportKind::Mailbox),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(anyhow!("unknown transport {other:?}")),
+        }
+    }
+}
+
+/// The original in-process substrate: one unbounded mpsc channel per
+/// rank; every endpoint holds the full sender table.
+pub struct MailboxTransport {
+    senders: Arc<Vec<Sender<Message>>>,
+    rx: Receiver<Message>,
+}
+
+impl MailboxTransport {
+    pub(crate) fn new(senders: Arc<Vec<Sender<Message>>>, rx: Receiver<Message>) -> Self {
+        MailboxTransport { senders, rx }
+    }
+}
+
+impl Transport for MailboxTransport {
+    fn send(&self, dst: Rank, msg: Message) -> Result<()> {
+        self.senders
+            .get(dst.0)
+            .ok_or_else(|| anyhow!("send to {dst} outside universe of {}", self.senders.len()))?
+            .send(msg)
+            .map_err(|_| anyhow!("{dst} has hung up"))
+    }
+
+    fn recv(&self) -> Result<Message> {
+        self.rx.recv().map_err(|_| anyhow!("universe torn down mid-recv"))
+    }
+
+    fn drain(&self) {
+        while self.rx.try_recv().is_ok() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parse_display_roundtrip() {
+        for kind in TransportKind::ALL {
+            assert_eq!(kind.to_string().parse::<TransportKind>().unwrap(), kind);
+        }
+        assert_eq!("TCP".parse::<TransportKind>().unwrap(), TransportKind::Tcp);
+        assert_eq!("mem".parse::<TransportKind>().unwrap(), TransportKind::Mailbox);
+        assert!("quic".parse::<TransportKind>().is_err());
+    }
+
+    #[test]
+    fn transport_resolution_env_beats_default() {
+        assert_eq!(TransportKind::resolve(None), TransportKind::Mailbox);
+        assert_eq!(TransportKind::resolve(Some("tcp")), TransportKind::Tcp);
+        assert_eq!(TransportKind::resolve(Some("bogus")), TransportKind::Mailbox);
+    }
+}

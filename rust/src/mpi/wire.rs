@@ -1,0 +1,213 @@
+//! Length-framed wire codec for transport frames.
+//!
+//! One frame = `u32`-LE body length followed by a serial-codec body
+//! (varint `dst`, `src`, `tag`, `epoch`, `clock_ns`, then the
+//! length-prefixed payload). The body reuses the same [`crate::serial`]
+//! block codec every spill run and shuffle payload already uses, so the
+//! socket format is the store format: a frame body is decodable with the
+//! same `Decoder` the rest of the system speaks.
+//!
+//! [`FrameReader`] is the stream side: it tolerates arbitrarily chunked
+//! reads (a `read` may return one byte at a time), reports a clean EOF at
+//! a frame boundary as `Ok(None)`, and turns a torn frame — EOF inside a
+//! header or body — into an error rather than a panic or a silent
+//! truncation. The property suite in `tests/prop_invariants.rs` drives it
+//! with adversarial split points.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::serial::{Decoder, Encoder};
+
+use super::datatypes::{Message, Rank, Tag};
+
+/// Upper bound on a frame body — a sanity cap against corrupt or
+/// malicious length prefixes, far above any payload the system ships.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// A decoded transport frame: a [`Message`] plus its destination rank
+/// (the wire needs routing; the in-process mailboxes do not).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireFrame {
+    pub dst: Rank,
+    pub src: Rank,
+    pub tag: Tag,
+    pub epoch: u64,
+    pub clock_ns: u64,
+    pub payload: Vec<u8>,
+}
+
+impl WireFrame {
+    /// Wrap an outbound [`Message`] with its destination.
+    pub fn from_message(dst: Rank, msg: Message) -> Self {
+        WireFrame {
+            dst,
+            src: msg.src,
+            tag: msg.tag,
+            epoch: msg.epoch,
+            clock_ns: msg.clock_ns,
+            payload: msg.payload,
+        }
+    }
+
+    /// Strip the routing envelope back off.
+    pub fn into_message(self) -> Message {
+        Message {
+            src: self.src,
+            tag: self.tag,
+            epoch: self.epoch,
+            clock_ns: self.clock_ns,
+            payload: self.payload,
+        }
+    }
+}
+
+/// Encode a frame: length prefix + serial body.
+pub fn encode_frame(frame: &WireFrame) -> Vec<u8> {
+    let mut body = Encoder::with_capacity(frame.payload.len() + 40);
+    body.put_varint(frame.dst.0 as u64);
+    body.put_varint(frame.src.0 as u64);
+    body.put_varint(frame.tag.0);
+    body.put_varint(frame.epoch);
+    body.put_varint(frame.clock_ns);
+    body.put_bytes(&frame.payload);
+    let body = body.into_bytes();
+    let mut out = Vec::with_capacity(body.len() + 4);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode a frame body (the bytes after the length prefix).
+pub fn decode_frame(body: &[u8]) -> Result<WireFrame> {
+    let mut dec = Decoder::new(body);
+    let dst = Rank(usize::try_from(dec.get_varint()?).context("frame dst overflows usize")?);
+    let src = Rank(usize::try_from(dec.get_varint()?).context("frame src overflows usize")?);
+    let tag = Tag(dec.get_varint()?);
+    let epoch = dec.get_varint()?;
+    let clock_ns = dec.get_varint()?;
+    let payload = dec.get_bytes()?.to_vec();
+    dec.finish().context("trailing bytes after frame payload")?;
+    Ok(WireFrame { dst, src, tag, epoch, clock_ns, payload })
+}
+
+/// Peek the destination rank of an encoded frame body without decoding
+/// the rest — the worker relay routes on this.
+pub fn frame_dst(body: &[u8]) -> Result<usize> {
+    let mut dec = Decoder::new(body);
+    usize::try_from(dec.get_varint()?).context("frame dst overflows usize")
+}
+
+/// Write one encoded frame (length prefix + body) to `w`.
+pub fn write_frame(w: &mut impl Write, frame: &WireFrame) -> Result<()> {
+    w.write_all(&encode_frame(frame))?;
+    Ok(())
+}
+
+/// Write a frame whose body is already encoded — the relay fast path.
+pub fn write_frame_body(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+/// Incremental frame reader over any [`Read`]: loops partial reads until
+/// a whole frame is in hand.
+pub struct FrameReader<R> {
+    inner: R,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R) -> Self {
+        FrameReader { inner }
+    }
+
+    /// Next raw frame body, or `Ok(None)` on clean EOF at a frame
+    /// boundary. EOF mid-header or mid-body is a torn frame: an error.
+    pub fn read_frame_body(&mut self) -> Result<Option<Vec<u8>>> {
+        let mut header = [0u8; 4];
+        if !self.fill(&mut header, "frame header")? {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(header) as usize;
+        ensure!(len <= MAX_FRAME_BYTES, "frame length {len} exceeds cap {MAX_FRAME_BYTES}");
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            let full = self.fill(&mut body, "frame body")?;
+            ensure!(full, "torn frame: EOF at start of {len}-byte body");
+        }
+        Ok(Some(body))
+    }
+
+    /// Next decoded frame, or `Ok(None)` on clean EOF.
+    pub fn read_frame(&mut self) -> Result<Option<WireFrame>> {
+        match self.read_frame_body()? {
+            Some(body) => decode_frame(&body).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    /// Fill `buf` completely. `Ok(false)` = clean EOF before the first
+    /// byte; EOF after a partial fill is a torn frame and errors.
+    fn fill(&mut self, buf: &mut [u8], what: &str) -> Result<bool> {
+        let mut got = 0;
+        while got < buf.len() {
+            match self.inner.read(&mut buf[got..]) {
+                Ok(0) => {
+                    if got == 0 {
+                        return Ok(false);
+                    }
+                    bail!("torn frame: EOF after {got} of {} {what} bytes", buf.len());
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(payload: Vec<u8>) -> WireFrame {
+        WireFrame { dst: Rank(3), src: Rank(1), tag: Tag::user(9), epoch: 2, clock_ns: 77, payload }
+    }
+
+    #[test]
+    fn roundtrip_including_empty_payload() {
+        for payload in [vec![], vec![0xAB; 1], vec![7; 65_536]] {
+            let f = frame(payload);
+            let bytes = encode_frame(&f);
+            let mut reader = FrameReader::new(&bytes[..]);
+            assert_eq!(reader.read_frame().unwrap().unwrap(), f);
+            assert!(reader.read_frame().unwrap().is_none(), "clean EOF after one frame");
+        }
+    }
+
+    #[test]
+    fn frame_dst_matches_full_decode() {
+        let f = frame(vec![1, 2, 3]);
+        let bytes = encode_frame(&f);
+        assert_eq!(frame_dst(&bytes[4..]).unwrap(), f.dst.0);
+    }
+
+    #[test]
+    fn torn_header_and_torn_body_are_errors() {
+        let bytes = encode_frame(&frame(vec![5; 32]));
+        for cut in [1, 3, 4, bytes.len() - 1] {
+            let mut reader = FrameReader::new(&bytes[..cut]);
+            assert!(reader.read_frame().is_err(), "cut at {cut} must be a torn frame");
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut bytes = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0; 8]);
+        assert!(FrameReader::new(&bytes[..]).read_frame().is_err());
+    }
+}

@@ -290,6 +290,44 @@ fn hierarchical_alltoallv_coalesces_cross_node_traffic() {
 }
 
 #[test]
+fn hierarchical_leader_staging_is_charged_to_peak_accounting() {
+    // PR 4 follow-up: the node leader transiently buffers its node's
+    // whole inbound round under Hierarchical alltoallv (the
+    // locality-for-memory trade). With a tracker attached, that staging
+    // must show up in the peak — and only on leaders, and only
+    // transiently (current returns to zero).
+    use blaze_rs::metrics::PeakTracker;
+
+    let exchange = |c: &blaze_rs::mpi::Communicator| {
+        let tracker = PeakTracker::new();
+        c.set_memory_tracker(Some(tracker.clone()));
+        let bufs: Vec<Vec<u8>> = (0..c.size()).map(|_| vec![0xAB; 1024]).collect();
+        let got = c.alltoallv(bufs).unwrap();
+        c.set_memory_tracker(None);
+        assert!(got.iter().all(|b| b.len() == 1024), "transpose intact");
+        (tracker.peak_bytes(), tracker.current_bytes())
+    };
+
+    // Width 16 on block(4,4): leaders are ranks 0, 4, 8, 12; each
+    // stages 12 remote bundles of 4 x 1 KiB pairs (plus framing).
+    let hier = pool(CollectiveAlgo::Hierarchical);
+    for (rank, (peak, current)) in hier.run(exchange).into_iter().enumerate() {
+        assert_eq!(current, 0, "rank {rank}: staging must be freed after the scatter");
+        if rank % 4 == 0 {
+            assert!(peak >= 12 * 1024, "leader {rank} staged only {peak} bytes");
+        } else {
+            assert_eq!(peak, 0, "non-leader {rank} must stage nothing");
+        }
+    }
+
+    // Pairwise exchanges (Star/Tree) stage nothing anywhere.
+    let star = pool(CollectiveAlgo::Star);
+    for (rank, (peak, current)) in star.run(exchange).into_iter().enumerate() {
+        assert_eq!((peak, current), (0, 0), "rank {rank}: pairwise alltoallv must not stage");
+    }
+}
+
+#[test]
 fn equivalence_holds_across_engine_jobs_on_warm_pools() {
     // End-to-end: the same wordcount on one warm pool per algorithm (the
     // pools model the SAME cluster shape apart from the algo) must give

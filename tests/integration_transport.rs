@@ -1,0 +1,246 @@
+//! The cross-transport byte-identity suite (ISSUE 7 acceptance): the
+//! in-memory mailbox transport and the real-TCP transport (spawned
+//! `blaze worker` rank processes, full socket mesh) must be
+//! **indistinguishable** above the [`blaze_rs::mpi::Transport`] seam —
+//! every collective, at randomized widths 1..=16 with skewed payloads
+//! and subset-width jobs on warm pools, must produce byte-identical
+//! results, byte-identical virtual clocks, and identical traffic
+//! deltas under every collective algorithm. Plus the deployment-shaped
+//! checks: a classic-mode wordcount over TCP equals the mailbox run
+//! pair for pair, and dropping a TCP pool leaves no orphan worker
+//! processes behind.
+//!
+//! The TCP pools here are real: each one spawns 16 `blaze worker`
+//! processes (via `CARGO_BIN_EXE_blaze`) wired into a full TCP mesh, so
+//! every property case below pushes its payloads through actual kernel
+//! sockets. Pools are shared across tests through a `OnceLock` to bound
+//! the process count at three fleets.
+
+use std::sync::OnceLock;
+
+use blaze_rs::cluster::{ClusterConfig, NetworkModel};
+use blaze_rs::core::{MapReduceJob, ReductionMode};
+use blaze_rs::mpi::{CollectiveAlgo, Rank, RankPool, Topology, TransportKind, Universe};
+use blaze_rs::util::prop::{for_all, vec_of};
+use blaze_rs::util::rng::Rng;
+
+/// 4 nodes x 4 slots — same shape as the collective-equivalence suite:
+/// real trees, multi-rank nodes for the hierarchical leader paths.
+const POOL_RANKS: usize = 16;
+
+fn worker_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_blaze")
+}
+
+fn pool(algo: CollectiveAlgo, transport: TransportKind) -> RankPool {
+    RankPool::new(
+        Universe::new(Topology::block(4, 4), NetworkModel::free())
+            .with_collective_algo(algo)
+            .with_transport(transport)
+            .with_worker_binary(worker_bin()),
+    )
+}
+
+/// One warm (mailbox, tcp) pool pair per collective algorithm, shared
+/// by every test in this file so the suite runs three 16-worker fleets
+/// total, not one per property case. The statics are never dropped;
+/// workers exit on driver-socket EOF when the test process does.
+fn pools() -> &'static [(CollectiveAlgo, RankPool, RankPool)] {
+    static POOLS: OnceLock<Vec<(CollectiveAlgo, RankPool, RankPool)>> = OnceLock::new();
+    POOLS.get_or_init(|| {
+        CollectiveAlgo::ALL
+            .iter()
+            .map(|a| (*a, pool(*a, TransportKind::Mailbox), pool(*a, TransportKind::Tcp)))
+            .collect()
+    })
+}
+
+/// A skewed payload: log-uniform length up to `max` random bytes.
+fn payload(r: &mut Rng, max: usize) -> Vec<u8> {
+    vec_of(r, max, |r| r.next_u64() as u8)
+}
+
+#[test]
+fn prop_every_collective_byte_identical_across_transports() {
+    // One SPMD program exercising every collective — bcast, gather,
+    // allgather, allreduce (a non-commutative fold to pin rank order),
+    // alltoallv, exscan, barrier — at a random width per case on the
+    // warm pools. For each algorithm the TCP run must match the mailbox
+    // run on results, per-rank virtual clocks (frames carry sender
+    // clocks bit-exactly), and the job's traffic delta.
+    let pools = pools();
+    for_all(
+        "collectives over tcp == over mailboxes, results + clocks + traffic",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            let root = r.below(width as u64) as usize;
+            let per_rank: Vec<Vec<u8>> = (0..width).map(|_| payload(r, 700)).collect();
+            let matrix: Vec<Vec<Vec<u8>>> =
+                (0..width).map(|_| (0..width).map(|_| payload(r, 300)).collect()).collect();
+            (width, root, per_rank, matrix)
+        },
+        |(width, root, per_rank, matrix)| {
+            let job = |c: &blaze_rs::mpi::Communicator| {
+                let me = c.rank().0;
+                let v = if me == *root { per_rank[*root].clone() } else { Vec::new() };
+                let b = c.bcast(Rank(*root), v).unwrap();
+                let g = c.gather(Rank(*root), per_rank[me].clone()).unwrap();
+                let ag = c.allgather(per_rank[me].clone()).unwrap();
+                let cat = c.allreduce(format!("r{me};"), |a, b| a + &b).unwrap();
+                let a2a = c.alltoallv(matrix[me].clone()).unwrap();
+                let ex = c.exscan_sum(me as u64 + 1).unwrap();
+                c.barrier().unwrap();
+                (b, g, ag, cat, a2a, ex)
+            };
+            pools.iter().all(|(algo, mailbox, tcp)| {
+                let m = mailbox.run_job(*width, job);
+                let t = tcp.run_job(*width, job);
+                assert_eq!(m.results, t.results, "{algo}: results diverged across transports");
+                assert_eq!(m.clocks, t.clocks, "{algo}: virtual clocks diverged");
+                assert_eq!(m.traffic, t.traffic, "{algo}: traffic delta diverged");
+                // Sanity against ground truth, not just cross-equality.
+                m.results.iter().all(|(b, _, ag, _, _, _)| {
+                    b == &per_rank[*root] && ag == per_rank
+                }) && m.results.iter().enumerate().all(|(dst, (_, _, _, _, a2a, _))| {
+                    a2a.iter().enumerate().all(|(src, buf)| buf == &matrix[src][dst])
+                })
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_subset_width_sequences_stay_aligned_on_warm_tcp_pools() {
+    // Multi-round mixed sequences at varying widths, repeatedly
+    // submitted to the same warm fleets: any stale frame leaking across
+    // pooled jobs through the worker mesh (the epoch filter's job), or
+    // any tag misalignment, diverges or deadlocks here.
+    let pools = pools();
+    for_all(
+        "mixed sequences: tcp == mailbox at any width, round count",
+        |r| {
+            let width = 1 + r.below(POOL_RANKS as u64) as usize;
+            let rounds = 1 + r.below(4);
+            (width, rounds, payload(r, 200))
+        },
+        |(width, rounds, data)| {
+            let job = |c: &blaze_rs::mpi::Communicator| {
+                let mut acc = 0u64;
+                let mut blob = Vec::new();
+                for round in 0..*rounds {
+                    acc = acc
+                        .wrapping_add(c.allreduce_sum_u64(c.rank().0 as u64 + round).unwrap());
+                    let v = if c.is_root() { data.clone() } else { Vec::new() };
+                    blob = c.bcast(Rank::ROOT, v).unwrap();
+                    c.barrier().unwrap();
+                }
+                (acc, blob)
+            };
+            pools.iter().all(|(_, mailbox, tcp)| {
+                let m = mailbox.run_job(*width, job);
+                let t = tcp.run_job(*width, job);
+                m.results == t.results && m.clocks == t.clocks && m.traffic == t.traffic
+            })
+        },
+    );
+}
+
+#[test]
+fn wordcount_classic_over_tcp_matches_mailbox_pair_for_pair() {
+    // The end-to-end pin: a classic-mode (full shuffle) wordcount on a
+    // TCP-backed pool must equal the mailbox run — same counts, same
+    // modeled shuffle bytes and message counts — and both must equal
+    // the serial truth. Only host_wall_ms (real time) may differ.
+    let lines: Vec<String> =
+        (0..300).map(|i| format!("w{} w{} w{} shared", i % 23, i % 7, i % 3)).collect();
+    let truth = blaze_rs::apps::wordcount::count_serial(&lines);
+    let wc_map = |line: &String, emit: &mut dyn FnMut(String, u64)| {
+        for w in line.split_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    };
+
+    let mut runs = Vec::new();
+    for transport in TransportKind::ALL {
+        let cluster = ClusterConfig::builder()
+            .nodes(2)
+            .slots_per_node(2)
+            .seed(7)
+            .transport(transport)
+            .worker_binary(worker_bin())
+            .build();
+        let pool = RankPool::from_config(&cluster);
+        assert_eq!(pool.transport_kind(), transport);
+        let out = MapReduceJob::new(&cluster, &lines)
+            .with_mode(ReductionMode::Classic)
+            .with_pool(&pool)
+            .run_monoid(wc_map, |a: u64, b: u64| a + b)
+            .unwrap();
+        assert_eq!(out.result, truth, "{transport} diverged from serial truth");
+        runs.push((transport, out));
+    }
+
+    let (_, mailbox) = &runs[0];
+    let (_, tcp) = &runs[1];
+    assert_eq!(mailbox.result, tcp.result, "classic wordcount differs across transports");
+    let modeled = |s: &blaze_rs::core::JobStats| {
+        (s.shuffle_bytes, s.messages, s.remote_messages, s.remote_bytes, s.spilled_bytes)
+    };
+    assert_eq!(
+        modeled(&mailbox.stats),
+        modeled(&tcp.stats),
+        "modeled traffic differs across transports"
+    );
+}
+
+#[test]
+fn tcp_pool_runs_real_worker_processes_and_reaps_them_on_drop() {
+    // The clean-shutdown pin: a TCP pool is backed by real spawned
+    // processes (distinct PIDs, all alive while the pool runs) and
+    // dropping the pool leaves no orphans — every worker exits on
+    // driver-socket EOF and is reaped by the fleet.
+    let alive = |pid: u32| unsafe { libc::kill(pid as i32, 0) } == 0;
+
+    let pool = pool(CollectiveAlgo::Tree, TransportKind::Tcp);
+    let pids: Vec<u32> = pool.worker_pids().to_vec();
+    assert_eq!(pids.len(), POOL_RANKS, "one worker process per rank");
+    let me = std::process::id();
+    for &pid in &pids {
+        assert_ne!(pid, me, "workers must be separate processes");
+        assert!(alive(pid), "worker {pid} should be alive while the pool runs");
+    }
+    // The fleet is functional, not just spawned.
+    assert_eq!(pool.run(|c| c.allreduce_sum_u64(1).unwrap()), vec![POOL_RANKS as u64; POOL_RANKS]);
+
+    drop(pool);
+    for &pid in &pids {
+        assert!(!alive(pid), "worker {pid} orphaned after pool drop");
+    }
+
+    // Mailbox pools spawn nothing.
+    assert!(RankPool::local(4).worker_pids().is_empty());
+}
+
+#[test]
+fn point_to_point_and_pending_buffering_work_over_tcp() {
+    // Below the collectives: raw send/recv with out-of-order tags and
+    // recv_any, pushed through the worker mesh.
+    let pool = &pools()[0].2; // star, tcp
+    let got = pool.run_on(3, |c| {
+        use blaze_rs::mpi::Tag;
+        let me = c.rank().0;
+        let next = Rank((me + 1) % 3);
+        let prev = Rank((me + 2) % 3);
+        // Two tags sent in one order, received in the other.
+        c.send(next, Tag::user(1), vec![me as u8; 5]).unwrap();
+        c.send(next, Tag::user(2), vec![me as u8; 9]).unwrap();
+        let b = c.recv(prev, Tag::user(2)).unwrap();
+        let a = c.recv(prev, Tag::user(1)).unwrap();
+        (a, b)
+    });
+    for (me, (a, b)) in got.iter().enumerate() {
+        let prev = (me + 2) % 3;
+        assert_eq!(a, &vec![prev as u8; 5]);
+        assert_eq!(b, &vec![prev as u8; 9]);
+    }
+}

@@ -1,6 +1,7 @@
 //! Property-based tests (in-tree runner: `blaze_rs::util::prop`) on the
-//! framework's core invariants: codec roundtrips, router determinism,
-//! rebalance leveling, partitioner tiling, JSON/TOML roundtrips, and
+//! framework's core invariants: codec roundtrips, transport wire-frame
+//! framing under adversarial reads, router determinism, rebalance
+//! leveling, partitioner tiling, JSON/TOML roundtrips, and
 //! engine-vs-serial equivalence on random inputs.
 
 use std::collections::HashMap;
@@ -9,7 +10,7 @@ use blaze_rs::cluster::ClusterConfig;
 use blaze_rs::core::ReductionMode;
 use blaze_rs::dist::{rebalance_plan, ShardRouter};
 use blaze_rs::serial::{from_bytes, to_bytes, FastSerialize};
-use blaze_rs::util::prop::{for_all, string, vec_of};
+use blaze_rs::util::prop::{for_all, size, string, vec_of};
 use blaze_rs::util::rng::Rng;
 use blaze_rs::util::Json;
 
@@ -545,6 +546,129 @@ fn prop_checkpoint_roundtrip_restores_onto_any_width() {
                 && r.items == want.len() as u64
                 && (r.from_ranks, r.to_ranks) == (*p, *p2)
                 && r.epoch == u64::from(p != p2)
+        },
+    );
+}
+
+/// A reader that hands back the stream in pseudo-random slivers — the
+/// adversarial-chunking harness for the transport frame codec (a TCP
+/// `read` may return any number of bytes at any boundary).
+struct ChunkedReader {
+    data: Vec<u8>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl std::io::Read for ChunkedReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos == self.data.len() {
+            return Ok(0);
+        }
+        let left = self.data.len() - self.pos;
+        let n = (1 + self.rng.below(97) as usize).min(left).min(buf.len());
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn random_wire_frame(r: &mut Rng) -> blaze_rs::mpi::wire::WireFrame {
+    use blaze_rs::mpi::{Rank, Tag};
+    // Cover the edges deliberately: empty payloads, typical shuffle
+    // pairs, and bodies larger than the store's 16 KiB block cap.
+    let len = match r.below(3) {
+        0 => 0,
+        1 => size(r, 700),
+        _ => (16 << 10) + 1 + size(r, 112 << 10),
+    };
+    blaze_rs::mpi::wire::WireFrame {
+        dst: Rank(r.below(16) as usize),
+        src: Rank(r.below(16) as usize),
+        tag: Tag::user(r.below(1 << 20) as u32),
+        epoch: r.below(1 << 20),
+        clock_ns: r.next_u64() >> 16,
+        payload: (0..len).map(|_| r.next_u64() as u8).collect(),
+    }
+}
+
+#[test]
+fn prop_wire_frames_roundtrip_under_adversarial_chunked_reads() {
+    use blaze_rs::mpi::wire::{encode_frame, frame_dst, FrameReader};
+    for_all(
+        "wire frames survive any read chunking; clean EOF at the boundary",
+        |r| {
+            let frames: Vec<_> = (0..1 + r.below(3)).map(|_| random_wire_frame(r)).collect();
+            (frames, r.next_u64())
+        },
+        |(frames, chunk_seed)| {
+            let mut stream = Vec::new();
+            for f in frames {
+                let encoded = encode_frame(f);
+                // The relay's routing peek must agree with a full decode.
+                if frame_dst(&encoded[4..]).unwrap() != f.dst.0 {
+                    return false;
+                }
+                stream.extend_from_slice(&encoded);
+            }
+            let mut reader = FrameReader::new(ChunkedReader {
+                data: stream,
+                pos: 0,
+                rng: Rng::with_stream(*chunk_seed, 0x51),
+            });
+            for want in frames {
+                match reader.read_frame() {
+                    Ok(Some(got)) if got == *want => {}
+                    _ => return false,
+                }
+            }
+            matches!(reader.read_frame(), Ok(None))
+        },
+    );
+}
+
+#[test]
+fn prop_torn_wire_frames_error_never_truncate_silently() {
+    use blaze_rs::mpi::wire::{encode_frame, FrameReader};
+    for_all(
+        "a mid-frame cut is an error, frames before the cut still decode",
+        |r| {
+            let frames: Vec<_> = (0..1 + r.below(3)).map(|_| random_wire_frame(r)).collect();
+            let lens: Vec<usize> = frames.iter().map(|f| encode_frame(f).len()).collect();
+            let total: usize = lens.iter().sum();
+            // A cut strictly inside the stream, nudged off frame
+            // boundaries (a boundary cut is a *clean* EOF by design).
+            let mut cut = 1 + r.below(total as u64 - 1) as usize;
+            let mut boundary = 0;
+            for len in &lens {
+                boundary += len;
+                if cut == boundary {
+                    cut += 1;
+                    break;
+                }
+            }
+            (frames, cut)
+        },
+        |(frames, cut)| {
+            let mut stream = Vec::new();
+            for f in frames {
+                stream.extend_from_slice(&encode_frame(f));
+            }
+            stream.truncate(*cut);
+            let mut reader = FrameReader::new(&stream[..]);
+            // Whole frames before the cut decode intact...
+            let mut end = 0;
+            for f in frames {
+                end += encode_frame(f).len();
+                if end > *cut {
+                    break;
+                }
+                match reader.read_frame() {
+                    Ok(Some(got)) if got == *f => {}
+                    _ => return false,
+                }
+            }
+            // ...and the torn tail is a loud error, never Ok(None).
+            reader.read_frame().is_err()
         },
     );
 }
