@@ -45,10 +45,7 @@ fn main() -> anyhow::Result<()> {
     for (word, count) in counts.iter().take(5) {
         println!("  {count:>3}  {word}");
     }
-    println!(
-        "\nstats: modeled {:.2} ms | {} msgs, {} shuffle bytes | peak mem {} B",
-        out.stats.modeled_ms, out.stats.messages, out.stats.shuffle_bytes, out.stats.peak_mem_bytes
-    );
+    println!("\n{}", out.stats.summary());
 
     // Same job, helper wrapper:
     let again = wordcount::run(&cluster, &lines, ReductionMode::Delayed)?;

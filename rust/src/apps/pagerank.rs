@@ -179,6 +179,10 @@ pub struct DistPageRankResult {
     /// Checkpoint restores performed after injected kills (empty for a
     /// fault-free run).
     pub recoveries: Vec<RecoveryStats>,
+    /// Spans the session's waves recorded (empty unless [`crate::trace`]
+    /// tracing was enabled around the run) — merge with the driver's own
+    /// buffer via [`crate::trace::JobTrace::merge`].
+    pub trace: Vec<crate::trace::SpanEvent>,
 }
 
 /// PageRank on the in-memory iterative engine ([`IterativeJob`]): every
@@ -217,7 +221,7 @@ pub fn run_dist(
         apply_resizes(elastic, resizes, it)?;
         total = step_once(&mut job, elastic, base, damping, total)?;
     }
-    Ok(finish(job, elastic, n, iterations, total, wall, Vec::new(), Vec::new(), Vec::new(), Vec::new()))
+    Ok(finish(job, elastic, n, iterations, total, wall, Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new()))
 }
 
 /// PageRank that survives the cluster's [`crate::cluster::FaultPlan`]:
@@ -249,6 +253,7 @@ pub fn run_dist_faulty(
     let mut migrations: Vec<MigrationStats> = Vec::new();
     let mut checkpoints: Vec<CheckpointStats> = Vec::new();
     let mut recoveries: Vec<RecoveryStats> = Vec::new();
+    let mut banked_trace: Vec<crate::trace::SpanEvent> = Vec::new();
     let mut total = 1.0f64;
     let mut it = 0;
     while it < iterations {
@@ -263,6 +268,7 @@ pub fn run_dist_faulty(
                 history.extend(job.per_iteration().iter().cloned());
                 migrations.extend(job.migrations().iter().cloned());
                 checkpoints.extend(job.checkpoints().iter().cloned());
+                banked_trace.extend(job.take_trace());
                 elastic.kill_and_replace(replace_delta)?;
                 job = match IterativeJob::recover_from(elastic, &store)? {
                     Some(recovered) => {
@@ -284,7 +290,7 @@ pub fn run_dist_faulty(
             Err(e) => return Err(e),
         }
     }
-    Ok(finish(job, elastic, n, iterations, total, wall, history, migrations, checkpoints, recoveries))
+    Ok(finish(job, elastic, n, iterations, total, wall, history, migrations, checkpoints, recoveries, banked_trace))
 }
 
 fn load_job(elastic: &ElasticCluster, graph: &Graph) -> IterativeJob<u32, PrState> {
@@ -328,7 +334,7 @@ fn step_once(
 
 #[allow(clippy::too_many_arguments)]
 fn finish(
-    job: IterativeJob<u32, PrState>,
+    mut job: IterativeJob<u32, PrState>,
     elastic: &ElasticCluster,
     n: usize,
     iterations: usize,
@@ -338,6 +344,7 @@ fn finish(
     mut migrations: Vec<MigrationStats>,
     mut checkpoints: Vec<CheckpointStats>,
     recoveries: Vec<RecoveryStats>,
+    mut banked_trace: Vec<crate::trace::SpanEvent>,
 ) -> DistPageRankResult {
     let mut ranks = vec![0.0f64; n];
     job.for_each_state(|&u, state| ranks[u as usize] = state.1 / total);
@@ -361,6 +368,7 @@ fn finish(
     history.extend(job.per_iteration().iter().cloned());
     migrations.extend(job.migrations().iter().cloned());
     checkpoints.extend(job.checkpoints().iter().cloned());
+    banked_trace.extend(job.take_trace());
     stats.startup_ms = elastic.config().deployment.profile().startup_ms as f64;
     stats.host_wall_ms = wall.elapsed().as_secs_f64() * 1e3;
     DistPageRankResult {
@@ -371,6 +379,7 @@ fn finish(
         migrations,
         checkpoints,
         recoveries,
+        trace: banked_trace,
     }
 }
 

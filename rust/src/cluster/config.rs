@@ -20,6 +20,7 @@ use std::path::PathBuf;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::mpi::{CollectiveAlgo, TransportKind};
+use crate::trace::TraceConfig;
 use crate::util::toml_mini::TomlDoc;
 
 use super::deployment::DeploymentKind;
@@ -60,6 +61,9 @@ pub struct ClusterConfig {
     /// Worker binary for the TCP transport (explicit beats the
     /// `BLAZE_WORKER_BIN` env beats the current executable).
     pub worker_bin: Option<PathBuf>,
+    /// Explicit tracing configuration, if pinned (see
+    /// [`ClusterConfig::trace`] for the resolution order).
+    pub trace: Option<TraceConfig>,
     pub limits: Limits,
 }
 
@@ -89,6 +93,7 @@ impl ClusterConfig {
             collective_algo: None,
             transport: None,
             worker_bin: None,
+            trace: None,
             limits: Limits::default(),
         };
         for (section, entries) in doc.sections() {
@@ -129,6 +134,14 @@ impl ClusterConfig {
                             value.as_str().with_context(|| format!("{key}: expected string"))?,
                         ));
                     }
+                    ("", "trace") => {
+                        cfg.trace = Some(
+                            value
+                                .as_str()
+                                .with_context(|| format!("{key}: expected string"))?
+                                .parse()?,
+                        );
+                    }
                     ("limits", "mem-fraction") => {
                         cfg.limits.mem_fraction =
                             value.as_float().with_context(|| format!("{key}: expected float"))?;
@@ -158,8 +171,12 @@ impl ClusterConfig {
             Some(p) => format!("worker-bin = \"{}\"\n", p.display()),
             None => String::new(),
         };
+        let trace = match &self.trace {
+            Some(t) => format!("trace = \"{t}\"\n"),
+            None => String::new(),
+        };
         format!(
-            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n{algo}{transport}{worker_bin}\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
+            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n{algo}{transport}{worker_bin}{trace}\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
             self.deployment,
             self.nodes,
             self.slots_per_node,
@@ -266,6 +283,26 @@ impl ClusterConfig {
             None => TransportKind::resolve(env),
         }
     }
+
+    /// Tracing configuration for this cluster's jobs. Precedence
+    /// (mirroring [`ClusterConfig::transport`]): an explicit `trace`
+    /// field, then the `BLAZE_TRACE` environment override (the trace CI
+    /// leg runs the whole suite with it set to `1`), then
+    /// [`TraceConfig::Off`].
+    pub fn trace(&self) -> TraceConfig {
+        let env = std::env::var("BLAZE_TRACE").ok();
+        self.resolve_trace(env.as_deref())
+    }
+
+    /// Resolution with the env override injected — tests exercise the
+    /// precedence without mutating process-global environment (setenv
+    /// races getenv across test threads).
+    fn resolve_trace(&self, env: Option<&str>) -> TraceConfig {
+        match &self.trace {
+            Some(t) => t.clone(),
+            None => env.and_then(|s| s.trim().parse().ok()).unwrap_or_default(),
+        }
+    }
 }
 
 /// Builder for [`ClusterConfig`]. `ranks(n)` is shorthand for n single-slot
@@ -280,6 +317,7 @@ pub struct ClusterConfigBuilder {
     collective_algo: Option<CollectiveAlgo>,
     transport: Option<TransportKind>,
     worker_bin: Option<PathBuf>,
+    trace: Option<TraceConfig>,
     limits: Option<Limits>,
 }
 
@@ -329,6 +367,21 @@ impl ClusterConfigBuilder {
         self
     }
 
+    /// Pin the tracing configuration (beats the `BLAZE_TRACE` env
+    /// override).
+    pub fn trace(mut self, trace: TraceConfig) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Record spans and export the merged job trace as Chrome
+    /// trace-event JSON to `path` — shorthand for
+    /// `.trace(TraceConfig::Export(path))`.
+    pub fn trace_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace = Some(TraceConfig::Export(path.into()));
+        self
+    }
+
     pub fn mem_fraction(mut self, f: f64) -> Self {
         self.limits.get_or_insert_with(Limits::default).mem_fraction = f;
         self
@@ -348,6 +401,7 @@ impl ClusterConfigBuilder {
             collective_algo: self.collective_algo,
             transport: self.transport,
             worker_bin: self.worker_bin,
+            trace: self.trace,
             limits: self.limits.unwrap_or_default(),
         };
         cfg.validate().expect("builder produced invalid config");
@@ -450,6 +504,30 @@ mod tests {
             TransportKind::Tcp,
             "explicit beats env"
         );
+    }
+
+    #[test]
+    fn toml_roundtrip_with_trace() {
+        let c = ClusterConfig::builder().nodes(2).trace_path("/tmp/job.trace.json").build();
+        let text = c.to_toml_string();
+        assert!(text.contains("trace = \"/tmp/job.trace.json\""), "{text}");
+        assert_eq!(ClusterConfig::from_toml_str(&text).unwrap(), c);
+        let on = ClusterConfig::from_toml_str("trace = \"on\"\n").unwrap();
+        assert_eq!(on.trace, Some(TraceConfig::Record));
+    }
+
+    #[test]
+    fn explicit_trace_beats_env_beats_default() {
+        let derived = ClusterConfig::builder().build();
+        let explicit = ClusterConfig::builder().trace(TraceConfig::Record).build();
+        assert_eq!(derived.resolve_trace(None), TraceConfig::Off);
+        assert_eq!(derived.resolve_trace(Some("off")), TraceConfig::Off);
+        assert_eq!(derived.resolve_trace(Some("1")), TraceConfig::Record);
+        assert_eq!(
+            derived.resolve_trace(Some("/tmp/t.json")),
+            TraceConfig::Export(PathBuf::from("/tmp/t.json"))
+        );
+        assert_eq!(explicit.resolve_trace(Some("off")), TraceConfig::Record, "explicit beats env");
     }
 
     #[test]

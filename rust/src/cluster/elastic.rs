@@ -169,6 +169,13 @@ impl ElasticCluster {
         }
         self.pool = None;
         self.log.push(ElasticEvent::Replaced { nodes: self.config.nodes });
+        crate::trace::instant(
+            crate::trace::SpanKind::Replace,
+            self.config.nodes as u64,
+            0,
+            0,
+            0,
+        );
         Ok(())
     }
 

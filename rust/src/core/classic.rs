@@ -70,6 +70,7 @@ where
     let combined = write_combined + merge_combined;
 
     // Group + reduce on the owner, streaming one group at a time.
+    let reduce_span = crate::trace::span(crate::trace::SpanKind::Reduce);
     let out = comm.timed(|| -> Result<HashMap<K, V>> {
         let mut stream = GroupStream::new(incoming.into_merge()?);
         let mut out = HashMap::new();
@@ -79,6 +80,7 @@ where
         }
         Ok(out)
     })?;
+    drop(reduce_span);
     let out_bytes: u64 =
         out.iter().map(|(k, v)| (k.size_hint() + v.size_hint() + 16) as u64).sum();
     tracker.alloc(out_bytes);

@@ -200,7 +200,9 @@ where
 {
     let output = delayed_rank_groups(comm, feed, map, salt, spill_budget, tracker)?;
     let spilled = output.spilled_bytes();
+    let reduce_span = crate::trace::span(crate::trace::SpanKind::Reduce);
     let out = comm.timed(|| output.reduce_now(reduce))?;
+    drop(reduce_span);
     let out_bytes: u64 =
         out.iter().map(|(k, v)| (k.size_hint() + v.size_hint() + 16) as u64).sum();
     tracker.alloc(out_bytes);

@@ -45,6 +45,7 @@ where
     M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
 {
     // Map + combine into the thread-local cache.
+    let map_span = crate::trace::span(crate::trace::SpanKind::Map);
     let mut emitter = CombineEmitter::new(combine);
     let mut rank_feed = feed.for_rank(comm.rank());
     while let Some((task, chunk)) = rank_feed.next() {
@@ -55,6 +56,7 @@ where
         });
         rank_feed.complete(task);
     }
+    drop(map_span);
 
     // Charge the cache (it holds at most one value per distinct key).
     let cache_bytes: u64 = emitter
@@ -71,6 +73,7 @@ where
     let mine = shuffle_pairs(comm, &router, pairs, tracker)?;
 
     // Final combine on the owner.
+    let combine_span = crate::trace::span(crate::trace::SpanKind::Combine);
     let out = comm.timed(|| {
         // Owner-side combine: at most one entry per incoming pair (§Perf
         // iteration 2: pre-size to skip rehash-growth).
@@ -86,6 +89,7 @@ where
         }
         out
     });
+    drop(combine_span);
     // Result shards stay charged until the driver merges them; the engine
     // releases this at collection time via the returned map's estimate.
     let out_bytes: u64 =

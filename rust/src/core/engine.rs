@@ -198,6 +198,14 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
     {
         self.cluster.validate()?;
         let wall_start = Instant::now();
+        // Tracing: resolve the cluster's knob and (when on) record spans
+        // for the duration of this job. `enable_scope(false)` is a no-op
+        // guard, so untraced jobs never disturb a concurrently-traced one.
+        let tcfg = self.cluster.trace();
+        let _tracing = crate::trace::enable_scope(tcfg.is_enabled());
+        if tcfg.is_enabled() {
+            crate::trace::job_start(crate::trace::DRIVER_RANK, 0, 0);
+        }
         let ranks = self.cluster.ranks();
         let tracker = PeakTracker::new();
         let feed = TaskFeed::new(
@@ -218,7 +226,8 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             // universe (same threads-per-job cost as before the refactor).
             None => RankPool::new(Universe::from_cluster(&self.cluster)).run_job(ranks, rank_body),
         };
-        let (rank_results, clocks, traffic) = (out.results, out.clocks, out.traffic);
+        let (rank_results, clocks, traffic, rank_spans) =
+            (out.results, out.clocks, out.traffic, out.trace);
 
         // Merge shards (disjoint key ownership) and surface rank errors.
         let mut merged: HashMap<K, V> = HashMap::new();
@@ -255,6 +264,22 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
             migrated_bytes: 0,
             host_wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
         };
+
+        if tcfg.is_enabled() {
+            // One whole-job span on the driver lane spanning the slowest
+            // rank's virtual clock, then the merged, clock-ordered trace.
+            crate::trace::span_manual(crate::trace::SpanKind::Job, 0, slowest.0, traffic.bytes);
+            let mut tr = crate::trace::JobTrace::merge([crate::trace::take(), rank_spans]);
+            // A throwaway pool (the `None` arm above) has already been
+            // dropped here, so a TCP fleet's workers have flushed their
+            // Relay span files; a caller-owned warm pool keeps its
+            // workers alive and contributes driver-side spans only.
+            tr.extend(crate::trace::collect_worker_spans());
+            if let Some(path) = tcfg.export_path() {
+                tr.export(path)?;
+            }
+            crate::trace::store_last(tr);
+        }
         Ok(JobResult { result: merged, stats })
     }
 }

@@ -266,6 +266,9 @@ pub struct IterativeJob<K, S> {
     speculations: Vec<SpeculationStats>,
     /// Set when this session was rebuilt by [`IterativeJob::recover_from`].
     recovery: Option<RecoveryStats>,
+    /// Spans harvested from this session's waves and migrations (empty
+    /// unless [`crate::trace`] was enabled around the steps).
+    trace: Vec<crate::trace::SpanEvent>,
 }
 
 /// The `BLAZE_CHECKPOINT_EVERY` env override: a cadence `k >= 1` makes
@@ -311,6 +314,7 @@ where
             checkpoints: Vec::new(),
             speculations: Vec::new(),
             recovery: None,
+            trace: Vec::new(),
         };
         if let Some(k) = env_checkpoint_every() {
             job.checkpoint = Some((CheckpointStore::new(), k));
@@ -368,6 +372,16 @@ where
             assign: self.router.assignments().to_vec(),
         };
         let stats = store.write(meta, buckets, aggregate)?;
+        if crate::trace::enabled() {
+            let start = crate::trace::vclock();
+            let dur = (stats.modeled_ms * 1e6) as u64;
+            crate::trace::span_manual(
+                crate::trace::SpanKind::Checkpoint,
+                start,
+                start + dur,
+                stats.bytes,
+            );
+        }
         self.checkpoints.push(stats.clone());
         Ok(stats)
     }
@@ -407,6 +421,16 @@ where
             items += pairs.len() as u64;
             maps[router.rank_of_bucket(b).0].extend(pairs);
         }
+        if crate::trace::enabled() {
+            let start = crate::trace::vclock();
+            let dur = (restored.modeled_ms * 1e6) as u64;
+            crate::trace::span_manual(
+                crate::trace::SpanKind::Recover,
+                start,
+                start + dur,
+                restored.bytes,
+            );
+        }
         let recovery = RecoveryStats {
             iteration: meta.iteration,
             from_ranks: meta.ranks,
@@ -428,6 +452,7 @@ where
             checkpoints: Vec::new(),
             speculations: Vec::new(),
             recovery: Some(recovery),
+            trace: Vec::new(),
         };
         if let Some(k) = env_checkpoint_every() {
             job.checkpoint = Some((store.clone(), k));
@@ -472,6 +497,14 @@ where
     /// [`IterativeJob::recover_from`].
     pub fn recovery(&self) -> Option<&RecoveryStats> {
         self.recovery.as_ref()
+    }
+
+    /// Drain the spans this session's waves and migrations recorded
+    /// (empty unless [`crate::trace`] tracing was enabled around the
+    /// steps). Feed them to [`crate::trace::JobTrace::merge`] alongside
+    /// the driver's own buffer.
+    pub fn take_trace(&mut self) -> Vec<crate::trace::SpanEvent> {
+        std::mem::take(&mut self.trace)
     }
 
     /// Total states across all shards (driver-side).
@@ -584,6 +617,7 @@ where
         let tracker = &self.tracker;
         let pool = cluster.pool_for_wave();
         let out = pool.run_job(new_ranks, |comm: &Communicator| -> Result<u64> {
+            let _migrate_span = crate::trace::span(crate::trace::SpanKind::Migrate);
             let me = comm.rank().0;
             let held = slots[me].lock().expect("slot lock").take().expect("state present");
             let (keep, movers) = comm.timed(|| {
@@ -615,6 +649,7 @@ where
             Ok(moved)
         });
 
+        self.trace.extend(out.trace);
         let mut moved_keys = 0u64;
         for (i, r) in out.results.into_iter().enumerate() {
             moved_keys += r.map_err(|e| anyhow!("rank {i} failed during migration: {e:#}"))?;
@@ -675,6 +710,11 @@ where
         // phase point and survivors return early without entering any
         // collective — nobody wedges in a recv (see mpi/pool.rs).
         let kill = cluster.arm_kill(iteration, ranks);
+        if let Some(k) = &kill {
+            // Driver-side marker: the injected death is a scheduling
+            // decision, not something any rank's span buffer survives.
+            crate::trace::instant(crate::trace::SpanKind::Kill, k.rank as u64, 0, 0, 0);
+        }
         let slowdowns: Vec<(usize, f64)> =
             cluster.fault_plan().map(|p| p.slowdowns().to_vec()).unwrap_or_default();
         let router = &self.router;
@@ -688,6 +728,7 @@ where
         let slow_ref = &slowdowns;
         let pool = cluster.pool_for_wave();
         let wave = |comm: &Communicator| -> Result<(u64, u64, M, u64)> {
+            let _wave_span = crate::trace::span(crate::trace::SpanKind::Wave);
             let me = comm.rank().0;
             let mut shard = slots[me].lock().expect("slot lock").take().expect("state present");
             if let Some(k) = kill_ref.as_ref().filter(|k| k.phase == WavePhase::Contribute) {
@@ -702,6 +743,7 @@ where
             // Sorted-key wave order: deterministic emission, and the
             // owner-side fold order below is source-rank order — so a
             // rerun is bit-identical.
+            let contribute_span = crate::trace::span(crate::trace::SpanKind::Contribute);
             let mut keys: Vec<K> = shard.keys().cloned().collect();
             comm.timed(|| keys.sort_unstable());
             let mut deltas: DistHashMap<'_, K, D, BucketRouter> =
@@ -711,6 +753,7 @@ where
                     contribute(k, &shard[k], &mut |dk, dv| deltas.stage(dk, dv));
                 }
             });
+            drop(contribute_span);
             if let Some(k) = kill_ref.as_ref().filter(|k| k.phase == WavePhase::Flush) {
                 if k.rank == me {
                     panic!("injected kill: rank {me} at iteration {iteration} (Flush)");
@@ -718,12 +761,14 @@ where
                 *slots[me].lock().expect("slot lock") = Some(shard);
                 return Err(anyhow!("wave aborted: rank {} killed at iteration {iteration}", k.rank));
             }
+            let flush_span = crate::trace::span(crate::trace::SpanKind::Flush);
             if let Err(e) = deltas.flush_combining(combine) {
                 // Restore the (untouched) shard so the session surfaces
                 // the Err instead of panicking on a vacant slot later.
                 *slots[me].lock().expect("slot lock") = Some(shard);
                 return Err(e);
             }
+            drop(flush_span);
             let arrived = deltas.len_local() as u64;
             let mut folded = deltas.into_local();
             if let Some(k) = kill_ref.as_ref().filter(|k| k.phase == WavePhase::Update) {
@@ -733,6 +778,7 @@ where
                 *slots[me].lock().expect("slot lock") = Some(shard);
                 return Err(anyhow!("wave aborted: rank {} killed at iteration {iteration}", k.rank));
             }
+            let update_span = crate::trace::span(crate::trace::SpanKind::Update);
             let aggregate = comm.timed(|| {
                 let mut agg = M::identity();
                 for k in &keys {
@@ -742,6 +788,7 @@ where
                 }
                 agg
             });
+            drop(update_span);
             let orphans = folded.len() as u64;
             let aggregate = match comm.allreduce(aggregate, M::combine) {
                 Ok(agg) => agg,
@@ -782,6 +829,7 @@ where
             pool.run_job(ranks, wave)
         };
 
+        self.trace.extend(out.trace);
         let mut delta_keys = 0u64;
         let mut orphans = 0u64;
         let mut aggregate = M::identity();
@@ -843,6 +891,15 @@ where
                         .unwrap_or(0);
                     modeled_ns = others.max(backup_ns);
                 }
+                // Driver-side marker: the straggler whose shard task was
+                // re-claimed (the winner is in SpeculationStats).
+                crate::trace::instant(
+                    crate::trace::SpanKind::Speculate,
+                    straggler as u64,
+                    0,
+                    0,
+                    0,
+                );
                 self.speculations.push(SpeculationStats {
                     iteration,
                     straggler,

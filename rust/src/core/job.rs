@@ -120,6 +120,38 @@ pub struct JobStats {
     pub host_wall_ms: f64,
 }
 
+impl JobStats {
+    /// Human-readable one-stop report: the modeled time split, wire
+    /// traffic, memory/disk high-water marks, and (when non-zero) the
+    /// combiner/migration byte counts. Multi-line, ready to print —
+    /// the `blaze run` CLI and the examples use it verbatim.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "modeled {:.2} ms (compute {:.2} + net {:.2} + startup {:.0})\n\
+             shuffle {} B in {} msgs ({} msgs / {} B remote)\n\
+             peak mem {} B | spilled {} B",
+            self.modeled_ms,
+            self.compute_ms,
+            self.net_ms,
+            self.startup_ms,
+            self.shuffle_bytes,
+            self.messages,
+            self.remote_messages,
+            self.remote_bytes,
+            self.peak_mem_bytes,
+            self.spilled_bytes,
+        );
+        if self.combined_bytes > 0 {
+            s.push_str(&format!(" | combined away {} B", self.combined_bytes));
+        }
+        if self.migrated_bytes > 0 {
+            s.push_str(&format!(" | migrated {} B", self.migrated_bytes));
+        }
+        s.push_str(&format!("\nhost wall {:.1} ms", self.host_wall_ms));
+        s
+    }
+}
+
 /// A completed job: driver-side result + stats.
 #[derive(Debug, Clone)]
 pub struct JobResult<R> {

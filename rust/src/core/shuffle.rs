@@ -55,6 +55,7 @@ where
 {
     let n = comm.size();
     debug_assert_eq!(router.width(), n, "router/communicator size mismatch");
+    let shuffle_span = crate::trace::span(crate::trace::SpanKind::Shuffle);
 
     // Serialize straight into per-destination encoders: no intermediate
     // per-destination Vec<(K,V)> (hot-path allocation kept linear).
@@ -82,6 +83,7 @@ where
         bufs.push(framed.into_bytes());
     }
     tracker.alloc(total);
+    shuffle_span.add_bytes(total);
 
     // Attach the tracker for the exchange so Hierarchical node-leader
     // staging buffers are charged to the same job-level peak.
@@ -126,6 +128,7 @@ where
     V: FastSerialize,
     M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
 {
+    let _map_span = crate::trace::span(crate::trace::SpanKind::Map);
     let mut rank_feed = feed.for_rank(comm.rank());
     while let Some((task, chunk)) = rank_feed.next() {
         let res: Result<()> = comm.timed(|| {
@@ -174,6 +177,7 @@ where
 {
     let n = comm.size();
     debug_assert_eq!(router.shards(), n, "router/communicator size mismatch");
+    let shuffle_span = crate::trace::span(crate::trace::SpanKind::Shuffle);
 
     let mut source = runs.into_merge()?;
     if let Some(c) = combiner {
@@ -192,6 +196,7 @@ where
 
     let mut pending: Option<(K, V)> = None;
     loop {
+        let round_span = crate::trace::span(crate::trace::SpanKind::ShuffleRound);
         // Fill this round's buffers in key order. Stop at the first pair
         // whose destination is full: pairs for one destination must stay
         // in key order, so we cannot skip past it. Buffers are raw
@@ -229,6 +234,8 @@ where
         // Charged once assembled; the fill phase itself holds at most
         // the same bytes, so the high-water timing is the exchange.
         tracker.alloc(total);
+        round_span.add_bytes(total);
+        shuffle_span.add_bytes(total);
         comm.set_memory_tracker(Some(tracker.clone()));
         let incoming = comm.alltoallv(bufs);
         comm.set_memory_tracker(None);

@@ -32,6 +32,7 @@ pub mod mpi;
 pub mod runtime;
 pub mod serial;
 pub mod store;
+pub mod trace;
 pub mod util;
 
 /// Most-used types, re-exported for `use blaze_rs::prelude::*`.

@@ -18,11 +18,12 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use blaze_rs::apps::{kmeans, linreg, matmul, pi, wordcount};
+use blaze_rs::apps::{kmeans, linreg, matmul, pagerank, pi, wordcount};
 use blaze_rs::bench_harness::{run_figure, FigureId};
-use blaze_rs::cluster::{ClusterConfig, DeploymentKind};
+use blaze_rs::cluster::{ClusterConfig, DeploymentKind, ElasticCluster};
 use blaze_rs::core::ReductionMode;
 use blaze_rs::runtime::{ArtifactManifest, ComputeService};
+use blaze_rs::trace::TraceConfig;
 
 /// Tiny flag parser: `--key value` pairs + positionals.
 struct Args {
@@ -113,6 +114,7 @@ fn run(argv: &[String]) -> Result<()> {
         "bench-figure" => cmd_bench_figure(&args),
         "inspect-artifacts" => cmd_inspect_artifacts(&args),
         "cluster-info" => cmd_cluster_info(&args),
+        "trace" => cmd_trace(&args),
         "worker" => cmd_worker(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -129,6 +131,7 @@ fn print_usage() {
          blaze bench-figure <id|all> [--quick] [--json-dir DIR]\n  \
          blaze inspect-artifacts [--dir artifacts]\n  \
          blaze cluster-info [--cluster FILE | --ranks N --deployment KIND]\n  \
+         blaze trace --app <wordcount|pagerank> [--out FILE.json] [--ranks N] [opts]\n  \
          blaze worker --connect HOST:PORT   (internal: TCP-transport rank process)\n\n\
          COMMON OPTS:\n  --cluster FILE.toml | --ranks N --deployment \
          <local|bare-metal|vm|container> --slots-per-node S --seed X\n  \
@@ -234,23 +237,9 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn print_stats(s: &blaze_rs::core::JobStats) {
-    println!(
-        "  modeled {:.2} ms (compute {:.2} + net {:.2} + startup {:.0}) | \
-         shuffle {} B in {} msgs ({} msgs / {} B remote) | peak mem {} B | spilled {} B | \
-         combined away {} B | host wall {:.1} ms",
-        s.modeled_ms,
-        s.compute_ms,
-        s.net_ms,
-        s.startup_ms,
-        s.shuffle_bytes,
-        s.messages,
-        s.remote_messages,
-        s.remote_bytes,
-        s.peak_mem_bytes,
-        s.spilled_bytes,
-        s.combined_bytes,
-        s.host_wall_ms
-    );
+    for line in s.summary().lines() {
+        println!("  {line}");
+    }
 }
 
 fn cmd_bench_figure(args: &Args) -> Result<()> {
@@ -305,7 +294,7 @@ fn cmd_cluster_info(args: &Args) -> Result<()> {
     println!("{}", cluster.to_toml_string());
     let profile = cluster.deployment.profile();
     println!(
-        "# ranks={} | startup {} ms | net {} µs / {} Mbit/s | compute x{:.2} | spill at {} B/rank | {} collectives | {} transport",
+        "# ranks={} | startup {} ms | net {} µs / {} Mbit/s | compute x{:.2} | spill at {} B/rank | {} collectives | {} transport | trace {}",
         cluster.ranks(),
         profile.startup_ms,
         profile.net_latency_us,
@@ -313,8 +302,69 @@ fn cmd_cluster_info(args: &Args) -> Result<()> {
         profile.effective_compute_scale(),
         cluster.spill_threshold_bytes(),
         cluster.collective_algo(),
-        cluster.transport()
+        cluster.transport(),
+        cluster.trace()
     );
+    Ok(())
+}
+
+/// Run a small traced job and export its merged per-rank span timeline
+/// as Chrome trace-event JSON (load it at `ui.perfetto.dev` or
+/// `chrome://tracing`). `--app wordcount` exercises the batch engines;
+/// `--app pagerank` exercises the iterative wave engine (checkpoints,
+/// migrations and collectives included).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let mut cluster = cluster_from_args(args)?;
+    let app = args.get("app").unwrap_or("wordcount");
+    let out_path =
+        std::path::PathBuf::from(args.get("out").unwrap_or("target/job.trace.json"));
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    match app {
+        "wordcount" => {
+            // The engine owns the whole trace lifecycle when the config
+            // says Export: record, merge, collect worker files, write.
+            cluster.trace = Some(TraceConfig::Export(out_path.clone()));
+            let lines: usize = args.get_or("lines", 5_000)?;
+            let vocab: u32 = args.get_or("vocab", 500)?;
+            let mode: ReductionMode = args.get_or("mode", ReductionMode::Eager)?;
+            let corpus = wordcount::generate_corpus(lines, 8, vocab, cluster.seed);
+            let out = wordcount::run(&cluster, &corpus, mode)?;
+            println!("wordcount: {} distinct words", out.result.len());
+            print_stats(&out.stats);
+            let trace = blaze_rs::trace::take_last()
+                .context("engine recorded no trace despite Export config")?;
+            println!("{}", trace.summary());
+        }
+        "pagerank" => {
+            // No engine in the loop here: enable recording around the
+            // iterative session and assemble the trace by hand.
+            let iters: usize = args.get_or("iters", 5)?;
+            let vertices: usize = args.get_or("vertices", 400)?;
+            let damping: f64 = args.get_or("damping", 0.85)?;
+            let seed = cluster.seed;
+            let _tracing = blaze_rs::trace::enable_scope(true);
+            blaze_rs::trace::job_start(blaze_rs::trace::DRIVER_RANK, 0, 0);
+            let graph = pagerank::Graph::random(vertices, 6, seed);
+            let mut elastic = ElasticCluster::new(cluster);
+            let r = pagerank::run_dist(&mut elastic, &graph, iters, damping, &[])?;
+            // Tear the pool down first: TCP workers flush their span
+            // files at driver EOF.
+            drop(elastic);
+            let mut trace =
+                blaze_rs::trace::JobTrace::merge([blaze_rs::trace::take(), r.trace]);
+            trace.extend(blaze_rs::trace::collect_worker_spans());
+            trace.export(&out_path)?;
+            println!("pagerank: {vertices} vertices, {} iterations", r.iterations);
+            print_stats(&r.stats);
+            println!("{}", trace.summary());
+        }
+        other => bail!("unknown traced app {other:?} (wordcount|pagerank)"),
+    }
+    println!("(trace written to {})", out_path.display());
     Ok(())
 }
 
@@ -325,5 +375,5 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let connect = args
         .get("connect")
         .context("worker needs --connect HOST:PORT (spawned by the TCP launcher, not by hand)")?;
-    blaze_rs::mpi::tcp_worker_main(connect)
+    blaze_rs::mpi::tcp_worker_main(connect, args.get("trace-dir"))
 }

@@ -1,9 +1,12 @@
-//! Metrics: timers, memory accounting (Fig 13) and bench report tables.
+//! Metrics: the counter/gauge/histogram registry, timers, memory
+//! accounting (Fig 13) and bench report tables.
 
 mod memory;
+mod registry;
 mod report;
 mod timer;
 
 pub use memory::{rss_bytes, MemoryGauge, MemoryScope, PeakTracker};
+pub use registry::{Histogram, Registry, RegistryTimer};
 pub use report::{Report, Series};
 pub use timer::{ScopedTimer, Stopwatch};

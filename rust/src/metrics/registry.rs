@@ -1,0 +1,263 @@
+//! [`Registry`]: the one place durations, counts and distributions are
+//! recorded. Counters and gauges are plain named values; histograms
+//! keep raw samples and answer quantile queries (p50/p99) by nearest
+//! rank — exactly what the trace layer's per-phase summaries and the
+//! serving-layer latency gates need.
+//!
+//! The older timing helpers ([`super::Stopwatch`] /
+//! [`super::ScopedTimer`]) are kept as thin wrappers: both funnel into
+//! [`Registry::observe_duration`] when bound to a registry, so there is
+//! one way a duration becomes a recorded metric.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::Json;
+
+/// A distribution of `u64` samples (durations in ns, sizes in bytes).
+/// Samples are kept raw; quantiles are answered by nearest rank over a
+/// lazily-sorted copy — exact, not bucketed, which the test pins rely
+/// on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    samples: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, sample: u64) {
+        self.samples.push(sample);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum() as f64 / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        self.samples.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Nearest-rank quantile: the smallest sample with at least
+    /// `q * count` samples at or below it. `q` is clamped to [0, 1];
+    /// an empty histogram answers 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("count", Json::num(self.count() as f64)),
+            ("sum", Json::num(self.sum() as f64)),
+            ("mean", Json::num(self.mean())),
+            ("min", Json::num(self.min() as f64)),
+            ("max", Json::num(self.max() as f64)),
+            ("p50", Json::num(self.p50() as f64)),
+            ("p99", Json::num(self.p99() as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Named counters, gauges and histograms behind one lock. Cheap to
+/// share (`&Registry` everywhere); recording is a short critical
+/// section, reading snapshots.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` to the named monotone counter.
+    pub fn counter_add(&self, name: &str, n: u64) {
+        let mut inner = self.inner.lock().expect("registry lock");
+        *inner.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().expect("registry lock").counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set the named gauge to its latest value.
+    pub fn gauge_set(&self, name: &str, value: f64) {
+        let mut inner = self.inner.lock().expect("registry lock");
+        inner.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().expect("registry lock").gauges.get(name).copied()
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn observe(&self, name: &str, sample: u64) {
+        let mut inner = self.inner.lock().expect("registry lock");
+        inner.histograms.entry(name.to_string()).or_default().observe(sample);
+    }
+
+    /// The canonical duration-recording path: everything that times
+    /// something ([`Registry::time`], [`super::Stopwatch::record_into`],
+    /// [`super::ScopedTimer::into_registry`]) lands here.
+    pub fn observe_duration(&self, name: &str, elapsed: Duration) {
+        self.observe(name, elapsed.as_nanos() as u64);
+    }
+
+    /// Snapshot of the named histogram, if any samples were recorded.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.inner.lock().expect("registry lock").histograms.get(name).cloned()
+    }
+
+    /// Time one closure into the named histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.observe_duration(name, t.elapsed());
+        out
+    }
+
+    /// RAII duration recorder: observes into `name` when dropped.
+    pub fn scoped(&self, name: &str) -> RegistryTimer<'_> {
+        RegistryTimer { registry: self, name: name.to_string(), start: Instant::now() }
+    }
+
+    /// Every metric as one JSON object (counters, gauges, histogram
+    /// summaries) — the machine-readable report shape.
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().expect("registry lock");
+        let counters =
+            inner.counters.iter().map(|(k, v)| (k.clone(), Json::num(*v as f64))).collect();
+        let gauges = inner.gauges.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect();
+        let histograms =
+            inner.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        Json::obj([
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+}
+
+/// RAII handle from [`Registry::scoped`].
+pub struct RegistryTimer<'r> {
+    registry: &'r Registry,
+    name: String,
+    start: Instant,
+}
+
+impl Drop for RegistryTimer<'_> {
+    fn drop(&mut self) {
+        self.registry.observe_duration(&self.name, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_nearest_rank() {
+        let mut h = Histogram::new();
+        for v in [5u64, 1, 9, 3, 7] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 25);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 9);
+        assert_eq!(h.p50(), 5, "median of 1,3,5,7,9");
+        assert_eq!(h.p99(), 9);
+        assert_eq!(h.quantile(0.0), 1, "q=0 clamps to the first sample");
+        assert_eq!(h.quantile(1.0), 9);
+        assert_eq!(Histogram::new().p50(), 0, "empty histogram answers 0");
+    }
+
+    #[test]
+    fn counters_gauges_histograms_accumulate() {
+        let r = Registry::new();
+        r.counter_add("frames", 2);
+        r.counter_add("frames", 3);
+        assert_eq!(r.counter("frames"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        r.gauge_set("ranks", 8.0);
+        r.gauge_set("ranks", 16.0);
+        assert_eq!(r.gauge("ranks"), Some(16.0));
+        r.observe("bytes", 10);
+        r.observe("bytes", 30);
+        let h = r.histogram("bytes").unwrap();
+        assert_eq!((h.count(), h.sum()), (2, 40));
+        assert!(r.histogram("missing").is_none());
+    }
+
+    #[test]
+    fn time_and_scoped_record_durations() {
+        let r = Registry::new();
+        let out = r.time("work", || {
+            std::thread::sleep(Duration::from_millis(1));
+            42
+        });
+        assert_eq!(out, 42);
+        {
+            let _t = r.scoped("work");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let h = r.histogram("work").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!(h.min() >= 1_000_000, "both samples at least 1ms");
+    }
+
+    #[test]
+    fn registry_json_reports_all_families() {
+        let r = Registry::new();
+        r.counter_add("n", 1);
+        r.gauge_set("g", 2.5);
+        r.observe("h", 7);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").and_then(|c| c.get("n")).and_then(Json::as_u64), Some(1));
+        assert_eq!(j.get("gauges").and_then(|c| c.get("g")).and_then(Json::as_f64), Some(2.5));
+        let h = j.get("histograms").and_then(|c| c.get("h")).unwrap();
+        assert_eq!(h.get("p50").and_then(Json::as_u64), Some(7));
+    }
+}

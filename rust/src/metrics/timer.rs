@@ -1,6 +1,15 @@
 //! Small timing helpers used by the engine and the bench harness.
+//!
+//! Since the [`Registry`](super::Registry) landed these are thin
+//! wrappers over its duration path: a [`Stopwatch`] can flush its total
+//! into a registry histogram ([`Stopwatch::record_into`]) and a
+//! [`ScopedTimer`] is a stopwatch bound to a sink — there is one way a
+//! duration becomes a recorded metric
+//! ([`Registry::observe_duration`](super::Registry::observe_duration)).
 
 use std::time::{Duration, Instant};
+
+use super::Registry;
 
 /// Accumulating stopwatch: start/stop many times, read the total.
 #[derive(Debug, Default, Clone)]
@@ -43,24 +52,34 @@ impl Stopwatch {
         self.stop();
         out
     }
+
+    /// Flush the accumulated total into a registry histogram — the
+    /// bridge from ad-hoc timing to the canonical duration path.
+    pub fn record_into(&self, registry: &Registry, name: &str) {
+        registry.observe_duration(name, self.total());
+    }
 }
 
-/// RAII timer that reports elapsed time into a callback on drop.
+/// RAII timer that reports elapsed time into a callback on drop. A thin
+/// wrapper over [`Stopwatch`]; to land in a [`Registry`] directly, use
+/// [`Registry::scoped`](super::Registry::scoped) instead.
 pub struct ScopedTimer<F: FnMut(Duration)> {
-    start: Instant,
+    watch: Stopwatch,
     sink: F,
 }
 
 impl<F: FnMut(Duration)> ScopedTimer<F> {
     pub fn new(sink: F) -> Self {
-        Self { start: Instant::now(), sink }
+        let mut watch = Stopwatch::new();
+        watch.start();
+        Self { watch, sink }
     }
 }
 
 impl<F: FnMut(Duration)> Drop for ScopedTimer<F> {
     fn drop(&mut self) {
-        let elapsed = self.start.elapsed();
-        (self.sink)(elapsed);
+        self.watch.stop();
+        (self.sink)(self.watch.total());
     }
 }
 
@@ -94,5 +113,16 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         assert!(got >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn stopwatch_flushes_into_registry() {
+        let r = Registry::new();
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(1)));
+        sw.record_into(&r, "stage");
+        let h = r.histogram("stage").unwrap();
+        assert_eq!(h.count(), 1);
+        assert!(h.min() >= 1_000_000);
     }
 }

@@ -372,6 +372,7 @@ impl Communicator {
     /// followed by an empty broadcast, each in the selected shape — so a
     /// tree barrier completes in `O(log P)` virtual-clock depth.
     pub fn barrier(&self) -> Result<()> {
+        let _s = crate::trace::span(crate::trace::SpanKind::Barrier);
         let gather_tag = self.next_collective_tag();
         let release_tag = self.next_collective_tag();
         let gathered = self.gather_bytes(Rank::ROOT, gather_tag, Vec::new())?;
@@ -382,6 +383,7 @@ impl Communicator {
     /// Broadcast `value` from `root` to all ranks. Non-root ranks pass
     /// their (ignored) local value too — SPMD style.
     pub fn bcast<T: FastSerialize>(&self, root: Rank, value: T) -> Result<T> {
+        let _s = crate::trace::span(crate::trace::SpanKind::Bcast);
         let tag = self.next_collective_tag();
         if self.rank() == root {
             self.bcast_bytes(root, tag, Some(to_bytes(&value)))?;
@@ -395,6 +397,7 @@ impl Communicator {
     /// Gather every rank's value at `root`. Returns `Some(values)` (rank
     /// order) at root, `None` elsewhere.
     pub fn gather<T: FastSerialize>(&self, root: Rank, value: T) -> Result<Option<Vec<T>>> {
+        let _s = crate::trace::span(crate::trace::SpanKind::Gather);
         let tag = self.next_collective_tag();
         match self.gather_bytes(root, tag, to_bytes(&value))? {
             None => Ok(None),
@@ -410,6 +413,7 @@ impl Communicator {
 
     /// Gather at root, then broadcast the vector to everyone.
     pub fn allgather<T: FastSerialize>(&self, value: T) -> Result<Vec<T>> {
+        let _s = crate::trace::span(crate::trace::SpanKind::Allgather);
         let gather_tag = self.next_collective_tag();
         let bcast_tag = self.next_collective_tag();
         let gathered = self.gather_bytes(Rank::ROOT, gather_tag, to_bytes(&value))?;
@@ -442,6 +446,8 @@ impl Communicator {
             bufs.len(),
             self.size()
         );
+        let s = crate::trace::span(crate::trace::SpanKind::Alltoallv);
+        s.add_bytes(bufs.iter().map(|b| b.len() as u64).sum());
         match self.collective_algo() {
             CollectiveAlgo::Hierarchical => self.alltoallv_coalesced(bufs),
             _ => self.alltoallv_pairwise(bufs),
@@ -565,6 +571,7 @@ impl Communicator {
         T: FastSerialize,
         F: Fn(T, T) -> T,
     {
+        let _s = crate::trace::span(crate::trace::SpanKind::Allreduce);
         let gather_tag = self.next_collective_tag();
         let bcast_tag = self.next_collective_tag();
         match self.gather_bytes(Rank::ROOT, gather_tag, to_bytes(&value))? {
@@ -587,6 +594,7 @@ impl Communicator {
     /// Exclusive prefix sum of `value` over ranks: rank i gets
     /// `sum(values[0..i])`. Used for global indexing in `DistVector`.
     pub fn exscan_sum(&self, value: u64) -> Result<u64> {
+        let _s = crate::trace::span(crate::trace::SpanKind::Exscan);
         let all = self.allgather(value)?;
         Ok(all[..self.rank().0].iter().sum())
     }

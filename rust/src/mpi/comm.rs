@@ -348,10 +348,16 @@ impl Communicator {
         self.received_messages.set(0);
     }
 
+    /// Pooled-job epoch this communicator is currently in.
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch.get()
+    }
+
     /// Charge `ns` of modeled compute time to this rank's clock.
     pub fn advance(&self, ns: u64) {
         self.clock_ns.set(self.clock_ns.get() + ns);
         self.compute_ns.set(self.compute_ns.get() + ns);
+        crate::trace::set_vclock(self.clock_ns.get());
     }
 
     /// Charge `ns` of compute scaled by this rank's deployment factor
@@ -395,6 +401,15 @@ impl Communicator {
         let inject = self.network.injection_ns(payload.len(), same_node);
         self.clock_ns.set(self.clock_ns.get() + inject);
         self.net_wait_ns.set(self.net_wait_ns.get() + inject);
+        // Span id for the frame (0 when tracing is off). Allocated after
+        // the injection charge so the Send instant sits at the stamped
+        // clock; never charged to the clock itself.
+        let span = if crate::trace::enabled() {
+            crate::trace::set_vclock(self.clock_ns.get());
+            crate::trace::on_send(tag.0, bytes)
+        } else {
+            0
+        };
         self.transport.send(
             dst,
             Message {
@@ -402,6 +417,7 @@ impl Communicator {
                 tag,
                 epoch: self.epoch.get(),
                 clock_ns: self.clock_ns.get(),
+                span,
                 payload,
             },
         )
@@ -469,6 +485,10 @@ impl Communicator {
         if arrival > now {
             self.net_wait_ns.set(self.net_wait_ns.get() + (arrival - now));
             self.clock_ns.set(arrival);
+        }
+        if crate::trace::enabled() {
+            crate::trace::set_vclock(self.clock_ns.get());
+            crate::trace::on_recv(msg.tag.0, msg.payload.len() as u64, msg.span);
         }
         msg.payload
     }

@@ -53,12 +53,20 @@ impl Tag {
 /// modeled network time propagates — see module docs) and the pooled-job
 /// epoch it was sent in (how receivers discard stale in-flight frames
 /// from a previous job — see `Communicator`).
+///
+/// `span` is the tracing span id riding the frame (0 when tracing is
+/// off): the receiver links its `Recv` span — and any worker process
+/// relaying the frame links its `Relay` span — back to the sender's
+/// `Send` span, which is how one causal timeline is stitched across
+/// real process boundaries. It is metadata only: modeled costs are
+/// functions of `payload.len()`, so tracing never perturbs clocks.
 #[derive(Debug)]
 pub struct Message {
     pub src: Rank,
     pub tag: Tag,
     pub epoch: u64,
     pub clock_ns: u64,
+    pub span: u64,
     pub payload: Vec<u8>,
 }
 

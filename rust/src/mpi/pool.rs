@@ -66,6 +66,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Result};
 
 use crate::cluster::{ClusterConfig, NetworkModel};
+use crate::trace::SpanEvent;
 
 use super::collectives::CollectiveAlgo;
 use super::comm::{Communicator, TrafficStats, Universe};
@@ -75,6 +76,10 @@ use super::transport::TransportKind;
 /// A job body shipped to a rank thread. Lifetime-erased: see the SAFETY
 /// argument in [`RankPool::submit_raw`].
 type Task = Box<dyn FnOnce(&Communicator) + Send>;
+
+/// One rank's job outcome: `(result, (clock_ns, compute_ns, net_wait_ns),
+/// recorded spans)` — or the rank closure's panic payload.
+type RankOutcome<T> = std::thread::Result<(T, (u64, u64, u64), Vec<SpanEvent>)>;
 
 enum Command {
     /// Restore fresh-universe state, then ack on the enclosed channel.
@@ -96,13 +101,16 @@ pub struct TrafficDelta {
 
 /// Everything one pooled job produced: per-rank results (rank order),
 /// per-rank virtual clocks `(clock_ns, compute_ns, net_wait_ns)` — reset
-/// at job start, so these read like a fresh universe's — and the job's
-/// traffic delta.
+/// at job start, so these read like a fresh universe's — the job's
+/// traffic delta, and (when [`crate::trace`] recording is on) every span
+/// the rank threads recorded during the job, already harvested from
+/// their thread-local sinks. Empty when tracing is off.
 #[derive(Debug)]
 pub struct JobOutput<T> {
     pub results: Vec<T>,
     pub clocks: Vec<(u64, u64, u64)>,
     pub traffic: TrafficDelta,
+    pub trace: Vec<SpanEvent>,
 }
 
 struct Worker {
@@ -330,18 +338,20 @@ impl RankPool {
         let (raw, traffic) = self.submit_raw(nranks, f);
         let mut results = Vec::with_capacity(raw.len());
         let mut clocks = Vec::with_capacity(raw.len());
+        let mut trace = Vec::new();
         for (i, r) in raw.into_iter().enumerate() {
             match r {
-                Ok((v, clk)) => {
+                Ok((v, clk, spans)) => {
                     results.push(v);
                     clocks.push(clk);
+                    trace.extend(spans);
                 }
                 Err(e) => {
                     std::panic::panic_any(format!("rank {i} panicked: {}", panic_message(&*e)))
                 }
             }
         }
-        JobOutput { results, clocks, traffic }
+        JobOutput { results, clocks, traffic, trace }
     }
 
     /// Panic-containing submission: a rank panic surfaces as `Err`
@@ -355,12 +365,14 @@ impl RankPool {
         let (raw, traffic) = self.submit_raw(nranks, f);
         let mut results = Vec::with_capacity(raw.len());
         let mut clocks = Vec::with_capacity(raw.len());
+        let mut trace = Vec::new();
         let mut panics = Vec::new();
         for (i, r) in raw.into_iter().enumerate() {
             match r {
-                Ok((v, clk)) => {
+                Ok((v, clk, spans)) => {
                     results.push(v);
                     clocks.push(clk);
+                    trace.extend(spans);
                 }
                 Err(e) => panics.push(format!("rank {i} panicked: {}", panic_message(&*e))),
             }
@@ -368,7 +380,7 @@ impl RankPool {
         if !panics.is_empty() {
             bail!("{}", panics.join("; "));
         }
-        Ok(JobOutput { results, clocks, traffic })
+        Ok(JobOutput { results, clocks, traffic, trace })
     }
 
     /// Two-phase dispatch; returns per-active-rank outcomes in rank order
@@ -377,7 +389,7 @@ impl RankPool {
         &self,
         nranks: usize,
         f: F,
-    ) -> (Vec<std::thread::Result<(T, (u64, u64, u64))>>, TrafficDelta)
+    ) -> (Vec<RankOutcome<T>>, TrafficDelta)
     where
         T: Send,
         F: Fn(&Communicator) -> T + Sync,
@@ -404,15 +416,21 @@ impl RankPool {
         let before = self.stats.snapshot();
 
         // Phase 2 — dispatch the job to the active prefix.
-        let (res_tx, res_rx) = channel::<(usize, std::thread::Result<(T, (u64, u64, u64))>)>();
+        let (res_tx, res_rx) = channel::<(usize, RankOutcome<T>)>();
         let f: &(dyn Fn(&Communicator) -> T + Sync) = &f;
         for (i, w) in self.workers.iter().enumerate() {
             let task = (i < nranks).then(|| {
                 let res_tx = res_tx.clone();
                 let boxed: Box<dyn FnOnce(&Communicator) + Send + '_> = Box::new(move |comm| {
                     let out = catch_unwind(AssertUnwindSafe(|| {
+                        // Reset this rank thread's span sink for the job
+                        // (cheap; a no-op recorder when tracing is off).
+                        if crate::trace::enabled() {
+                            crate::trace::job_start(comm.rank().0, 0, comm.epoch());
+                        }
                         let v = f(comm);
-                        (v, (comm.clock_ns(), comm.compute_ns(), comm.net_wait_ns()))
+                        let clk = (comm.clock_ns(), comm.compute_ns(), comm.net_wait_ns());
+                        (v, clk, crate::trace::take())
                     }));
                     let _ = res_tx.send((comm.rank().0, out));
                 });
@@ -436,8 +454,7 @@ impl RankPool {
         }
         drop(res_tx);
 
-        let mut slots: Vec<Option<std::thread::Result<(T, (u64, u64, u64))>>> =
-            (0..nranks).map(|_| None).collect();
+        let mut slots: Vec<Option<RankOutcome<T>>> = (0..nranks).map(|_| None).collect();
         for _ in 0..nranks {
             let (rank, out) = res_rx.recv().expect("rank thread alive mid-job");
             slots[rank] = Some(out);

@@ -182,13 +182,31 @@ pub(crate) fn launch_fleet(
     let addr = listener.local_addr()?;
     let bin = resolve_worker_bin(worker_bin)?;
 
+    // When tracing is on at launch time, every worker gets a shared
+    // span directory: each flushes its Relay spans there at driver EOF,
+    // and the driver collects the files after the fleet is reaped.
+    let trace_dir = if crate::trace::enabled() {
+        static FLEET_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = FLEET_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("blaze-trace-{}-{}", std::process::id(), seq));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        crate::trace::register_worker_dir(dir.clone());
+        Some(dir)
+    } else {
+        None
+    };
+
     let mut children = Vec::with_capacity(n);
     let mut pids = Vec::with_capacity(n);
     for i in 0..n {
-        let child = Command::new(&bin)
-            .arg("worker")
-            .arg("--connect")
-            .arg(addr.to_string())
+        let mut cmd = Command::new(&bin);
+        cmd.arg("worker").arg("--connect").arg(addr.to_string());
+        if let Some(dir) = &trace_dir {
+            cmd.arg("--trace-dir").arg(dir);
+        }
+        let child = cmd
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::inherit())
@@ -271,8 +289,11 @@ pub(crate) fn launch_fleet(
 
 /// Entry point of the `blaze worker` subcommand: connect back to the
 /// launcher at `connect`, complete the handshake, then relay frames
-/// until the driver closes the stream (normal shutdown).
-pub fn worker_main(connect: &str) -> Result<()> {
+/// until the driver closes the stream (normal shutdown). When the
+/// launcher passed `--trace-dir`, the worker records a `Relay` span for
+/// every frame it routes (linked to the sender's span id riding the
+/// wire) and flushes them into `trace_dir` on shutdown.
+pub fn worker_main(connect: &str, trace_dir: Option<&str>) -> Result<()> {
     let driver = TcpStream::connect(connect)
         .with_context(|| format!("worker connecting back to launcher at {connect}"))?;
     driver.set_nodelay(true)?;
@@ -332,7 +353,13 @@ pub fn worker_main(connect: &str) -> Result<()> {
 
     write_blob(&mut driver_w, &tagged(MAGIC_READY, &[rank as u64]))?;
     driver_r.set_read_timeout(None)?;
-    run_data_plane(rank, driver_r, driver_w, peers)
+    if trace_dir.is_some() {
+        crate::trace::set_enabled(true);
+        // Worker processes get their own Chrome pid lane: rank + 1
+        // (the driver process is lane 0).
+        crate::trace::job_start(rank, rank as u32 + 1, 0);
+    }
+    run_data_plane(rank, driver_r, driver_w, peers, trace_dir.map(PathBuf::from))
 }
 
 /// The worker's steady state: route driver frames to self or mesh
@@ -344,6 +371,7 @@ fn run_data_plane(
     driver_r: TcpStream,
     driver_w: TcpStream,
     peers: Vec<Option<TcpStream>>,
+    trace_dir: Option<PathBuf>,
 ) -> Result<()> {
     // Unbounded local queue: mesh readers and the router enqueue frames
     // bound for this rank's driver endpoint; one pump thread writes
@@ -384,14 +412,32 @@ fn run_data_plane(
     });
 
     // Router on the worker's main thread: returning ends the process.
+    // Every frame rank `r` sends enters the mesh through worker `r`'s
+    // router, so recording a Relay span here sees each frame exactly
+    // once fleet-wide.
+    let flush = |dir: &Option<PathBuf>| {
+        if let Some(dir) = dir {
+            let _ = crate::trace::write_worker_spans(dir, rank);
+        }
+    };
     let mut frames = FrameReader::new(driver_r);
     loop {
         match frames.read_frame_body()? {
-            None => return Ok(()), // driver hung up: normal shutdown
+            None => {
+                flush(&trace_dir); // driver hung up: normal shutdown
+                return Ok(());
+            }
             Some(body) => {
                 let dst = frame_dst(&body)?;
+                if trace_dir.is_some() {
+                    if let Ok((_, _, clock_ns, span, len)) = super::wire::frame_trace_info(&body) {
+                        crate::trace::set_vclock(clock_ns);
+                        crate::trace::instant(crate::trace::SpanKind::Relay, 0, len, 0, span);
+                    }
+                }
                 if dst == rank {
                     if to_driver.send(body).is_err() {
+                        flush(&trace_dir);
                         return Ok(());
                     }
                 } else {

@@ -1,7 +1,7 @@
 //! Length-framed wire codec for transport frames.
 //!
 //! One frame = `u32`-LE body length followed by a serial-codec body
-//! (varint `dst`, `src`, `tag`, `epoch`, `clock_ns`, then the
+//! (varint `dst`, `src`, `tag`, `epoch`, `clock_ns`, `span`, then the
 //! length-prefixed payload). The body reuses the same [`crate::serial`]
 //! block codec every spill run and shuffle payload already uses, so the
 //! socket format is the store format: a frame body is decodable with the
@@ -35,6 +35,9 @@ pub struct WireFrame {
     pub tag: Tag,
     pub epoch: u64,
     pub clock_ns: u64,
+    /// Tracing span id (0 = tracing off). Metadata only — never charged
+    /// to the virtual clock, whose costs are payload-length functions.
+    pub span: u64,
     pub payload: Vec<u8>,
 }
 
@@ -47,6 +50,7 @@ impl WireFrame {
             tag: msg.tag,
             epoch: msg.epoch,
             clock_ns: msg.clock_ns,
+            span: msg.span,
             payload: msg.payload,
         }
     }
@@ -58,6 +62,7 @@ impl WireFrame {
             tag: self.tag,
             epoch: self.epoch,
             clock_ns: self.clock_ns,
+            span: self.span,
             payload: self.payload,
         }
     }
@@ -71,6 +76,7 @@ pub fn encode_frame(frame: &WireFrame) -> Vec<u8> {
     body.put_varint(frame.tag.0);
     body.put_varint(frame.epoch);
     body.put_varint(frame.clock_ns);
+    body.put_varint(frame.span);
     body.put_bytes(&frame.payload);
     let body = body.into_bytes();
     let mut out = Vec::with_capacity(body.len() + 4);
@@ -87,9 +93,10 @@ pub fn decode_frame(body: &[u8]) -> Result<WireFrame> {
     let tag = Tag(dec.get_varint()?);
     let epoch = dec.get_varint()?;
     let clock_ns = dec.get_varint()?;
+    let span = dec.get_varint()?;
     let payload = dec.get_bytes()?.to_vec();
     dec.finish().context("trailing bytes after frame payload")?;
-    Ok(WireFrame { dst, src, tag, epoch, clock_ns, payload })
+    Ok(WireFrame { dst, src, tag, epoch, clock_ns, span, payload })
 }
 
 /// Peek the destination rank of an encoded frame body without decoding
@@ -97,6 +104,21 @@ pub fn decode_frame(body: &[u8]) -> Result<WireFrame> {
 pub fn frame_dst(body: &[u8]) -> Result<usize> {
     let mut dec = Decoder::new(body);
     usize::try_from(dec.get_varint()?).context("frame dst overflows usize")
+}
+
+/// Decode just the header fields a tracing relay needs —
+/// `(dst, src, clock_ns, span, payload_len)` — without copying the
+/// payload out. Only called on the relay path when tracing is on.
+pub fn frame_trace_info(body: &[u8]) -> Result<(usize, usize, u64, u64, u64)> {
+    let mut dec = Decoder::new(body);
+    let dst = usize::try_from(dec.get_varint()?).context("frame dst overflows usize")?;
+    let src = usize::try_from(dec.get_varint()?).context("frame src overflows usize")?;
+    let _tag = dec.get_varint()?;
+    let _epoch = dec.get_varint()?;
+    let clock_ns = dec.get_varint()?;
+    let span = dec.get_varint()?;
+    let payload_len = dec.get_bytes()?.len() as u64;
+    Ok((dst, src, clock_ns, span, payload_len))
 }
 
 /// Write one encoded frame (length prefix + body) to `w`.
@@ -174,7 +196,15 @@ mod tests {
     use super::*;
 
     fn frame(payload: Vec<u8>) -> WireFrame {
-        WireFrame { dst: Rank(3), src: Rank(1), tag: Tag::user(9), epoch: 2, clock_ns: 77, payload }
+        WireFrame {
+            dst: Rank(3),
+            src: Rank(1),
+            tag: Tag::user(9),
+            epoch: 2,
+            clock_ns: 77,
+            span: 41,
+            payload,
+        }
     }
 
     #[test]
@@ -193,6 +223,16 @@ mod tests {
         let f = frame(vec![1, 2, 3]);
         let bytes = encode_frame(&f);
         assert_eq!(frame_dst(&bytes[4..]).unwrap(), f.dst.0);
+    }
+
+    #[test]
+    fn frame_trace_info_peeks_span_without_full_decode() {
+        let f = frame(vec![1, 2, 3, 4, 5]);
+        let bytes = encode_frame(&f);
+        let (dst, src, clock, span, len) = frame_trace_info(&bytes[4..]).unwrap();
+        assert_eq!((dst, src), (f.dst.0, f.src.0));
+        assert_eq!((clock, span), (f.clock_ns, f.span));
+        assert_eq!(len, 5);
     }
 
     #[test]

@@ -76,6 +76,8 @@ where
     /// for the mixed-family caveat).
     pub fn into_merge(self) -> Result<KWayMerge<'static, K, V>> {
         let (mem_runs, charge, spill, runs, tracker) = self.into_parts();
+        let disk_bytes: u64 = runs.iter().map(|s| s.end - s.start).sum();
+        crate::trace::instant(crate::trace::SpanKind::Merge, 0, disk_bytes, 0, 0);
         let mut cursors: Vec<RunCursor<K, V>> = Vec::with_capacity(runs.len() + mem_runs.len());
         if let Some(shared) = &spill {
             for span in &runs {

@@ -342,6 +342,7 @@ where
         self.write_pos = pos;
         self.runs.push(RunSpan { start, end: pos, items });
         self.spilled_bytes += pos - start;
+        crate::trace::instant(crate::trace::SpanKind::Spill, 0, pos - start, 0, 0);
         Ok(())
     }
 

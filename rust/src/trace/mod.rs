@@ -1,0 +1,1181 @@
+//! Structured tracing: per-rank span timelines with cross-process
+//! causality, merged per job and exportable as Chrome trace-event JSON
+//! (viewable in Perfetto / `chrome://tracing`).
+//!
+//! ## Model
+//!
+//! A **span** is one timed region of one rank's execution — a map
+//! phase, a collective, a spill, an iterative wave sub-phase — stamped
+//! with the rank's **virtual clock** (the same Lamport-with-costs time
+//! every figure is plotted in), the job epoch, a byte count, and a
+//! [`SpanKind`] from the typed taxonomy below. Point-like happenings
+//! (one frame sent, a kill armed, a checkpoint written) are **instant**
+//! spans with `start_ns == end_ns`.
+//!
+//! Recording is per-thread and lock-free: each rank thread appends into
+//! a thread-local buffer ([`job_start`] resets it at dispatch,
+//! [`take`] harvests it with the job's results), so a traced job takes
+//! no locks on the hot path and an untraced one pays a single relaxed
+//! atomic load per potential span ([`enabled`]).
+//!
+//! ## Causality across processes
+//!
+//! Every wire frame carries a span id (`Message::span`): [`on_send`]
+//! allocates the id and records a `Send` instant, the receiver records
+//! a `Recv` instant whose `link` is that id, and a TCP worker process
+//! relaying the frame records a `Relay` instant with the same `link`.
+//! Merging the driver buffers with the worker span files
+//! ([`collect_worker_spans`]) therefore stitches one causal timeline
+//! across real process boundaries; the Chrome export turns each
+//! send→recv pair into a flow arrow.
+//!
+//! ## Zero interference
+//!
+//! Tracing never touches the virtual clock protocol: span ids ride the
+//! wire *outside* the modeled payload (injection/propagation costs are
+//! functions of `payload.len()` only), so results, clocks and traffic
+//! are byte-identical with tracing on or off — pinned by
+//! `tests/integration_trace.rs`.
+//!
+//! ## Nesting invariant
+//!
+//! Spans opened via [`span`] close in LIFO order (RAII guards), and
+//! every event records open/close sequence numbers; per rank the
+//! `[seq_open, seq_close]` intervals form a laminar family (any two are
+//! nested or disjoint). The property test asserts this from the data.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::metrics::Histogram;
+use crate::util::Json;
+
+/// Rank value used for events recorded on the driver thread (engine
+/// merges, checkpoint writes, fault bookkeeping).
+pub const DRIVER_RANK: usize = usize::MAX;
+
+/// The typed event taxonomy. Every span in a [`JobTrace`] is one of
+/// these; `category` groups them by subsystem for the Chrome export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    // core: engine phases
+    Job,
+    Map,
+    Combine,
+    Shuffle,
+    ShuffleRound,
+    Reduce,
+    // core: iterative waves
+    Wave,
+    Contribute,
+    Flush,
+    Update,
+    Migrate,
+    // store
+    Spill,
+    Merge,
+    Checkpoint,
+    Recover,
+    // mpi
+    Send,
+    Recv,
+    Relay,
+    Barrier,
+    Bcast,
+    Gather,
+    Allgather,
+    Alltoallv,
+    Allreduce,
+    Exscan,
+    // cluster: faults
+    Kill,
+    Replace,
+    Speculate,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 28] = [
+        SpanKind::Job,
+        SpanKind::Map,
+        SpanKind::Combine,
+        SpanKind::Shuffle,
+        SpanKind::ShuffleRound,
+        SpanKind::Reduce,
+        SpanKind::Wave,
+        SpanKind::Contribute,
+        SpanKind::Flush,
+        SpanKind::Update,
+        SpanKind::Migrate,
+        SpanKind::Spill,
+        SpanKind::Merge,
+        SpanKind::Checkpoint,
+        SpanKind::Recover,
+        SpanKind::Send,
+        SpanKind::Recv,
+        SpanKind::Relay,
+        SpanKind::Barrier,
+        SpanKind::Bcast,
+        SpanKind::Gather,
+        SpanKind::Allgather,
+        SpanKind::Alltoallv,
+        SpanKind::Allreduce,
+        SpanKind::Exscan,
+        SpanKind::Kill,
+        SpanKind::Replace,
+        SpanKind::Speculate,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Job => "job",
+            SpanKind::Map => "map",
+            SpanKind::Combine => "combine",
+            SpanKind::Shuffle => "shuffle",
+            SpanKind::ShuffleRound => "shuffle_round",
+            SpanKind::Reduce => "reduce",
+            SpanKind::Wave => "wave",
+            SpanKind::Contribute => "contribute",
+            SpanKind::Flush => "flush",
+            SpanKind::Update => "update",
+            SpanKind::Migrate => "migrate",
+            SpanKind::Spill => "spill",
+            SpanKind::Merge => "merge",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Recover => "recover",
+            SpanKind::Send => "send",
+            SpanKind::Recv => "recv",
+            SpanKind::Relay => "relay",
+            SpanKind::Barrier => "barrier",
+            SpanKind::Bcast => "bcast",
+            SpanKind::Gather => "gather",
+            SpanKind::Allgather => "allgather",
+            SpanKind::Alltoallv => "alltoallv",
+            SpanKind::Allreduce => "allreduce",
+            SpanKind::Exscan => "exscan",
+            SpanKind::Kill => "kill",
+            SpanKind::Replace => "replace",
+            SpanKind::Speculate => "speculate",
+        }
+    }
+
+    /// Subsystem the kind belongs to (the Chrome `cat` field).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::Job
+            | SpanKind::Map
+            | SpanKind::Combine
+            | SpanKind::Shuffle
+            | SpanKind::ShuffleRound
+            | SpanKind::Reduce
+            | SpanKind::Wave
+            | SpanKind::Contribute
+            | SpanKind::Flush
+            | SpanKind::Update
+            | SpanKind::Migrate => "core",
+            SpanKind::Spill | SpanKind::Merge | SpanKind::Checkpoint | SpanKind::Recover => {
+                "store"
+            }
+            SpanKind::Send
+            | SpanKind::Recv
+            | SpanKind::Relay
+            | SpanKind::Barrier
+            | SpanKind::Bcast
+            | SpanKind::Gather
+            | SpanKind::Allgather
+            | SpanKind::Alltoallv
+            | SpanKind::Allreduce
+            | SpanKind::Exscan => "mpi",
+            SpanKind::Kill | SpanKind::Replace | SpanKind::Speculate => "cluster",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        SpanKind::ALL.into_iter().find(|k| k.as_str() == s)
+    }
+}
+
+impl std::fmt::Display for SpanKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One recorded span. Timestamps are virtual-clock nanoseconds of the
+/// recording rank; `seq_open`/`seq_close` are the rank-local event
+/// sequence numbers the nesting invariant is stated over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    /// Rank that recorded the span ([`DRIVER_RANK`] for driver-side).
+    pub rank: usize,
+    /// Process lane: 0 = the driver process, `rank + 1` = that rank's
+    /// spawned TCP worker process.
+    pub proc_id: u32,
+    /// Job epoch the span belongs to.
+    pub epoch: u64,
+    /// Message tag for wire-level spans, 0 otherwise.
+    pub tag: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub bytes: u64,
+    /// Span id riding the wire (0 = none). Unique per process.
+    pub id: u64,
+    /// Id of the causally-preceding span (0 = none).
+    pub link: u64,
+    pub seq_open: u64,
+    pub seq_close: u64,
+}
+
+impl SpanEvent {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    fn rank_json(&self) -> f64 {
+        if self.rank == DRIVER_RANK {
+            -1.0
+        } else {
+            self.rank as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("kind", Json::str(self.kind.as_str())),
+            ("rank", Json::num(self.rank_json())),
+            ("proc", Json::num(self.proc_id as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("tag", Json::num(self.tag as f64)),
+            ("start_ns", Json::num(self.start_ns as f64)),
+            ("end_ns", Json::num(self.end_ns as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("id", Json::num(self.id as f64)),
+            ("link", Json::num(self.link as f64)),
+            ("seq_open", Json::num(self.seq_open as f64)),
+            ("seq_close", Json::num(self.seq_close as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SpanEvent> {
+        let kind_s = j.req("kind")?.as_str().context("span kind must be a string")?;
+        let kind = SpanKind::parse(kind_s).ok_or_else(|| anyhow!("unknown span kind {kind_s}"))?;
+        let num = |key: &str| -> Result<u64> {
+            Ok(j.req(key)?.as_f64().with_context(|| format!("span {key} must be a number"))?
+                as u64)
+        };
+        let rank_raw = j.req("rank")?.as_f64().context("span rank must be a number")?;
+        let rank = if rank_raw < 0.0 { DRIVER_RANK } else { rank_raw as usize };
+        Ok(SpanEvent {
+            kind,
+            rank,
+            proc_id: num("proc")? as u32,
+            epoch: num("epoch")?,
+            tag: num("tag")?,
+            start_ns: num("start_ns")?,
+            end_ns: num("end_ns")?,
+            bytes: num("bytes")?,
+            id: num("id")?,
+            link: num("link")?,
+            seq_open: num("seq_open")?,
+            seq_close: num("seq_close")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Recording
+// ---------------------------------------------------------------------
+
+/// Count of live [`enable_scope`] guards; tracing records while > 0.
+/// A count (not a boolean) so concurrently traced jobs in one process
+/// compose: the first scope to end can never switch recording off under
+/// a scope that is still running.
+static SCOPES: AtomicU64 = AtomicU64::new(0);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Is tracing currently recording? One relaxed load — this is the whole
+/// cost of a potential span when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    SCOPES.load(Ordering::Relaxed) > 0
+}
+
+/// Coarse process-wide switch: sets the scope count to 1/0 outright.
+/// For processes with one recording lifetime (the TCP worker at
+/// startup, tests) — in-process callers should prefer [`enable_scope`],
+/// which nests by counting.
+pub fn set_enabled(on: bool) {
+    SCOPES.store(u64::from(on), Ordering::Relaxed);
+}
+
+/// RAII enable: holds tracing on for the guard's lifetime (scopes
+/// count, so overlapping guards compose). `enable_scope(false)` is a
+/// disarmed no-op guard — an untraced job never turns recording off
+/// under a concurrently-traced one.
+pub fn enable_scope(on: bool) -> EnableGuard {
+    if !on {
+        return EnableGuard { armed: false };
+    }
+    SCOPES.fetch_add(1, Ordering::Relaxed);
+    EnableGuard { armed: true }
+}
+
+pub struct EnableGuard {
+    armed: bool,
+}
+
+impl Drop for EnableGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            // saturating_sub: a coarse set_enabled(false) may have
+            // zeroed the count while this scope was live.
+            let _ = SCOPES.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+        }
+    }
+}
+
+struct Sink {
+    events: Vec<SpanEvent>,
+    open: Vec<usize>,
+    seq: u64,
+    rank: usize,
+    proc_id: u32,
+    epoch: u64,
+    vclock: u64,
+}
+
+impl Sink {
+    const fn new() -> Self {
+        Sink {
+            events: Vec::new(),
+            open: Vec::new(),
+            seq: 0,
+            rank: DRIVER_RANK,
+            proc_id: 0,
+            epoch: 0,
+            vclock: 0,
+        }
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<Sink> = const { RefCell::new(Sink::new()) };
+}
+
+/// Reset this thread's buffer for a new job: clears any stale events
+/// and binds the rank / process lane / epoch every subsequent span is
+/// stamped with. Called by the pool at dispatch (rank threads), the
+/// engine at `execute` (driver thread), and the TCP worker at startup.
+pub fn job_start(rank: usize, proc_id: u32, epoch: u64) {
+    SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        s.events.clear();
+        s.open.clear();
+        s.seq = 0;
+        s.rank = rank;
+        s.proc_id = proc_id;
+        s.epoch = epoch;
+        s.vclock = 0;
+    });
+}
+
+/// Harvest (and clear) this thread's recorded events.
+pub fn take() -> Vec<SpanEvent> {
+    SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        s.open.clear();
+        std::mem::take(&mut s.events)
+    })
+}
+
+/// Mirror of the recording rank's virtual clock; the [`Communicator`]
+/// updates it at every clock mutation while tracing is on, so span
+/// timestamps and store-layer events share the modeled timeline.
+///
+/// [`Communicator`]: crate::mpi::Communicator
+#[inline]
+pub fn set_vclock(ns: u64) {
+    if !enabled() {
+        return;
+    }
+    SINK.with(|s| s.borrow_mut().vclock = ns);
+}
+
+/// Current virtual-clock mirror for this thread.
+pub fn vclock() -> u64 {
+    SINK.with(|s| s.borrow().vclock)
+}
+
+/// Open a span; it closes (stamping the end clock) when the guard
+/// drops. Returns a disarmed no-op guard when tracing is off.
+#[must_use = "the span closes when this guard drops"]
+pub fn span(kind: SpanKind) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { idx: usize::MAX };
+    }
+    let idx = SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        let seq = s.seq;
+        s.seq += 1;
+        let ev = SpanEvent {
+            kind,
+            rank: s.rank,
+            proc_id: s.proc_id,
+            epoch: s.epoch,
+            tag: 0,
+            start_ns: s.vclock,
+            end_ns: s.vclock,
+            bytes: 0,
+            id: 0,
+            link: 0,
+            seq_open: seq,
+            seq_close: seq,
+        };
+        s.events.push(ev);
+        let idx = s.events.len() - 1;
+        s.open.push(idx);
+        idx
+    });
+    SpanGuard { idx }
+}
+
+/// RAII handle for an open span (see [`span`]).
+pub struct SpanGuard {
+    idx: usize,
+}
+
+impl SpanGuard {
+    /// Attribute `n` more bytes to this span.
+    pub fn add_bytes(&self, n: u64) {
+        if self.idx == usize::MAX {
+            return;
+        }
+        SINK.with(|s| {
+            let mut s = s.borrow_mut();
+            if let Some(ev) = s.events.get_mut(self.idx) {
+                ev.bytes += n;
+            }
+        });
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.idx == usize::MAX {
+            return;
+        }
+        SINK.with(|s| {
+            let mut s = s.borrow_mut();
+            let seq = s.seq;
+            s.seq += 1;
+            let vclock = s.vclock;
+            if let Some(ev) = s.events.get_mut(self.idx) {
+                ev.end_ns = vclock.max(ev.start_ns);
+                ev.seq_close = seq;
+            }
+            if s.open.last() == Some(&self.idx) {
+                s.open.pop();
+            }
+        });
+    }
+}
+
+/// Record a point-like span at the current virtual clock.
+pub fn instant(kind: SpanKind, tag: u64, bytes: u64, id: u64, link: u64) {
+    if !enabled() {
+        return;
+    }
+    SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        let seq = s.seq;
+        s.seq += 1;
+        let ev = SpanEvent {
+            kind,
+            rank: s.rank,
+            proc_id: s.proc_id,
+            epoch: s.epoch,
+            tag,
+            start_ns: s.vclock,
+            end_ns: s.vclock,
+            bytes,
+            id: 0,
+            link: 0,
+            seq_open: seq,
+            seq_close: seq,
+        };
+        let mut ev = ev;
+        ev.id = id;
+        ev.link = link;
+        s.events.push(ev);
+    });
+}
+
+/// Record a span with explicit timestamps (driver-side events whose
+/// duration is modeled rather than bracketed, e.g. checkpoint I/O).
+pub fn span_manual(kind: SpanKind, start_ns: u64, end_ns: u64, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        let seq = s.seq;
+        s.seq += 1;
+        s.events.push(SpanEvent {
+            kind,
+            rank: s.rank,
+            proc_id: s.proc_id,
+            epoch: s.epoch,
+            tag: 0,
+            start_ns,
+            end_ns: end_ns.max(start_ns),
+            bytes,
+            id: 0,
+            link: 0,
+            seq_open: seq,
+            seq_close: seq,
+        });
+    });
+}
+
+/// Allocate a wire span id and record the `Send` instant. Returns the
+/// id to stamp on the frame (0 when tracing is off — the frame then
+/// carries no span).
+#[inline]
+pub fn on_send(tag: u64, bytes: u64) -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    instant(SpanKind::Send, tag, bytes, id, 0);
+    id
+}
+
+/// Record the `Recv` instant for a frame carrying span id `link`.
+#[inline]
+pub fn on_recv(tag: u64, bytes: u64, link: u64) {
+    if !enabled() {
+        return;
+    }
+    instant(SpanKind::Recv, tag, bytes, 0, link);
+}
+
+// ---------------------------------------------------------------------
+// Worker span files (cross-process collection)
+// ---------------------------------------------------------------------
+
+static WORKER_DIRS: Mutex<Vec<PathBuf>> = Mutex::new(Vec::new());
+
+/// Register a directory that spawned worker processes will flush their
+/// span files into (called by the TCP fleet launcher when tracing).
+pub fn register_worker_dir(dir: PathBuf) {
+    WORKER_DIRS.lock().expect("trace worker-dir lock").push(dir);
+}
+
+/// Flush this thread's events as one span file into `dir` (worker-side:
+/// called when the data plane sees driver EOF, i.e. at fleet teardown).
+pub fn write_worker_spans(dir: &Path, rank: usize) -> Result<()> {
+    let events = take();
+    let arr = Json::arr(events.iter().map(SpanEvent::to_json));
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(format!("spans-rank{rank}.json"));
+    std::fs::write(&path, arr.to_string_compact())
+        .with_context(|| format!("writing worker span file {}", path.display()))?;
+    Ok(())
+}
+
+/// Read (and consume) every span file the registered worker dirs hold.
+/// Workers flush at fleet teardown, so call this after dropping the
+/// pool whose workers you want the relay spans of.
+pub fn collect_worker_spans() -> Vec<SpanEvent> {
+    let dirs: Vec<PathBuf> = WORKER_DIRS.lock().expect("trace worker-dir lock").clone();
+    let mut out = Vec::new();
+    for dir in dirs {
+        let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            if let Ok(json) = Json::parse(&text) {
+                if let Some(arr) = json.as_arr() {
+                    for item in arr {
+                        if let Ok(ev) = SpanEvent::from_json(item) {
+                            out.push(ev);
+                        }
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Last-trace stash (in-process queries, the `blaze trace` CLI)
+// ---------------------------------------------------------------------
+
+static LAST: Mutex<Option<JobTrace>> = Mutex::new(None);
+
+/// Stash the most recent job's merged trace for in-process queries.
+pub fn store_last(trace: JobTrace) {
+    *LAST.lock().expect("trace stash lock") = Some(trace);
+}
+
+/// Take the most recent job's merged trace, if any.
+pub fn take_last() -> Option<JobTrace> {
+    LAST.lock().expect("trace stash lock").take()
+}
+
+// ---------------------------------------------------------------------
+// Trace configuration
+// ---------------------------------------------------------------------
+
+/// Resolved tracing mode for a cluster: `Off` (default, near-zero
+/// cost), `Record` (spans buffered, queryable in-process), or
+/// `Export(path)` (record + write Chrome trace-event JSON on job
+/// completion). Parsed from `.trace_path(...)` / the `trace` TOML key /
+/// `BLAZE_TRACE`, mirroring the collective-algo and transport knobs.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum TraceConfig {
+    #[default]
+    Off,
+    Record,
+    Export(PathBuf),
+}
+
+impl TraceConfig {
+    /// Should spans be recorded at all?
+    pub fn is_enabled(&self) -> bool {
+        !matches!(self, TraceConfig::Off)
+    }
+
+    pub fn export_path(&self) -> Option<&Path> {
+        match self {
+            TraceConfig::Export(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for TraceConfig {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "off" | "0" | "false" | "none" => Ok(TraceConfig::Off),
+            "on" | "1" | "true" | "record" => Ok(TraceConfig::Record),
+            _ => Ok(TraceConfig::Export(PathBuf::from(s.trim()))),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceConfig::Off => f.write_str("off"),
+            TraceConfig::Record => f.write_str("on"),
+            TraceConfig::Export(p) => write!(f, "{}", p.display()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// JobTrace: merged, queryable, exportable
+// ---------------------------------------------------------------------
+
+/// Aggregate over one span kind (or one rank): how many spans, how much
+/// virtual time inside them, how many bytes attributed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PhaseAgg {
+    pub count: u64,
+    pub total_ns: u64,
+    pub bytes: u64,
+}
+
+/// All spans of one job, merged across ranks (and worker processes) and
+/// ordered by virtual clock. Queryable in-process and exportable as
+/// Chrome trace-event JSON.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobTrace {
+    spans: Vec<SpanEvent>,
+}
+
+impl JobTrace {
+    /// Merge per-rank buffers by virtual clock (start time, then rank,
+    /// then open order).
+    pub fn merge(buffers: impl IntoIterator<Item = Vec<SpanEvent>>) -> JobTrace {
+        let mut spans: Vec<SpanEvent> = buffers.into_iter().flatten().collect();
+        spans.sort_by_key(|e| (e.start_ns, e.proc_id, e.rank, e.seq_open));
+        JobTrace { spans }
+    }
+
+    /// Append more events (e.g. worker relay spans collected after
+    /// fleet teardown) and restore the clock ordering.
+    pub fn extend(&mut self, more: impl IntoIterator<Item = SpanEvent>) {
+        self.spans.extend(more);
+        self.spans.sort_by_key(|e| (e.start_ns, e.proc_id, e.rank, e.seq_open));
+    }
+
+    pub fn spans(&self) -> &[SpanEvent] {
+        &self.spans
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Per-kind aggregates across all ranks.
+    pub fn per_phase(&self) -> BTreeMap<SpanKind, PhaseAgg> {
+        let mut out: BTreeMap<SpanKind, PhaseAgg> = BTreeMap::new();
+        for ev in &self.spans {
+            let agg = out.entry(ev.kind).or_default();
+            agg.count += 1;
+            agg.total_ns += ev.duration_ns();
+            agg.bytes += ev.bytes;
+        }
+        out
+    }
+
+    /// Per-(process, rank) aggregates.
+    pub fn per_rank(&self) -> BTreeMap<(u32, usize), PhaseAgg> {
+        let mut out: BTreeMap<(u32, usize), PhaseAgg> = BTreeMap::new();
+        for ev in &self.spans {
+            let agg = out.entry((ev.proc_id, ev.rank)).or_default();
+            agg.count += 1;
+            agg.total_ns += ev.duration_ns();
+            agg.bytes += ev.bytes;
+        }
+        out
+    }
+
+    /// Histogram of span durations (ns) for one kind — p50/p99 etc. via
+    /// [`Histogram`].
+    pub fn duration_histogram(&self, kind: SpanKind) -> Histogram {
+        let mut h = Histogram::new();
+        for ev in self.spans.iter().filter(|e| e.kind == kind) {
+            h.observe(ev.duration_ns());
+        }
+        h
+    }
+
+    /// Greedy critical path, walked backwards from the span with the
+    /// latest virtual end time: follow the wire link when the span has
+    /// one (cross-rank hop), otherwise the latest earlier span on the
+    /// same rank. Returned in execution order.
+    pub fn critical_path(&self) -> Vec<&SpanEvent> {
+        if self.spans.is_empty() {
+            return Vec::new();
+        }
+        let by_id: HashMap<u64, &SpanEvent> =
+            self.spans.iter().filter(|e| e.id != 0).map(|e| (e.id, e)).collect();
+        let mut cur = self
+            .spans
+            .iter()
+            .max_by_key(|e| (e.end_ns, e.seq_close))
+            .expect("non-empty trace");
+        let mut path = vec![cur];
+        let mut guard = 0usize;
+        while guard < self.spans.len() {
+            guard += 1;
+            let next = if cur.link != 0 {
+                by_id.get(&cur.link).copied()
+            } else {
+                self.spans
+                    .iter()
+                    .filter(|e| {
+                        e.proc_id == cur.proc_id
+                            && e.rank == cur.rank
+                            && e.seq_close < cur.seq_open
+                    })
+                    .max_by_key(|e| e.seq_close)
+            };
+            match next {
+                Some(prev) if !std::ptr::eq(prev, cur) => {
+                    path.push(prev);
+                    cur = prev;
+                }
+                _ => break,
+            }
+        }
+        path.reverse();
+        path
+    }
+
+    /// Human-readable per-phase / per-rank breakdown.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "trace: {} spans", self.spans.len());
+        let _ = writeln!(out, "  {:<14} {:>7} {:>14} {:>12}", "phase", "count", "total_ms", "bytes");
+        for (kind, agg) in self.per_phase() {
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>7} {:>14.3} {:>12}",
+                kind.as_str(),
+                agg.count,
+                agg.total_ns as f64 / 1e6,
+                agg.bytes
+            );
+        }
+        let _ = writeln!(out, "  per-rank (proc/rank: spans, busy_ms):");
+        for ((proc_id, rank), agg) in self.per_rank() {
+            let rank_s = if rank == DRIVER_RANK { "driver".to_string() } else { rank.to_string() };
+            let _ = writeln!(
+                out,
+                "    p{proc_id}/{rank_s}: {} spans, {:.3} ms",
+                agg.count,
+                agg.total_ns as f64 / 1e6
+            );
+        }
+        let path = self.critical_path();
+        if !path.is_empty() {
+            let _ = writeln!(out, "  critical path ({} hops):", path.len());
+            for ev in path.iter().rev().take(12).rev() {
+                let _ = writeln!(
+                    out,
+                    "    {:>12} ns  {:<14} rank {} ({} B)",
+                    ev.start_ns,
+                    ev.kind.as_str(),
+                    if ev.rank == DRIVER_RANK { "driver".to_string() } else { ev.rank.to_string() },
+                    ev.bytes
+                );
+            }
+        }
+        out
+    }
+
+    /// Export as Chrome trace-event JSON (the Perfetto / chrome://tracing
+    /// format): one `"X"` complete event per span (`ts`/`dur` in µs of
+    /// virtual time, `pid` = process lane, `tid` = rank) plus `"s"`/`"f"`
+    /// flow events stitching every send→recv/relay pair into an arrow.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        for ev in &self.spans {
+            let tid = if ev.rank == DRIVER_RANK { 1_000_000.0 } else { ev.rank as f64 };
+            let ts = ev.start_ns as f64 / 1e3;
+            let dur = ev.duration_ns() as f64 / 1e3;
+            events.push(Json::obj([
+                ("name", Json::str(ev.kind.as_str())),
+                ("cat", Json::str(ev.kind.category())),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(ts)),
+                ("dur", Json::num(dur)),
+                ("pid", Json::num(ev.proc_id as f64)),
+                ("tid", Json::num(tid)),
+                (
+                    "args",
+                    Json::obj([
+                        ("bytes", Json::num(ev.bytes as f64)),
+                        ("epoch", Json::num(ev.epoch as f64)),
+                        ("tag", Json::num(ev.tag as f64)),
+                        ("span_id", Json::num(ev.id as f64)),
+                        ("link", Json::num(ev.link as f64)),
+                        ("rank", Json::num(ev.rank_json())),
+                    ]),
+                ),
+            ]));
+            if ev.kind == SpanKind::Send && ev.id != 0 {
+                events.push(Json::obj([
+                    ("name", Json::str("frame")),
+                    ("cat", Json::str("mpi")),
+                    ("ph", Json::str("s")),
+                    ("id", Json::num(ev.id as f64)),
+                    ("ts", Json::num(ts)),
+                    ("pid", Json::num(ev.proc_id as f64)),
+                    ("tid", Json::num(tid)),
+                ]));
+            }
+            if ev.link != 0 && matches!(ev.kind, SpanKind::Recv | SpanKind::Relay) {
+                events.push(Json::obj([
+                    ("name", Json::str("frame")),
+                    ("cat", Json::str("mpi")),
+                    ("ph", Json::str("f")),
+                    ("bp", Json::str("e")),
+                    ("id", Json::num(ev.link as f64)),
+                    ("ts", Json::num(ts)),
+                    ("pid", Json::num(ev.proc_id as f64)),
+                    ("tid", Json::num(tid)),
+                ]));
+            }
+        }
+        Json::obj([
+            ("traceEvents", Json::arr(events)),
+            ("displayTimeUnit", Json::str("ns")),
+            (
+                "otherData",
+                Json::obj([
+                    ("clock", Json::str("virtual (modeled) nanoseconds, exported as µs ts")),
+                    ("producer", Json::str("blaze-rs trace subsystem")),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write the Chrome export to `path`.
+    pub fn export(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_chrome_json().to_string_compact())
+            .with_context(|| format!("writing trace export {}", path.display()))
+    }
+}
+
+/// Validate that `json` is structurally a Chrome trace-event document:
+/// a `traceEvents` array whose entries carry the required fields per
+/// phase type. The CI schema step round-trips an exported file through
+/// [`Json::parse`] and this check.
+pub fn validate_chrome_json(json: &Json) -> Result<()> {
+    let events = json
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("trace export must have a traceEvents array")?;
+    ensure!(!events.is_empty(), "traceEvents must not be empty");
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .with_context(|| format!("event {i}: missing ph"))?;
+        ensure!(
+            ev.get("name").and_then(Json::as_str).is_some(),
+            "event {i}: missing name"
+        );
+        ensure!(ev.get("ts").and_then(Json::as_f64).is_some(), "event {i}: missing ts");
+        ensure!(ev.get("pid").and_then(Json::as_f64).is_some(), "event {i}: missing pid");
+        ensure!(ev.get("tid").and_then(Json::as_f64).is_some(), "event {i}: missing tid");
+        match ph {
+            "X" => {
+                ensure!(
+                    ev.get("dur").and_then(Json::as_f64).is_some(),
+                    "event {i}: X event missing dur"
+                );
+            }
+            "s" | "f" => {
+                ensure!(
+                    ev.get("id").and_then(Json::as_f64).is_some(),
+                    "event {i}: flow event missing id"
+                );
+            }
+            other => bail!("event {i}: unsupported phase type {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that flip the process-wide recording state;
+    /// the pure data-structure tests below run freely in parallel.
+    fn state_gate() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn ev(kind: SpanKind, rank: usize, start: u64, end: u64) -> SpanEvent {
+        SpanEvent {
+            kind,
+            rank,
+            proc_id: 0,
+            epoch: 1,
+            tag: 0,
+            start_ns: start,
+            end_ns: end,
+            bytes: 10,
+            id: 0,
+            link: 0,
+            seq_open: start,
+            seq_close: end,
+        }
+    }
+
+    #[test]
+    fn span_guard_records_nested_laminar_events() {
+        let _gate = state_gate();
+        let _g = enable_scope(true);
+        job_start(3, 0, 7);
+        set_vclock(100);
+        {
+            let outer = span(SpanKind::Map);
+            outer.add_bytes(5);
+            set_vclock(200);
+            {
+                let _inner = span(SpanKind::Spill);
+                set_vclock(300);
+            }
+            set_vclock(400);
+        }
+        let events = take();
+        assert_eq!(events.len(), 2);
+        let outer = &events[0];
+        let inner = &events[1];
+        assert_eq!(outer.kind, SpanKind::Map);
+        assert_eq!((outer.rank, outer.epoch), (3, 7));
+        assert_eq!((outer.start_ns, outer.end_ns), (100, 400));
+        assert_eq!(outer.bytes, 5);
+        assert_eq!(inner.kind, SpanKind::Spill);
+        assert_eq!((inner.start_ns, inner.end_ns), (200, 300));
+        // Laminar: inner's [open, close] strictly inside outer's.
+        assert!(outer.seq_open < inner.seq_open && inner.seq_close < outer.seq_close);
+    }
+
+    #[test]
+    fn disabled_records_nothing_and_send_ids_are_zero() {
+        // The off-state assertion cannot be made race-free while the
+        // BLAZE_TRACE leg force-enables tracing in concurrent tests.
+        if std::env::var("BLAZE_TRACE").map(|v| !v.trim().is_empty()).unwrap_or(false) {
+            return;
+        }
+        let _gate = state_gate();
+        set_enabled(false);
+        job_start(0, 0, 1);
+        let g = span(SpanKind::Map);
+        g.add_bytes(9);
+        drop(g);
+        assert_eq!(on_send(1, 10), 0);
+        on_recv(1, 10, 0);
+        assert!(take().is_empty());
+    }
+
+    #[test]
+    fn send_ids_are_unique_and_recv_links_them() {
+        let _gate = state_gate();
+        let _g = enable_scope(true);
+        job_start(0, 0, 1);
+        let a = on_send(5, 10);
+        let b = on_send(5, 20);
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+        on_recv(5, 10, a);
+        let events = take();
+        let sends: Vec<_> = events.iter().filter(|e| e.kind == SpanKind::Send).collect();
+        let recvs: Vec<_> = events.iter().filter(|e| e.kind == SpanKind::Recv).collect();
+        assert_eq!(sends.len(), 2);
+        assert_eq!(recvs.len(), 1);
+        assert_eq!(recvs[0].link, a);
+    }
+
+    #[test]
+    fn trace_config_parses_like_the_other_knobs() {
+        let off: TraceConfig = "off".parse().unwrap();
+        assert_eq!(off, TraceConfig::Off);
+        assert_eq!("0".parse::<TraceConfig>().unwrap(), TraceConfig::Off);
+        assert_eq!("on".parse::<TraceConfig>().unwrap(), TraceConfig::Record);
+        assert_eq!("1".parse::<TraceConfig>().unwrap(), TraceConfig::Record);
+        let exp: TraceConfig = "/tmp/out.json".parse().unwrap();
+        assert_eq!(exp, TraceConfig::Export(PathBuf::from("/tmp/out.json")));
+        assert!(exp.is_enabled());
+        assert!(!off.is_enabled());
+        assert_eq!(exp.export_path(), Some(Path::new("/tmp/out.json")));
+        assert_eq!(format!("{off} {exp}"), "off /tmp/out.json");
+    }
+
+    #[test]
+    fn merge_orders_by_clock_and_aggregates() {
+        let t = JobTrace::merge([
+            vec![ev(SpanKind::Map, 1, 50, 80), ev(SpanKind::Reduce, 1, 90, 100)],
+            vec![ev(SpanKind::Map, 0, 10, 40)],
+        ]);
+        let starts: Vec<u64> = t.spans().iter().map(|e| e.start_ns).collect();
+        assert_eq!(starts, vec![10, 50, 90]);
+        let phases = t.per_phase();
+        assert_eq!(phases[&SpanKind::Map].count, 2);
+        assert_eq!(phases[&SpanKind::Map].total_ns, 60);
+        assert_eq!(phases[&SpanKind::Reduce].total_ns, 10);
+        let ranks = t.per_rank();
+        assert_eq!(ranks[&(0, 1)].count, 2);
+        let h = t.duration_histogram(SpanKind::Map);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn critical_path_follows_links_across_ranks() {
+        let mut send = ev(SpanKind::Send, 0, 10, 10);
+        send.id = 77;
+        send.seq_open = 0;
+        send.seq_close = 0;
+        let mut early = ev(SpanKind::Map, 0, 0, 9);
+        early.seq_open = 1;
+        early.seq_close = 1;
+        // seq on rank 0: Map then Send.
+        early.seq_open = 0;
+        early.seq_close = 0;
+        send.seq_open = 1;
+        send.seq_close = 1;
+        let mut recv = ev(SpanKind::Recv, 1, 30, 30);
+        recv.link = 77;
+        recv.seq_open = 0;
+        recv.seq_close = 0;
+        let mut reduce = ev(SpanKind::Reduce, 1, 30, 90);
+        reduce.seq_open = 1;
+        reduce.seq_close = 2;
+        let t = JobTrace::merge([vec![early, send], vec![recv, reduce]]);
+        let path = t.critical_path();
+        let kinds: Vec<SpanKind> = path.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![SpanKind::Map, SpanKind::Send, SpanKind::Recv, SpanKind::Reduce],
+            "path must hop rank 1 <- link <- rank 0"
+        );
+    }
+
+    #[test]
+    fn chrome_export_roundtrips_and_validates() {
+        let mut send = ev(SpanKind::Send, 0, 10, 10);
+        send.id = 5;
+        let mut recv = ev(SpanKind::Recv, 1, 20, 20);
+        recv.link = 5;
+        let t = JobTrace::merge([vec![ev(SpanKind::Map, 0, 0, 50), send], vec![recv]]);
+        let json = t.to_chrome_json();
+        let text = json.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        validate_chrome_json(&parsed).unwrap();
+        // Flow arrows present: one "s" for the send, one "f" for the recv.
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let phases: Vec<&str> =
+            events.iter().filter_map(|e| e.get("ph").and_then(Json::as_str)).collect();
+        assert!(phases.contains(&"s") && phases.contains(&"f"));
+        validate_chrome_json(&Json::parse("{\"traceEvents\":[]}").unwrap()).unwrap_err();
+    }
+
+    #[test]
+    fn span_event_json_roundtrip() {
+        let mut e = ev(SpanKind::Relay, 4, 123, 456);
+        e.proc_id = 5;
+        e.link = 99;
+        e.tag = 3;
+        let back = SpanEvent::from_json(&e.to_json()).unwrap();
+        assert_eq!(back, e);
+        let mut d = ev(SpanKind::Checkpoint, DRIVER_RANK, 1, 2);
+        d.bytes = 7;
+        let back = SpanEvent::from_json(&d.to_json()).unwrap();
+        assert_eq!(back.rank, DRIVER_RANK);
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn manual_span_and_summary_render() {
+        let _gate = state_gate();
+        let _g = enable_scope(true);
+        job_start(DRIVER_RANK, 0, 2);
+        span_manual(SpanKind::Checkpoint, 100, 900, 4096);
+        let t = JobTrace::merge([take()]);
+        assert_eq!(t.per_phase()[&SpanKind::Checkpoint].total_ns, 800);
+        let s = t.summary();
+        assert!(s.contains("checkpoint"));
+        assert!(s.contains("driver"));
+    }
+}

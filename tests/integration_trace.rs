@@ -1,0 +1,378 @@
+//! PR 8 acceptance suite for the tracing subsystem: spans are
+//! well-nested per rank, send/recv spans match up across the mailbox
+//! AND real-TCP transports (with worker `Relay` spans causally linked
+//! through the wire span ids), results/clocks/traffic are byte-identical
+//! with tracing on vs off, and both a wordcount and an iterative
+//! PageRank over TCP export valid Chrome trace-event JSON.
+//!
+//! Every test takes `gate()` first: tracing enablement is a
+//! process-global scope count and `take_last`/worker-span-dir state are
+//! process-global stashes, so the tests in this binary serialize.
+//! (Other test binaries are separate processes and cannot interfere.)
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use blaze_rs::apps::{pagerank, wordcount};
+use blaze_rs::cluster::{ClusterConfig, ElasticCluster, NetworkModel};
+use blaze_rs::core::ReductionMode;
+use blaze_rs::mpi::{Communicator, Rank, RankPool, Tag, Topology, TransportKind, Universe};
+use blaze_rs::trace::{self, JobTrace, SpanEvent, SpanKind, TraceConfig};
+use blaze_rs::util::Json;
+
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_blaze")
+}
+
+/// Deterministic skewed corpus — enough distinct keys to shuffle.
+fn lines(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| format!("w{} w{} w{} common the", i % 7, i % 13, (i * i) % 23))
+        .collect()
+}
+
+/// A fresh unique export path under the OS temp dir (removed by the
+/// test that created it).
+fn export_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("blaze-trace-{name}-{}.json", std::process::id()))
+}
+
+/// Per (process, rank) lane the `[seq_open, seq_close]` intervals must
+/// form a laminar family: any two are nested or disjoint (the RAII
+/// guards close in LIFO order; instants are degenerate intervals).
+fn assert_laminar(spans: &[SpanEvent]) {
+    let mut lanes: HashMap<(u32, usize), Vec<&SpanEvent>> = HashMap::new();
+    for e in spans {
+        lanes.entry((e.proc_id, e.rank)).or_default().push(e);
+    }
+    for ((proc_id, rank), mut evs) in lanes {
+        evs.sort_by_key(|e| (e.seq_open, std::cmp::Reverse(e.seq_close)));
+        let mut open: Vec<u64> = Vec::new(); // seq_close of enclosing spans
+        for e in evs {
+            assert!(
+                e.seq_close >= e.seq_open,
+                "{:?} closes before it opens (proc {proc_id} rank {rank})",
+                e.kind
+            );
+            while open.last().is_some_and(|&top| top < e.seq_open) {
+                open.pop();
+            }
+            if let Some(&top) = open.last() {
+                assert!(
+                    e.seq_close <= top,
+                    "{:?} [{}..{}] straddles enclosing span closing at {} \
+                     (proc {proc_id} rank {rank})",
+                    e.kind,
+                    e.seq_open,
+                    e.seq_close,
+                    top
+                );
+            }
+            open.push(e.seq_close);
+        }
+    }
+}
+
+fn send_ids(spans: &[SpanEvent]) -> HashSet<u64> {
+    spans.iter().filter(|e| e.kind == SpanKind::Send).map(|e| e.id).collect()
+}
+
+fn recv_links(spans: &[SpanEvent]) -> Vec<u64> {
+    spans.iter().filter(|e| e.kind == SpanKind::Recv).map(|e| e.link).collect()
+}
+
+/// A fixed SPMD program whose wire behavior is fully known: every send
+/// is received exactly once (ring exchange; the collectives consume all
+/// their internal messages), and every cost comes from `advance`, never
+/// from measured host time — so virtual clocks are deterministic.
+fn ring_job(c: &Communicator) -> (Vec<u8>, u64) {
+    let me = c.rank().0;
+    c.advance(1_000 * (me as u64 + 1));
+    let next = Rank((me + 1) % c.size());
+    let prev = Rank((me + c.size() - 1) % c.size());
+    c.send(next, Tag(9), vec![me as u8; (me + 1) * 64]).unwrap();
+    let got = c.recv(prev, Tag(9)).unwrap();
+    let sum = c.allreduce_sum_u64(me as u64 + got.len() as u64).unwrap();
+    c.barrier().unwrap();
+    (got, sum)
+}
+
+#[test]
+fn engine_phase_spans_cover_the_taxonomy_and_nest_laminarly() {
+    let _g = gate();
+    let input = lines(600);
+    for mode in ReductionMode::ALL {
+        let cluster = ClusterConfig::builder()
+            .nodes(2)
+            .slots_per_node(2)
+            .seed(11)
+            .trace(TraceConfig::Record)
+            .build();
+        let out = wordcount::run(&cluster, &input, mode).unwrap();
+        assert!(!out.result.is_empty());
+
+        let tr = trace::take_last()
+            .unwrap_or_else(|| panic!("{mode}: Record run left no stashed trace"));
+        assert!(!tr.is_empty(), "{mode}: empty trace");
+        assert_laminar(tr.spans());
+
+        let phases = tr.per_phase();
+        let expected: &[SpanKind] = match mode {
+            ReductionMode::Classic => {
+                &[SpanKind::Job, SpanKind::Map, SpanKind::Shuffle, SpanKind::Reduce]
+            }
+            ReductionMode::Eager => {
+                &[SpanKind::Job, SpanKind::Map, SpanKind::Combine, SpanKind::Shuffle]
+            }
+            ReductionMode::Delayed => &[
+                SpanKind::Job,
+                SpanKind::Map,
+                SpanKind::Shuffle,
+                SpanKind::ShuffleRound,
+                SpanKind::Reduce,
+            ],
+        };
+        for kind in expected {
+            assert!(
+                phases.contains_key(kind),
+                "{mode}: no {kind:?} span; got {:?}",
+                phases.keys().collect::<Vec<_>>()
+            );
+        }
+
+        // Wire-level causality inside one process: every recv links back
+        // to an allocated send id, and ids are never reused.
+        let sends: Vec<u64> =
+            tr.spans().iter().filter(|e| e.kind == SpanKind::Send).map(|e| e.id).collect();
+        let ids = send_ids(tr.spans());
+        assert_eq!(sends.len(), ids.len(), "{mode}: duplicate send span ids");
+        assert!(!ids.is_empty(), "{mode}: multi-rank job recorded no sends");
+        assert!(!ids.contains(&0), "{mode}: send recorded with id 0");
+        let links = recv_links(tr.spans());
+        assert!(!links.is_empty(), "{mode}: no recv spans");
+        for link in &links {
+            assert!(ids.contains(link), "{mode}: recv links unknown send id {link}");
+        }
+
+        // Analysis surface smoke: aggregates, histogram, critical path,
+        // human summary all see the data.
+        assert!(!tr.per_rank().is_empty());
+        assert!(tr.duration_histogram(SpanKind::Map).count() >= 1);
+        assert!(!tr.critical_path().is_empty());
+        assert!(tr.summary().contains("spans"));
+    }
+}
+
+#[test]
+fn send_and_recv_spans_match_across_mailbox_and_tcp() {
+    let _g = gate();
+    // Enable BEFORE spawning the fleet: the TCP launcher only arms the
+    // worker-side span files when tracing is on at launch time.
+    let _t = trace::enable_scope(true);
+
+    let mailbox = RankPool::new(
+        Universe::new(Topology::block(2, 2), NetworkModel::free())
+            .with_transport(TransportKind::Mailbox),
+    );
+    let tcp = RankPool::new(
+        Universe::new(Topology::block(2, 2), NetworkModel::free())
+            .with_transport(TransportKind::Tcp)
+            .with_worker_binary(worker_bin()),
+    );
+
+    let mb_out = mailbox.run_job(4, ring_job);
+    let tcp_out = tcp.run_job(4, ring_job);
+
+    // The transports must be indistinguishable above the seam — traced.
+    assert_eq!(mb_out.results, tcp_out.results);
+    assert_eq!(mb_out.clocks, tcp_out.clocks);
+    assert_eq!(mb_out.traffic, tcp_out.traffic);
+
+    // Every message in `ring_job` is consumed, so the recv links are
+    // exactly the send ids — on both transports.
+    for (name, out) in [("mailbox", &mb_out), ("tcp", &tcp_out)] {
+        let ids = send_ids(&out.trace);
+        let links: HashSet<u64> = recv_links(&out.trace).into_iter().collect();
+        assert!(!ids.is_empty(), "{name}: no send spans");
+        assert!(!ids.contains(&0), "{name}: send id 0");
+        assert_eq!(ids, links, "{name}: recv links != send ids");
+        assert_laminar(&out.trace);
+    }
+
+    // Dropping the TCP pool reaps the fleet; each worker flushes its
+    // relay spans on driver EOF. Every relayed frame must carry a span
+    // id the driver allocated at send time — cross-process causality.
+    let driver_ids = send_ids(&tcp_out.trace);
+    drop(tcp);
+    let relays = trace::collect_worker_spans();
+    assert!(!relays.is_empty(), "TCP workers recorded no relay spans");
+    for ev in &relays {
+        assert_eq!(ev.kind, SpanKind::Relay, "worker file held a non-relay span");
+        assert!(ev.proc_id >= 1, "worker span on the driver's process lane");
+        assert!(
+            driver_ids.contains(&ev.link),
+            "relay links unknown wire span id {}",
+            ev.link
+        );
+    }
+}
+
+#[test]
+fn tracing_on_vs_off_is_byte_identical() {
+    let _g = gate();
+
+    // Pool level, deterministic costs: results, per-rank virtual clocks
+    // and the traffic delta must not move by a byte when tracing is on.
+    let cfg = ClusterConfig::builder().nodes(2).slots_per_node(2).build();
+    let off = RankPool::new(Universe::new(Topology::block(2, 2), cfg.network_model()))
+        .run_job(4, ring_job);
+    assert!(off.trace.is_empty(), "untraced job harvested spans");
+    let on = {
+        let _t = trace::enable_scope(true);
+        RankPool::new(Universe::new(Topology::block(2, 2), cfg.network_model()))
+            .run_job(4, ring_job)
+    };
+    assert!(!on.trace.is_empty(), "traced job harvested no spans");
+    assert_eq!(off.results, on.results);
+    assert_eq!(off.clocks, on.clocks, "tracing perturbed the virtual clocks");
+    assert_eq!(off.traffic, on.traffic, "tracing perturbed the wire traffic");
+
+    // Engine level, every reduction mode: identical results and modeled
+    // traffic/memory. (Engine clocks fold in measured host CPU time via
+    // `timed`, so the time split is not run-to-run reproducible and is
+    // not compared — the clock pin is the deterministic job above.)
+    let input = lines(400);
+    for mode in ReductionMode::ALL {
+        let run = |tc: TraceConfig| {
+            let cluster = ClusterConfig::builder()
+                .nodes(2)
+                .slots_per_node(2)
+                .seed(3)
+                .trace(tc)
+                .build();
+            wordcount::run(&cluster, &input, mode).unwrap()
+        };
+        let off = run(TraceConfig::Off);
+        let on = run(TraceConfig::Record);
+        let _ = trace::take_last();
+        assert_eq!(off.result, on.result, "{mode}: tracing changed the answer");
+        let (a, b) = (&off.stats, &on.stats);
+        assert_eq!(a.shuffle_bytes, b.shuffle_bytes, "{mode}: shuffle_bytes moved");
+        assert_eq!(a.messages, b.messages, "{mode}: messages moved");
+        assert_eq!(a.remote_messages, b.remote_messages, "{mode}: remote_messages moved");
+        assert_eq!(a.remote_bytes, b.remote_bytes, "{mode}: remote_bytes moved");
+        assert_eq!(a.peak_mem_bytes, b.peak_mem_bytes, "{mode}: peak_mem_bytes moved");
+        assert_eq!(a.spilled_bytes, b.spilled_bytes, "{mode}: spilled_bytes moved");
+        assert_eq!(a.combined_bytes, b.combined_bytes, "{mode}: combined_bytes moved");
+    }
+}
+
+/// Pull the (non-metadata) trace events out of an exported Chrome JSON.
+fn chrome_events(json: &Json) -> &[Json] {
+    match json.get("traceEvents") {
+        Some(Json::Arr(events)) => events,
+        other => panic!("traceEvents missing or not an array: {other:?}"),
+    }
+}
+
+fn ph(event: &Json) -> &str {
+    event.get("ph").and_then(Json::as_str).unwrap_or("")
+}
+
+#[test]
+fn wordcount_over_tcp_exports_valid_chrome_trace() {
+    let _g = gate();
+    let path = export_path("wordcount");
+    let cluster = ClusterConfig::builder()
+        .nodes(2)
+        .slots_per_node(2)
+        .seed(7)
+        .transport(TransportKind::Tcp)
+        .worker_binary(worker_bin())
+        .trace(TraceConfig::Export(path.clone()))
+        .build();
+    let out = wordcount::run(&cluster, &lines(300), ReductionMode::Classic).unwrap();
+    assert!(!out.result.is_empty());
+
+    // The merged trace includes the worker processes' relay spans (the
+    // engine's throwaway pool is dropped, and its fleet reaped, before
+    // the export is written).
+    let tr = trace::take_last().expect("Export run left no stashed trace");
+    let phases = tr.per_phase();
+    assert!(phases.contains_key(&SpanKind::Relay), "no worker relay spans in the export");
+    let ids = send_ids(tr.spans());
+    for ev in tr.spans().iter().filter(|e| e.kind == SpanKind::Relay) {
+        assert!(ev.proc_id >= 1, "relay span on the driver's process lane");
+        assert!(ids.contains(&ev.link), "relay links unknown wire span id {}", ev.link);
+    }
+
+    // The file itself round-trips the Chrome trace-event schema.
+    let text = std::fs::read_to_string(&path).expect("export file written");
+    let json = Json::parse(&text).expect("export is well-formed JSON");
+    trace::validate_chrome_json(&json).expect("export violates the Chrome schema");
+    let events = chrome_events(&json);
+    assert!(events.iter().any(|e| ph(e) == "X"), "no complete events");
+    assert!(events.iter().any(|e| ph(e) == "s"), "no flow-start (send) events");
+    assert!(events.iter().any(|e| ph(e) == "f"), "no flow-finish (recv) events");
+    assert!(
+        events.iter().any(|e| e.get("pid").and_then(Json::as_u64).is_some_and(|p| p >= 1)),
+        "no events on a worker process lane"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn pagerank_over_tcp_exports_causally_linked_trace() {
+    let _g = gate();
+    let _t = trace::enable_scope(true);
+    trace::job_start(trace::DRIVER_RANK, 0, 0);
+
+    let cfg = ClusterConfig::builder()
+        .nodes(2)
+        .slots_per_node(2)
+        .seed(5)
+        .transport(TransportKind::Tcp)
+        .worker_binary(worker_bin())
+        .build();
+    let graph = pagerank::Graph::random(240, 5, 33);
+    let mut elastic = ElasticCluster::new(cfg);
+    let r = pagerank::run_dist(&mut elastic, &graph, 3, 0.85, &[]).unwrap();
+    assert_eq!(r.ranks.len(), graph.vertices);
+
+    let mut tr = JobTrace::merge([trace::take(), r.trace]);
+    let driver_ids = send_ids(tr.spans());
+    // Reap the fleet so the workers flush their span files, then stitch
+    // the cross-process timeline together.
+    drop(elastic);
+    let relays = trace::collect_worker_spans();
+    assert!(!relays.is_empty(), "TCP workers recorded no relay spans");
+    for ev in &relays {
+        assert_eq!(ev.kind, SpanKind::Relay);
+        assert!(
+            driver_ids.contains(&ev.link),
+            "relay links unknown wire span id {}",
+            ev.link
+        );
+    }
+    tr.extend(relays);
+
+    // The iterative taxonomy is all there, one Wave per rank per step.
+    let phases = tr.per_phase();
+    for kind in [SpanKind::Wave, SpanKind::Contribute, SpanKind::Flush, SpanKind::Update] {
+        assert!(phases.contains_key(&kind), "no {kind:?} span in the session trace");
+    }
+    assert!(phases[&SpanKind::Wave].count >= 3 * 4, "fewer waves than steps x ranks");
+
+    let path = export_path("pagerank");
+    tr.export(&path).unwrap();
+    let json = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    trace::validate_chrome_json(&json).expect("export violates the Chrome schema");
+    assert!(chrome_events(&json).iter().any(|e| ph(e) == "s"));
+    let _ = std::fs::remove_file(&path);
+}
