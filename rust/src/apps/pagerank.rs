@@ -96,6 +96,39 @@ pub fn run(
     damping: f64,
     mode: ReductionMode,
 ) -> Result<PageRankResult> {
+    // One warm pool for the whole run: every iteration's MapReduce job is
+    // a wave on the same persistent rank threads (the iterative shape the
+    // pooled executor exists for — previously each wave respawned them).
+    let pool = RankPool::from_config(cluster);
+    run_inner(cluster, graph, iterations, damping, mode, &pool, None)
+}
+
+/// PageRank on an explicit rank subset of a warm pool — what the
+/// concurrent [`crate::core::Scheduler`] and the `serve-bench` harness
+/// dispatch. Every iteration's job runs on the same `ranks` subset
+/// (renumbered internally), so the scores are bit-identical to [`run`]
+/// on a fresh cluster of the same width.
+pub fn run_placed(
+    cluster: &ClusterConfig,
+    pool: &RankPool,
+    ranks: &[usize],
+    graph: &Graph,
+    iterations: usize,
+    damping: f64,
+    mode: ReductionMode,
+) -> Result<PageRankResult> {
+    run_inner(cluster, graph, iterations, damping, mode, pool, Some(ranks))
+}
+
+fn run_inner(
+    cluster: &ClusterConfig,
+    graph: &Graph,
+    iterations: usize,
+    damping: f64,
+    mode: ReductionMode,
+    pool: &RankPool,
+    placement: Option<&[usize]>,
+) -> Result<PageRankResult> {
     anyhow::ensure!(
         mode != ReductionMode::Eager,
         "PageRank's reduce is affine (sum then damp), not a pure monoid \
@@ -107,18 +140,17 @@ pub fn run(
     let vertex_ids: Vec<u32> = (0..n as u32).collect();
     let base = (1.0 - damping) / n as f64;
 
-    // One warm pool for the whole run: every iteration's MapReduce job is
-    // a wave on the same persistent rank threads (the iterative shape the
-    // pooled executor exists for — previously each wave respawned them).
-    let pool = RankPool::from_config(cluster);
-
     let mut last_stats = JobStats::default();
     let mut last_delta = f64::INFINITY;
     let mut per_iteration_shuffle_bytes = Vec::with_capacity(iterations);
     let mut per_iteration_modeled_ms = Vec::with_capacity(iterations);
     for _ in 0..iterations {
         let ranks_in = ranks.clone();
-        let job = MapReduceJob::new(cluster, &vertex_ids).with_mode(mode).with_pool(&pool);
+        let job = MapReduceJob::new(cluster, &vertex_ids).with_mode(mode);
+        let job = match placement {
+            Some(subset) => job.with_placement(pool, subset),
+            None => job.with_pool(pool),
+        };
         let map = |&u: &u32, emit: &mut dyn FnMut(u32, f64)| {
             let u = u as usize;
             let out = &graph.edges[u];
@@ -445,6 +477,22 @@ mod tests {
         for (a, b) in d.ranks.iter().zip(&c.ranks) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn placed_subset_matches_plain_run() {
+        // Same width, renumbered subset of a warm pool: bit-identical
+        // scores (no re-association — the comm plane is equivalent).
+        let g = graph();
+        let pool_cluster = ClusterConfig::builder().nodes(1).slots_per_node(4).build();
+        let job_cluster = ClusterConfig::builder().nodes(1).slots_per_node(2).build();
+        let pool = RankPool::from_config(&pool_cluster);
+        let plain = run(&job_cluster, &g, 5, 0.85, ReductionMode::Delayed).unwrap();
+        let placed =
+            run_placed(&job_cluster, &pool, &[1, 3], &g, 5, 0.85, ReductionMode::Delayed).unwrap();
+        assert_eq!(plain.ranks, placed.ranks);
+        assert_eq!(plain.per_iteration_shuffle_bytes, placed.per_iteration_shuffle_bytes);
+        assert_eq!(pool.jobs_run(), 5);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::cluster::ClusterConfig;
 use crate::core::{JobConfig, JobResult, MapReduceJob, ReductionMode};
-use crate::mpi::{run_ranks_with_universe, Universe};
+use crate::mpi::{run_ranks_with_universe, RankPool, Universe};
 use crate::runtime::{ComputeHandle, TensorArg};
 use crate::util::rng::Rng;
 
@@ -62,6 +62,24 @@ pub fn run(
 ) -> Result<JobResult<HashMap<String, u64>>> {
     MapReduceJob::new(cluster, lines)
         .with_config(JobConfig::with_mode(mode))
+        .run_monoid(map_line, |a: u64, b: u64| a + b)
+}
+
+/// Run wordcount on an explicit rank subset of a warm pool — what the
+/// concurrent [`crate::core::Scheduler`] and the `serve-bench` harness
+/// dispatch. `cluster` describes the *job* (its `ranks()` must equal
+/// `ranks.len()`); the subset is renumbered internally, so results are
+/// byte-identical to [`run`] on a fresh cluster of the same width.
+pub fn run_placed(
+    cluster: &ClusterConfig,
+    pool: &RankPool,
+    ranks: &[usize],
+    lines: &[String],
+    mode: ReductionMode,
+) -> Result<JobResult<HashMap<String, u64>>> {
+    MapReduceJob::new(cluster, lines)
+        .with_config(JobConfig::with_mode(mode))
+        .with_placement(pool, ranks)
         .run_monoid(map_line, |a: u64, b: u64| a + b)
 }
 
@@ -228,6 +246,20 @@ mod tests {
             let got = run(&cluster, &corpus, mode).unwrap();
             assert_eq!(got.result, truth, "mode {mode}");
         }
+    }
+
+    #[test]
+    fn placed_matches_serial_truth_all_modes() {
+        let corpus = generate_corpus(60, 5, 30, 3);
+        let truth = count_serial(&corpus);
+        let pool_cluster = ClusterConfig::builder().nodes(1).slots_per_node(4).build();
+        let job_cluster = ClusterConfig::builder().nodes(1).slots_per_node(2).build();
+        let pool = RankPool::from_config(&pool_cluster);
+        for mode in ReductionMode::ALL {
+            let got = run_placed(&job_cluster, &pool, &[2, 3], &corpus, mode).unwrap();
+            assert_eq!(got.result, truth, "mode {mode}");
+        }
+        assert_eq!(pool.jobs_run(), 3);
     }
 
     #[test]

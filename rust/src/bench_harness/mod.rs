@@ -1,7 +1,13 @@
-//! Figure regeneration harness: one generator per paper table/figure.
-//! `blaze bench-figure <id>` and `cargo bench` both route through here so
-//! the printed series match EXPERIMENTS.md.
+//! Benchmark harnesses.
+//!
+//! * [`figures`] — figure regeneration, one generator per paper
+//!   table/figure. `blaze bench-figure <id>` and `cargo bench` both
+//!   route through here so the printed series match EXPERIMENTS.md.
+//! * [`serve`] — the sustained-load serving harness over the concurrent
+//!   scheduler (`blaze serve-bench`, writes `BENCH_9.json`).
 
 pub mod figures;
+pub mod serve;
 
 pub use figures::{run_figure, FigureId};
+pub use serve::{run_serve_bench, validate_report, ServeBenchConfig};

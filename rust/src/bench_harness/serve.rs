@@ -1,0 +1,568 @@
+//! `blaze serve-bench` — the sustained-load harness over the concurrent
+//! [`Scheduler`]: an open-loop stream of mixed wordcount/pagerank jobs
+//! at a target request rate, run once per transport, with stop-loss
+//! gates on the observed failure rate and median latency. The report is
+//! persisted as `BENCH_9.json` at the repo root (same committed-
+//! placeholder convention as the transport ablation's `BENCH_7.json`).
+//!
+//! The driver is *open-loop*: job `i`'s submission is due at
+//! `start + i / offered_rps` regardless of how many earlier jobs have
+//! finished, so a scheduler that falls behind accumulates queue wait —
+//! which is exactly what the latency gates are watching. Once the
+//! stop-loss trips, the driver stops issuing, drains what is in flight,
+//! and records the reason; already-submitted jobs always complete
+//! (admission control rejects load, it never abandons accepted work).
+//!
+//! Every wordcount job validates its full result map against the
+//! precomputed serial truth (a mismatch is a *failure*, not a wrong
+//! number in a report), and every job returns a deterministic result
+//! fingerprint; the driver cross-checks fingerprints per job index
+//! across transports, so the byte-identity property rides along with
+//! the load test.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::apps::{pagerank, wordcount};
+use crate::cluster::ClusterConfig;
+use crate::core::{JobHandle, JobOutcome, ReductionMode, Scheduler, SchedulerConfig};
+use crate::mpi::TransportKind;
+use crate::util::hash::SeededState;
+use crate::util::json::Json;
+
+/// Knobs for one serve-bench sweep.
+#[derive(Debug, Clone)]
+pub struct ServeBenchConfig {
+    /// Ranks in the shared pool (single node — subsets must structurally
+    /// match the per-job single-node clusters).
+    pub pool_width: usize,
+    /// Jobs offered per transport (the stream length).
+    pub jobs: usize,
+    /// Target request rate: job `i` is submitted at `i / offered_rps`
+    /// seconds after the stream starts.
+    pub offered_rps: f64,
+    /// Stop-loss: stop issuing once the observed failure rate exceeds
+    /// this (evaluated after [`MIN_COMPLETIONS_FOR_GATES`] completions).
+    pub stop_failure_rate: f64,
+    /// Stop-loss: stop issuing once the observed median end-to-end
+    /// latency (queue wait + execution) exceeds this many milliseconds.
+    pub stop_median_ms: f64,
+    pub seed: u64,
+    /// Admission knobs for the scheduler under test.
+    pub sched: SchedulerConfig,
+    pub transports: Vec<TransportKind>,
+}
+
+/// Gates only arm after this many completions — a single slow warm-up
+/// job must not trip the stop-loss.
+pub const MIN_COMPLETIONS_FOR_GATES: usize = 10;
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        Self {
+            pool_width: 16,
+            jobs: 48,
+            offered_rps: 40.0,
+            stop_failure_rate: 0.10,
+            stop_median_ms: 5_000.0,
+            seed: 0x5E27E,
+            sched: SchedulerConfig::default(),
+            transports: TransportKind::ALL.to_vec(),
+        }
+    }
+}
+
+impl ServeBenchConfig {
+    /// CI-smoke shape: short stream, modest rate, both transports.
+    pub fn quick() -> Self {
+        Self { jobs: 16, offered_rps: 25.0, ..Self::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.pool_width >= 2, "serve-bench pool must have >= 2 ranks");
+        ensure!(self.jobs >= 1, "serve-bench needs at least one job");
+        ensure!(self.offered_rps > 0.0, "offered rps must be positive");
+        ensure!(
+            (0.0..=1.0).contains(&self.stop_failure_rate),
+            "stop failure rate must be in [0, 1]"
+        );
+        ensure!(self.stop_median_ms > 0.0, "stop median must be positive");
+        ensure!(!self.transports.is_empty(), "need at least one transport");
+        self.sched.validate()
+    }
+}
+
+/// Precomputed inputs + ground truth shared by every job in the stream
+/// (computing them per job would turn the bench into a corpus-generator
+/// benchmark).
+struct Workload {
+    corpus: Vec<String>,
+    truth: HashMap<String, u64>,
+    graph: pagerank::Graph,
+    pr_iters: usize,
+    seed: u64,
+}
+
+impl Workload {
+    fn new(seed: u64) -> Self {
+        let corpus = wordcount::generate_corpus(160, 6, 40, seed);
+        let truth = wordcount::count_serial(&corpus);
+        Self { corpus, truth, graph: pagerank::Graph::random(240, 4, seed), pr_iters: 3, seed }
+    }
+}
+
+/// Order-independent fingerprint of a count map: XOR of per-pair hashes.
+fn fingerprint_counts(m: &HashMap<String, u64>) -> u64 {
+    let h = SeededState::new(9);
+    m.iter().fold(0u64, |acc, kv| acc ^ h.hash_one(&kv))
+}
+
+/// Position-dependent fingerprint of a score vector (f64 bit patterns —
+/// byte identity, not approximate equality).
+fn fingerprint_scores(scores: &[f64]) -> u64 {
+    let h = SeededState::new(11);
+    scores
+        .iter()
+        .enumerate()
+        .fold(0u64, |acc, (i, s)| acc ^ h.hash_one(&(i, s.to_bits())))
+}
+
+/// Job widths cycle through this pattern (capped at the pool width):
+/// mixed narrow/wide keeps several jobs co-resident on a 16-rank pool.
+const WIDTHS: [usize; 5] = [2, 4, 1, 8, 3];
+
+/// Submit job `i` of the stream: every 4th job is a 3-iteration
+/// PageRank (delayed reduction), the rest are wordcounts cycling
+/// through all three reduction modes; tenants cycle 3-way so the
+/// deficit-round-robin fairness path is live.
+fn submit_job(
+    sched: &Scheduler,
+    wl: &Arc<Workload>,
+    transport: TransportKind,
+    i: usize,
+    pool_width: usize,
+) -> Result<JobHandle<u64>> {
+    let width = WIDTHS[i % WIDTHS.len()].min(pool_width);
+    let tenant = format!("tenant-{}", i % 3);
+    let is_pagerank = i % 4 == 3;
+    let mode = ReductionMode::ALL[i % 3];
+    let wl = wl.clone();
+    sched.submit(&tenant, width, move |ctx| {
+        let cluster = ClusterConfig::builder()
+            .nodes(1)
+            .slots_per_node(ctx.width())
+            .seed(wl.seed)
+            .transport(transport)
+            .build();
+        if is_pagerank {
+            let out = pagerank::run_placed(
+                &cluster,
+                ctx.pool(),
+                ctx.ranks(),
+                &wl.graph,
+                wl.pr_iters,
+                0.85,
+                ReductionMode::Delayed,
+            )?;
+            let total: f64 = out.ranks.iter().sum();
+            ensure!((total - 1.0).abs() < 1e-6, "pagerank mass drifted to {total}");
+            Ok(fingerprint_scores(&out.ranks))
+        } else {
+            let out =
+                wordcount::run_placed(&cluster, ctx.pool(), ctx.ranks(), &wl.corpus, mode)?;
+            ensure!(out.result == wl.truth, "wordcount diverged from serial truth");
+            Ok(fingerprint_counts(&out.result))
+        }
+    })
+}
+
+/// One finished job as the driver sees it.
+struct Completion {
+    index: usize,
+    ok: bool,
+    latency_ms: f64,
+    queue_wait_ms: f64,
+    fingerprint: Option<u64>,
+}
+
+fn record(index: usize, out: JobOutcome<u64>, done: &mut Vec<Completion>) {
+    done.push(Completion {
+        index,
+        ok: out.result.is_ok(),
+        latency_ms: out.stats.queue_wait_ms + out.stats.exec_ms,
+        queue_wait_ms: out.stats.queue_wait_ms,
+        fingerprint: out.result.ok(),
+    });
+}
+
+/// Move finished handles from `pending` into `done`.
+fn harvest(
+    pending: Vec<(usize, JobHandle<u64>)>,
+    done: &mut Vec<Completion>,
+) -> Vec<(usize, JobHandle<u64>)> {
+    pending
+        .into_iter()
+        .filter_map(|(i, h)| {
+            if h.is_done() {
+                record(i, h.wait(), done);
+                None
+            } else {
+                Some((i, h))
+            }
+        })
+        .collect()
+}
+
+/// Nearest-rank percentile over an unsorted sample (sorts in place).
+fn percentile(values: &mut [f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let idx = ((p / 100.0) * (values.len() - 1) as f64).round() as usize;
+    values[idx]
+}
+
+/// Evaluate the stop-loss gates over what has completed so far.
+fn check_gates(cfg: &ServeBenchConfig, done: &[Completion]) -> Option<String> {
+    if done.len() < MIN_COMPLETIONS_FOR_GATES {
+        return None;
+    }
+    let failed = done.iter().filter(|c| !c.ok).count();
+    let rate = failed as f64 / done.len() as f64;
+    if rate > cfg.stop_failure_rate {
+        return Some(format!(
+            "failure rate {rate:.3} exceeded {:.3} after {} completions",
+            cfg.stop_failure_rate,
+            done.len()
+        ));
+    }
+    let mut lats: Vec<f64> = done.iter().map(|c| c.latency_ms).collect();
+    let p50 = percentile(&mut lats, 50.0);
+    if p50 > cfg.stop_median_ms {
+        return Some(format!(
+            "median latency {p50:.1} ms exceeded {:.1} ms after {} completions",
+            cfg.stop_median_ms,
+            done.len()
+        ));
+    }
+    None
+}
+
+/// Drive one transport's stream; returns the per-transport report and
+/// the per-job-index fingerprints (for the cross-transport check).
+fn run_transport(
+    cfg: &ServeBenchConfig,
+    wl: &Arc<Workload>,
+    transport: TransportKind,
+) -> Result<(Json, HashMap<usize, u64>)> {
+    let cluster = ClusterConfig::builder()
+        .nodes(1)
+        .slots_per_node(cfg.pool_width)
+        .seed(cfg.seed)
+        .transport(transport)
+        .scheduler(cfg.sched)
+        .build();
+    let sched = Scheduler::from_config(&cluster);
+
+    let start = Instant::now();
+    let mut pending: Vec<(usize, JobHandle<u64>)> = Vec::new();
+    let mut done: Vec<Completion> = Vec::new();
+    let mut offered = 0usize;
+    let mut stop_loss: Option<String> = None;
+
+    while offered < cfg.jobs {
+        let due = Duration::from_secs_f64(offered as f64 / cfg.offered_rps);
+        let now = start.elapsed();
+        if now < due {
+            pending = harvest(pending, &mut done);
+            if stop_loss.is_none() {
+                stop_loss = check_gates(cfg, &done);
+            }
+            if stop_loss.is_some() {
+                break;
+            }
+            std::thread::sleep((due - now).min(Duration::from_millis(1)));
+            continue;
+        }
+        pending.push((offered, submit_job(&sched, wl, transport, offered, cfg.pool_width)?));
+        offered += 1;
+    }
+    // Drain: accepted jobs always run to completion, stop-loss or not.
+    for (i, h) in pending {
+        record(i, h.wait(), &mut done);
+    }
+    if stop_loss.is_none() {
+        stop_loss = check_gates(cfg, &done);
+    }
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+    let failed = done.iter().filter(|c| !c.ok).count();
+    let failure_rate = failed as f64 / done.len().max(1) as f64;
+    let mut lats: Vec<f64> = done.iter().map(|c| c.latency_ms).collect();
+    let mut waits: Vec<f64> = done.iter().map(|c| c.queue_wait_ms).collect();
+    let mean = lats.iter().sum::<f64>() / lats.len().max(1) as f64;
+    let max = lats.iter().fold(0.0f64, |a, &b| a.max(b));
+    let tenants = Json::arr(sched.tenant_stats().into_iter().map(|t| {
+        Json::obj([
+            ("name", Json::str(t.name)),
+            ("admitted_jobs", Json::num(t.admitted_jobs as f64)),
+            ("admitted_rank_units", Json::num(t.admitted_rank_units as f64)),
+        ])
+    }));
+    let report = Json::obj([
+        ("transport", Json::str(transport.to_string())),
+        ("offered", Json::num(offered as f64)),
+        ("completed", Json::num(done.len() as f64)),
+        ("failed", Json::num(failed as f64)),
+        ("failure_rate", Json::num(failure_rate)),
+        (
+            "latency_ms",
+            Json::obj([
+                ("p50", Json::num(percentile(&mut lats, 50.0))),
+                ("p99", Json::num(percentile(&mut lats, 99.0))),
+                ("mean", Json::num(mean)),
+                ("max", Json::num(max)),
+            ]),
+        ),
+        (
+            "queue_wait_ms",
+            Json::obj([
+                ("p50", Json::num(percentile(&mut waits, 50.0))),
+                ("p99", Json::num(percentile(&mut waits, 99.0))),
+            ]),
+        ),
+        ("throughput_jps", Json::num(done.len() as f64 / (wall_ms / 1e3).max(1e-9))),
+        ("offered_rps", Json::num(cfg.offered_rps)),
+        ("peak_concurrent_jobs", Json::num(sched.peak_concurrent_jobs() as f64)),
+        ("tenants", tenants),
+        (
+            "stop_loss",
+            match &stop_loss {
+                Some(reason) => Json::str(reason.clone()),
+                None => Json::Null,
+            },
+        ),
+        ("wall_ms", Json::num(wall_ms)),
+    ]);
+    let fingerprints = done
+        .iter()
+        .filter_map(|c| c.fingerprint.map(|f| (c.index, f)))
+        .collect();
+    Ok((report, fingerprints))
+}
+
+/// Run the sweep over every configured transport and write the report
+/// to `out_path`. Returns the report for the caller to print.
+pub fn run_serve_bench(cfg: &ServeBenchConfig, out_path: &Path) -> Result<Json> {
+    cfg.validate()?;
+    let wl = Arc::new(Workload::new(cfg.seed));
+    let mut transports = Vec::new();
+    let mut per_transport_fps: Vec<HashMap<usize, u64>> = Vec::new();
+    for &t in &cfg.transports {
+        let (report, fps) = run_transport(cfg, &wl, t)
+            .with_context(|| format!("serve-bench over {t} transport"))?;
+        transports.push(report);
+        per_transport_fps.push(fps);
+    }
+    // Byte-identity rides along: the same job index must produce the
+    // same result fingerprint on every transport it completed on.
+    let mut mismatches = 0usize;
+    if let Some((first, rest)) = per_transport_fps.split_first() {
+        for other in rest {
+            for (i, fp) in first {
+                if let Some(ofp) = other.get(i) {
+                    if ofp != fp {
+                        mismatches += 1;
+                    }
+                }
+            }
+        }
+    }
+    let report = Json::obj([
+        ("bench", Json::str("serve-sustained-load")),
+        ("pr", Json::num(9.0)),
+        ("harness", Json::str("blaze serve-bench (writes this file)")),
+        (
+            "note",
+            Json::str(
+                "Run `blaze serve-bench` (or `--quick`) to populate. The driver offers an \
+                 open-loop stream of mixed-width wordcount/pagerank jobs to the concurrent \
+                 scheduler at the target request rate, once per transport (mailbox = \
+                 in-process channels, tcp = spawned blaze-worker processes), and records \
+                 end-to-end latency percentiles (queue wait + execution), throughput, \
+                 failure rate and per-tenant admission shares. Stop-loss gates halt \
+                 issuing when the failure rate or median latency exceed the configured \
+                 thresholds; wordcount results are validated against serial truth and \
+                 result fingerprints are cross-checked between transports.",
+            ),
+        ),
+        (
+            "config",
+            Json::obj([
+                ("pool_width", Json::num(cfg.pool_width as f64)),
+                ("jobs_per_transport", Json::num(cfg.jobs as f64)),
+                ("offered_rps", Json::num(cfg.offered_rps)),
+                ("seed", Json::num(cfg.seed as f64)),
+                ("scheduler", Json::str(cfg.sched.to_string())),
+            ]),
+        ),
+        (
+            "gates",
+            Json::obj([
+                ("stop_failure_rate", Json::num(cfg.stop_failure_rate)),
+                ("stop_median_ms", Json::num(cfg.stop_median_ms)),
+                ("min_completions", Json::num(MIN_COMPLETIONS_FOR_GATES as f64)),
+            ]),
+        ),
+        ("cross_transport_fingerprint_mismatches", Json::num(mismatches as f64)),
+        ("transports", Json::Arr(transports)),
+    ]);
+    std::fs::write(out_path, report.to_string_pretty())
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    Ok(report)
+}
+
+/// Structural check of a serve-bench report — shared by the unit test
+/// here and the CI smoke, so the committed `BENCH_9.json` placeholder
+/// and freshly generated reports stay schema-compatible.
+pub fn validate_report(report: &Json) -> Result<()> {
+    ensure!(
+        report.req("bench")?.as_str() == Some("serve-sustained-load"),
+        "wrong bench id"
+    );
+    report.req("pr")?.as_u64().context("pr must be an integer")?;
+    report.req("note")?.as_str().context("note must be a string")?;
+    let gates = report.req("gates")?;
+    gates.req("stop_failure_rate")?.as_f64().context("stop_failure_rate")?;
+    gates.req("stop_median_ms")?.as_f64().context("stop_median_ms")?;
+    let transports = report.req("transports")?.as_arr().context("transports must be an array")?;
+    for t in transports {
+        t.req("transport")?.as_str().context("transport name")?;
+        let completed = t.req("completed")?.as_u64().context("completed")?;
+        let offered = t.req("offered")?.as_u64().context("offered")?;
+        ensure!(completed == offered, "completed {completed} != offered {offered} (accepted jobs must drain)");
+        t.req("failure_rate")?.as_f64().context("failure_rate")?;
+        let lat = t.req("latency_ms")?;
+        for key in ["p50", "p99", "mean", "max"] {
+            lat.req(key)?.as_f64().with_context(|| format!("latency_ms.{key}"))?;
+        }
+        let qw = t.req("queue_wait_ms")?;
+        for key in ["p50", "p99"] {
+            qw.req(key)?.as_f64().with_context(|| format!("queue_wait_ms.{key}"))?;
+        }
+        t.req("throughput_jps")?.as_f64().context("throughput_jps")?;
+        t.req("peak_concurrent_jobs")?.as_u64().context("peak_concurrent_jobs")?;
+        ensure!(
+            matches!(t.req("stop_loss")?, Json::Null | Json::Str(_)),
+            "stop_loss must be null or a reason string"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut v = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&mut v, 50.0), 3.0);
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 100.0), 5.0);
+        assert_eq!(percentile(&mut [], 50.0), 0.0);
+    }
+
+    #[test]
+    fn gates_trip_on_failures_and_latency() {
+        let cfg = ServeBenchConfig {
+            stop_failure_rate: 0.2,
+            stop_median_ms: 100.0,
+            ..ServeBenchConfig::default()
+        };
+        let mk = |ok: bool, lat: f64| Completion {
+            index: 0,
+            ok,
+            latency_ms: lat,
+            queue_wait_ms: 0.0,
+            fingerprint: ok.then_some(1),
+        };
+        // Below the arming threshold: never trips.
+        let few: Vec<Completion> = (0..5).map(|_| mk(false, 1e9)).collect();
+        assert!(check_gates(&cfg, &few).is_none());
+        // Healthy sample: quiet.
+        let healthy: Vec<Completion> = (0..12).map(|_| mk(true, 10.0)).collect();
+        assert!(check_gates(&cfg, &healthy).is_none());
+        // 1/3 failures > 20%: failure gate.
+        let failing: Vec<Completion> =
+            (0..12).map(|i| mk(i % 3 != 0, 10.0)).collect();
+        let reason = check_gates(&cfg, &failing).unwrap();
+        assert!(reason.contains("failure rate"), "{reason}");
+        // Median 500 ms > 100 ms: latency gate.
+        let slow: Vec<Completion> = (0..12).map(|_| mk(true, 500.0)).collect();
+        let reason = check_gates(&cfg, &slow).unwrap();
+        assert!(reason.contains("median latency"), "{reason}");
+    }
+
+    #[test]
+    fn quick_mailbox_sweep_produces_valid_report() {
+        // Mailbox only: lib unit tests cannot spawn TCP worker processes
+        // (no CARGO_BIN_EXE_blaze); the integration suite and the CI
+        // smoke cover tcp.
+        let cfg = ServeBenchConfig {
+            pool_width: 4,
+            jobs: 12,
+            offered_rps: 200.0,
+            transports: vec![TransportKind::Mailbox],
+            ..ServeBenchConfig::default()
+        };
+        let path = std::env::temp_dir()
+            .join(format!("blaze_serve_bench_{}.json", std::process::id()));
+        let report = run_serve_bench(&cfg, &path).unwrap();
+        validate_report(&report).unwrap();
+        // The file round-trips through the parser to the same value.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(Json::parse(&text).unwrap(), report);
+        // Everything offered completed, nothing failed, no stop-loss.
+        let t = &report.req("transports").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t.req("offered").unwrap().as_u64(), Some(12));
+        assert_eq!(t.req("completed").unwrap().as_u64(), Some(12));
+        assert_eq!(t.req("failed").unwrap().as_u64(), Some(0));
+        assert_eq!(t.req("stop_loss").unwrap(), &Json::Null);
+        assert_eq!(
+            report.req("cross_transport_fingerprint_mismatches").unwrap().as_u64(),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn stop_loss_halts_issuing_but_drains_accepted_jobs() {
+        // An impossible median gate (0.001 ms) must trip as soon as the
+        // gates arm; the driver stops offering but every accepted job
+        // still completes.
+        let cfg = ServeBenchConfig {
+            pool_width: 4,
+            jobs: 40,
+            offered_rps: 100.0,
+            stop_median_ms: 0.001,
+            transports: vec![TransportKind::Mailbox],
+            ..ServeBenchConfig::default()
+        };
+        let path = std::env::temp_dir()
+            .join(format!("blaze_serve_stop_{}.json", std::process::id()));
+        let report = run_serve_bench(&cfg, &path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        validate_report(&report).unwrap();
+        let t = &report.req("transports").unwrap().as_arr().unwrap()[0];
+        let reason = t.req("stop_loss").unwrap().as_str().unwrap();
+        assert!(reason.contains("median latency"), "{reason}");
+        let offered = t.req("offered").unwrap().as_u64().unwrap();
+        assert_eq!(t.req("completed").unwrap().as_u64().unwrap(), offered);
+    }
+}

@@ -19,6 +19,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::core::SchedulerConfig;
 use crate::mpi::{CollectiveAlgo, TransportKind};
 use crate::trace::TraceConfig;
 use crate::util::toml_mini::TomlDoc;
@@ -64,6 +65,9 @@ pub struct ClusterConfig {
     /// Explicit tracing configuration, if pinned (see
     /// [`ClusterConfig::trace`] for the resolution order).
     pub trace: Option<TraceConfig>,
+    /// Explicit concurrent-scheduler knobs, if pinned (see
+    /// [`ClusterConfig::scheduler_config`] for the resolution order).
+    pub scheduler: Option<SchedulerConfig>,
     pub limits: Limits,
 }
 
@@ -94,6 +98,7 @@ impl ClusterConfig {
             transport: None,
             worker_bin: None,
             trace: None,
+            scheduler: None,
             limits: Limits::default(),
         };
         for (section, entries) in doc.sections() {
@@ -142,6 +147,19 @@ impl ClusterConfig {
                                 .parse()?,
                         );
                     }
+                    ("scheduler", "quantum") => {
+                        cfg.scheduler.get_or_insert_with(SchedulerConfig::default).quantum =
+                            int()? as u64;
+                    }
+                    ("scheduler", "max-queue") => {
+                        cfg.scheduler.get_or_insert_with(SchedulerConfig::default).max_queue =
+                            int()?;
+                    }
+                    ("scheduler", "starvation-rounds") => {
+                        cfg.scheduler
+                            .get_or_insert_with(SchedulerConfig::default)
+                            .starvation_rounds = int()? as u64;
+                    }
                     ("limits", "mem-fraction") => {
                         cfg.limits.mem_fraction =
                             value.as_float().with_context(|| format!("{key}: expected float"))?;
@@ -175,8 +193,15 @@ impl ClusterConfig {
             Some(t) => format!("trace = \"{t}\"\n"),
             None => String::new(),
         };
+        let scheduler = match &self.scheduler {
+            Some(s) => format!(
+                "\n[scheduler]\nquantum = {}\nmax-queue = {}\nstarvation-rounds = {}\n",
+                s.quantum, s.max_queue, s.starvation_rounds
+            ),
+            None => String::new(),
+        };
         format!(
-            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n{algo}{transport}{worker_bin}{trace}\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n",
+            "deployment = \"{}\"\nnodes = {}\nslots-per-node = {}\nseed = {}\n{algo}{transport}{worker_bin}{trace}\n[limits]\nmem-fraction = {:?}\nshuffle-buffer-bytes = {}\n{scheduler}",
             self.deployment,
             self.nodes,
             self.slots_per_node,
@@ -194,6 +219,9 @@ impl ClusterConfig {
             "mem-fraction {} outside [0.05, 0.95]",
             self.limits.mem_fraction
         );
+        if let Some(s) = &self.scheduler {
+            s.validate()?;
+        }
         Ok(())
     }
 
@@ -303,6 +331,27 @@ impl ClusterConfig {
             None => env.and_then(|s| s.trim().parse().ok()).unwrap_or_default(),
         }
     }
+
+    /// Concurrent-scheduler knobs for this cluster's [`crate::core::Scheduler`].
+    /// Precedence (mirroring [`ClusterConfig::trace`]): an explicit
+    /// `scheduler` field (builder `.scheduler(..)` or a `[scheduler]` TOML
+    /// section), then the `BLAZE_SCHED` environment override (e.g.
+    /// `BLAZE_SCHED=quantum=8,max-queue=1024,starvation-rounds=4`), then
+    /// [`SchedulerConfig::default`].
+    pub fn scheduler_config(&self) -> SchedulerConfig {
+        let env = std::env::var("BLAZE_SCHED").ok();
+        self.resolve_scheduler(env.as_deref())
+    }
+
+    /// Resolution with the env override injected — tests exercise the
+    /// precedence without mutating process-global environment (setenv
+    /// races getenv across test threads).
+    fn resolve_scheduler(&self, env: Option<&str>) -> SchedulerConfig {
+        match self.scheduler {
+            Some(s) => s,
+            None => env.and_then(|s| SchedulerConfig::parse(s).ok()).unwrap_or_default(),
+        }
+    }
 }
 
 /// Builder for [`ClusterConfig`]. `ranks(n)` is shorthand for n single-slot
@@ -318,6 +367,7 @@ pub struct ClusterConfigBuilder {
     transport: Option<TransportKind>,
     worker_bin: Option<PathBuf>,
     trace: Option<TraceConfig>,
+    scheduler: Option<SchedulerConfig>,
     limits: Option<Limits>,
 }
 
@@ -382,6 +432,13 @@ impl ClusterConfigBuilder {
         self
     }
 
+    /// Pin the concurrent-scheduler knobs (beats the `BLAZE_SCHED` env
+    /// override).
+    pub fn scheduler(mut self, cfg: SchedulerConfig) -> Self {
+        self.scheduler = Some(cfg);
+        self
+    }
+
     pub fn mem_fraction(mut self, f: f64) -> Self {
         self.limits.get_or_insert_with(Limits::default).mem_fraction = f;
         self
@@ -402,6 +459,7 @@ impl ClusterConfigBuilder {
             transport: self.transport,
             worker_bin: self.worker_bin,
             trace: self.trace,
+            scheduler: self.scheduler,
             limits: self.limits.unwrap_or_default(),
         };
         cfg.validate().expect("builder produced invalid config");
@@ -528,6 +586,41 @@ mod tests {
             TraceConfig::Export(PathBuf::from("/tmp/t.json"))
         );
         assert_eq!(explicit.resolve_trace(Some("off")), TraceConfig::Record, "explicit beats env");
+    }
+
+    #[test]
+    fn toml_roundtrip_with_scheduler() {
+        let c = ClusterConfig::builder()
+            .nodes(2)
+            .scheduler(SchedulerConfig { quantum: 4, max_queue: 64, starvation_rounds: 2 })
+            .build();
+        let text = c.to_toml_string();
+        assert!(text.contains("[scheduler]"), "{text}");
+        assert!(text.contains("quantum = 4"), "{text}");
+        assert_eq!(ClusterConfig::from_toml_str(&text).unwrap(), c);
+        assert!(ClusterConfig::from_toml_str("[scheduler]\nwat = 1\n").is_err());
+        // A partial section keeps defaults for the unnamed knobs.
+        let part = ClusterConfig::from_toml_str("[scheduler]\nquantum = 3\n").unwrap();
+        assert_eq!(
+            part.scheduler,
+            Some(SchedulerConfig { quantum: 3, ..SchedulerConfig::default() })
+        );
+    }
+
+    #[test]
+    fn explicit_scheduler_beats_env_beats_default() {
+        let derived = ClusterConfig::builder().build();
+        let explicit = ClusterConfig::builder()
+            .scheduler(SchedulerConfig { quantum: 9, ..SchedulerConfig::default() })
+            .build();
+        assert_eq!(derived.resolve_scheduler(None), SchedulerConfig::default());
+        assert_eq!(derived.resolve_scheduler(Some("quantum=2")).quantum, 2);
+        assert_eq!(
+            derived.resolve_scheduler(Some("garbage")),
+            SchedulerConfig::default(),
+            "garbage env falls back to defaults"
+        );
+        assert_eq!(explicit.resolve_scheduler(Some("quantum=2")).quantum, 9, "explicit beats env");
     }
 
     #[test]

@@ -43,12 +43,13 @@ pub struct MapReduceJob<'i, I> {
     input: &'i [I],
     fault: Option<TaskFault>,
     pool: Option<&'i RankPool>,
+    placement: Option<&'i [usize]>,
 }
 
 impl<'i, I: Sync> MapReduceJob<'i, I> {
     pub fn new(cluster: &ClusterConfig, input: &'i [I]) -> Self {
         let cluster = cluster.clone();
-        Self { cluster, config: JobConfig::default(), input, fault: None, pool: None }
+        Self { cluster, config: JobConfig::default(), input, fault: None, pool: None, placement: None }
     }
 
     pub fn with_config(mut self, config: JobConfig) -> Self {
@@ -68,6 +69,19 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
     /// `ranks()` ranks (build it with [`RankPool::from_config`]).
     pub fn with_pool(mut self, pool: &'i RankPool) -> Self {
         self.pool = Some(pool);
+        self
+    }
+
+    /// Run on an explicit rank subset of a warm pool — the seam the
+    /// concurrent [`crate::core::Scheduler`] dispatches through. `ranks`
+    /// are strictly-ascending pool indices; their count must equal this
+    /// cluster's `ranks()` and the pool's topology restricted to them
+    /// must structurally match the job cluster's (checked via
+    /// [`RankPool::ensure_models_on`]). Inside the job the subset is
+    /// renumbered 0..width, so SPMD bodies are placement-oblivious.
+    pub fn with_placement(mut self, pool: &'i RankPool, ranks: &'i [usize]) -> Self {
+        self.pool = Some(pool);
+        self.placement = Some(ranks);
         self
     }
 
@@ -217,14 +231,20 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         );
 
         let rank_body = |comm: &Communicator| body(comm, &feed, &tracker);
-        let out = match self.pool {
-            Some(pool) => {
+        let out = match (self.pool, self.placement) {
+            (Some(pool), Some(subset)) => {
+                pool.ensure_models_on(&self.cluster, subset)?;
+                pool.run_job_on(subset, rank_body)
+            }
+            (Some(pool), None) => {
                 pool.ensure_models(&self.cluster)?;
                 pool.run_job(ranks, rank_body)
             }
             // One-shot: a throwaway pool wired exactly like the old fresh
             // universe (same threads-per-job cost as before the refactor).
-            None => RankPool::new(Universe::from_cluster(&self.cluster)).run_job(ranks, rank_body),
+            (None, _) => {
+                RankPool::new(Universe::from_cluster(&self.cluster)).run_job(ranks, rank_body)
+            }
         };
         let (rank_results, clocks, traffic, rank_spans) =
             (out.results, out.clocks, out.traffic, out.trace);
@@ -405,6 +425,45 @@ mod tests {
             .run_eager(wc_map, |a, b| *a += b)
             .unwrap_err();
         assert!(format!("{err:#}").contains("rank pool"), "{err:#}");
+    }
+
+    #[test]
+    fn placed_subset_matches_fresh_spawn() {
+        // A width-2 job placed on ranks {1,3} of a warm single-node
+        // width-4 pool must be byte-identical to a fresh 2-rank run —
+        // subset renumbering keeps SPMD bodies placement-oblivious.
+        let input = wordcount_input(90);
+        let pool_cluster = ClusterConfig::builder().nodes(1).slots_per_node(4).build();
+        let job_cluster = ClusterConfig::builder().nodes(1).slots_per_node(2).build();
+        let pool = RankPool::from_config(&pool_cluster);
+        for mode in ReductionMode::ALL {
+            let fresh = MapReduceJob::new(&job_cluster, &input)
+                .with_mode(mode)
+                .run_monoid(wc_map, |a: u64, b| a + b)
+                .unwrap();
+            let placed = MapReduceJob::new(&job_cluster, &input)
+                .with_mode(mode)
+                .with_placement(&pool, &[1, 3])
+                .run_monoid(wc_map, |a: u64, b| a + b)
+                .unwrap();
+            assert_eq!(fresh.result, placed.result, "mode {mode}");
+            assert_eq!(fresh.stats.shuffle_bytes, placed.stats.shuffle_bytes, "mode {mode}");
+            assert_eq!(fresh.stats.messages, placed.stats.messages, "mode {mode}");
+        }
+        assert_eq!(pool.jobs_run(), 3);
+    }
+
+    #[test]
+    fn placement_width_mismatch_is_rejected() {
+        let input = wordcount_input(10);
+        let pool_cluster = ClusterConfig::builder().nodes(1).slots_per_node(4).build();
+        let job_cluster = ClusterConfig::builder().nodes(1).slots_per_node(2).build();
+        let pool = RankPool::from_config(&pool_cluster);
+        let err = MapReduceJob::new(&job_cluster, &input)
+            .with_placement(&pool, &[0, 1, 2])
+            .run_eager(wc_map, |a, b| *a += b)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rank"), "{err:#}");
     }
 
     #[test]

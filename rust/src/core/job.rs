@@ -82,6 +82,11 @@ impl JobConfig {
 }
 
 /// Measured + modeled execution statistics for one job.
+///
+/// These are the *engine-level* numbers for a single SPMD execution.
+/// When a job runs through the concurrent admission layer, the
+/// scheduler wraps them with queue-level accounting — queue wait,
+/// rank subset, harvested trace — in [`crate::core::SchedJobStats`].
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct JobStats {
     /// Modeled wall time: slowest rank's virtual clock + cluster startup.

@@ -44,5 +44,8 @@ pub use iterative::{
 pub use job::{JobConfig, JobResult, JobStats, ReductionMode, Scheduling};
 pub use monoid::Monoid;
 pub use partitioner::RangePartitioner;
-pub use scheduler::{TaskFault, TaskFeed};
+pub use scheduler::{
+    JobCtx, JobEvent, JobHandle, JobOutcome, SchedJobStats, Scheduler, SchedulerConfig,
+    TaskFault, TaskFeed, TenantStats,
+};
 pub use shuffle::shuffle_runs;

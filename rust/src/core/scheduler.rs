@@ -203,3 +203,883 @@ mod tests {
         assert!(feed.all_done());
     }
 }
+
+// ============================================================================
+// Concurrent multi-job scheduling — the admission layer above `RankPool`.
+// ============================================================================
+//
+// Everything above this line schedules *tasks within one job*; everything
+// below schedules *jobs onto one warm pool*. [`Scheduler`] accepts jobs
+// from many client threads, queues them per tenant, admits them with
+// deficit-round-robin fairness, and co-schedules jobs of different widths
+// onto disjoint rank subsets — a 4-rank and a 12-rank job run
+// simultaneously on a 16-rank pool. Per-job epochs (stamped by the pool)
+// keep concurrent jobs' message planes disjoint; the scheduler's job is
+// rank-subset reservation, queueing, fairness accounting, and completion
+// notification via [`JobHandle`].
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::metrics::Registry;
+use crate::mpi::{Communicator, RankPool, TrafficDelta};
+use crate::trace::SpanEvent;
+
+/// Admission knobs, resolved like every other cluster knob (explicit
+/// builder/TOML beats the `BLAZE_SCHED` env beats these defaults — see
+/// [`ClusterConfig::resolve_scheduler`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    /// Rank-units of deficit credited to a tenant per admission round.
+    /// Bigger = burstier tenants; 1 = strict per-rank-unit round-robin.
+    pub quantum: u64,
+    /// Maximum jobs waiting across all tenants; submissions beyond it
+    /// are rejected (admission control, not silent buffering).
+    pub max_queue: usize,
+    /// After this many admission rounds in which a queued head job was
+    /// skipped because it didn't fit the free ranks, the scheduler
+    /// freezes all admission until that job is placed — the
+    /// no-starvation guarantee for wide jobs.
+    pub starvation_rounds: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { quantum: 8, max_queue: 1024, starvation_rounds: 4 }
+    }
+}
+
+impl SchedulerConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.quantum >= 1, "scheduler quantum must be >= 1");
+        ensure!(self.max_queue >= 1, "scheduler max-queue must be >= 1");
+        ensure!(self.starvation_rounds >= 1, "scheduler starvation-rounds must be >= 1");
+        Ok(())
+    }
+
+    /// Parse the `BLAZE_SCHED` dialect:
+    /// `quantum=8,max-queue=1024,starvation-rounds=4` (any subset of
+    /// keys, any order; unknown keys are errors).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("scheduler knob {part:?} is not key=value"))?;
+            match key.trim() {
+                "quantum" => cfg.quantum = value.trim().parse()?,
+                "max-queue" => cfg.max_queue = value.trim().parse()?,
+                "starvation-rounds" => cfg.starvation_rounds = value.trim().parse()?,
+                other => bail!("unknown scheduler knob {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl std::fmt::Display for SchedulerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "quantum={},max-queue={},starvation-rounds={}",
+            self.quantum, self.max_queue, self.starvation_rounds
+        )
+    }
+}
+
+impl std::str::FromStr for SchedulerConfig {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+/// What a scheduled job sees: its reserved rank subset on the shared
+/// pool. [`JobCtx::run_spmd`] is the bread-and-butter entry — each call
+/// is one SPMD wave over exactly the reserved ranks, with the traffic /
+/// modeled-clock / trace harvest accumulated into the job's
+/// [`SchedJobStats`].
+pub struct JobCtx<'a> {
+    pool: &'a RankPool,
+    ranks: &'a [usize],
+    harvest: RefCell<Harvest>,
+}
+
+#[derive(Default)]
+struct Harvest {
+    traffic: TrafficDelta,
+    modeled_clock_ns: u64,
+    spmd_waves: u64,
+    trace: Vec<SpanEvent>,
+}
+
+impl<'a> JobCtx<'a> {
+    /// Number of ranks reserved for this job.
+    pub fn width(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// The pool ranks reserved for this job (strictly ascending).
+    pub fn ranks(&self) -> &[usize] {
+        self.ranks
+    }
+
+    /// The shared pool, for placement-aware entry points
+    /// ([`crate::core::MapReduceJob::with_placement`] and friends) that
+    /// manage their own waves. Jobs that go through the pool directly
+    /// must stay on [`JobCtx::ranks`].
+    pub fn pool(&self) -> &'a RankPool {
+        self.pool
+    }
+
+    /// Run one SPMD wave on the job's reserved ranks. The closure sees a
+    /// fresh `width()`-rank universe (local ranks `0..width()`); results
+    /// come back in local rank order. Traffic, the slowest rank's virtual
+    /// clock, and recorded spans are folded into the job's stats.
+    pub fn run_spmd<T, F>(&self, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        let out = self.pool.try_run_job_on(self.ranks, f)?;
+        let mut h = self.harvest.borrow_mut();
+        h.traffic.messages += out.traffic.messages;
+        h.traffic.bytes += out.traffic.bytes;
+        h.traffic.remote_messages += out.traffic.remote_messages;
+        h.traffic.remote_bytes += out.traffic.remote_bytes;
+        h.modeled_clock_ns += out.clocks.iter().map(|c| c.0).max().unwrap_or(0);
+        h.spmd_waves += 1;
+        h.trace.extend(out.trace);
+        Ok(out.results)
+    }
+}
+
+/// Per-job accounting the scheduler attaches to every outcome — the
+/// queue-wait / execution split is what the sustained-load bench gates on.
+#[derive(Debug, Clone)]
+pub struct SchedJobStats {
+    /// Pool-unique job id (also the job's message epoch).
+    pub job: u64,
+    pub tenant: String,
+    pub width: usize,
+    /// Pool ranks the job ran on.
+    pub ranks: Vec<usize>,
+    /// Submission-to-start latency.
+    pub queue_wait_ms: f64,
+    /// Start-to-finish host wall time.
+    pub exec_ms: f64,
+    /// Sum over the job's `run_spmd` waves.
+    pub traffic: TrafficDelta,
+    /// Sum over waves of the slowest rank's virtual clock.
+    pub modeled_clock_ns: u64,
+    pub spmd_waves: u64,
+    /// Spans harvested from the job's waves (empty when tracing is off).
+    pub trace: Vec<SpanEvent>,
+}
+
+/// A finished job: the closure's result (or its panic/error) + stats.
+/// Failures still carry stats, so latency accounting covers failed jobs.
+#[derive(Debug)]
+pub struct JobOutcome<R> {
+    pub result: Result<R>,
+    pub stats: SchedJobStats,
+}
+
+struct HandleInner<R> {
+    slot: Mutex<Option<JobOutcome<R>>>,
+    cv: Condvar,
+}
+
+/// Completion future for one submitted job. `wait()` blocks until the
+/// scheduler has run the job; `is_done()` polls.
+pub struct JobHandle<R> {
+    id: u64,
+    inner: Arc<HandleInner<R>>,
+}
+
+impl<R> JobHandle<R> {
+    /// Pool-unique job id (also the job's message epoch).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Has the job finished (successfully or not)?
+    pub fn is_done(&self) -> bool {
+        self.inner.slot.lock().unwrap_or_else(|p| p.into_inner()).is_some()
+    }
+
+    /// Block until the job finishes; consumes the handle.
+    pub fn wait(self) -> JobOutcome<R> {
+        let mut slot = self.inner.slot.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(out) = slot.take() {
+                return out;
+            }
+            slot = self.inner.cv.wait(slot).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// One admission/completion record — the scheduler's logical clock bumps
+/// at every admission and completion, so two jobs overlapped in time iff
+/// `a.admitted_at < b.completed_at && b.admitted_at < a.completed_at`.
+#[derive(Debug, Clone)]
+pub struct JobEvent {
+    pub job: u64,
+    pub tenant: String,
+    pub width: usize,
+    pub ranks: Vec<usize>,
+    pub admitted_at: u64,
+    pub completed_at: Option<u64>,
+}
+
+impl JobEvent {
+    /// Were `self` and `other` in flight at the same time?
+    pub fn overlaps(&self, other: &JobEvent) -> bool {
+        match (self.completed_at, other.completed_at) {
+            (Some(sc), Some(oc)) => self.admitted_at < oc && other.admitted_at < sc,
+            // An unfinished job overlaps everything admitted before its
+            // (future) completion.
+            (None, Some(oc)) => self.admitted_at < oc,
+            (Some(sc), None) => other.admitted_at < sc,
+            (None, None) => true,
+        }
+    }
+}
+
+/// Per-tenant fairness accounting snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantStats {
+    pub name: String,
+    pub admitted_jobs: u64,
+    /// Sum of admitted widths — the deficit-round-robin currency.
+    pub admitted_rank_units: u64,
+}
+
+struct QueuedJob {
+    id: u64,
+    width: usize,
+    /// Admission rounds in which this job sat at its tenant's head but
+    /// didn't fit the free ranks (starvation detector).
+    skips: u64,
+    run: Box<dyn FnOnce(&RankPool, &[usize]) + Send>,
+}
+
+struct Tenant {
+    name: String,
+    deficit: u64,
+    queue: VecDeque<QueuedJob>,
+    admitted_jobs: u64,
+    admitted_rank_units: u64,
+}
+
+struct State {
+    tenants: Vec<Tenant>,
+    /// Round-robin cursor over tenants.
+    rr: usize,
+    free: Vec<bool>,
+    free_count: usize,
+    queued: usize,
+    active: usize,
+    peak_active: usize,
+    next_job: u64,
+    shutdown: bool,
+    /// Job id frozen for admission (see `starvation_rounds`).
+    starving: Option<u64>,
+    events: Vec<JobEvent>,
+    /// Logical clock: bumped at every admission and completion.
+    clock: u64,
+}
+
+struct Shared {
+    pool: RankPool,
+    cfg: SchedulerConfig,
+    metrics: Arc<Registry>,
+    state: Mutex<State>,
+    /// Signalled on submit / completion / shutdown — dispatchers wait
+    /// here for something to admit.
+    work: Condvar,
+    /// Signalled when the scheduler goes idle (nothing queued or active).
+    idle: Condvar,
+}
+
+/// Admission layer above a warm [`RankPool`]: many client threads submit
+/// jobs ([`Scheduler::submit`]) tagged with a tenant name; the scheduler
+/// queues per tenant, admits with deficit-round-robin fairness, reserves
+/// a disjoint rank subset per job (lowest free ranks), and runs admitted
+/// jobs concurrently — each [`JobHandle`] resolves when its job is done.
+///
+/// Lock ordering: `state` is the outer lock, the metrics registry the
+/// (leaf) inner one; nothing ever takes them in the other order.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    dispatchers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scheduler")
+            .field("pool_size", &self.shared.pool.size())
+            .field("cfg", &self.shared.cfg)
+            .finish()
+    }
+}
+
+impl Scheduler {
+    /// Scheduler over `pool` with default knobs.
+    pub fn new(pool: RankPool) -> Self {
+        Self::with_config(pool, SchedulerConfig::default())
+    }
+
+    /// Scheduler over `pool` with explicit knobs.
+    pub fn with_config(pool: RankPool, cfg: SchedulerConfig) -> Self {
+        cfg.validate().expect("scheduler config");
+        let n = pool.size();
+        let shared = Arc::new(Shared {
+            pool,
+            cfg,
+            metrics: Arc::new(Registry::new()),
+            state: Mutex::new(State {
+                tenants: Vec::new(),
+                rr: 0,
+                free: vec![true; n],
+                free_count: n,
+                queued: 0,
+                active: 0,
+                peak_active: 0,
+                next_job: 0,
+                shutdown: false,
+                starving: None,
+                events: Vec::new(),
+                clock: 0,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        });
+        // One dispatcher per rank: enough to keep the pool full even with
+        // all-width-1 jobs; a dispatcher blocks only while its job runs.
+        let dispatchers = (0..n)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("blaze-sched-{i}"))
+                    .spawn(move || dispatcher_loop(shared))
+                    .expect("spawn scheduler dispatcher")
+            })
+            .collect();
+        Self { shared, dispatchers }
+    }
+
+    /// Scheduler wired like `cluster` prescribes: pool from the cluster,
+    /// knobs from its resolved scheduler config (builder/TOML beats
+    /// `BLAZE_SCHED` beats defaults).
+    pub fn from_config(cluster: &ClusterConfig) -> Self {
+        Self::with_config(RankPool::from_config(cluster), cluster.scheduler_config())
+    }
+
+    /// Submit one job for `tenant` needing `width` ranks. Returns
+    /// immediately with a completion handle; errors if the width can
+    /// never be placed or the queue is at `max_queue`.
+    pub fn submit<R, F>(&self, tenant: &str, width: usize, job: F) -> Result<JobHandle<R>>
+    where
+        R: Send + 'static,
+        F: FnOnce(&JobCtx<'_>) -> Result<R> + Send + 'static,
+    {
+        ensure!(width >= 1, "job width must be >= 1");
+        ensure!(
+            width <= self.shared.pool.size(),
+            "job wants {width} ranks but the pool has {}",
+            self.shared.pool.size()
+        );
+        let inner = Arc::new(HandleInner { slot: Mutex::new(None), cv: Condvar::new() });
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        ensure!(!st.shutdown, "scheduler is shutting down");
+        ensure!(
+            st.queued < self.shared.cfg.max_queue,
+            "scheduler queue full ({} jobs waiting)",
+            st.queued
+        );
+        st.next_job += 1;
+        let id = st.next_job;
+        let handle = JobHandle { id, inner: inner.clone() };
+        let tenant_name = tenant.to_string();
+        let metrics = self.shared.metrics.clone();
+        let submitted = Instant::now();
+        let run = Box::new(move |pool: &RankPool, ranks: &[usize]| {
+            let queue_wait_ms = submitted.elapsed().as_secs_f64() * 1e3;
+            let started = Instant::now();
+            let ctx = JobCtx { pool, ranks, harvest: RefCell::new(Harvest::default()) };
+            let result = match catch_unwind(AssertUnwindSafe(|| job(&ctx))) {
+                Ok(r) => r,
+                Err(payload) => {
+                    Err(anyhow::anyhow!("job panicked: {}", sched_panic_message(&*payload)))
+                }
+            };
+            let exec_ms = started.elapsed().as_secs_f64() * 1e3;
+            let harvest = ctx.harvest.into_inner();
+            metrics.observe("sched.queue_wait_ms", queue_wait_ms.round() as u64);
+            metrics.observe("sched.exec_ms", exec_ms.round() as u64);
+            let stats = SchedJobStats {
+                job: id,
+                tenant: tenant_name,
+                width: ranks.len(),
+                ranks: ranks.to_vec(),
+                queue_wait_ms,
+                exec_ms,
+                traffic: harvest.traffic,
+                modeled_clock_ns: harvest.modeled_clock_ns,
+                spmd_waves: harvest.spmd_waves,
+                trace: harvest.trace,
+            };
+            let mut slot = inner.slot.lock().unwrap_or_else(|p| p.into_inner());
+            *slot = Some(JobOutcome { result, stats });
+            drop(slot);
+            inner.cv.notify_all();
+        });
+        let ti = tenant_index(&mut st, tenant);
+        st.tenants[ti].queue.push_back(QueuedJob { id, width, skips: 0, run });
+        st.queued += 1;
+        drop(st);
+        self.shared.work.notify_all();
+        Ok(handle)
+    }
+
+    /// Block until nothing is queued or running.
+    pub fn drain(&self) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        while st.queued > 0 || st.active > 0 {
+            st = self.shared.idle.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// The scheduler's metrics: `sched.active_jobs` / `sched.occupied_ranks`
+    /// gauges, `sched.admitted` / `sched.completed` counters,
+    /// `sched.queue_wait_ms` / `sched.exec_ms` histograms.
+    pub fn metrics(&self) -> &Registry {
+        &self.shared.metrics
+    }
+
+    /// Admission/completion history (see [`JobEvent::overlaps`]).
+    pub fn events(&self) -> Vec<JobEvent> {
+        self.shared.state.lock().unwrap_or_else(|p| p.into_inner()).events.clone()
+    }
+
+    /// Per-tenant fairness accounting, in first-submission order.
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        let st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.tenants
+            .iter()
+            .map(|t| TenantStats {
+                name: t.name.clone(),
+                admitted_jobs: t.admitted_jobs,
+                admitted_rank_units: t.admitted_rank_units,
+            })
+            .collect()
+    }
+
+    /// Most jobs ever in flight simultaneously.
+    pub fn peak_concurrent_jobs(&self) -> usize {
+        self.shared.state.lock().unwrap_or_else(|p| p.into_inner()).peak_active
+    }
+
+    /// Jobs currently running.
+    pub fn active_jobs(&self) -> usize {
+        self.shared.state.lock().unwrap_or_else(|p| p.into_inner()).active
+    }
+
+    /// Jobs waiting for admission.
+    pub fn queued_jobs(&self) -> usize {
+        self.shared.state.lock().unwrap_or_else(|p| p.into_inner()).queued
+    }
+
+    pub fn pool(&self) -> &RankPool {
+        &self.shared.pool
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.shared.pool.size()
+    }
+
+    pub fn config(&self) -> SchedulerConfig {
+        self.shared.cfg
+    }
+}
+
+impl Drop for Scheduler {
+    /// Graceful drain: queued jobs still run (every width eventually
+    /// fits an emptying pool), their handles resolve, then dispatchers
+    /// exit and the pool shuts down.
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for d in self.dispatchers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+fn tenant_index(st: &mut State, name: &str) -> usize {
+    if let Some(i) = st.tenants.iter().position(|t| t.name == name) {
+        return i;
+    }
+    st.tenants.push(Tenant {
+        name: name.to_string(),
+        deficit: 0,
+        queue: VecDeque::new(),
+        admitted_jobs: 0,
+        admitted_rank_units: 0,
+    });
+    st.tenants.len() - 1
+}
+
+/// Reserve the `width` lowest free ranks.
+fn take_ranks(st: &mut State, width: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(width);
+    for r in 0..st.free.len() {
+        if st.free[r] {
+            st.free[r] = false;
+            out.push(r);
+            if out.len() == width {
+                break;
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), width, "free_count out of sync");
+    st.free_count -= width;
+    out
+}
+
+/// Admission bookkeeping for a job popped off tenant `ti`'s queue.
+fn admit(shared: &Shared, st: &mut State, job: QueuedJob, ti: usize) -> (QueuedJob, Vec<usize>) {
+    let ranks = take_ranks(st, job.width);
+    st.queued -= 1;
+    st.active += 1;
+    st.peak_active = st.peak_active.max(st.active);
+    st.clock += 1;
+    let admitted_at = st.clock;
+    let tenant = st.tenants[ti].name.clone();
+    st.events.push(JobEvent {
+        job: job.id,
+        tenant,
+        width: job.width,
+        ranks: ranks.clone(),
+        admitted_at,
+        completed_at: None,
+    });
+    shared.metrics.counter_add("sched.admitted", 1);
+    shared.metrics.gauge_set("sched.active_jobs", st.active as f64);
+    shared.metrics.gauge_set("sched.occupied_ranks", (st.free.len() - st.free_count) as f64);
+    (job, ranks)
+}
+
+/// Pick the next admissible job, or `None` when nothing can be admitted
+/// right now (dispatcher then waits on the `work` condvar — a completion
+/// or submission re-wakes it).
+fn pick(shared: &Shared, st: &mut State) -> Option<(QueuedJob, Vec<usize>)> {
+    let cfg = shared.cfg;
+    // Starvation freeze: once a head job has been skipped
+    // `starvation_rounds` times, nothing else is admitted until it fits —
+    // running jobs finish, ranks free up, and the starving job lands.
+    if let Some(sid) = st.starving {
+        let found = st
+            .tenants
+            .iter()
+            .position(|t| t.queue.front().map(|j| j.id) == Some(sid));
+        match found {
+            Some(ti) if st.tenants[ti].queue.front().unwrap().width <= st.free_count => {
+                let job = st.tenants[ti].queue.pop_front().unwrap();
+                let t = &mut st.tenants[ti];
+                t.deficit = t.deficit.saturating_sub(job.width as u64);
+                t.admitted_jobs += 1;
+                t.admitted_rank_units += job.width as u64;
+                st.starving = None;
+                st.rr = (ti + 1) % st.tenants.len();
+                return Some(admit(shared, st, job, ti));
+            }
+            Some(_) => return None,
+            None => st.starving = None, // stale (job gone) — fall through
+        }
+    }
+    let nt = st.tenants.len();
+    if nt == 0 {
+        return None;
+    }
+    // Deficit round-robin. The outer loop re-credits quanta until either
+    // a head is admitted or no head fits the free ranks at all; the cap
+    // (>= pool width) guarantees affordability is always reachable, so
+    // this terminates.
+    let cap = cfg.quantum.saturating_mul(4).max(st.free.len() as u64);
+    loop {
+        let mut any_fits = false;
+        for k in 0..nt {
+            let ti = (st.rr + k) % nt;
+            let free = st.free_count as u64;
+            let t = &mut st.tenants[ti];
+            let Some(head_width) = t.queue.front().map(|j| j.width as u64) else {
+                continue;
+            };
+            t.deficit = (t.deficit + cfg.quantum).min(cap);
+            if head_width <= free {
+                any_fits = true;
+                if head_width <= t.deficit {
+                    t.deficit -= head_width;
+                    t.admitted_jobs += 1;
+                    t.admitted_rank_units += head_width;
+                    let job = t.queue.pop_front().unwrap();
+                    st.rr = (ti + 1) % nt;
+                    return Some(admit(shared, st, job, ti));
+                }
+            } else {
+                let head = t.queue.front_mut().unwrap();
+                head.skips += 1;
+                if head.skips >= cfg.starvation_rounds {
+                    st.starving = Some(head.id);
+                    return None;
+                }
+            }
+        }
+        if !any_fits {
+            return None;
+        }
+    }
+}
+
+fn dispatcher_loop(shared: Arc<Shared>) {
+    loop {
+        let picked = {
+            let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if let Some(admitted) = pick(&shared, &mut st) {
+                    break Some(admitted);
+                }
+                if st.shutdown && st.queued == 0 {
+                    break None;
+                }
+                st = shared.work.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let Some((job, ranks)) = picked else {
+            return;
+        };
+        let QueuedJob { id, run, .. } = job;
+        run(&shared.pool, &ranks);
+        let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        for &r in &ranks {
+            debug_assert!(!st.free[r], "completing job frees a rank it never held");
+            st.free[r] = true;
+        }
+        st.free_count += ranks.len();
+        st.active -= 1;
+        st.clock += 1;
+        let completed_at = st.clock;
+        if let Some(ev) = st.events.iter_mut().rev().find(|e| e.job == id) {
+            ev.completed_at = Some(completed_at);
+        }
+        shared.metrics.counter_add("sched.completed", 1);
+        shared.metrics.gauge_set("sched.active_jobs", st.active as f64);
+        shared.metrics.gauge_set("sched.occupied_ranks", (st.free.len() - st.free_count) as f64);
+        let idle = st.queued == 0 && st.active == 0;
+        drop(st);
+        if idle {
+            shared.idle.notify_all();
+        }
+        shared.work.notify_all();
+    }
+}
+
+fn sched_panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod sched_tests {
+    use super::*;
+    use crate::mpi::RankPool;
+
+    #[test]
+    fn sched_config_parse_roundtrip() {
+        let cfg = SchedulerConfig { quantum: 3, max_queue: 9, starvation_rounds: 2 };
+        let back: SchedulerConfig = cfg.to_string().parse().unwrap();
+        assert_eq!(back, cfg);
+        let partial = SchedulerConfig::parse("quantum=5").unwrap();
+        assert_eq!(partial.quantum, 5);
+        assert_eq!(partial.max_queue, SchedulerConfig::default().max_queue);
+        assert!(SchedulerConfig::parse("wat=1").is_err());
+        assert!(SchedulerConfig::parse("quantum=0").is_err());
+        assert!(SchedulerConfig::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn submit_wait_roundtrip_with_spmd_wave() {
+        let sched = Scheduler::new(RankPool::local(4));
+        let h = sched
+            .submit("t0", 2, |ctx| {
+                let sums = ctx.run_spmd(|c| c.allreduce_sum_u64(1).unwrap())?;
+                Ok(sums)
+            })
+            .unwrap();
+        let out = h.wait();
+        assert_eq!(out.result.unwrap(), vec![2, 2]);
+        assert_eq!(out.stats.width, 2);
+        assert_eq!(out.stats.ranks.len(), 2);
+        assert_eq!(out.stats.spmd_waves, 1);
+        assert!(out.stats.traffic.messages > 0);
+        assert!(out.stats.queue_wait_ms >= 0.0);
+        assert_eq!(sched.metrics().counter("sched.admitted"), 1);
+        assert_eq!(sched.metrics().counter("sched.completed"), 1);
+    }
+
+    #[test]
+    fn width_and_queue_validation() {
+        let sched = Scheduler::new(RankPool::local(2));
+        assert!(sched.submit::<(), _>("t", 0, |_| Ok(())).is_err());
+        assert!(sched.submit::<(), _>("t", 3, |_| Ok(())).is_err());
+    }
+
+    #[test]
+    fn job_panic_is_an_err_outcome_and_scheduler_survives() {
+        let sched = Scheduler::new(RankPool::local(2));
+        let h = sched
+            .submit::<(), _>("t", 1, |_| panic!("kaboom"))
+            .unwrap();
+        let out = h.wait();
+        let msg = format!("{:#}", out.result.unwrap_err());
+        assert!(msg.contains("kaboom"), "{msg}");
+        assert_eq!(out.stats.width, 1);
+        // Scheduler keeps serving.
+        let h2 = sched.submit("t", 2, |ctx| ctx.run_spmd(|c| c.rank().0)).unwrap();
+        assert_eq!(h2.wait().result.unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn queue_overflow_is_rejected() {
+        let cfg = SchedulerConfig { max_queue: 1, ..Default::default() };
+        let sched = Scheduler::with_config(RankPool::local(1), cfg);
+        // Occupy the single rank so later submissions stay queued.
+        let gate = Arc::new(Mutex::new(()));
+        let held = gate.lock().unwrap();
+        let blocker = {
+            let gate = gate.clone();
+            sched
+                .submit("t", 1, move |_| {
+                    drop(gate.lock().unwrap_or_else(|p| p.into_inner()));
+                    Ok(())
+                })
+                .unwrap()
+        };
+        // Wait until the blocker is running (not queued).
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        while sched.active_jobs() == 0 {
+            assert!(Instant::now() < deadline, "blocker never admitted");
+            std::thread::yield_now();
+        }
+        let queued = sched.submit("t", 1, |_| Ok(())).unwrap();
+        let overflow = sched.submit::<(), _>("t", 1, |_| Ok(()));
+        assert!(overflow.is_err(), "third job must bounce off max_queue=1");
+        drop(held);
+        assert!(blocker.wait().result.is_ok());
+        assert!(queued.wait().result.is_ok());
+    }
+
+    #[test]
+    fn drain_waits_for_everything() {
+        let sched = Scheduler::new(RankPool::local(4));
+        let handles: Vec<_> = (0..10)
+            .map(|i| {
+                sched
+                    .submit(if i % 2 == 0 { "a" } else { "b" }, 1 + i % 3, move |ctx| {
+                        ctx.run_spmd(|c| c.allreduce_sum_u64(1).unwrap()).map(|v| v[0])
+                    })
+                    .unwrap()
+            })
+            .collect();
+        sched.drain();
+        assert_eq!(sched.active_jobs(), 0);
+        assert_eq!(sched.queued_jobs(), 0);
+        for h in handles {
+            assert!(h.wait().result.is_ok());
+        }
+        let by_tenant = sched.tenant_stats();
+        assert_eq!(by_tenant.len(), 2);
+        assert_eq!(by_tenant.iter().map(|t| t.admitted_jobs).sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn disjoint_widths_overlap_in_time() {
+        let sched = Scheduler::new(RankPool::local(4));
+        // Two 2-rank jobs that each wait for the other: completes only if
+        // the scheduler really co-schedules them.
+        let (a_tx, a_rx) = std::sync::mpsc::channel::<()>();
+        let (b_tx, b_rx) = std::sync::mpsc::channel::<()>();
+        let timeout = std::time::Duration::from_secs(10);
+        let ha = sched
+            .submit("a", 2, move |ctx| {
+                ctx.run_spmd(|c| {
+                    if c.is_root() {
+                        a_tx.send(()).unwrap();
+                    }
+                })?;
+                b_rx.recv_timeout(timeout)?;
+                Ok(())
+            })
+            .unwrap();
+        let hb = sched
+            .submit("b", 2, move |ctx| {
+                ctx.run_spmd(|c| {
+                    if c.is_root() {
+                        b_tx.send(()).unwrap();
+                    }
+                })?;
+                a_rx.recv_timeout(timeout)?;
+                Ok(())
+            })
+            .unwrap();
+        assert!(ha.wait().result.is_ok());
+        assert!(hb.wait().result.is_ok());
+        assert_eq!(sched.peak_concurrent_jobs(), 2);
+        let events = sched.events();
+        assert_eq!(events.len(), 2);
+        assert!(events[0].overlaps(&events[1]));
+        // Disjoint rank reservations.
+        assert!(events[0].ranks.iter().all(|r| !events[1].ranks.contains(r)));
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs() {
+        let handles: Vec<_> = {
+            let sched = Scheduler::new(RankPool::local(2));
+            (0..6)
+                .map(|_| {
+                    sched
+                        .submit("t", 1, |ctx| ctx.run_spmd(|c| c.rank().0).map(|v| v[0]))
+                        .unwrap()
+                })
+                .collect()
+            // Scheduler drops here with jobs possibly still queued.
+        };
+        for h in handles {
+            assert_eq!(h.wait().result.unwrap(), 0);
+        }
+    }
+}

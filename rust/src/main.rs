@@ -9,6 +9,8 @@
 //!                    [--quick] [--json-dir target/figures]
 //! blaze inspect-artifacts [--dir artifacts]
 //! blaze cluster-info [--cluster cluster.toml | --ranks N --deployment K]
+//! blaze serve-bench [--quick] [--jobs N] [--rps F] [--width W]
+//!                   [--transport mailbox|tcp|both] [--out BENCH_9.json]
 //! ```
 //!
 //! Argument parsing is hand-rolled (no clap in the vendored crate set) —
@@ -19,9 +21,10 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use blaze_rs::apps::{kmeans, linreg, matmul, pagerank, pi, wordcount};
-use blaze_rs::bench_harness::{run_figure, FigureId};
+use blaze_rs::bench_harness::{run_figure, run_serve_bench, FigureId, ServeBenchConfig};
 use blaze_rs::cluster::{ClusterConfig, DeploymentKind, ElasticCluster};
 use blaze_rs::core::ReductionMode;
+use blaze_rs::mpi::TransportKind;
 use blaze_rs::runtime::{ArtifactManifest, ComputeService};
 use blaze_rs::trace::TraceConfig;
 
@@ -112,6 +115,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "bench-figure" => cmd_bench_figure(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "inspect-artifacts" => cmd_inspect_artifacts(&args),
         "cluster-info" => cmd_cluster_info(&args),
         "trace" => cmd_trace(&args),
@@ -129,6 +133,8 @@ fn print_usage() {
         "blaze — HPC MapReduce (Blaze-style) reproduction\n\n\
          USAGE:\n  blaze run --app <wordcount|kmeans|pi|matmul|linreg> [opts]\n  \
          blaze bench-figure <id|all> [--quick] [--json-dir DIR]\n  \
+         blaze serve-bench [--quick] [--jobs N] [--rps F] [--width W] \
+         [--transport mailbox|tcp|both] [--out BENCH_9.json]\n  \
          blaze inspect-artifacts [--dir artifacts]\n  \
          blaze cluster-info [--cluster FILE | --ranks N --deployment KIND]\n  \
          blaze trace --app <wordcount|pagerank> [--out FILE.json] [--ranks N] [opts]\n  \
@@ -266,6 +272,55 @@ fn cmd_bench_figure(args: &Args) -> Result<()> {
             println!("(saved {})", path.display());
         }
     }
+    Ok(())
+}
+
+/// Sustained-load serving benchmark: an open-loop stream of mixed
+/// wordcount/pagerank jobs through the concurrent scheduler at a target
+/// request rate, once per transport, with stop-loss latency/failure
+/// gates. Writes the `BENCH_9.json` report (repo root by default).
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let mut cfg =
+        if args.has("quick") { ServeBenchConfig::quick() } else { ServeBenchConfig::default() };
+    cfg.jobs = args.get_or("jobs", cfg.jobs)?;
+    cfg.offered_rps = args.get_or("rps", cfg.offered_rps)?;
+    cfg.pool_width = args.get_or("width", cfg.pool_width)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    cfg.stop_failure_rate = args.get_or("stop-failure-rate", cfg.stop_failure_rate)?;
+    cfg.stop_median_ms = args.get_or("stop-median-ms", cfg.stop_median_ms)?;
+    if let Some(t) = args.get("transport") {
+        cfg.transports = match t {
+            "both" => TransportKind::ALL.to_vec(),
+            one => vec![one.parse::<TransportKind>()?],
+        };
+    }
+    if let Some(sched) = args.get("sched") {
+        cfg.sched = sched.parse()?;
+    }
+    let out = std::path::PathBuf::from(args.get("out").unwrap_or("BENCH_9.json"));
+    println!(
+        "# serve-bench: {} jobs/transport at {} rps on a {}-rank pool ({:?})",
+        cfg.jobs,
+        cfg.offered_rps,
+        cfg.pool_width,
+        cfg.transports.iter().map(|t| t.to_string()).collect::<Vec<_>>()
+    );
+    let report = run_serve_bench(&cfg, &out)?;
+    for t in report.req("transports")?.as_arr().unwrap_or(&[]) {
+        let lat = t.req("latency_ms")?;
+        println!(
+            "{:<8} completed={} failed={} p50={:.1}ms p99={:.1}ms throughput={:.1} jobs/s peak_concurrent={} stop_loss={}",
+            t.req("transport")?.as_str().unwrap_or("?"),
+            t.req("completed")?.as_u64().unwrap_or(0),
+            t.req("failed")?.as_u64().unwrap_or(0),
+            lat.req("p50")?.as_f64().unwrap_or(0.0),
+            lat.req("p99")?.as_f64().unwrap_or(0.0),
+            t.req("throughput_jps")?.as_f64().unwrap_or(0.0),
+            t.req("peak_concurrent_jobs")?.as_u64().unwrap_or(0),
+            t.req("stop_loss")?.as_str().unwrap_or("none"),
+        );
+    }
+    println!("(report written to {})", out.display());
     Ok(())
 }
 

@@ -166,17 +166,23 @@ impl Universe {
         };
         let topology = Arc::new(self.topology);
         let network = Arc::new(self.network);
+        // One identity group (local rank i == global rank i) shared by
+        // every communicator; a RankPool swaps in per-job subsets.
+        let identity: Arc<Vec<Rank>> = Arc::new((0..n).map(Rank).collect());
         let comms = transports
             .into_iter()
             .enumerate()
             .map(|(i, transport)| Communicator {
                 rank: Rank(i),
                 world: n,
-                active: Cell::new(n),
+                group: RefCell::new(identity.clone()),
+                local: Cell::new(Rank(i)),
+                identity: identity.clone(),
                 transport,
                 pending: RefCell::new(HashMap::new()),
                 epoch: Cell::new(0),
                 topology: topology.clone(),
+                job_topo: RefCell::new(topology.clone()),
                 network: network.clone(),
                 stats: self.stats.clone(),
                 mem: RefCell::new(None),
@@ -188,6 +194,8 @@ impl Universe {
                 algo: Cell::new(self.algo),
                 sent_messages: Cell::new(0),
                 sent_bytes: Cell::new(0),
+                sent_remote_messages: Cell::new(0),
+                sent_remote_bytes: Cell::new(0),
                 received_messages: Cell::new(0),
             })
             .collect();
@@ -199,13 +207,19 @@ impl Universe {
 /// communicator exclusively, exactly like an MPI process owns its
 /// `MPI_COMM_WORLD` slot.
 pub struct Communicator {
+    /// Global rank: this endpoint's fixed position in the universe.
     rank: Rank,
     /// Ranks wired into this universe (mailboxes, senders).
     world: usize,
-    /// Ranks participating in the *current* job. Equal to `world` for a
-    /// one-shot universe; a [`crate::mpi::RankPool`] narrows it per job so
-    /// a warm pool can run jobs smaller than the pool.
-    active: Cell<usize>,
+    /// Ranks participating in the *current* job, in job order: local
+    /// rank `i` is global rank `group[i]`. The identity mapping for a
+    /// one-shot universe; a [`crate::mpi::RankPool`] swaps in a subset
+    /// per job so disjoint jobs can run concurrently on one pool.
+    group: RefCell<Arc<Vec<Rank>>>,
+    /// This endpoint's job-local rank (its index in `group`).
+    local: Cell<Rank>,
+    /// Cached identity group, restored between pooled jobs.
+    identity: Arc<Vec<Rank>>,
     /// The substrate moving bytes: in-process mailboxes or TCP rank
     /// processes — everything above this field is transport-agnostic.
     transport: Box<dyn Transport>,
@@ -219,7 +233,13 @@ pub struct Communicator {
     /// by every rank during the pool's prepare barrier — is what makes
     /// inter-job isolation exact on every transport.
     epoch: Cell<u64>,
+    /// World topology — global-rank indexed; cost accounting (same-node
+    /// tests, compute scaling) always consults this one.
     topology: Arc<Topology>,
+    /// Job-view topology — local-rank indexed; what collectives see so a
+    /// subset job groups its ranks by node exactly like a fresh universe
+    /// of that shape would. Equal to `topology` for the identity group.
+    job_topo: RefCell<Arc<Topology>>,
     network: Arc<NetworkModel>,
     stats: Arc<TrafficStats>,
     /// Optional tracker charged for transport-internal staging buffers
@@ -242,17 +262,31 @@ pub struct Communicator {
     /// times where the star touches it O(P) times.
     sent_messages: Cell<u64>,
     sent_bytes: Cell<u64>,
+    /// Of those, messages/bytes that crossed a node boundary — summed per
+    /// job subset by the pool, so concurrent jobs never see each other's
+    /// traffic (the universe-wide [`TrafficStats`] cannot distinguish
+    /// simultaneous jobs).
+    sent_remote_messages: Cell<u64>,
+    sent_remote_bytes: Cell<u64>,
     received_messages: Cell<u64>,
 }
 
 impl Communicator {
+    /// Job-local rank: this endpoint's index within the current job's
+    /// group. Equals [`Communicator::global_rank`] outside a pool.
     pub fn rank(&self) -> Rank {
+        self.local.get()
+    }
+
+    /// Global rank: fixed position in the universe, independent of any
+    /// job-group narrowing.
+    pub fn global_rank(&self) -> Rank {
         self.rank
     }
 
     /// Ranks participating in the current job (collectives span these).
     pub fn size(&self) -> usize {
-        self.active.get()
+        self.group.borrow().len()
     }
 
     /// Ranks physically wired into the universe (>= [`Communicator::size`]).
@@ -261,11 +295,15 @@ impl Communicator {
     }
 
     pub fn is_root(&self) -> bool {
-        self.rank.is_root()
+        self.local.get().is_root()
     }
 
-    pub fn topology(&self) -> &Topology {
-        &self.topology
+    /// The current job's topology view, local-rank indexed. A subset job
+    /// sees its own ranks re-numbered `0..size()` with the parent's node
+    /// structure projected through — so the hierarchical collectives
+    /// group leaders exactly as a fresh universe of this shape would.
+    pub fn topology(&self) -> Arc<Topology> {
+        self.job_topo.borrow().clone()
     }
 
     /// Current virtual time in ns.
@@ -313,38 +351,70 @@ impl Communicator {
         self.received_messages.get()
     }
 
+    /// Messages this rank has sent across node boundaries in the
+    /// current job.
+    pub fn sent_remote_messages(&self) -> u64 {
+        self.sent_remote_messages.get()
+    }
+
+    /// Payload bytes this rank has sent across node boundaries in the
+    /// current job.
+    pub fn sent_remote_bytes(&self) -> u64 {
+        self.sent_remote_bytes.get()
+    }
+
     pub(crate) fn next_collective_tag(&self) -> Tag {
         let seq = self.collective_seq.get();
         self.collective_seq.set(seq + 1);
         Tag::collective(seq)
     }
 
-    /// Narrow the communicator to the first `n` ranks for the duration of
-    /// one pooled job (see [`crate::mpi::RankPool`]).
-    pub(crate) fn set_active_size(&self, n: usize) {
-        debug_assert!(n >= 1 && n <= self.world, "active size {n} outside 1..={}", self.world);
-        self.active.set(n);
+    /// Narrow the communicator to a job group for the duration of one
+    /// pooled job (see [`crate::mpi::RankPool`]). `group` lists the
+    /// member *global* ranks in job order and must contain this rank.
+    /// The identity prefix `[0, 1, .., n-1]` keeps the world topology
+    /// view; any other subset projects it with [`Topology::select`].
+    pub(crate) fn set_group(&self, group: Arc<Vec<Rank>>) {
+        let local = group
+            .iter()
+            .position(|r| *r == self.rank)
+            .unwrap_or_else(|| panic!("rank {} not in job group {group:?}", self.rank));
+        self.local.set(Rank(local));
+        let is_prefix = group.iter().enumerate().all(|(i, r)| r.0 == i);
+        let topo = if is_prefix {
+            self.topology.clone()
+        } else {
+            Arc::new(self.topology.select(&group))
+        };
+        *self.job_topo.borrow_mut() = topo;
+        *self.group.borrow_mut() = group;
     }
 
     /// Restore fresh-universe state between pooled jobs: discard any
     /// unconsumed messages (matched or buffered), zero the virtual clocks,
-    /// and realign the collective tag sequence. Called by the pool's
-    /// prepare phase, after every rank of the previous job has finished
-    /// and before any rank of the next job starts — so nothing legitimate
-    /// can still be in flight.
-    pub(crate) fn reset_job_state(&self) {
+    /// realign the collective tag sequence, and enter the job's `epoch` —
+    /// a pool-global job id, so concurrently running jobs on disjoint
+    /// subsets live in different epochs and never accept each other's
+    /// frames. Called by the pool's prepare phase, after every member rank
+    /// of the previous job on this endpoint has finished and before any
+    /// rank of the next job starts.
+    pub(crate) fn reset_job_state(&self, epoch: u64) {
         self.transport.drain();
-        self.epoch.set(self.epoch.get() + 1);
+        self.epoch.set(epoch);
         self.pending.borrow_mut().clear();
         self.mem.borrow_mut().take();
         self.clock_ns.set(0);
         self.compute_ns.set(0);
         self.net_wait_ns.set(0);
         self.collective_seq.set(0);
-        self.active.set(self.world);
+        *self.group.borrow_mut() = self.identity.clone();
+        self.local.set(self.rank);
+        *self.job_topo.borrow_mut() = self.topology.clone();
         self.algo.set(self.default_algo);
         self.sent_messages.set(0);
         self.sent_bytes.set(0);
+        self.sent_remote_messages.set(0);
+        self.sent_remote_bytes.set(0);
         self.received_messages.set(0);
     }
 
@@ -380,10 +450,27 @@ impl Communicator {
         out
     }
 
+    /// Global rank of job-local `local` (index into the current group).
+    fn to_global(&self, local: Rank) -> Rank {
+        self.group.borrow()[local.0]
+    }
+
+    /// Job-local rank of global `global`. Only called on message sources,
+    /// which epoch fencing guarantees are members of the current group.
+    fn to_local(&self, global: Rank) -> Rank {
+        let group = self.group.borrow();
+        let i = group
+            .iter()
+            .position(|r| *r == global)
+            .unwrap_or_else(|| panic!("sender {global} not in job group {group:?}"));
+        Rank(i)
+    }
+
     /// Point-to-point send (non-blocking, unbounded buffering — MPI's
-    /// eager protocol for our message sizes).
+    /// eager protocol for our message sizes). `dst` is a job-local rank.
     pub fn send(&self, dst: Rank, tag: Tag, payload: Vec<u8>) -> Result<()> {
         ensure!(dst.0 < self.size(), "send to {dst} outside universe of {}", self.size());
+        let dst = self.to_global(dst);
         let bytes = payload.len() as u64;
         let same_node = self.topology.same_node(self.rank, dst);
         self.sent_messages.set(self.sent_messages.get() + 1);
@@ -391,6 +478,8 @@ impl Communicator {
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes.fetch_add(bytes, Ordering::Relaxed);
         if !same_node {
+            self.sent_remote_messages.set(self.sent_remote_messages.get() + 1);
+            self.sent_remote_bytes.set(self.sent_remote_bytes.get() + bytes);
             self.stats.remote_messages.fetch_add(1, Ordering::Relaxed);
             self.stats.remote_bytes.fetch_add(bytes, Ordering::Relaxed);
         }
@@ -423,17 +512,18 @@ impl Communicator {
         )
     }
 
-    /// Blocking receive matched on (src, tag). Advances the virtual clock
-    /// per the Lamport-with-costs rule.
+    /// Blocking receive matched on (src, tag), `src` job-local. Advances
+    /// the virtual clock per the Lamport-with-costs rule.
     pub fn recv(&self, src: Rank, tag: Tag) -> Result<Vec<u8>> {
-        // Already buffered?
+        let src = self.to_global(src);
+        // Already buffered? (pending map is keyed by global src)
         if let Some(msg) = self.pop_pending(src, tag) {
             return Ok(self.absorb(msg));
         }
         loop {
             let msg = self.transport.recv()?;
             if msg.epoch != self.epoch.get() {
-                continue; // stale frame from a previous pooled job
+                continue; // stale frame from a previous/concurrent pooled job
             }
             if msg.src == src && msg.tag == tag {
                 return Ok(self.absorb(msg));
@@ -442,19 +532,20 @@ impl Communicator {
         }
     }
 
-    /// Receive from any source with the given tag; returns (src, payload).
+    /// Receive from any source with the given tag; returns the job-local
+    /// (src, payload).
     pub fn recv_any(&self, tag: Tag) -> Result<(Rank, Vec<u8>)> {
         if let Some(msg) = self.pop_pending_any(tag) {
-            let src = msg.src;
+            let src = self.to_local(msg.src);
             return Ok((src, self.absorb(msg)));
         }
         loop {
             let msg = self.transport.recv()?;
             if msg.epoch != self.epoch.get() {
-                continue; // stale frame from a previous pooled job
+                continue; // stale frame from a previous/concurrent pooled job
             }
             if msg.tag == tag {
-                let src = msg.src;
+                let src = self.to_local(msg.src);
                 return Ok((src, self.absorb(msg)));
             }
             self.push_pending(msg);
@@ -614,5 +705,39 @@ mod tests {
     fn send_out_of_range_is_error() {
         let comms = Universe::local(1).communicators();
         assert!(comms[0].send(Rank(5), Tag::user(0), vec![]).is_err());
+    }
+
+    #[test]
+    fn subset_group_renumbers_and_translates() {
+        // block(2,2): ranks {0,1} node0, {2,3} node1. Group {1,3} spans
+        // nodes; its members see each other as local ranks 0 and 1.
+        let comms = Universe::new(Topology::block(2, 2), NetworkModel::free()).communicators();
+        let mut it = comms.into_iter();
+        let _c0 = it.next().unwrap();
+        let c1 = it.next().unwrap();
+        let _c2 = it.next().unwrap();
+        let c3 = it.next().unwrap();
+        let group = Arc::new(vec![Rank(1), Rank(3)]);
+        c1.set_group(group.clone());
+        c3.set_group(group);
+        assert_eq!((c1.rank(), c1.global_rank()), (Rank(0), Rank(1)));
+        assert_eq!((c3.rank(), c3.global_rank()), (Rank(1), Rank(3)));
+        assert_eq!(c1.size(), 2);
+        // The job topology is the projected view: 2 ranks, cross-node.
+        let topo = c3.topology();
+        assert_eq!(topo.ranks(), 2);
+        assert!(!topo.same_node(Rank(0), Rank(1)));
+        // Local send/recv translate through the group.
+        c1.send(Rank(1), Tag::user(3), b"sub".to_vec()).unwrap();
+        let (src, payload) = c3.recv_any(Tag::user(3)).unwrap();
+        assert_eq!((src, payload.as_slice()), (Rank(0), &b"sub"[..]));
+        // Per-rank remote counters saw the cross-node hop.
+        assert_eq!(c1.sent_remote_messages(), 1);
+        assert_eq!(c1.sent_remote_bytes(), 3);
+        // reset_job_state restores the identity view.
+        c1.reset_job_state(7);
+        assert_eq!(c1.rank(), Rank(1));
+        assert_eq!(c1.size(), 4);
+        assert_eq!(c1.epoch(), 7);
     }
 }

@@ -16,18 +16,26 @@
 //! 1. **Start** — [`RankPool::new`] consumes a [`Universe`], builds one
 //!    [`Communicator`] per rank and parks each on its own named OS thread.
 //! 2. **Submit** — [`RankPool::run_job`] / [`RankPool::try_run_on`] run a
-//!    closure SPMD on the first `nranks <= size` ranks. Submission is
-//!    two-phase: a *prepare* command first restores fresh-universe state
-//!    on every rank (drain mailboxes, zero virtual clocks, realign
-//!    collective tags) and is acknowledged by all ranks **before** any
-//!    rank receives the job — so a rank can never drain a peer's
-//!    just-sent message belonging to the new job. Results, per-job clock
-//!    readings and a per-job traffic delta come back in rank order.
-//! 3. **Barrier semantics between jobs** — a job is complete only when
-//!    every active rank has reported; the next job's prepare phase
-//!    therefore happens-after all sends of the previous job. Jobs on one
-//!    pool are serialized (a submission mutex), so concurrent callers
-//!    interleave at job granularity, never inside a job.
+//!    closure SPMD on the first `nranks <= size` ranks;
+//!    [`RankPool::run_job_on`] / [`RankPool::try_run_job_on`] run it on an
+//!    arbitrary *subset* of ranks, which the member communicators see
+//!    re-numbered `0..width` like a fresh universe of that shape.
+//!    Submission is two-phase: a *prepare* command first restores
+//!    fresh-universe state on every member rank (drain mailboxes, zero
+//!    virtual clocks, realign collective tags, enter the job's epoch) and
+//!    is acknowledged by all members **before** any member receives the
+//!    job — so a rank can never drain a peer's just-sent message belonging
+//!    to the new job. Results, per-job clock readings and a per-job
+//!    traffic delta come back in job-local rank order.
+//! 3. **Concurrency** — each rank has its own busy lock; a job takes the
+//!    locks of exactly its member ranks (in ascending rank order, so
+//!    overlapping jobs cannot deadlock). Jobs on **disjoint** subsets
+//!    hold disjoint locks and run simultaneously; jobs sharing any rank
+//!    serialize on it. Every job gets a pool-unique epoch stamped into
+//!    its frames, so concurrent jobs' message planes are disjoint even
+//!    on a shared TCP worker mesh. A job is complete only when every
+//!    member rank has reported; the next job's prepare phase on those
+//!    ranks therefore happens-after all their sends.
 //! 4. **Panic containment** — a rank closure that panics is caught on the
 //!    rank thread; the thread survives and the panic is reported to the
 //!    submitter ([`RankPool::try_run_on`] returns `Err`, the `run*`
@@ -35,11 +43,10 @@
 //!    normally; the next prepare phase discards anything the dead job
 //!    left in flight. Caveat (same as fresh-spawn MPI semantics): if a
 //!    panicking rank leaves a *peer* blocked in `recv`, the job never
-//!    completes — and because jobs serialize on the pool, a wedged job
-//!    also blocks every later submitter of a **shared** pool (and its
-//!    `Drop`). Keep deliberately-faulty jobs on a dedicated pool;
-//!    controlled failure handling lives a layer up in
-//!    [`crate::cluster::FaultTracker`].
+//!    completes — and a wedged job blocks every later submitter that
+//!    **shares a rank** with it (and the pool's `Drop`). Keep
+//!    deliberately-faulty jobs on a dedicated pool; controlled failure
+//!    handling lives a layer up in [`crate::cluster::FaultTracker`].
 //! 5. **Shutdown** — dropping the pool sends every thread a shutdown
 //!    command and joins it.
 //!
@@ -52,15 +59,18 @@
 //!     let sums = pool.run(|c| c.allreduce_sum_u64(1).unwrap());
 //!     assert_eq!(sums, vec![4; 4]);
 //! }
-//! // Jobs narrower than the pool run on a prefix of the warm ranks.
+//! // Jobs narrower than the pool run on a prefix of the warm ranks...
 //! assert_eq!(pool.run_on(2, |c| c.rank().0), vec![0, 1]);
-//! assert_eq!(pool.jobs_run(), 4);
+//! // ...or on any subset, re-numbered 0..width.
+//! let out = pool.run_job_on(&[1, 3], |c| c.rank().0);
+//! assert_eq!(out.results, vec![0, 1]);
+//! assert_eq!(pool.jobs_run(), 5);
 //! ```
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
@@ -69,7 +79,8 @@ use crate::cluster::{ClusterConfig, NetworkModel};
 use crate::trace::SpanEvent;
 
 use super::collectives::CollectiveAlgo;
-use super::comm::{Communicator, TrafficStats, Universe};
+use super::comm::{Communicator, Universe};
+use super::datatypes::Rank;
 use super::topology::Topology;
 use super::transport::TransportKind;
 
@@ -77,20 +88,28 @@ use super::transport::TransportKind;
 /// argument in [`RankPool::submit_raw`].
 type Task = Box<dyn FnOnce(&Communicator) + Send>;
 
+/// One rank's per-job traffic readings:
+/// `(sent_messages, sent_bytes, sent_remote_messages, sent_remote_bytes)`.
+type RankTraffic = (u64, u64, u64, u64);
+
 /// One rank's job outcome: `(result, (clock_ns, compute_ns, net_wait_ns),
-/// recorded spans)` — or the rank closure's panic payload.
-type RankOutcome<T> = std::thread::Result<(T, (u64, u64, u64), Vec<SpanEvent>)>;
+/// per-rank traffic, recorded spans)` — or the rank closure's panic
+/// payload.
+type RankOutcome<T> = std::thread::Result<(T, (u64, u64, u64), RankTraffic, Vec<SpanEvent>)>;
 
 enum Command {
-    /// Restore fresh-universe state, then ack on the enclosed channel.
-    Prepare(Sender<()>),
-    /// Run one job on the first `active` ranks; `task` is `None` on ranks
-    /// idle for this job.
-    Run { active: usize, task: Option<Task> },
+    /// Restore fresh-universe state, enter `epoch`, then ack on the
+    /// enclosed channel.
+    Prepare { epoch: u64, ack: Sender<()> },
+    /// Run one job on the member ranks listed in `group` (this rank is
+    /// always a member — non-members are never sent a `Run`).
+    Run { group: Arc<Vec<Rank>>, task: Task },
     Shutdown,
 }
 
-/// Universe-wide traffic attributable to one pooled job.
+/// Traffic attributable to one pooled job: the sum of its member ranks'
+/// per-rank counters, so concurrent jobs on disjoint subsets never see
+/// each other's bytes.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TrafficDelta {
     pub messages: u64,
@@ -99,11 +118,11 @@ pub struct TrafficDelta {
     pub remote_bytes: u64,
 }
 
-/// Everything one pooled job produced: per-rank results (rank order),
-/// per-rank virtual clocks `(clock_ns, compute_ns, net_wait_ns)` — reset
-/// at job start, so these read like a fresh universe's — the job's
-/// traffic delta, and (when [`crate::trace`] recording is on) every span
-/// the rank threads recorded during the job, already harvested from
+/// Everything one pooled job produced: per-rank results (job-local rank
+/// order), per-rank virtual clocks `(clock_ns, compute_ns, net_wait_ns)`
+/// — reset at job start, so these read like a fresh universe's — the
+/// job's traffic delta, and (when [`crate::trace`] recording is on) every
+/// span the rank threads recorded during the job, already harvested from
 /// their thread-local sinks. Empty when tracing is off.
 #[derive(Debug)]
 pub struct JobOutput<T> {
@@ -114,12 +133,30 @@ pub struct JobOutput<T> {
 }
 
 struct Worker {
-    tx: Sender<Command>,
+    /// Command channel to the rank thread. `Sender` is cloneable but we
+    /// want exactly-one-submitter-at-a-time semantics per rank, so the
+    /// sender sits behind a mutex and submitters hold `busy` anyway.
+    tx: Mutex<Sender<Command>>,
+    /// Held by the job currently occupying this rank. Jobs lock their
+    /// member ranks in ascending order, so overlapping jobs serialize
+    /// instead of deadlocking.
+    busy: Mutex<()>,
     handle: Option<JoinHandle<()>>,
 }
 
+impl Worker {
+    fn send(&self, cmd: Command) {
+        self.tx
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner())
+            .send(cmd)
+            .expect("rank thread alive");
+    }
+}
+
 /// Persistent SPMD executor: one warm OS thread per rank of a universe,
-/// reused across jobs. See the module docs for the lifecycle.
+/// reused across jobs — and shared by concurrent jobs on disjoint rank
+/// subsets. See the module docs for the lifecycle.
 pub struct RankPool {
     workers: Vec<Worker>,
     topology: Topology,
@@ -135,9 +172,9 @@ pub struct RankPool {
     /// PIDs of spawned `blaze worker` processes (empty for mailbox) —
     /// shutdown tests assert none outlive the pool.
     worker_pids: Vec<u32>,
-    stats: Arc<TrafficStats>,
-    /// Serializes jobs: one at a time, whole-pool granularity.
-    submit: Mutex<()>,
+    /// Pool-global job id generator; doubles as the message epoch, so
+    /// two jobs in flight at once fence each other's frames.
+    epochs: AtomicU64,
     jobs_run: AtomicU64,
 }
 
@@ -153,15 +190,13 @@ impl std::fmt::Debug for RankPool {
 fn worker_loop(comm: Communicator, rx: Receiver<Command>) {
     while let Ok(cmd) = rx.recv() {
         match cmd {
-            Command::Prepare(ack) => {
-                comm.reset_job_state();
+            Command::Prepare { epoch, ack } => {
+                comm.reset_job_state(epoch);
                 let _ = ack.send(());
             }
-            Command::Run { active, task } => {
-                if let Some(task) = task {
-                    comm.set_active_size(active);
-                    task(&comm);
-                }
+            Command::Run { group, task } => {
+                comm.set_group(group);
+                task(&comm);
             }
             Command::Shutdown => break,
         }
@@ -177,7 +212,6 @@ impl RankPool {
         let network = universe.network().clone();
         let algo = universe.collective_algo();
         let transport = universe.transport_kind();
-        let stats = universe.stats();
         let (comms, worker_pids) = universe.build().expect("wiring rank transports");
         let workers = comms
             .into_iter()
@@ -187,7 +221,7 @@ impl RankPool {
                     .name(format!("blaze-rank-{}", comm.rank().0))
                     .spawn(move || worker_loop(comm, rx))
                     .expect("spawn rank thread");
-                Worker { tx, handle: Some(handle) }
+                Worker { tx: Mutex::new(tx), busy: Mutex::new(()), handle: Some(handle) }
             })
             .collect();
         Self {
@@ -197,8 +231,7 @@ impl RankPool {
             algo,
             transport,
             worker_pids,
-            stats,
-            submit: Mutex::new(()),
+            epochs: AtomicU64::new(0),
             jobs_run: AtomicU64::new(0),
         }
     }
@@ -290,6 +323,35 @@ impl RankPool {
         Ok(())
     }
 
+    /// [`RankPool::ensure_models`] for a job placed on an arbitrary rank
+    /// subset: error unless the pool can stand in for the fresh universe
+    /// `cluster` would get when its ranks `0..width` are mapped onto the
+    /// pool ranks `ranks` (structural placement match + network model +
+    /// resolved collective algorithm + transport).
+    pub fn ensure_models_on(&self, cluster: &ClusterConfig, ranks: &[usize]) -> Result<()> {
+        anyhow::ensure!(
+            cluster.ranks() == ranks.len(),
+            "cluster is {} ranks wide but the placement lists {} pool ranks",
+            cluster.ranks(),
+            ranks.len()
+        );
+        anyhow::ensure!(
+            self.matches_subset(
+                &Topology::from_config(cluster),
+                &cluster.network_model(),
+                cluster.collective_algo(),
+                cluster.transport(),
+                ranks
+            ),
+            "rank pool ({} ranks, {} collectives, {} transport) does not model this cluster on \
+             pool ranks {ranks:?} — build it with RankPool::from_config(&cluster)",
+            self.size(),
+            self.algo,
+            self.transport
+        );
+        Ok(())
+    }
+
     /// Can this pool stand in for a fresh `nranks`-rank universe with the
     /// given placement/network/algorithm/transport? True when the models
     /// agree on the first `nranks` ranks — the prefix a narrowed job runs
@@ -307,6 +369,25 @@ impl RankPool {
             && self.algo == algo
             && self.transport == transport
             && self.topology.agrees_on_prefix(topology, nranks)
+    }
+
+    /// [`RankPool::matches_prefix`] for an arbitrary rank subset: the job
+    /// topology's ranks `0..ranks.len()` must match the pool ranks
+    /// `ranks` structurally (same-node relation + compute scaling; see
+    /// [`Topology::agrees_on_ranks`]).
+    pub fn matches_subset(
+        &self,
+        topology: &Topology,
+        network: &NetworkModel,
+        algo: CollectiveAlgo,
+        transport: TransportKind,
+        ranks: &[usize],
+    ) -> bool {
+        ranks.iter().all(|&r| r < self.size())
+            && self.network == *network
+            && self.algo == algo
+            && self.transport == transport
+            && self.topology.agrees_on_ranks(topology, ranks)
     }
 
     /// Run `f` SPMD on every rank; panics if any rank panicked (first
@@ -328,20 +409,34 @@ impl RankPool {
         self.run_job(nranks, f).results
     }
 
-    /// Full-fat submission: results + per-job clocks + traffic delta.
-    /// Rank panics propagate as a panic, like `run_ranks`.
+    /// Full-fat submission on the rank prefix `0..nranks`: results +
+    /// per-job clocks + traffic delta. Rank panics propagate as a panic,
+    /// like `run_ranks`.
     pub fn run_job<T, F>(&self, nranks: usize, f: F) -> JobOutput<T>
     where
         T: Send,
         F: Fn(&Communicator) -> T + Sync,
     {
-        let (raw, traffic) = self.submit_raw(nranks, f);
+        let ranks: Vec<usize> = (0..nranks).collect();
+        self.run_job_on(&ranks, f)
+    }
+
+    /// Full-fat submission on an arbitrary rank subset (strictly
+    /// ascending pool ranks). Member communicators see themselves
+    /// re-numbered `0..ranks.len()`; results come back in that job-local
+    /// order. Rank panics propagate as a panic.
+    pub fn run_job_on<T, F>(&self, ranks: &[usize], f: F) -> JobOutput<T>
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        let (raw, traffic) = self.submit_raw(ranks, f);
         let mut results = Vec::with_capacity(raw.len());
         let mut clocks = Vec::with_capacity(raw.len());
         let mut trace = Vec::new();
         for (i, r) in raw.into_iter().enumerate() {
             match r {
-                Ok((v, clk, spans)) => {
+                Ok((v, clk, _tfc, spans)) => {
                     results.push(v);
                     clocks.push(clk);
                     trace.extend(spans);
@@ -354,22 +449,33 @@ impl RankPool {
         JobOutput { results, clocks, traffic, trace }
     }
 
-    /// Panic-containing submission: a rank panic surfaces as `Err`
-    /// (listing every panicked rank) instead of unwinding the caller, and
-    /// the pool stays fully usable for subsequent jobs.
+    /// Panic-containing submission on the rank prefix: a rank panic
+    /// surfaces as `Err` (listing every panicked rank) instead of
+    /// unwinding the caller, and the pool stays fully usable for
+    /// subsequent jobs.
     pub fn try_run_on<T, F>(&self, nranks: usize, f: F) -> Result<JobOutput<T>>
     where
         T: Send,
         F: Fn(&Communicator) -> T + Sync,
     {
-        let (raw, traffic) = self.submit_raw(nranks, f);
+        let ranks: Vec<usize> = (0..nranks).collect();
+        self.try_run_job_on(&ranks, f)
+    }
+
+    /// Panic-containing [`RankPool::run_job_on`].
+    pub fn try_run_job_on<T, F>(&self, ranks: &[usize], f: F) -> Result<JobOutput<T>>
+    where
+        T: Send,
+        F: Fn(&Communicator) -> T + Sync,
+    {
+        let (raw, traffic) = self.submit_raw(ranks, f);
         let mut results = Vec::with_capacity(raw.len());
         let mut clocks = Vec::with_capacity(raw.len());
         let mut trace = Vec::new();
         let mut panics = Vec::new();
         for (i, r) in raw.into_iter().enumerate() {
             match r {
-                Ok((v, clk, spans)) => {
+                Ok((v, clk, _tfc, spans)) => {
                     results.push(v);
                     clocks.push(clk);
                     trace.extend(spans);
@@ -383,98 +489,118 @@ impl RankPool {
         Ok(JobOutput { results, clocks, traffic, trace })
     }
 
-    /// Two-phase dispatch; returns per-active-rank outcomes in rank order
-    /// plus the job's traffic delta.
-    fn submit_raw<T, F>(
-        &self,
-        nranks: usize,
-        f: F,
-    ) -> (Vec<RankOutcome<T>>, TrafficDelta)
+    /// Two-phase dispatch to the member ranks; returns per-member
+    /// outcomes in job-local rank order plus the job's traffic delta
+    /// (sum of the member ranks' per-rank counters — panicked ranks
+    /// contribute nothing).
+    fn submit_raw<T, F>(&self, ranks: &[usize], f: F) -> (Vec<RankOutcome<T>>, TrafficDelta)
     where
         T: Send,
         F: Fn(&Communicator) -> T + Sync,
     {
         assert!(
-            nranks <= self.size(),
-            "job wants {nranks} ranks but the pool has {}",
-            self.size()
+            ranks.windows(2).all(|w| w[0] < w[1]),
+            "job placement must list strictly ascending pool ranks, got {ranks:?}"
         );
-        let _job = self.submit.lock().unwrap_or_else(|poison| poison.into_inner());
+        if let Some(&last) = ranks.last() {
+            assert!(last < self.size(), "job wants rank {last} but the pool has {}", self.size());
+        } else {
+            self.jobs_run.fetch_add(1, Ordering::Relaxed);
+            return (Vec::new(), TrafficDelta::default());
+        }
 
-        // Phase 1 — prepare: every rank restores fresh-universe state and
-        // acks. All acks are collected before any Run command goes out, so
-        // no rank can drain a message the new job already sent it.
+        // Occupy exactly the member ranks, in ascending order — ordered
+        // acquisition means two jobs contending for an overlapping subset
+        // serialize on the lowest shared rank instead of deadlocking;
+        // disjoint jobs don't touch each other's locks at all.
+        let _busy: Vec<MutexGuard<'_, ()>> = ranks
+            .iter()
+            .map(|&r| self.workers[r].busy.lock().unwrap_or_else(|poison| poison.into_inner()))
+            .collect();
+
+        // Pool-unique job id; doubles as the message epoch.
+        let epoch = self.epochs.fetch_add(1, Ordering::Relaxed) + 1;
+
+        // Phase 1 — prepare: every member rank restores fresh-universe
+        // state, enters the job's epoch, and acks. All acks are collected
+        // before any Run command goes out, so no member can drain a
+        // message the new job already sent it.
         let (ack_tx, ack_rx) = channel::<()>();
-        for w in &self.workers {
-            w.tx.send(Command::Prepare(ack_tx.clone())).expect("rank thread alive");
+        for &r in ranks {
+            self.workers[r].send(Command::Prepare { epoch, ack: ack_tx.clone() });
         }
         drop(ack_tx);
-        for _ in &self.workers {
+        for _ in ranks {
             ack_rx.recv().expect("rank thread alive for prepare ack");
         }
 
-        let before = self.stats.snapshot();
-
-        // Phase 2 — dispatch the job to the active prefix.
+        // Phase 2 — dispatch the job to the members.
+        let group: Arc<Vec<Rank>> = Arc::new(ranks.iter().map(|&r| Rank(r)).collect());
         let (res_tx, res_rx) = channel::<(usize, RankOutcome<T>)>();
         let f: &(dyn Fn(&Communicator) -> T + Sync) = &f;
-        for (i, w) in self.workers.iter().enumerate() {
-            let task = (i < nranks).then(|| {
-                let res_tx = res_tx.clone();
-                let boxed: Box<dyn FnOnce(&Communicator) + Send + '_> = Box::new(move |comm| {
-                    let out = catch_unwind(AssertUnwindSafe(|| {
-                        // Reset this rank thread's span sink for the job
-                        // (cheap; a no-op recorder when tracing is off).
-                        if crate::trace::enabled() {
-                            crate::trace::job_start(comm.rank().0, 0, comm.epoch());
-                        }
-                        let v = f(comm);
-                        let clk = (comm.clock_ns(), comm.compute_ns(), comm.net_wait_ns());
-                        (v, clk, crate::trace::take())
-                    }));
-                    let _ = res_tx.send((comm.rank().0, out));
-                });
-                // SAFETY: `boxed` borrows `f` (and `T` may borrow the
-                // caller's environment), but we block below until every
-                // active rank has sent its result — and sending is the
-                // closure's final action, after its last read through the
-                // borrow. Whatever the worker still holds afterwards (the
-                // spent box, its sender clone) is only *dropped*, which
-                // never dereferences the erased borrows: dropping a shared
-                // reference is a no-op and the result channel's queue is
-                // fully drained before we return. The `recv` expects below
-                // can only fail once every sender is dropped, i.e. after
-                // all borrows are already dead, so even the panic path
-                // cannot outrun a live borrow.
-                unsafe {
-                    std::mem::transmute::<Box<dyn FnOnce(&Communicator) + Send + '_>, Task>(boxed)
-                }
+        for &r in ranks {
+            let res_tx = res_tx.clone();
+            let boxed: Box<dyn FnOnce(&Communicator) + Send + '_> = Box::new(move |comm| {
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    // Reset this rank thread's span sink for the job
+                    // (cheap; a no-op recorder when tracing is off).
+                    if crate::trace::enabled() {
+                        crate::trace::job_start(comm.global_rank().0, 0, comm.epoch());
+                    }
+                    let v = f(comm);
+                    let clk = (comm.clock_ns(), comm.compute_ns(), comm.net_wait_ns());
+                    let tfc = (
+                        comm.sent_messages(),
+                        comm.sent_bytes(),
+                        comm.sent_remote_messages(),
+                        comm.sent_remote_bytes(),
+                    );
+                    (v, clk, tfc, crate::trace::take())
+                }));
+                let _ = res_tx.send((comm.rank().0, out));
             });
-            w.tx.send(Command::Run { active: nranks, task }).expect("rank thread alive");
+            // SAFETY: `boxed` borrows `f` (and `T` may borrow the
+            // caller's environment), but we block below until every
+            // member rank has sent its result — and sending is the
+            // closure's final action, after its last read through the
+            // borrow. Whatever the worker still holds afterwards (the
+            // spent box, its sender clone) is only *dropped*, which
+            // never dereferences the erased borrows: dropping a shared
+            // reference is a no-op and the result channel's queue is
+            // fully drained before we return. The `recv` expects below
+            // can only fail once every sender is dropped, i.e. after
+            // all borrows are already dead, so even the panic path
+            // cannot outrun a live borrow.
+            let task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce(&Communicator) + Send + '_>, Task>(boxed)
+            };
+            self.workers[r].send(Command::Run { group: group.clone(), task });
         }
         drop(res_tx);
 
-        let mut slots: Vec<Option<RankOutcome<T>>> = (0..nranks).map(|_| None).collect();
-        for _ in 0..nranks {
-            let (rank, out) = res_rx.recv().expect("rank thread alive mid-job");
-            slots[rank] = Some(out);
+        let mut slots: Vec<Option<RankOutcome<T>>> = (0..ranks.len()).map(|_| None).collect();
+        for _ in ranks {
+            let (local, out) = res_rx.recv().expect("rank thread alive mid-job");
+            slots[local] = Some(out);
         }
-        let after = self.stats.snapshot();
         self.jobs_run.fetch_add(1, Ordering::Relaxed);
-        let traffic = TrafficDelta {
-            messages: after.0 - before.0,
-            bytes: after.1 - before.1,
-            remote_messages: after.2 - before.2,
-            remote_bytes: after.3 - before.3,
-        };
-        (slots.into_iter().map(|s| s.expect("every active rank reports")).collect(), traffic)
+        let mut traffic = TrafficDelta::default();
+        for slot in &slots {
+            if let Some(Ok((_, _, (msgs, bytes, rmsgs, rbytes), _))) = slot.as_ref() {
+                traffic.messages += msgs;
+                traffic.bytes += bytes;
+                traffic.remote_messages += rmsgs;
+                traffic.remote_bytes += rbytes;
+            }
+        }
+        (slots.into_iter().map(|s| s.expect("every member rank reports")).collect(), traffic)
     }
 }
 
 impl Drop for RankPool {
     fn drop(&mut self) {
         for w in &self.workers {
-            let _ = w.tx.send(Command::Shutdown);
+            w.send(Command::Shutdown);
         }
         for w in &mut self.workers {
             if let Some(handle) = w.handle.take() {
@@ -528,6 +654,109 @@ mod tests {
         ]);
         // Back to full width afterwards.
         assert_eq!(pool.run(|c| c.size()), vec![5; 5]);
+    }
+
+    #[test]
+    fn subset_jobs_renumber_ranks() {
+        let pool = RankPool::local(6);
+        // A job on ranks {1, 3, 5} sees itself as a 3-rank universe.
+        let out = pool.run_job_on(&[1, 3, 5], |c| {
+            (c.rank().0, c.global_rank().0, c.size(), c.world_size())
+        });
+        assert_eq!(out.results, vec![(0, 1, 3, 6), (1, 3, 3, 6), (2, 5, 3, 6)]);
+        // Collectives span exactly the subset, in job-local numbering.
+        assert_eq!(pool.run_job_on(&[2, 4], |c| c.allgather(c.rank().0 as u32).unwrap()).results, vec![
+            vec![0, 1];
+            2
+        ]);
+        // Point-to-point addressing is job-local too.
+        let got = pool.run_job_on(&[0, 5], |c| {
+            if c.is_root() {
+                c.send(Rank(1), Tag::user(9), vec![0xAB]).unwrap();
+                0u8
+            } else {
+                c.recv(Rank(0), Tag::user(9)).unwrap()[0]
+            }
+        });
+        assert_eq!(got.results, vec![0, 0xAB]);
+    }
+
+    #[test]
+    fn subset_placement_is_validated() {
+        let pool = RankPool::local(4);
+        for bad in [&[1usize, 1][..], &[3, 1], &[2, 4]] {
+            let attempt = catch_unwind(AssertUnwindSafe(|| {
+                pool.run_job_on(bad, |c| c.rank().0);
+            }));
+            assert!(attempt.is_err(), "placement {bad:?} must be rejected");
+        }
+        // The pool survives rejected submissions.
+        assert_eq!(pool.run(|c| c.size()), vec![4; 4]);
+    }
+
+    #[test]
+    fn disjoint_jobs_run_concurrently() {
+        let pool = RankPool::local(4);
+        // Cross-signal between two jobs: each root announces itself, then
+        // waits for the other job's announcement. Only possible if both
+        // jobs are in flight at once; a serializing pool would time out
+        // (and fail the assertions — not hang).
+        let (a_tx, a_rx) = channel::<()>();
+        let (b_tx, b_rx) = channel::<()>();
+        let (a_tx, a_rx) = (Mutex::new(a_tx), Mutex::new(a_rx));
+        let (b_tx, b_rx) = (Mutex::new(b_tx), Mutex::new(b_rx));
+        let timeout = std::time::Duration::from_secs(10);
+        std::thread::scope(|s| {
+            let ja = s.spawn(|| {
+                pool.run_job_on(&[0, 1], |c| {
+                    if c.is_root() {
+                        a_tx.lock().unwrap().send(()).unwrap();
+                        b_rx.lock()
+                            .unwrap()
+                            .recv_timeout(timeout)
+                            .expect("job B never overlapped with job A");
+                    }
+                    c.allreduce_sum_u64(1).unwrap()
+                })
+            });
+            let jb = s.spawn(|| {
+                pool.run_job_on(&[2, 3], |c| {
+                    if c.is_root() {
+                        b_tx.lock().unwrap().send(()).unwrap();
+                        a_rx.lock()
+                            .unwrap()
+                            .recv_timeout(timeout)
+                            .expect("job A never overlapped with job B");
+                    }
+                    c.allreduce_sum_u64(1).unwrap()
+                })
+            });
+            assert_eq!(ja.join().unwrap().results, vec![2, 2]);
+            assert_eq!(jb.join().unwrap().results, vec![2, 2]);
+        });
+        assert_eq!(pool.jobs_run(), 2);
+    }
+
+    #[test]
+    fn overlapping_jobs_serialize_on_shared_ranks() {
+        let pool = RankPool::local(3);
+        // Jobs {0,1} and {1,2} share rank 1: they must serialize there,
+        // both complete, and each sees a coherent 2-rank universe.
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let pool = &pool;
+                    s.spawn(move || {
+                        let ranks: &[usize] = if i % 2 == 0 { &[0, 1] } else { &[1, 2] };
+                        pool.run_job_on(ranks, |c| c.allgather(c.rank().0 as u32).unwrap())
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap().results, vec![vec![0, 1]; 2]);
+            }
+        });
+        assert_eq!(pool.jobs_run(), 8);
     }
 
     #[test]

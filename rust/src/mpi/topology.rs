@@ -166,6 +166,46 @@ impl Topology {
             && self.node_of_rank[..n] == other.node_of_rank[..n]
             && self.compute_scale[..n] == other.compute_scale[..n]
     }
+
+    /// View of `self` restricted to `sel` (in group order): job-local
+    /// index `i` maps to global rank `sel[i]`. Node ids are kept from
+    /// the parent so cost-model groupings survive the projection;
+    /// hostnames are carried along unchanged.
+    pub(crate) fn select(&self, sel: &[Rank]) -> Topology {
+        Topology {
+            node_of_rank: sel.iter().map(|r| self.node_of_rank[r.0]).collect(),
+            compute_scale: sel.iter().map(|r| self.compute_scale[r.0]).collect(),
+            hostnames: self.hostnames.clone(),
+        }
+    }
+
+    /// Does a job cluster described by `other` (ranks `0..sel.len()`)
+    /// match the pool ranks `sel` of `self`, *structurally*? Unlike
+    /// [`Self::agrees_on_prefix`] the node ids may differ numerically —
+    /// a subset drawn from nodes {2,3} of a big pool matches a fresh
+    /// two-node cluster — but the same-node relation between every pair
+    /// of selected ranks and each rank's compute scale must agree.
+    pub fn agrees_on_ranks(&self, other: &Topology, sel: &[usize]) -> bool {
+        if other.node_of_rank.len() != sel.len() {
+            return false;
+        }
+        if sel.iter().any(|&r| r >= self.node_of_rank.len()) {
+            return false;
+        }
+        for (i, &ri) in sel.iter().enumerate() {
+            if self.compute_scale[ri] != other.compute_scale[i] {
+                return false;
+            }
+            for (j, &rj) in sel.iter().enumerate().skip(i + 1) {
+                let pool_same = self.node_of_rank[ri] == self.node_of_rank[rj];
+                let job_same = other.node_of_rank[i] == other.node_of_rank[j];
+                if pool_same != job_same {
+                    return false;
+                }
+            }
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +250,37 @@ mod tests {
             .build();
         let t = Topology::from_config(&cfg);
         assert!(t.compute_scale(Rank(0)) >= 8.0);
+    }
+
+    #[test]
+    fn select_keeps_node_structure() {
+        let t = Topology::block(4, 4);
+        // Ranks 4..8 live on node 1; a selected view keeps them co-located.
+        let sel = [Rank(4), Rank(5), Rank(6)];
+        let v = t.select(&sel);
+        assert_eq!(v.ranks(), 3);
+        assert!(v.same_node(Rank(0), Rank(2)));
+        // Cross-node selection stays cross-node.
+        let v2 = t.select(&[Rank(0), Rank(4)]);
+        assert!(!v2.same_node(Rank(0), Rank(1)));
+    }
+
+    #[test]
+    fn agrees_on_ranks_is_structural() {
+        let pool = Topology::block(4, 4);
+        // A width-3 job cluster on one node matches any same-node triple,
+        // even one drawn from node 2 (node ids differ numerically).
+        let job = Topology::block(1, 3);
+        assert!(pool.agrees_on_ranks(&job, &[8, 9, 10]));
+        // ...but not a triple spanning nodes.
+        assert!(!pool.agrees_on_ranks(&job, &[3, 4, 5]));
+        // A 2x1 job cluster needs a cross-node pair.
+        let job2 = Topology::block(2, 1);
+        assert!(pool.agrees_on_ranks(&job2, &[3, 4]));
+        assert!(!pool.agrees_on_ranks(&job2, &[4, 5]));
+        // Width mismatch and out-of-range ranks are rejected.
+        assert!(!pool.agrees_on_ranks(&job, &[0, 1]));
+        assert!(!pool.agrees_on_ranks(&job, &[14, 15, 16]));
     }
 
     #[test]

@@ -13,8 +13,7 @@ pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
-#[cfg(test)]
-pub(crate) mod testpool;
+pub mod testpool;
 pub mod tmp;
 pub mod toml_mini;
 

@@ -1,26 +1,60 @@
-//! Shared [`RankPool`]s for unit tests.
+//! Shared [`RankPool`] builders for tests and harnesses.
 //!
-//! Module unit tests used to build a fresh `Universe::local(n)` (and one
-//! OS thread per rank) per test via `run_ranks`. [`pool_run`] routes them
-//! through a warm pool instead, so the unit-test suite itself is a
-//! many-jobs-on-one-pool workout of the pooled executor: every
-//! `core::`/`dist::` test is another job on reused threads, with the
-//! prepare phase isolating them exactly like fresh universes (same
-//! results, reset clocks, realigned collective tags).
+//! [`fleet`] is the one way the integration suites (transport, trace,
+//! scheduler) and the `serve-bench` harness assemble a pool with an
+//! explicit topology/algorithm/transport — previously each test file
+//! carried its own copy of the `Universe::new(..).with_*` chain.
 //!
-//! One pool per *test thread* (not one global pool): jobs on a pool
-//! serialize, so a process-wide pool would strip libtest's test-level
-//! parallelism and let one wedged job block every other test. Each
-//! libtest thread lazily builds its own pool and reuses it for every
-//! test it runs, which keeps both the reuse workout and the parallelism.
+//! [`pool_run`] (test builds only) routes module unit tests through a
+//! warm per-thread pool instead of a fresh `Universe::local(n)` per
+//! test, so the unit-test suite itself is a many-jobs-on-one-pool
+//! workout of the pooled executor: every `core::`/`dist::` test is
+//! another job on reused threads, with the prepare phase isolating them
+//! exactly like fresh universes (same results, reset clocks, realigned
+//! collective tags).
+//!
+//! One pool per *test thread* (not one global pool): a process-wide
+//! pool would strip libtest's test-level parallelism and let one wedged
+//! job block every other test. Each libtest thread lazily builds its
+//! own pool and reuses it for every test it runs, which keeps both the
+//! reuse workout and the parallelism.
 
-use crate::mpi::{Communicator, RankPool};
+use std::path::Path;
+
+use crate::cluster::NetworkModel;
+#[cfg(test)]
+use crate::mpi::Communicator;
+use crate::mpi::{CollectiveAlgo, RankPool, Topology, TransportKind, Universe};
+
+/// Build a warm pool over a `nodes x slots` block topology with a free
+/// network model — the shared-fleet shape of the integration suites.
+/// `worker_bin` is required by [`TransportKind::Tcp`] fleets launched
+/// from test binaries (pass `env!("CARGO_BIN_EXE_blaze")`); `None`
+/// lets the launcher default to the current executable, which is what
+/// the `blaze` CLI itself wants.
+pub fn fleet(
+    nodes: usize,
+    slots: usize,
+    algo: CollectiveAlgo,
+    transport: TransportKind,
+    worker_bin: Option<&Path>,
+) -> RankPool {
+    let mut universe = Universe::new(Topology::block(nodes, slots), NetworkModel::free())
+        .with_collective_algo(algo)
+        .with_transport(transport);
+    if let Some(bin) = worker_bin {
+        universe = universe.with_worker_binary(bin);
+    }
+    RankPool::new(universe)
+}
 
 /// Width of each per-thread pool; unit tests use at most 5 ranks today,
 /// and narrower jobs run on a prefix of the warm threads.
+#[cfg(test)]
 pub(crate) const POOL_RANKS: usize = 8;
 
 /// Pooled drop-in for `run_ranks(Universe::local(n), f)` in unit tests.
+#[cfg(test)]
 pub(crate) fn pool_run<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,

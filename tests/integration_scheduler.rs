@@ -1,0 +1,443 @@
+//! ISSUE 9 acceptance suite for the concurrent multi-job scheduler:
+//! N mixed-width jobs submitted from several client threads onto ONE
+//! shared 16-rank pool must be **byte-identical** to serial fresh-spawn
+//! runs, on both the mailbox and real-TCP transports; subset-width jobs
+//! (4-rank + 12-rank) must demonstrably overlap in time on disjoint
+//! rank subsets; a flood of narrow jobs must not starve a full-width
+//! job (the deficit-round-robin + starvation-freeze guarantee); a soak
+//! leaves no stray rank/dispatcher threads or orphan TCP worker
+//! processes; and a slow job's unconsumed frames never leak into a
+//! concurrently admitted job that reuses its ranks (epoch fencing).
+//!
+//! Every test takes `gate()` first: the leak test counts process-global
+//! `blaze-*` threads and the overlap tests need all 16 ranks of a
+//! dedicated pool free, so the tests in this binary serialize. (Other
+//! test binaries are separate processes and cannot interfere.)
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{mpsc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use blaze_rs::apps::{pagerank, wordcount};
+use blaze_rs::cluster::ClusterConfig;
+use blaze_rs::core::{JobCtx, ReductionMode, Scheduler, SchedulerConfig};
+use blaze_rs::mpi::{CollectiveAlgo, Rank, Tag, TransportKind};
+use blaze_rs::util::testpool;
+
+const POOL_RANKS: usize = 16;
+const SEED: u64 = 0xB1A2E;
+
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_blaze")
+}
+
+/// A scheduler over a fresh single-node 16-rank fleet. Single node on
+/// purpose: every rank subset is then same-node, so it structurally
+/// matches the single-node job clusters below at any width.
+fn new_scheduler(transport: TransportKind) -> Scheduler {
+    let bin = (transport == TransportKind::Tcp).then(|| Path::new(worker_bin()));
+    Scheduler::with_config(
+        testpool::fleet(1, POOL_RANKS, CollectiveAlgo::Star, transport, bin),
+        SchedulerConfig::default(),
+    )
+}
+
+/// One warm scheduler per transport, shared by the byte-identity and
+/// fencing tests (a TCP fleet is 16 real worker processes — one per
+/// transport for the whole suite, not one per test). Never dropped;
+/// workers exit on driver-socket EOF when the test process does.
+fn schedulers() -> &'static [(TransportKind, Scheduler)] {
+    static S: OnceLock<Vec<(TransportKind, Scheduler)>> = OnceLock::new();
+    S.get_or_init(|| TransportKind::ALL.iter().map(|t| (*t, new_scheduler(*t))).collect())
+}
+
+/// The cluster a `width`-rank job believes it runs on — the SAME config
+/// feeds the serial fresh-spawn baseline and the pool-placed run, so any
+/// divergence is the scheduler's fault, not the config's.
+fn job_cluster(width: usize, transport: TransportKind) -> ClusterConfig {
+    ClusterConfig::builder()
+        .nodes(1)
+        .slots_per_node(width)
+        .seed(SEED)
+        .transport(transport)
+        .worker_binary(worker_bin())
+        .build()
+}
+
+fn corpus() -> &'static Vec<String> {
+    static C: OnceLock<Vec<String>> = OnceLock::new();
+    C.get_or_init(|| wordcount::generate_corpus(120, 6, 40, SEED))
+}
+
+fn graph() -> &'static pagerank::Graph {
+    static G: OnceLock<pagerank::Graph> = OnceLock::new();
+    G.get_or_init(|| pagerank::Graph::random(200, 4, SEED))
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Kind {
+    Wc(ReductionMode),
+    Pr,
+}
+
+/// What byte-identity means per app: the exact result plus the modeled
+/// shuffle traffic. (Clocks fold in measured host CPU time and are not
+/// run-to-run comparable — same carve-out as the tracing suite.)
+#[derive(Debug, PartialEq)]
+enum Out {
+    Wc(HashMap<String, u64>, u64, u64),
+    Pr(Vec<f64>, Vec<u64>),
+}
+
+/// The mixed stream: widths 1..=4 across all three reduction modes plus
+/// two iterative PageRanks, so several jobs co-reside on 16 ranks.
+fn specs() -> Vec<(usize, Kind)> {
+    vec![
+        (4, Kind::Wc(ReductionMode::Classic)),
+        (2, Kind::Wc(ReductionMode::Eager)),
+        (3, Kind::Pr),
+        (2, Kind::Wc(ReductionMode::Delayed)),
+        (4, Kind::Pr),
+        (1, Kind::Wc(ReductionMode::Eager)),
+        (2, Kind::Wc(ReductionMode::Classic)),
+        (3, Kind::Wc(ReductionMode::Delayed)),
+    ]
+}
+
+/// Serial truth: a fresh-spawn cluster of exactly the job's width.
+fn baseline(width: usize, kind: Kind, transport: TransportKind) -> Out {
+    let cluster = job_cluster(width, transport);
+    match kind {
+        Kind::Wc(mode) => {
+            let r = wordcount::run(&cluster, corpus(), mode).unwrap();
+            Out::Wc(r.result, r.stats.shuffle_bytes, r.stats.messages)
+        }
+        Kind::Pr => {
+            let r = pagerank::run(&cluster, graph(), 4, 0.85, ReductionMode::Delayed).unwrap();
+            Out::Pr(r.ranks, r.per_iteration_shuffle_bytes)
+        }
+    }
+}
+
+/// The same job, placed on the scheduler's reserved rank subset.
+fn placed(ctx: &JobCtx, width: usize, kind: Kind, transport: TransportKind) -> anyhow::Result<Out> {
+    let cluster = job_cluster(width, transport);
+    match kind {
+        Kind::Wc(mode) => {
+            let r = wordcount::run_placed(&cluster, ctx.pool(), ctx.ranks(), corpus(), mode)?;
+            Ok(Out::Wc(r.result, r.stats.shuffle_bytes, r.stats.messages))
+        }
+        Kind::Pr => {
+            let r = pagerank::run_placed(
+                &cluster,
+                ctx.pool(),
+                ctx.ranks(),
+                graph(),
+                4,
+                0.85,
+                ReductionMode::Delayed,
+            )?;
+            Ok(Out::Pr(r.ranks, r.per_iteration_shuffle_bytes))
+        }
+    }
+}
+
+#[test]
+fn concurrent_mixed_width_jobs_are_byte_identical_to_serial_runs() {
+    let _g = gate();
+    for (transport, sched) in schedulers() {
+        let specs = specs();
+        let want: Vec<Out> = specs.iter().map(|&(w, k)| baseline(w, k, *transport)).collect();
+
+        // Four client threads submit interleaved shares of the stream
+        // concurrently, then each waits for its own handles.
+        let got: Vec<(usize, Out)> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..4)
+                .map(|client| {
+                    let specs = &specs;
+                    s.spawn(move || {
+                        let handles: Vec<_> = specs
+                            .iter()
+                            .enumerate()
+                            .skip(client)
+                            .step_by(4)
+                            .map(|(i, &(w, k))| {
+                                let t = *transport;
+                                let h = sched
+                                    .submit(&format!("client-{client}"), w, move |ctx| {
+                                        placed(ctx, w, k, t)
+                                    })
+                                    .unwrap();
+                                (i, h)
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|(i, h)| (i, h.wait().result.unwrap()))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            joins.into_iter().flat_map(|j| j.join().unwrap()).collect()
+        });
+
+        assert_eq!(got.len(), specs.len());
+        for (i, out) in got {
+            assert_eq!(out, want[i], "{transport}: concurrent job {i} diverged from serial run");
+        }
+        // Every concurrently-run job went through the shared pool's
+        // admission log with a within-pool reservation.
+        let events = sched.events();
+        assert!(events.len() >= specs.len(), "{transport}: admission log too short");
+        for e in &events {
+            assert!(e.ranks.iter().all(|&r| r < POOL_RANKS));
+            assert_eq!(e.ranks.len(), e.width);
+        }
+    }
+}
+
+#[test]
+fn subset_width_jobs_demonstrably_overlap_on_disjoint_rank_subsets() {
+    let _g = gate();
+    for transport in TransportKind::ALL {
+        // Dedicated scheduler: the rendezvous needs 4 + 12 ranks free at
+        // once, which the shared fleet cannot guarantee.
+        let sched = new_scheduler(transport);
+        let (started_tx, started_rx) = mpsc::channel();
+        let started_tx2 = started_tx.clone();
+        let (release_a_tx, release_a_rx) = mpsc::channel::<()>();
+        let (release_b_tx, release_b_rx) = mpsc::channel::<()>();
+
+        // Each job proves its ranks are live with a real SPMD wave,
+        // reports in, and then HOLDS its reservation until released.
+        // Channel rendezvous, not a Barrier: if co-scheduling broke,
+        // the recv_timeout below fails the test instead of deadlocking.
+        let ha = sched
+            .submit("narrow", 4, move |ctx| {
+                ctx.run_spmd(|c| c.rank().0)?;
+                started_tx.send("narrow").unwrap();
+                release_a_rx.recv_timeout(Duration::from_secs(60))?;
+                ctx.run_spmd(|c| c.rank().0)?;
+                Ok(())
+            })
+            .unwrap();
+        let hb = sched
+            .submit("wide", 12, move |ctx| {
+                ctx.run_spmd(|c| c.rank().0)?;
+                started_tx2.send("wide").unwrap();
+                release_b_rx.recv_timeout(Duration::from_secs(60))?;
+                ctx.run_spmd(|c| c.rank().0)?;
+                Ok(())
+            })
+            .unwrap();
+
+        // Both jobs report in while NEITHER has been released: they are
+        // in flight simultaneously on the one pool.
+        let first = started_rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("{transport}: no job started"));
+        let second = started_rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("{transport}: {first} ran alone — jobs did not co-schedule"));
+        assert_ne!(first, second);
+        release_a_tx.send(()).unwrap();
+        release_b_tx.send(()).unwrap();
+
+        let oa = ha.wait();
+        let ob = hb.wait();
+        oa.result.unwrap();
+        ob.result.unwrap();
+        assert_eq!(sched.peak_concurrent_jobs(), 2, "{transport}");
+
+        // The admission log agrees, and the reservations tile the pool:
+        // 4 + 12 disjoint ranks on 16.
+        let events = sched.events();
+        assert_eq!(events.len(), 2);
+        assert!(events[0].overlaps(&events[1]), "{transport}: events claim no overlap");
+        let mut all: Vec<usize> =
+            events.iter().flat_map(|e| e.ranks.iter().copied()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..POOL_RANKS).collect::<Vec<_>>(), "{transport}: reservations overlap");
+        assert_eq!(oa.stats.ranks.len(), 4);
+        assert_eq!(ob.stats.ranks.len(), 12);
+
+        // Dropping a TCP scheduler reaps its worker fleet.
+        let pids: Vec<u32> = sched.pool().worker_pids().to_vec();
+        if transport == TransportKind::Tcp {
+            assert_eq!(pids.len(), POOL_RANKS);
+        }
+        drop(sched);
+        for pid in pids {
+            let alive = unsafe { libc::kill(pid as i32, 0) } == 0;
+            assert!(!alive, "{transport}: worker {pid} survived scheduler drop");
+        }
+    }
+}
+
+#[test]
+fn full_width_job_is_not_starved_by_a_flood_of_narrow_jobs() {
+    let _g = gate();
+    // Adversarial knobs: tiny quantum, aggressive starvation freeze.
+    let sched = Scheduler::with_config(
+        testpool::fleet(1, POOL_RANKS, CollectiveAlgo::Star, TransportKind::Mailbox, None),
+        SchedulerConfig { quantum: 2, max_queue: 256, starvation_rounds: 2 },
+    );
+    fn hog(ctx: &JobCtx) -> anyhow::Result<()> {
+        ctx.run_spmd(|_c| std::thread::sleep(Duration::from_millis(2)))?;
+        Ok(())
+    }
+    let mut hogs = Vec::new();
+    for _ in 0..24 {
+        hogs.push(sched.submit("hog", 1, hog).unwrap());
+    }
+    // The full-width job arrives mid-flood: it fits only when ALL 16
+    // ranks drain, which the starvation freeze must force even though
+    // width-1 work keeps arriving behind it.
+    let wide = sched
+        .submit("patient", POOL_RANKS, |ctx| {
+            ctx.run_spmd(|c| c.rank().0)?;
+            Ok(())
+        })
+        .unwrap();
+    for _ in 0..24 {
+        hogs.push(sched.submit("hog", 1, hog).unwrap());
+    }
+
+    let out = wide.wait();
+    out.result.unwrap();
+    assert_eq!(out.stats.ranks.len(), POOL_RANKS);
+    for h in hogs {
+        h.wait().result.unwrap();
+    }
+    let tenants = sched.tenant_stats();
+    let find = |name: &str| tenants.iter().find(|t| t.name == name).unwrap().clone();
+    assert_eq!(find("hog").admitted_jobs, 48);
+    assert_eq!(find("hog").admitted_rank_units, 48);
+    assert_eq!(find("patient").admitted_jobs, 1);
+    assert_eq!(find("patient").admitted_rank_units, POOL_RANKS as u64);
+    sched.drain();
+    assert_eq!(sched.active_jobs(), 0);
+    assert_eq!(sched.queued_jobs(), 0);
+}
+
+/// Threads whose comm name marks them as pool ranks or scheduler
+/// dispatchers (`/proc/self/task/<tid>/comm`; names fit the 15-char cap).
+fn blaze_thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .expect("linux procfs")
+        .filter(|e| {
+            let comm = e
+                .as_ref()
+                .map(|e| std::fs::read_to_string(e.path().join("comm")).unwrap_or_default())
+                .unwrap_or_default();
+            comm.starts_with("blaze-rank-") || comm.starts_with("blaze-sched-")
+        })
+        .count()
+}
+
+#[test]
+fn soak_leaves_no_stray_threads_or_queue_residue() {
+    let _g = gate();
+    // Fold the long-lived shared fleets into the baseline first, so this
+    // test measures only its own scheduler's threads.
+    let _ = schedulers();
+    let baseline = blaze_thread_count();
+
+    let sched = new_scheduler(TransportKind::Mailbox);
+    assert!(blaze_thread_count() > baseline, "scheduler spawned no threads?");
+    std::thread::scope(|s| {
+        for client in 0..4 {
+            let sched = &sched;
+            s.spawn(move || {
+                for i in 0..16 {
+                    let width = 1 + (client + i) % 8;
+                    let out = sched
+                        .submit(&format!("soak-{client}"), width, move |ctx| {
+                            let ranks = ctx.run_spmd(|c| c.rank().0)?;
+                            Ok(ranks.len())
+                        })
+                        .unwrap()
+                        .wait();
+                    assert_eq!(out.result.unwrap(), width);
+                }
+            });
+        }
+    });
+    assert_eq!(sched.active_jobs(), 0, "soak left active jobs");
+    assert_eq!(sched.queued_jobs(), 0, "soak left queued jobs");
+    let events = sched.events();
+    assert_eq!(events.len(), 64);
+    assert!(events.iter().all(|e| e.completed_at.is_some()));
+    drop(sched);
+
+    // Drop joins dispatchers and rank threads synchronously; allow a few
+    // scheduler ticks for the kernel to retire task entries.
+    for _ in 0..100 {
+        if blaze_thread_count() == baseline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(blaze_thread_count(), baseline, "soak leaked rank/dispatcher threads");
+}
+
+#[test]
+fn late_frames_from_a_slow_job_never_leak_into_the_next_job() {
+    let _g = gate();
+    for (transport, sched) in schedulers() {
+        let tag = Tag::user(7717);
+        // Job A takes the FULL pool, so the probe below must reuse its
+        // exact ranks. Rank 0 sends three tagged frames; rank 1 consumes
+        // only one and leaves two unconsumed in its mailbox; then every
+        // rank dawdles — A is still in flight when B is admitted behind
+        // it (interleaved submission, sequential execution on the same
+        // ranks).
+        let ha = sched
+            .submit("slow", POOL_RANKS, move |ctx| {
+                ctx.run_spmd(move |c| {
+                    match c.rank().0 {
+                        0 => {
+                            for _ in 0..3 {
+                                c.send(Rank(1), tag, b"stale-from-A".to_vec()).unwrap();
+                            }
+                        }
+                        1 => {
+                            let one = c.recv(Rank(0), tag).unwrap();
+                            assert_eq!(one, b"stale-from-A");
+                        }
+                        _ => {}
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                })?;
+                Ok(())
+            })
+            .unwrap();
+        let hb = sched
+            .submit("probe", POOL_RANKS, move |ctx| {
+                let mut waves = ctx.run_spmd(move |c| match c.rank().0 {
+                    0 => {
+                        c.send(Rank(1), tag, b"fresh-from-B".to_vec()).unwrap();
+                        Vec::new()
+                    }
+                    1 => c.recv(Rank(0), tag).unwrap(),
+                    _ => Vec::new(),
+                })?;
+                Ok(waves.swap_remove(1))
+            })
+            .unwrap();
+
+        ha.wait().result.unwrap();
+        let got = hb.wait().result.unwrap();
+        assert_eq!(
+            got,
+            b"fresh-from-B".to_vec(),
+            "{transport}: a stale frame from the previous epoch leaked into the probe job"
+        );
+    }
+}

@@ -11,14 +11,17 @@
 //! (Other test binaries are separate processes and cannot interfere.)
 
 use std::collections::{HashMap, HashSet};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, MutexGuard};
 
 use blaze_rs::apps::{pagerank, wordcount};
-use blaze_rs::cluster::{ClusterConfig, ElasticCluster, NetworkModel};
+use blaze_rs::cluster::{ClusterConfig, ElasticCluster};
 use blaze_rs::core::ReductionMode;
-use blaze_rs::mpi::{Communicator, Rank, RankPool, Tag, Topology, TransportKind, Universe};
+use blaze_rs::mpi::{
+    CollectiveAlgo, Communicator, Rank, RankPool, Tag, Topology, TransportKind, Universe,
+};
 use blaze_rs::trace::{self, JobTrace, SpanEvent, SpanKind, TraceConfig};
+use blaze_rs::util::testpool;
 use blaze_rs::util::Json;
 
 fn gate() -> MutexGuard<'static, ()> {
@@ -176,14 +179,14 @@ fn send_and_recv_spans_match_across_mailbox_and_tcp() {
     // worker-side span files when tracing is on at launch time.
     let _t = trace::enable_scope(true);
 
-    let mailbox = RankPool::new(
-        Universe::new(Topology::block(2, 2), NetworkModel::free())
-            .with_transport(TransportKind::Mailbox),
-    );
-    let tcp = RankPool::new(
-        Universe::new(Topology::block(2, 2), NetworkModel::free())
-            .with_transport(TransportKind::Tcp)
-            .with_worker_binary(worker_bin()),
+    let mailbox =
+        testpool::fleet(2, 2, CollectiveAlgo::Star, TransportKind::Mailbox, None);
+    let tcp = testpool::fleet(
+        2,
+        2,
+        CollectiveAlgo::Star,
+        TransportKind::Tcp,
+        Some(Path::new(worker_bin())),
     );
 
     let mb_out = mailbox.run_job(4, ring_job);

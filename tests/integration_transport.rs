@@ -16,13 +16,15 @@
 //! sockets. Pools are shared across tests through a `OnceLock` to bound
 //! the process count at three fleets.
 
+use std::path::Path;
 use std::sync::OnceLock;
 
-use blaze_rs::cluster::{ClusterConfig, NetworkModel};
+use blaze_rs::cluster::ClusterConfig;
 use blaze_rs::core::{MapReduceJob, ReductionMode};
-use blaze_rs::mpi::{CollectiveAlgo, Rank, RankPool, Topology, TransportKind, Universe};
+use blaze_rs::mpi::{CollectiveAlgo, Rank, RankPool, TransportKind};
 use blaze_rs::util::prop::{for_all, vec_of};
 use blaze_rs::util::rng::Rng;
+use blaze_rs::util::testpool;
 
 /// 4 nodes x 4 slots — same shape as the collective-equivalence suite:
 /// real trees, multi-rank nodes for the hierarchical leader paths.
@@ -33,12 +35,7 @@ fn worker_bin() -> &'static str {
 }
 
 fn pool(algo: CollectiveAlgo, transport: TransportKind) -> RankPool {
-    RankPool::new(
-        Universe::new(Topology::block(4, 4), NetworkModel::free())
-            .with_collective_algo(algo)
-            .with_transport(transport)
-            .with_worker_binary(worker_bin()),
-    )
+    testpool::fleet(4, 4, algo, transport, Some(Path::new(worker_bin())))
 }
 
 /// One warm (mailbox, tcp) pool pair per collective algorithm, shared

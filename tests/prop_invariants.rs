@@ -695,6 +695,82 @@ fn prop_varint_size_monotone() {
 }
 
 #[test]
+fn prop_coscheduled_jobs_never_overlap_rank_subsets() {
+    // The ISSUE 9 satellite: random job widths/durations thrown at a
+    // 16-rank pool through the concurrent scheduler. Invariants, from
+    // the admission log: every job completes; every reservation is a
+    // strictly-ascending in-range subset of exactly `width` ranks; and
+    // any two jobs that overlapped in time sat on **disjoint** subsets.
+    // Shrinks toward fewer jobs, then toward narrowing one job to
+    // width 1, so a regression reports a minimal witness.
+    use blaze_rs::core::{Scheduler, SchedulerConfig};
+    use blaze_rs::mpi::RankPool;
+    use blaze_rs::util::prop::for_all_shrink;
+
+    const POOL: usize = 16;
+    for_all_shrink(
+        "co-scheduled jobs reserve disjoint subsets of a 16-rank pool",
+        |r| {
+            vec_of(r, 10, |r| {
+                (1 + r.below(POOL as u64) as usize, r.below(3))
+            })
+        },
+        |jobs| {
+            let mut cands: Vec<Vec<(usize, u64)>> = (0..jobs.len())
+                .map(|i| {
+                    let mut fewer = jobs.clone();
+                    fewer.remove(i);
+                    fewer
+                })
+                .collect();
+            if let Some(i) = jobs.iter().position(|(w, _)| *w > 1) {
+                let mut narrower = jobs.clone();
+                narrower[i].0 = 1;
+                cands.push(narrower);
+            }
+            cands
+        },
+        |jobs| {
+            let sched = Scheduler::with_config(
+                RankPool::local(POOL),
+                SchedulerConfig { quantum: 4, max_queue: 64, starvation_rounds: 3 },
+            );
+            let handles: Vec<_> = jobs
+                .iter()
+                .enumerate()
+                .map(|(i, (width, sleep_ms))| {
+                    let sleep_ms = *sleep_ms;
+                    sched
+                        .submit(&format!("t{}", i % 3), *width, move |ctx| {
+                            ctx.run_spmd(|_c| {
+                                std::thread::sleep(std::time::Duration::from_millis(sleep_ms))
+                            })?;
+                            Ok(())
+                        })
+                        .unwrap()
+                })
+                .collect();
+            let all_ok = handles.into_iter().all(|h| h.wait().result.is_ok());
+            let events = sched.events();
+            all_ok
+                && events.len() == jobs.len()
+                && events.iter().all(|e| {
+                    e.completed_at.is_some()
+                        && e.ranks.len() == e.width
+                        && (1..=POOL).contains(&e.width)
+                        && e.ranks.iter().all(|&r| r < POOL)
+                        && e.ranks.windows(2).all(|w| w[0] < w[1])
+                })
+                && events.iter().enumerate().all(|(i, a)| {
+                    events.iter().skip(i + 1).all(|b| {
+                        !a.overlaps(b) || a.ranks.iter().all(|r| !b.ranks.contains(r))
+                    })
+                })
+        },
+    );
+}
+
+#[test]
 fn prop_stable_hash_no_collision_burst() {
     // Not a collision-freeness claim — just that random key sets of 100
     // don't collide into <90 distinct hashes (would indicate brokenness).
