@@ -25,7 +25,8 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let out = MapReduceJob::new(&cluster, &readings).run_delayed(
         |(k, v): &(String, u32), emit: &mut dyn FnMut(String, u32)| emit(k.clone(), *v),
-        |_k, mut vs: Vec<u32>| {
+        |_k, vs: &mut dyn Iterator<Item = u32>| {
+            let mut vs: Vec<u32> = vs.collect();
             vs.sort_unstable();
             vs[vs.len() / 2] // median — needs the whole iterable
         },
@@ -58,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         let sizes: Vec<usize> =
             groups.iter_groups().unwrap().map(|(_, vs)| vs.len()).collect();
         // ...then reduce.
-        let reduced = groups.reduce_now(|_, vs| vs.into_iter().sum::<u32>()).unwrap();
+        let reduced = groups.reduce_now(|_, vs| vs.sum::<u32>()).unwrap();
         (sizes, reduced.len())
     });
     println!("\nlazy groups per rank (sizes, then reduced): {inspected:?}");
@@ -82,7 +83,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap();
         let spilled = groups.spilled_bytes();
         let mut sizes: Vec<(u32, usize)> = Vec::new();
-        groups.for_each_group(|k, vs| sizes.push((k, vs.len()))).unwrap();
+        groups.for_each_group(|k, vs| sizes.push((*k, vs.count()))).unwrap();
         (spilled, sizes, tracker.peak_bytes())
     });
     println!("\nout-of-core groups per rank (spilled B, sizes, peak B): {streamed:?}");

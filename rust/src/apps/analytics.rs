@@ -1,0 +1,213 @@
+//! Analytics — a TPC-H-flavoured multi-stage chain, the demo workload
+//! for the [`crate::core::dataflow`] DAG layer.
+//!
+//! Two tables (synthetic, seeded, deterministic):
+//!
+//!  * `customers(cust_id, segment)` — the dimension table: each
+//!    customer belongs to one of [`SEGMENTS`] market segments.
+//!  * `orders(cust_id, total_cents)` — the fact table: order totals,
+//!    customer popularity Zipf-skewed (the shape real order books
+//!    have).
+//!
+//! Two plans over them:
+//!
+//!  * [`basket_plan`] — `orders.filter(total ≥ min).join(customers)
+//!    .group_by()`: each qualifying customer's purchase list. The
+//!    acceptance chain: the filter fuses into the orders scan, the join
+//!    repartitions both sides (two shuffles), and the `group_by` over
+//!    the join's co-partitioned output is *shuffle-free*.
+//!  * [`revenue_plan`] — same scan + join, then
+//!    `.map(to (segment, total)).reduce_by_key(+)`: revenue per market
+//!    segment, with the re-key map fused onto the join stage.
+
+use anyhow::Result;
+
+use crate::cluster::ClusterConfig;
+use crate::core::dataflow::{DataflowOutput, Stage};
+use crate::util::rng::Rng;
+
+/// TPC-H's five market segments.
+pub const SEGMENTS: [&str; 5] =
+    ["automobile", "building", "furniture", "household", "machinery"];
+
+/// Synthetic tables: `customers` rows of `(cust_id, segment)` and
+/// `orders` rows of `(cust_id, total_cents)`. Customer popularity is
+/// Zipf-ish (hot customers order more); totals are 1..=50000 cents.
+pub fn generate_tables(
+    customers: usize,
+    orders: usize,
+    seed: u64,
+) -> (Vec<(u32, String)>, Vec<(u32, u64)>) {
+    assert!(customers > 0, "need at least one customer");
+    let mut rng = Rng::with_stream(seed, 0xA11A);
+    let customer_rows: Vec<(u32, String)> = (0..customers as u32)
+        .map(|id| (id, SEGMENTS[rng.below(SEGMENTS.len() as u64) as usize].to_string()))
+        .collect();
+    let weights: Vec<f64> = (1..=customers).map(|r| 1.0 / r as f64).collect();
+    let order_rows: Vec<(u32, u64)> = (0..orders)
+        .map(|_| {
+            let cust = rng.weighted(&weights) as u32;
+            let total = 1 + rng.below(50_000);
+            (cust, total)
+        })
+        .collect();
+    (customer_rows, order_rows)
+}
+
+/// filter → join → group_by: each customer's list of qualifying
+/// `(total_cents, segment)` purchases. The filter fuses into the orders
+/// scan; the `group_by` runs shuffle-free over the join's
+/// co-partitioned output (assert it: `plan.explain()`).
+pub fn basket_plan(
+    customers: &[(u32, String)],
+    orders: &[(u32, u64)],
+    min_total_cents: u64,
+) -> Stage<u32, Vec<(u64, String)>> {
+    Stage::from_vec(orders.to_vec())
+        .filter(move |_cust, total| *total >= min_total_cents)
+        .join(&Stage::from_vec(customers.to_vec()))
+        .group_by()
+}
+
+/// filter → join → map → reduce_by_key: revenue (cents) per market
+/// segment over qualifying orders. The re-key map fuses onto the join
+/// stage's output pass; only the final reduce repartitions.
+pub fn revenue_plan(
+    customers: &[(u32, String)],
+    orders: &[(u32, u64)],
+    min_total_cents: u64,
+) -> Stage<String, u64> {
+    Stage::from_vec(orders.to_vec())
+        .filter(move |_cust, total| *total >= min_total_cents)
+        .join(&Stage::from_vec(customers.to_vec()))
+        .map(|_cust, (total, segment)| (segment, total))
+        .reduce_by_key(|a, b| a + b)
+}
+
+/// Execute [`basket_plan`] on `cluster`.
+pub fn run_baskets(
+    cluster: &ClusterConfig,
+    customers: &[(u32, String)],
+    orders: &[(u32, u64)],
+    min_total_cents: u64,
+) -> Result<DataflowOutput<u32, Vec<(u64, String)>>> {
+    basket_plan(customers, orders, min_total_cents).collect(cluster)
+}
+
+/// Execute [`revenue_plan`] on `cluster`.
+pub fn run_revenue(
+    cluster: &ClusterConfig,
+    customers: &[(u32, String)],
+    orders: &[(u32, u64)],
+    min_total_cents: u64,
+) -> Result<DataflowOutput<String, u64>> {
+    revenue_plan(customers, orders, min_total_cents).collect(cluster)
+}
+
+/// Ground truth for tests and the CLI check: single-threaded
+/// per-segment revenue.
+pub fn revenue_serial(
+    customers: &[(u32, String)],
+    orders: &[(u32, u64)],
+    min_total_cents: u64,
+) -> Vec<(String, u64)> {
+    let mut by_cust = std::collections::HashMap::new();
+    for (id, seg) in customers {
+        by_cust.insert(*id, seg.clone());
+    }
+    let mut revenue: std::collections::HashMap<String, u64> = std::collections::HashMap::new();
+    for (cust, total) in orders {
+        if *total >= min_total_cents {
+            if let Some(seg) = by_cust.get(cust) {
+                *revenue.entry(seg.clone()).or_insert(0) += total;
+            }
+        }
+    }
+    let mut rows: Vec<(String, u64)> = revenue.into_iter().collect();
+    rows.sort();
+    rows
+}
+
+/// Ground truth for the basket chain: per-customer qualifying purchase
+/// multisets (sorted for comparison).
+pub fn baskets_serial(
+    customers: &[(u32, String)],
+    orders: &[(u32, u64)],
+    min_total_cents: u64,
+) -> Vec<(u32, Vec<(u64, String)>)> {
+    let mut by_cust = std::collections::HashMap::new();
+    for (id, seg) in customers {
+        by_cust.insert(*id, seg.clone());
+    }
+    let mut baskets: std::collections::HashMap<u32, Vec<(u64, String)>> =
+        std::collections::HashMap::new();
+    for (cust, total) in orders {
+        if *total >= min_total_cents {
+            if let Some(seg) = by_cust.get(cust) {
+                baskets.entry(*cust).or_default().push((*total, seg.clone()));
+            }
+        }
+    }
+    let mut rows: Vec<(u32, Vec<(u64, String)>)> = baskets.into_iter().collect();
+    for (_c, vs) in rows.iter_mut() {
+        vs.sort();
+    }
+    rows.sort();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let a = generate_tables(20, 100, 9);
+        let b = generate_tables(20, 100, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.0.len(), 20);
+        assert_eq!(a.1.len(), 100);
+    }
+
+    #[test]
+    fn revenue_matches_serial_reference() {
+        let (customers, orders) = generate_tables(15, 200, 3);
+        let cluster = ClusterConfig::builder().ranks(3).seed(3).build();
+        let out = run_revenue(&cluster, &customers, &orders, 10_000).unwrap();
+        assert_eq!(out.rows, revenue_serial(&customers, &orders, 10_000));
+        assert!(!out.rows.is_empty(), "some segment must earn revenue");
+    }
+
+    #[test]
+    fn baskets_match_serial_reference_and_group_by_is_shuffle_free() {
+        let (customers, orders) = generate_tables(12, 150, 5);
+        let plan = basket_plan(&customers, &orders, 5_000);
+        let ex = plan.explain();
+        // input(orders)+filter, input(customers), join, group_by, collect.
+        assert_eq!(ex.stages.len(), 5);
+        assert_eq!(ex.stages[0].fused, vec!["filter".to_string()]);
+        assert_eq!(ex.stages[2].shuffles, 2, "both join sides repartition");
+        assert_eq!(ex.stages[3].op, "group_by");
+        assert_eq!(ex.stages[3].shuffles, 0, "join output is co-partitioned");
+        assert_eq!(ex.total_shuffles(), 2);
+
+        let cluster = ClusterConfig::builder().ranks(3).seed(5).build();
+        let out = plan.collect(&cluster).unwrap();
+        let mut rows = out.rows;
+        for (_c, vs) in rows.iter_mut() {
+            vs.sort();
+        }
+        assert_eq!(rows, baskets_serial(&customers, &orders, 5_000));
+        assert_eq!(out.stages[3].bytes, 0, "shuffle-free group_by moved bytes");
+    }
+
+    #[test]
+    fn revenue_plan_fuses_the_rekey_map_onto_the_join() {
+        let (customers, orders) = generate_tables(10, 50, 7);
+        let ex = revenue_plan(&customers, &orders, 0).explain();
+        let join = ex.stages.iter().find(|s| s.op.starts_with("join")).unwrap();
+        assert_eq!(join.fused, vec!["map".to_string()]);
+        // Two join-side repartitions + the post-map reduce repartition.
+        assert_eq!(ex.total_shuffles(), 3);
+    }
+}

@@ -159,7 +159,8 @@ mod tests {
                         }
                     }
                 },
-                |_cell, vs: Vec<f64>| {
+                |_cell, vs: &mut dyn Iterator<Item = f64>| {
+                    let vs: Vec<f64> = vs.collect();
                     assert_eq!(vs.len(), 4, "reducer must see all p partials");
                     vs.into_iter().sum()
                 },

@@ -4,6 +4,7 @@
 //! app-specific synthetic data generators (deterministic, seeded) so the
 //! benches and figures are reproducible end to end.
 
+pub mod analytics;
 pub mod components;
 pub mod kmeans;
 pub mod linreg;

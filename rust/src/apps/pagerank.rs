@@ -163,8 +163,9 @@ fn run_inner(
                 }
             }
         };
-        let reduce =
-            move |_v: &u32, contribs: Vec<f64>| base + damping * contribs.iter().sum::<f64>();
+        let reduce = move |_v: &u32, contribs: &mut dyn Iterator<Item = f64>| {
+            base + damping * contribs.sum::<f64>()
+        };
         let out = match mode {
             ReductionMode::Delayed => job.run_delayed(map, reduce)?,
             ReductionMode::Classic => job.run_classic(map, reduce)?,

@@ -97,7 +97,7 @@ pub fn run_combined(
     MapReduceJob::new(cluster, lines).run_classic_with_combiner(
         map_line,
         |a: &mut u64, b: u64| *a += b,
-        |_k, vs: Vec<u64>| vs.into_iter().sum(),
+        |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum(),
     )
 }
 

@@ -10,4 +10,4 @@ pub mod figures;
 pub mod serve;
 
 pub use figures::{run_figure, FigureId};
-pub use serve::{run_serve_bench, validate_report, ServeBenchConfig};
+pub use serve::{run_serve_bench, validate_report, DriveMode, ServeBenchConfig};

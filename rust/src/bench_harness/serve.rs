@@ -5,13 +5,25 @@
 //! persisted as `BENCH_9.json` at the repo root (same committed-
 //! placeholder convention as the transport ablation's `BENCH_7.json`).
 //!
-//! The driver is *open-loop*: job `i`'s submission is due at
-//! `start + i / offered_rps` regardless of how many earlier jobs have
-//! finished, so a scheduler that falls behind accumulates queue wait —
-//! which is exactly what the latency gates are watching. Once the
-//! stop-loss trips, the driver stops issuing, drains what is in flight,
-//! and records the reason; already-submitted jobs always complete
-//! (admission control rejects load, it never abandons accepted work).
+//! The driver runs in one of two [`DriveMode`]s:
+//!
+//!  * **Open-loop** (the default): job `i`'s submission is due at
+//!    `start + i / offered_rps` regardless of how many earlier jobs
+//!    have finished, so a scheduler that falls behind accumulates
+//!    queue wait — which is exactly what the latency gates are
+//!    watching.
+//!  * **Closed-loop** (`--concurrency N --think-ms F`): `N` virtual
+//!    clients each submit a job, wait for it, *think* for `F` ms, and
+//!    submit the next — the classic fixed-concurrency harness. Load
+//!    self-limits (in-flight never exceeds `N`), so this measures
+//!    best-case service latency rather than overload behaviour; the
+//!    two modes bracket a scheduler the way open/closed drivers
+//!    bracket any queueing system.
+//!
+//! In both modes, once the stop-loss trips the driver stops issuing,
+//! drains what is in flight, and records the reason; already-submitted
+//! jobs always complete (admission control rejects load, it never
+//! abandons accepted work).
 //!
 //! Every wordcount job validates its full result map against the
 //! precomputed serial truth (a mismatch is a *failure*, not a wrong
@@ -34,6 +46,18 @@ use crate::mpi::TransportKind;
 use crate::util::hash::SeededState;
 use crate::util::json::Json;
 
+/// How the driver offers load to the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriveMode {
+    /// Submit on a fixed schedule (`i / offered_rps`), independent of
+    /// completions.
+    Open,
+    /// `concurrency` virtual clients, each submit → wait → think
+    /// (`think_ms`) → repeat. In-flight jobs never exceed
+    /// `concurrency`.
+    Closed { concurrency: usize, think_ms: f64 },
+}
+
 /// Knobs for one serve-bench sweep.
 #[derive(Debug, Clone)]
 pub struct ServeBenchConfig {
@@ -43,8 +67,10 @@ pub struct ServeBenchConfig {
     /// Jobs offered per transport (the stream length).
     pub jobs: usize,
     /// Target request rate: job `i` is submitted at `i / offered_rps`
-    /// seconds after the stream starts.
+    /// seconds after the stream starts (open-loop mode only).
     pub offered_rps: f64,
+    /// Open- vs closed-loop driving (see [`DriveMode`]).
+    pub mode: DriveMode,
     /// Stop-loss: stop issuing once the observed failure rate exceeds
     /// this (evaluated after [`MIN_COMPLETIONS_FOR_GATES`] completions).
     pub stop_failure_rate: f64,
@@ -67,6 +93,7 @@ impl Default for ServeBenchConfig {
             pool_width: 16,
             jobs: 48,
             offered_rps: 40.0,
+            mode: DriveMode::Open,
             stop_failure_rate: 0.10,
             stop_median_ms: 5_000.0,
             seed: 0x5E27E,
@@ -92,6 +119,10 @@ impl ServeBenchConfig {
         );
         ensure!(self.stop_median_ms > 0.0, "stop median must be positive");
         ensure!(!self.transports.is_empty(), "need at least one transport");
+        if let DriveMode::Closed { concurrency, think_ms } = self.mode {
+            ensure!(concurrency >= 1, "closed-loop needs at least one client");
+            ensure!(think_ms >= 0.0, "think time must be non-negative");
+        }
         self.sched.validate()
     }
 }
@@ -253,6 +284,98 @@ fn check_gates(cfg: &ServeBenchConfig, done: &[Completion]) -> Option<String> {
     None
 }
 
+/// Driver state handed back for draining: jobs offered, still-pending
+/// handles, completions so far, and any tripped stop-loss.
+type DriveState = (usize, Vec<(usize, JobHandle<u64>)>, Vec<Completion>, Option<String>);
+
+/// Open-loop driver: submissions follow the fixed `i / offered_rps`
+/// schedule regardless of completions.
+fn drive_open(
+    cfg: &ServeBenchConfig,
+    sched: &Scheduler,
+    wl: &Arc<Workload>,
+    transport: TransportKind,
+    start: Instant,
+) -> Result<DriveState> {
+    let mut pending: Vec<(usize, JobHandle<u64>)> = Vec::new();
+    let mut done: Vec<Completion> = Vec::new();
+    let mut offered = 0usize;
+    let mut stop_loss: Option<String> = None;
+    while offered < cfg.jobs {
+        let due = Duration::from_secs_f64(offered as f64 / cfg.offered_rps);
+        let now = start.elapsed();
+        if now < due {
+            pending = harvest(pending, &mut done);
+            if stop_loss.is_none() {
+                stop_loss = check_gates(cfg, &done);
+            }
+            if stop_loss.is_some() {
+                break;
+            }
+            std::thread::sleep((due - now).min(Duration::from_millis(1)));
+            continue;
+        }
+        pending.push((offered, submit_job(sched, wl, transport, offered, cfg.pool_width)?));
+        offered += 1;
+    }
+    Ok((offered, pending, done, stop_loss))
+}
+
+/// Closed-loop driver: `concurrency` virtual clients, each submitting,
+/// waiting for its job, thinking for `think_ms`, then submitting the
+/// next. `due` holds the instants at which currently-thinking clients
+/// come back; the in-flight + thinking population is always exactly the
+/// client count, so pending jobs never exceed `concurrency`.
+fn drive_closed(
+    cfg: &ServeBenchConfig,
+    sched: &Scheduler,
+    wl: &Arc<Workload>,
+    transport: TransportKind,
+    start: Instant,
+    concurrency: usize,
+    think_ms: f64,
+) -> Result<DriveState> {
+    let think = Duration::from_secs_f64(think_ms / 1e3);
+    let mut due: std::collections::VecDeque<Duration> =
+        (0..concurrency).map(|_| Duration::ZERO).collect();
+    let mut pending: Vec<(usize, JobHandle<u64>)> = Vec::new();
+    let mut done: Vec<Completion> = Vec::new();
+    let mut offered = 0usize;
+    let mut stop_loss: Option<String> = None;
+    while offered < cfg.jobs {
+        let finished_before = done.len();
+        pending = harvest(pending, &mut done);
+        let now = start.elapsed();
+        // Each completion releases its client into a think pause.
+        for _ in finished_before..done.len() {
+            due.push_back(now + think);
+        }
+        if stop_loss.is_none() {
+            stop_loss = check_gates(cfg, &done);
+        }
+        if stop_loss.is_some() {
+            break;
+        }
+        let mut issued = false;
+        while offered < cfg.jobs {
+            match due.front() {
+                Some(d) if *d <= now => {
+                    due.pop_front();
+                    pending
+                        .push((offered, submit_job(sched, wl, transport, offered, cfg.pool_width)?));
+                    offered += 1;
+                    issued = true;
+                }
+                _ => break,
+            }
+        }
+        if !issued && offered < cfg.jobs {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    Ok((offered, pending, done, stop_loss))
+}
+
 /// Drive one transport's stream; returns the per-transport report and
 /// the per-job-index fingerprints (for the cross-transport check).
 fn run_transport(
@@ -270,28 +393,12 @@ fn run_transport(
     let sched = Scheduler::from_config(&cluster);
 
     let start = Instant::now();
-    let mut pending: Vec<(usize, JobHandle<u64>)> = Vec::new();
-    let mut done: Vec<Completion> = Vec::new();
-    let mut offered = 0usize;
-    let mut stop_loss: Option<String> = None;
-
-    while offered < cfg.jobs {
-        let due = Duration::from_secs_f64(offered as f64 / cfg.offered_rps);
-        let now = start.elapsed();
-        if now < due {
-            pending = harvest(pending, &mut done);
-            if stop_loss.is_none() {
-                stop_loss = check_gates(cfg, &done);
-            }
-            if stop_loss.is_some() {
-                break;
-            }
-            std::thread::sleep((due - now).min(Duration::from_millis(1)));
-            continue;
+    let (offered, pending, mut done, mut stop_loss) = match cfg.mode {
+        DriveMode::Open => drive_open(cfg, &sched, wl, transport, start)?,
+        DriveMode::Closed { concurrency, think_ms } => {
+            drive_closed(cfg, &sched, wl, transport, start, concurrency, think_ms)?
         }
-        pending.push((offered, submit_job(&sched, wl, transport, offered, cfg.pool_width)?));
-        offered += 1;
-    }
+    };
     // Drain: accepted jobs always run to completion, stop-loss or not.
     for (i, h) in pending {
         record(i, h.wait(), &mut done);
@@ -390,10 +497,12 @@ pub fn run_serve_bench(cfg: &ServeBenchConfig, out_path: &Path) -> Result<Json> 
         (
             "note",
             Json::str(
-                "Run `blaze serve-bench` (or `--quick`) to populate. The driver offers an \
-                 open-loop stream of mixed-width wordcount/pagerank jobs to the concurrent \
-                 scheduler at the target request rate, once per transport (mailbox = \
-                 in-process channels, tcp = spawned blaze-worker processes), and records \
+                "Run `blaze serve-bench` (or `--quick`) to populate. The driver offers a \
+                 stream of mixed-width wordcount/pagerank jobs to the concurrent \
+                 scheduler — open-loop at the target request rate by default, or \
+                 closed-loop with a fixed client count and think time (--concurrency \
+                 N --think-ms F) — once per transport (mailbox = in-process channels, \
+                 tcp = spawned blaze-worker processes), and records \
                  end-to-end latency percentiles (queue wait + execution), throughput, \
                  failure rate and per-tenant admission shares. Stop-loss gates halt \
                  issuing when the failure rate or median latency exceed the configured \
@@ -407,6 +516,20 @@ pub fn run_serve_bench(cfg: &ServeBenchConfig, out_path: &Path) -> Result<Json> 
                 ("pool_width", Json::num(cfg.pool_width as f64)),
                 ("jobs_per_transport", Json::num(cfg.jobs as f64)),
                 ("offered_rps", Json::num(cfg.offered_rps)),
+                (
+                    "mode",
+                    match cfg.mode {
+                        DriveMode::Open => Json::obj([
+                            ("kind", Json::str("open-loop")),
+                            ("offered_rps", Json::num(cfg.offered_rps)),
+                        ]),
+                        DriveMode::Closed { concurrency, think_ms } => Json::obj([
+                            ("kind", Json::str("closed-loop")),
+                            ("concurrency", Json::num(concurrency as f64)),
+                            ("think_ms", Json::num(think_ms)),
+                        ]),
+                    },
+                ),
                 ("seed", Json::num(cfg.seed as f64)),
                 ("scheduler", Json::str(cfg.sched.to_string())),
             ]),
@@ -539,6 +662,33 @@ mod tests {
             report.req("cross_transport_fingerprint_mismatches").unwrap().as_u64(),
             Some(0)
         );
+    }
+
+    #[test]
+    fn closed_loop_caps_in_flight_at_the_client_count() {
+        let cfg = ServeBenchConfig {
+            pool_width: 4,
+            jobs: 12,
+            mode: DriveMode::Closed { concurrency: 2, think_ms: 1.0 },
+            transports: vec![TransportKind::Mailbox],
+            ..ServeBenchConfig::default()
+        };
+        let path = std::env::temp_dir()
+            .join(format!("blaze_serve_closed_{}.json", std::process::id()));
+        let report = run_serve_bench(&cfg, &path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        validate_report(&report).unwrap();
+        let t = &report.req("transports").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t.req("offered").unwrap().as_u64(), Some(12));
+        assert_eq!(t.req("completed").unwrap().as_u64(), Some(12));
+        assert_eq!(t.req("failed").unwrap().as_u64(), Some(0));
+        // The defining closed-loop property: the scheduler never sees
+        // more co-resident jobs than there are virtual clients.
+        let peak = t.req("peak_concurrent_jobs").unwrap().as_u64().unwrap();
+        assert!(peak <= 2, "peak {peak} exceeded the 2-client cap");
+        let mode = report.req("config").unwrap().req("mode").unwrap();
+        assert_eq!(mode.req("kind").unwrap().as_str(), Some("closed-loop"));
+        assert_eq!(mode.req("concurrency").unwrap().as_u64(), Some(2));
     }
 
     #[test]

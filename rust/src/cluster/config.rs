@@ -25,6 +25,7 @@ use crate::trace::TraceConfig;
 use crate::util::toml_mini::TomlDoc;
 
 use super::deployment::DeploymentKind;
+use super::knob;
 use super::network::NetworkModel;
 use super::node::NodeSpec;
 
@@ -259,17 +260,17 @@ impl ClusterConfig {
     /// precedence without mutating process-global environment (setenv
     /// races getenv across test threads).
     fn resolve_spill_threshold(&self, env: Option<&str>) -> u64 {
-        if self.limits.shuffle_buffer_bytes > 0 {
-            return self.limits.shuffle_buffer_bytes;
-        }
-        if let Some(v) = env.and_then(|s| s.trim().parse::<u64>().ok()) {
-            if v > 0 {
-                return v;
-            }
-        }
-        let node = NodeSpec::for_kind(self.deployment, 0);
-        let per_rank = node.mem_bytes as f64 * self.limits.mem_fraction / self.slots_per_node as f64;
-        per_rank as u64
+        knob::resolve(
+            (self.limits.shuffle_buffer_bytes > 0).then_some(self.limits.shuffle_buffer_bytes),
+            env,
+            |s| s.trim().parse::<u64>().ok().filter(|v| *v > 0),
+            || {
+                let node = NodeSpec::for_kind(self.deployment, 0);
+                let per_rank = node.mem_bytes as f64 * self.limits.mem_fraction
+                    / self.slots_per_node as f64;
+                per_rank as u64
+            },
+        )
     }
 
     /// Collective algorithm for this cluster's universes. Precedence
@@ -286,10 +287,7 @@ impl ClusterConfig {
     /// precedence without mutating process-global environment (setenv
     /// races getenv across test threads).
     fn resolve_collective_algo(&self, env: Option<&str>) -> CollectiveAlgo {
-        match self.collective_algo {
-            Some(algo) => algo,
-            None => CollectiveAlgo::resolve(env),
-        }
+        knob::resolve(self.collective_algo, env, |s| s.trim().parse().ok(), CollectiveAlgo::default)
     }
 
     /// Transport substrate for this cluster's universes. Precedence
@@ -306,10 +304,7 @@ impl ClusterConfig {
     /// precedence without mutating process-global environment (setenv
     /// races getenv across test threads).
     fn resolve_transport(&self, env: Option<&str>) -> TransportKind {
-        match self.transport {
-            Some(t) => t,
-            None => TransportKind::resolve(env),
-        }
+        knob::resolve(self.transport, env, |s| s.trim().parse().ok(), TransportKind::default)
     }
 
     /// Tracing configuration for this cluster's jobs. Precedence
@@ -326,10 +321,7 @@ impl ClusterConfig {
     /// precedence without mutating process-global environment (setenv
     /// races getenv across test threads).
     fn resolve_trace(&self, env: Option<&str>) -> TraceConfig {
-        match &self.trace {
-            Some(t) => t.clone(),
-            None => env.and_then(|s| s.trim().parse().ok()).unwrap_or_default(),
-        }
+        knob::resolve(self.trace.clone(), env, |s| s.trim().parse().ok(), TraceConfig::default)
     }
 
     /// Concurrent-scheduler knobs for this cluster's [`crate::core::Scheduler`].
@@ -347,10 +339,12 @@ impl ClusterConfig {
     /// precedence without mutating process-global environment (setenv
     /// races getenv across test threads).
     fn resolve_scheduler(&self, env: Option<&str>) -> SchedulerConfig {
-        match self.scheduler {
-            Some(s) => s,
-            None => env.and_then(|s| SchedulerConfig::parse(s).ok()).unwrap_or_default(),
-        }
+        knob::resolve(
+            self.scheduler,
+            env,
+            |s| SchedulerConfig::parse(s).ok(),
+            SchedulerConfig::default,
+        )
     }
 }
 

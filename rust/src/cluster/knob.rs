@@ -1,0 +1,83 @@
+//! `knob` — the one precedence ladder every configuration knob walks:
+//! **explicit** (builder / TOML field) beats **environment override**
+//! beats **default**.
+//!
+//! Five knobs resolve this way (spill threshold, collective algorithm,
+//! transport, tracing, scheduler — see the `resolve_*` methods on
+//! [`crate::cluster::ClusterConfig`]); before this helper each carried
+//! its own copy of the ladder. Conventions the ladder encodes:
+//!
+//!  * The env value is handed to `parse` raw; an unparseable or
+//!    rejected value (garbage, out-of-range) falls through to the
+//!    default rather than erroring — CI legs set blanket overrides like
+//!    `BLAZE_SPILL_THRESHOLD=4096` and a knob that can't use one must
+//!    not take the whole suite down.
+//!  * Call sites take the env value as an injected `Option<&str>`
+//!    (captured once from `std::env::var`), never read globals here —
+//!    tests exercise precedence without `setenv` races.
+//!  * The default is lazy: derived defaults (e.g. the node-memory
+//!    spill budget) only compute when nothing else decided.
+
+/// Resolve one knob: `explicit` if set, else the first env value
+/// `parse` accepts, else `default()`.
+pub fn resolve<T>(
+    explicit: Option<T>,
+    env: Option<&str>,
+    parse: impl FnOnce(&str) -> Option<T>,
+    default: impl FnOnce() -> T,
+) -> T {
+    if let Some(v) = explicit {
+        return v;
+    }
+    if let Some(v) = env.and_then(parse) {
+        return v;
+    }
+    default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_precedence_table() {
+        // A u32 knob: parser accepts positive integers (trimmed),
+        // default 7 — the spill-threshold shape.
+        let cases: [(Option<u32>, Option<&str>, u32, &str); 7] = [
+            (Some(3), Some("5"), 3, "explicit beats env"),
+            (Some(3), Some("nonsense"), 3, "explicit beats even a bad env"),
+            (Some(3), None, 3, "explicit beats default"),
+            (None, Some("5"), 5, "env beats default"),
+            (None, Some(" 5 "), 5, "parser may trim"),
+            (None, Some("0"), 7, "parser-rejected env falls through"),
+            (None, None, 7, "default when nothing else decides"),
+        ];
+        for (explicit, env, want, why) in cases {
+            let got = resolve(
+                explicit,
+                env,
+                |s| s.trim().parse::<u32>().ok().filter(|v| *v > 0),
+                || 7,
+            );
+            assert_eq!(got, want, "{why}");
+        }
+    }
+
+    #[test]
+    fn garbage_env_falls_through_to_default() {
+        let got = resolve(None, Some("not-a-number"), |s| s.parse::<u64>().ok(), || 42);
+        assert_eq!(got, 42);
+    }
+
+    #[test]
+    fn default_is_lazy() {
+        // Explicit set: neither parse nor default may run.
+        let got = resolve(
+            Some(1u32),
+            Some("boom"),
+            |_| panic!("parse must not run when explicit is set"),
+            || panic!("default must not run when explicit is set"),
+        );
+        assert_eq!(got, 1);
+    }
+}

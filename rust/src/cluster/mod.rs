@@ -12,6 +12,7 @@ mod config;
 mod deployment;
 mod elastic;
 mod fault;
+pub mod knob;
 mod network;
 mod node;
 

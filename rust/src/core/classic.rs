@@ -24,15 +24,16 @@ use crate::dist::ShardRouter;
 use crate::metrics::PeakTracker;
 use crate::mpi::Communicator;
 use crate::serial::FastSerialize;
-use crate::store::{Combiner, GroupStream, RunWriter};
+use crate::store::{Combiner, GroupStream, GroupValues, RunWriter};
 
 use super::scheduler::TaskFeed;
 use super::shuffle::{shuffle_runs, stage_sorted_runs};
 
 /// SPMD rank body for one classic job. Returns (result shard, spilled
 /// bytes, combiner-folded bytes). `reduce` sees the full value multiset
-/// per key (partially pre-folded when a combiner is supplied — Hadoop's
-/// combiner contract).
+/// per key as a **lazy iterator** straight off the merge — no group is
+/// materialized unless the reducer collects it (partially pre-folded
+/// when a combiner is supplied — Hadoop's combiner contract).
 #[allow(clippy::too_many_arguments)]
 pub fn classic_rank<I, K, V, M, R>(
     comm: &Communicator,
@@ -49,7 +50,7 @@ where
     K: FastSerialize + Hash + Eq + Ord + Send,
     V: FastSerialize + Send,
     M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
-    R: Fn(&K, Vec<V>) -> V + Sync,
+    R: Fn(&K, &mut dyn Iterator<Item = V>) -> V + Sync,
 {
     // Map phase: every pair staged (possibly spilled as a sorted run);
     // the combiner, when present, folds equal keys at run-write time.
@@ -74,9 +75,11 @@ where
     let out = comm.timed(|| -> Result<HashMap<K, V>> {
         let mut stream = GroupStream::new(incoming.into_merge()?);
         let mut out = HashMap::new();
-        while let Some((k, vs)) = stream.next_group()? {
-            let reduced = reduce(&k, vs);
-            out.insert(k, reduced);
+        while let Some((key, first)) = stream.begin_group()? {
+            let mut vals = GroupValues::new(&mut stream, &key, first);
+            let reduced = reduce(&key, &mut vals);
+            vals.finish()?;
+            out.insert(key, reduced);
         }
         Ok(out)
     })?;
@@ -104,7 +107,8 @@ mod tests {
                     emit(w.to_string(), 1);
                 }
             };
-            let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+            let reduce =
+                |_k: &String, vs: &mut dyn Iterator<Item = u64>| vs.sum::<u64>();
             let tracker = PeakTracker::new();
             classic_rank(c, &feed, &map, &reduce, None, 0, u64::MAX, &tracker).unwrap().0
         });
@@ -124,7 +128,8 @@ mod tests {
         let results = pool_run(2, |c| {
             // All items map to one key; reducer asserts it sees all 10.
             let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit(0u8, *i);
-            let reduce = |_k: &u8, vs: Vec<u32>| {
+            let reduce = |_k: &u8, vs: &mut dyn Iterator<Item = u32>| {
+                let vs: Vec<u32> = vs.collect();
                 assert_eq!(vs.len(), 10);
                 vs.into_iter().max().unwrap()
             };
@@ -146,7 +151,8 @@ mod tests {
                     emit(w.to_string(), 1);
                 }
             };
-            let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+            let reduce =
+                |_k: &String, vs: &mut dyn Iterator<Item = u64>| vs.sum::<u64>();
             let tracker = PeakTracker::new();
             let (shard, spilled, _) =
                 classic_rank(c, &feed, &map, &reduce, None, 0, 128, &tracker).unwrap();
@@ -174,7 +180,8 @@ mod tests {
                         emit(w.to_string(), 1);
                     }
                 };
-                let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+                let reduce =
+                |_k: &String, vs: &mut dyn Iterator<Item = u64>| vs.sum::<u64>();
                 let combine = |acc: &mut u64, v: u64| *acc += v;
                 let tracker = PeakTracker::new();
                 classic_rank(

@@ -1,0 +1,1064 @@
+//! `dataflow` — a typed multi-stage DAG on top of the MapReduce core:
+//! the Thrill-DIA-shaped layer (PAPERS.md) that turns the public API
+//! from a single-job call into a query plan.
+//!
+//! A [`Stage<K, V>`] is a lazy plan node. **Narrow** operators
+//! ([`Stage::map`], [`Stage::filter`], [`Stage::flat_map`],
+//! [`Stage::map_values`]) never execute on their own: they chain into a
+//! fused iterator ([`NarrowIter`]) that runs in one pass over
+//! rank-local data when the next **wide** operator ([`Stage::group_by`],
+//! [`Stage::reduce_by_key`], [`Stage::sort`], [`Stage::join`]) drains
+//! it — Thrill's map-chain fusion, and M3R's discipline of keeping
+//! intermediates rank-local between stages (no driver round-trip).
+//!
+//! Each stage carries a **co-partitioning property** ([`Partitioning`]):
+//! wide operators leave their output hash-partitioned by key under the
+//! plan's one salt, so a downstream wide operator over the same keys is
+//! *shuffle-free* — `group_by` after `reduce_by_key` moves zero bytes,
+//! and a two-input [`Stage::join`] over two keyed sides is a purely
+//! local hash join. A repartition (one shuffle) is emitted only where
+//! the partitioning actually changes, and [`Stage::explain`] shows
+//! exactly where: stages, fused chains, and shuffle boundaries are a
+//! plan property, testable before anything runs.
+//!
+//! Execution rides the existing machinery: [`crate::mpi::RankPool`]
+//! SPMD ranks, [`crate::store`] sorted runs for out-of-core staging,
+//! [`super::shuffle::shuffle_runs`] at repartition boundaries,
+//! [`crate::dist::DistHashMap`] for hash-side builds, one
+//! [`crate::trace::SpanKind::Stage`] span and one [`StageReport`]
+//! (bytes + virtual clock) per plan stage.
+
+use std::cmp::Ordering;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::hash::Hash;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::cluster::ClusterConfig;
+use crate::dist::{DistHashMap, ShardRouter};
+use crate::metrics::PeakTracker;
+use crate::mpi::{Communicator, RankPool, Universe};
+use crate::serial::FastSerialize;
+use crate::store::{GroupStream, RunSet, RunWriter};
+
+use super::job::JobStats;
+use super::shuffle::{shuffle_pairs, shuffle_runs};
+
+/// Domain separator folded into the cluster seed: every shuffle in one
+/// plan routes with the same salt, which is what makes `Keyed` outputs
+/// mutually co-partitioned (join sides land on the same owner rank by
+/// construction).
+const DATAFLOW_SALT: u64 = 0xDA7A_F10A_57A6_E500;
+
+/// How a stage's output is distributed across ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Partitioning {
+    /// No known placement — a wide consumer must repartition (1 shuffle).
+    Arbitrary,
+    /// Hash-partitioned by key under the plan salt — any wide consumer
+    /// over the same keys is shuffle-free.
+    Keyed,
+}
+
+/// Rank-local intermediate between stages: either a fused lazy iterator
+/// (narrow chains) or a key-sorted run set living in the out-of-core
+/// run store (`sort` output). Never leaves the rank.
+enum LocalData<K, V> {
+    Iter(Box<dyn Iterator<Item = (K, V)>>),
+    Runs(RunSet<K, V>),
+}
+
+impl<K, V> LocalData<K, V>
+where
+    K: FastSerialize + Hash + Eq + Ord + Send + 'static,
+    V: FastSerialize + Send + 'static,
+{
+    fn into_rows(self) -> Result<Vec<(K, V)>> {
+        match self {
+            LocalData::Iter(it) => Ok(it.collect()),
+            LocalData::Runs(runs) => {
+                let mut merge = runs.into_merge()?;
+                let mut rows = Vec::new();
+                while let Some(pair) = merge.next()? {
+                    rows.push(pair);
+                }
+                Ok(rows)
+            }
+        }
+    }
+
+    fn into_pairs(self) -> Result<Box<dyn Iterator<Item = (K, V)>>> {
+        match self {
+            LocalData::Iter(it) => Ok(it),
+            data => Ok(Box::new(data.into_rows()?.into_iter())),
+        }
+    }
+}
+
+/// Per-rank execution context threaded through a plan: the SPMD
+/// communicator plus the job-wide tracker/budget/salt, and the
+/// per-stage measurements this rank recorded so far.
+struct ExecCtx<'c> {
+    comm: &'c Communicator,
+    tracker: Arc<PeakTracker>,
+    budget: u64,
+    salt: u64,
+    stats: Vec<RankStageStat>,
+    spilled: u64,
+}
+
+/// One rank's measurement of one executed stage (merged across ranks
+/// into a [`StageReport`] by the driver).
+struct RankStageStat {
+    label: String,
+    shuffles: usize,
+    bytes: u64,
+    clock_ns: u64,
+}
+
+impl<'c> ExecCtx<'c> {
+    /// Run `f` as one plan stage: wrap it in a
+    /// [`crate::trace::SpanKind::Stage`] span and attribute the
+    /// communicator's sent-byte and virtual-clock deltas to it. Fused
+    /// narrow chains drain inside their consumer's `record`, so their
+    /// cost lands in the consuming stage — that *is* the fusion.
+    fn record<T>(
+        &mut self,
+        label: &str,
+        shuffles: usize,
+        f: impl FnOnce(&mut Self) -> Result<T>,
+    ) -> Result<T> {
+        let span = crate::trace::span(crate::trace::SpanKind::Stage);
+        let bytes0 = self.comm.sent_bytes();
+        let clock0 = self.comm.clock_ns();
+        let out = f(self)?;
+        let bytes = self.comm.sent_bytes().saturating_sub(bytes0);
+        let clock_ns = self.comm.clock_ns().saturating_sub(clock0);
+        span.add_bytes(bytes);
+        self.stats.push(RankStageStat { label: label.to_string(), shuffles, bytes, clock_ns });
+        Ok(out)
+    }
+}
+
+/// Stage executor: producing a rank's [`LocalData`] shard, given the
+/// rank context. Shared (`Arc`) so plans are cheap to clone and branch.
+type Exec<K, V> =
+    Arc<dyn for<'a, 'c> Fn(&'a mut ExecCtx<'c>) -> Result<LocalData<K, V>> + Send + Sync>;
+
+/// Fused narrow transform: `(K, V)` in, zero or more `(K2, V2)` out
+/// through the emit callback (the `flat_map` shape; `map` and `filter`
+/// are special cases).
+type NarrowFn<K, V, K2, V2> = Arc<dyn Fn(K, V, &mut dyn FnMut(K2, V2)) + Send + Sync>;
+
+/// The lazy fused chain: pulls `(K, V)` from the upstream iterator and
+/// pushes each pair through the narrow transform, queueing its
+/// emissions. Nesting one `NarrowIter` inside another is exactly
+/// map-chain fusion — the whole chain is one pass, no intermediate
+/// collection.
+struct NarrowIter<K, V, K2, V2> {
+    inner: Box<dyn Iterator<Item = (K, V)>>,
+    f: NarrowFn<K, V, K2, V2>,
+    queue: VecDeque<(K2, V2)>,
+}
+
+impl<K, V, K2, V2> Iterator for NarrowIter<K, V, K2, V2> {
+    type Item = (K2, V2);
+
+    fn next(&mut self) -> Option<(K2, V2)> {
+        loop {
+            if let Some(pair) = self.queue.pop_front() {
+                return Some(pair);
+            }
+            let (k, v) = self.inner.next()?;
+            let q = &mut self.queue;
+            let f = self.f.as_ref();
+            f(k, v, &mut |k2, v2| q.push_back((k2, v2)));
+        }
+    }
+}
+
+/// Join algorithm selection for [`Stage::join_with`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinStrategy {
+    /// Merge-join when both inputs are co-sorted runs, hash-join
+    /// otherwise — resolved at plan-construction time, visible in
+    /// `explain()` as `join(hash)` / `join(merge)`.
+    Auto,
+    /// Build a per-owner hash table of the right side, stream the left
+    /// side through it.
+    Hash,
+    /// Lockstep group-merge over both sides' key-ordered run stores.
+    Merge,
+}
+
+/// One node of the introspectable plan tree: a wide (or source) op, the
+/// narrow chain fused onto its output, and how many shuffles executing
+/// it emits (0 when its input is already co-partitioned).
+#[derive(Clone, Debug)]
+struct PlanNode {
+    op: String,
+    fused: Vec<String>,
+    shuffles: usize,
+    inputs: Vec<PlanNode>,
+}
+
+/// One stage of an [`Explain`] listing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExplainStage {
+    /// The wide/source operator executing this stage.
+    pub op: String,
+    /// Narrow operators fused into this stage's output pass.
+    pub fused: Vec<String>,
+    /// Repartition shuffles this stage emits (0 = co-partitioned).
+    pub shuffles: usize,
+}
+
+/// Plan introspection: the stages a `collect()` will execute, in
+/// execution order, with fusion and shuffle boundaries — a plan
+/// property, assertable without running anything.
+#[derive(Clone, Debug)]
+pub struct Explain {
+    pub stages: Vec<ExplainStage>,
+}
+
+impl Explain {
+    /// Total repartition boundaries in the plan.
+    pub fn total_shuffles(&self) -> usize {
+        self.stages.iter().map(|s| s.shuffles).sum()
+    }
+}
+
+impl fmt::Display for Explain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "plan: {} stages, {} shuffle(s)",
+            self.stages.len(),
+            self.total_shuffles()
+        )?;
+        for (i, s) in self.stages.iter().enumerate() {
+            let fused = if s.fused.is_empty() {
+                String::new()
+            } else {
+                format!(" + fused[{}]", s.fused.join(" -> "))
+            };
+            let part = if s.shuffles == 0 {
+                "local".to_string()
+            } else {
+                format!("{} shuffle", s.shuffles)
+            };
+            writeln!(f, "  s{i:<3} {:<18}{fused}  ({part})", s.op)?;
+        }
+        Ok(())
+    }
+}
+
+/// Driver-side per-stage attribution, merged across ranks: `bytes`
+/// summed, `clock_ns` the slowest rank's. Index-aligned with
+/// [`Explain::stages`] for the same plan.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub label: String,
+    pub shuffles: usize,
+    /// Modeled bytes this stage put on the wire, summed over ranks.
+    pub bytes: u64,
+    /// Slowest rank's virtual-clock time spent in this stage.
+    pub clock_ns: u64,
+}
+
+/// What a `collect()` returns: the merged rows (sorted by key, stable —
+/// rank order within equal keys), whole-job [`JobStats`], and the
+/// per-stage breakdown.
+#[derive(Debug)]
+pub struct DataflowOutput<K, V> {
+    pub rows: Vec<(K, V)>,
+    pub stats: JobStats,
+    pub stages: Vec<StageReport>,
+}
+
+/// A typed, lazy dataflow stage — see the module docs. Cloning a stage
+/// clones the plan (cheap, `Arc`-shared executors), so plans branch and
+/// join freely; nothing executes until [`Stage::collect`].
+///
+/// ```
+/// use blaze_rs::cluster::ClusterConfig;
+/// use blaze_rs::core::dataflow::Stage;
+///
+/// let cluster = ClusterConfig::builder().ranks(2).build();
+/// let orders = Stage::from_vec(vec![(1u32, 10u64), (2, 20), (1, 5)]);
+/// let totals = orders.reduce_by_key(|a, b| a + b);
+/// assert_eq!(totals.explain().total_shuffles(), 1);
+/// let out = totals.collect(&cluster).unwrap();
+/// assert_eq!(out.rows, vec![(1, 15), (2, 20)]);
+/// ```
+pub struct Stage<K, V> {
+    exec: Exec<K, V>,
+    node: PlanNode,
+    part: Partitioning,
+    sorted: bool,
+}
+
+impl<K, V> Clone for Stage<K, V> {
+    fn clone(&self) -> Self {
+        Stage {
+            exec: self.exec.clone(),
+            node: self.node.clone(),
+            part: self.part,
+            sorted: self.sorted,
+        }
+    }
+}
+
+/// Stage pairs into the owner-partitioned run store: already-keyed run
+/// sets pass through untouched; anything else is staged into sorted
+/// runs and, when not yet co-partitioned, repartitioned via
+/// [`shuffle_runs`] (budget-bounded rounds — the one place a wide
+/// operator touches the wire).
+fn to_owner_runs<K, V>(
+    ctx: &mut ExecCtx<'_>,
+    data: LocalData<K, V>,
+    keyed: bool,
+) -> Result<RunSet<K, V>>
+where
+    K: FastSerialize + Hash + Eq + Ord + Send + 'static,
+    V: FastSerialize + Send + 'static,
+{
+    let runs = match data {
+        // Spill already accounted when this run set was first staged.
+        LocalData::Runs(runs) => runs,
+        LocalData::Iter(it) => {
+            let mut writer: RunWriter<'_, K, V> = RunWriter::new(ctx.budget, ctx.tracker.clone());
+            for (k, v) in it {
+                writer.push(k, v)?;
+            }
+            let runs = writer.finish()?;
+            ctx.spilled += runs.spilled_bytes();
+            runs
+        }
+    };
+    if keyed {
+        return Ok(runs);
+    }
+    let router = ShardRouter::new(ctx.comm.size(), ctx.salt);
+    let (incoming, _combined) = shuffle_runs(ctx.comm, &router, runs, ctx.budget, None, &ctx.tracker)?;
+    ctx.spilled += incoming.spilled_bytes();
+    Ok(incoming)
+}
+
+/// Per-owner hash join: build a local table of the right side (its
+/// co-partitioned shard directly, or repartitioned through a
+/// [`DistHashMap`]), then stream the left side through it.
+fn hash_join<K, V, V2>(
+    ctx: &mut ExecCtx<'_>,
+    left: LocalData<K, V>,
+    right: LocalData<K, V2>,
+    lkeyed: bool,
+    rkeyed: bool,
+) -> Result<LocalData<K, (V, V2)>>
+where
+    K: FastSerialize + Hash + Eq + Ord + Clone + Send + 'static,
+    V: FastSerialize + Clone + Send + 'static,
+    V2: FastSerialize + Clone + Send + 'static,
+{
+    let build: HashMap<K, Vec<V2>> = if rkeyed {
+        // Co-partitioned build side: stays rank-local, zero traffic.
+        let mut table: HashMap<K, Vec<V2>> = HashMap::new();
+        for (k, v2) in right.into_pairs()? {
+            table.entry(k).or_default().push(v2);
+        }
+        table
+    } else {
+        let mut dmap: DistHashMap<'_, K, Vec<V2>> =
+            DistHashMap::with_tracker(ctx.comm, ctx.salt, ctx.tracker.clone());
+        for (k, v2) in right.into_pairs()? {
+            dmap.stage(k, vec![v2]);
+        }
+        dmap.flush(|acc, mut vs| acc.append(&mut vs))?;
+        dmap.into_local()
+    };
+    let probe: Vec<(K, V)> = if lkeyed {
+        left.into_rows()?
+    } else {
+        let router = ShardRouter::new(ctx.comm.size(), ctx.salt);
+        shuffle_pairs(ctx.comm, &router, left.into_rows()?, &ctx.tracker)?
+    };
+    let mut out: Vec<(K, (V, V2))> = Vec::new();
+    for (k, v) in probe {
+        if let Some(vs) = build.get(&k) {
+            for v2 in vs {
+                out.push((k.clone(), (v.clone(), v2.clone())));
+            }
+        }
+    }
+    Ok(LocalData::Iter(Box::new(out.into_iter())))
+}
+
+/// Lockstep merge-join: both sides land in the owner-partitioned run
+/// store (free when they already are — the `Auto` trigger), then two
+/// group streams advance in key order, cross-producting equal keys.
+fn merge_join<K, V, V2>(
+    ctx: &mut ExecCtx<'_>,
+    left: LocalData<K, V>,
+    right: LocalData<K, V2>,
+    lkeyed: bool,
+    rkeyed: bool,
+) -> Result<LocalData<K, (V, V2)>>
+where
+    K: FastSerialize + Hash + Eq + Ord + Clone + Send + 'static,
+    V: FastSerialize + Clone + Send + 'static,
+    V2: FastSerialize + Clone + Send + 'static,
+{
+    let lruns = to_owner_runs(ctx, left, lkeyed)?;
+    let rruns = to_owner_runs(ctx, right, rkeyed)?;
+    let mut ls = GroupStream::new(lruns.into_merge()?);
+    let mut rs = GroupStream::new(rruns.into_merge()?);
+    let mut out: Vec<(K, (V, V2))> = Vec::new();
+    let mut lg = ls.next_group()?;
+    let mut rg = rs.next_group()?;
+    while let (Some(l), Some(r)) = (&lg, &rg) {
+        match l.0.cmp(&r.0) {
+            Ordering::Less => lg = ls.next_group()?,
+            Ordering::Greater => rg = rs.next_group()?,
+            Ordering::Equal => {
+                let (k, lvs) = lg.take().expect("checked Some above");
+                let (_, rvs) = rg.take().expect("checked Some above");
+                for v in &lvs {
+                    for v2 in &rvs {
+                        out.push((k.clone(), (v.clone(), v2.clone())));
+                    }
+                }
+                lg = ls.next_group()?;
+                rg = rs.next_group()?;
+            }
+        }
+    }
+    Ok(LocalData::Iter(Box::new(out.into_iter())))
+}
+
+impl<K, V> Stage<K, V>
+where
+    K: FastSerialize + Hash + Eq + Ord + Clone + Send + Sync + 'static,
+    V: FastSerialize + Clone + Send + Sync + 'static,
+{
+    /// Plan source: the full dataset, strided across ranks at execution
+    /// time (rank `r` of `n` takes every `n`-th pair).
+    pub fn from_vec(rows: Vec<(K, V)>) -> Stage<K, V> {
+        let data = Arc::new(rows);
+        let exec: Exec<K, V> = Arc::new(move |ctx: &mut ExecCtx<'_>| {
+            let data = Arc::clone(&data);
+            ctx.record("input", 0, move |ctx| {
+                let rank = ctx.comm.rank().0;
+                let size = ctx.comm.size();
+                let shard: Vec<(K, V)> = data
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % size == rank)
+                    .map(|(_, pair)| pair.clone())
+                    .collect();
+                Ok(LocalData::Iter(Box::new(shard.into_iter())))
+            })
+        });
+        Stage {
+            exec,
+            node: PlanNode {
+                op: "input".to_string(),
+                fused: Vec::new(),
+                shuffles: 0,
+                inputs: Vec::new(),
+            },
+            part: Partitioning::Arbitrary,
+            sorted: false,
+        }
+    }
+
+    /// Shared narrow-operator scaffolding: chain `f` onto the fused
+    /// iterator, note the op on the plan node, don't execute anything.
+    /// `keeps_keys` ops (filter, map_values) preserve co-partitioning
+    /// and sortedness; key-changing ops reset both.
+    fn narrow<K2, V2>(&self, name: &str, keeps_keys: bool, f: NarrowFn<K, V, K2, V2>) -> Stage<K2, V2>
+    where
+        K2: FastSerialize + Hash + Eq + Ord + Clone + Send + Sync + 'static,
+        V2: FastSerialize + Clone + Send + Sync + 'static,
+    {
+        let up = self.exec.clone();
+        let exec: Exec<K2, V2> = Arc::new(move |ctx: &mut ExecCtx<'_>| {
+            let data = (up.as_ref())(ctx)?;
+            let inner = data.into_pairs()?;
+            Ok(LocalData::Iter(Box::new(NarrowIter {
+                inner,
+                f: f.clone(),
+                queue: VecDeque::new(),
+            })))
+        });
+        let mut node = self.node.clone();
+        node.fused.push(name.to_string());
+        Stage {
+            exec,
+            node,
+            part: if keeps_keys { self.part } else { Partitioning::Arbitrary },
+            sorted: if keeps_keys { self.sorted } else { false },
+        }
+    }
+
+    /// Narrow: transform each pair. Fuses with adjacent narrow ops into
+    /// one pass; resets co-partitioning (the key may change).
+    pub fn map<K2, V2>(&self, f: impl Fn(K, V) -> (K2, V2) + Send + Sync + 'static) -> Stage<K2, V2>
+    where
+        K2: FastSerialize + Hash + Eq + Ord + Clone + Send + Sync + 'static,
+        V2: FastSerialize + Clone + Send + Sync + 'static,
+    {
+        self.narrow(
+            "map",
+            false,
+            Arc::new(move |k, v, emit: &mut dyn FnMut(K2, V2)| {
+                let (k2, v2) = f(k, v);
+                emit(k2, v2);
+            }),
+        )
+    }
+
+    /// Narrow: transform each value, keeping the key — and therefore
+    /// the co-partitioning and sortedness of the input.
+    pub fn map_values<V2>(&self, f: impl Fn(V) -> V2 + Send + Sync + 'static) -> Stage<K, V2>
+    where
+        V2: FastSerialize + Clone + Send + Sync + 'static,
+    {
+        self.narrow(
+            "map_values",
+            true,
+            Arc::new(move |k, v, emit: &mut dyn FnMut(K, V2)| emit(k, f(v))),
+        )
+    }
+
+    /// Narrow: keep the pairs the predicate accepts. Keys unchanged, so
+    /// co-partitioning and sortedness survive — a filter after a wide
+    /// op stays shuffle-free downstream.
+    pub fn filter(&self, f: impl Fn(&K, &V) -> bool + Send + Sync + 'static) -> Stage<K, V> {
+        self.narrow(
+            "filter",
+            true,
+            Arc::new(move |k: K, v: V, emit: &mut dyn FnMut(K, V)| {
+                if f(&k, &v) {
+                    emit(k, v);
+                }
+            }),
+        )
+    }
+
+    /// Narrow: emit zero or more pairs per input pair through the
+    /// callback. Resets co-partitioning.
+    pub fn flat_map<K2, V2>(
+        &self,
+        f: impl Fn(K, V, &mut dyn FnMut(K2, V2)) + Send + Sync + 'static,
+    ) -> Stage<K2, V2>
+    where
+        K2: FastSerialize + Hash + Eq + Ord + Clone + Send + Sync + 'static,
+        V2: FastSerialize + Clone + Send + Sync + 'static,
+    {
+        self.narrow("flat_map", false, Arc::new(f))
+    }
+
+    fn wide(&self, op: &str, shuffles: usize) -> PlanNode {
+        PlanNode {
+            op: op.to_string(),
+            fused: Vec::new(),
+            shuffles,
+            inputs: vec![self.node.clone()],
+        }
+    }
+
+    /// Wide: gather each key's full value multiset on its owner rank.
+    /// Shuffle-free when the input is already co-partitioned (the
+    /// `reduce_by_key().group_by()` chain) — the grouping then runs
+    /// entirely on the rank-local run store.
+    pub fn group_by(&self) -> Stage<K, Vec<V>> {
+        let up = self.exec.clone();
+        let keyed = self.part == Partitioning::Keyed;
+        let shuffles = usize::from(!keyed);
+        let exec: Exec<K, Vec<V>> = Arc::new(move |ctx: &mut ExecCtx<'_>| {
+            let data = (up.as_ref())(ctx)?;
+            ctx.record("group_by", shuffles, move |ctx| {
+                let runs = to_owner_runs(ctx, data, keyed)?;
+                let mut stream = GroupStream::new(runs.into_merge()?);
+                let mut out: Vec<(K, Vec<V>)> = Vec::new();
+                while let Some((k, vs)) = stream.next_group()? {
+                    out.push((k, vs));
+                }
+                Ok(LocalData::Iter(Box::new(out.into_iter())))
+            })
+        });
+        Stage {
+            exec,
+            node: self.wide("group_by", shuffles),
+            part: Partitioning::Keyed,
+            sorted: true,
+        }
+    }
+
+    /// Wide: fold each key's values with an associative `op`. Folds
+    /// rank-locally first (map-side combine), then — only when the
+    /// input isn't already co-partitioned — shuffles one pre-folded
+    /// pair per (rank, key) through a [`DistHashMap`]. Output is keyed
+    /// and key-sorted.
+    pub fn reduce_by_key(&self, op: impl Fn(V, V) -> V + Send + Sync + 'static) -> Stage<K, V> {
+        let up = self.exec.clone();
+        let keyed = self.part == Partitioning::Keyed;
+        let shuffles = usize::from(!keyed);
+        let exec: Exec<K, V> = Arc::new(move |ctx: &mut ExecCtx<'_>| {
+            let data = (up.as_ref())(ctx)?;
+            let op = &op;
+            ctx.record("reduce_by_key", shuffles, move |ctx| {
+                // Local pre-fold: one surviving value per (rank, key).
+                let mut acc: HashMap<K, Option<V>> = HashMap::new();
+                for (k, v) in data.into_pairs()? {
+                    match acc.entry(k) {
+                        Entry::Occupied(mut e) => {
+                            let slot = e.get_mut();
+                            let prev = slot.take().expect("slot refilled below");
+                            *slot = Some(op(prev, v));
+                        }
+                        Entry::Vacant(e) => {
+                            e.insert(Some(v));
+                        }
+                    }
+                }
+                let owned: Vec<(K, V)> = if keyed {
+                    acc.into_iter().map(|(k, s)| (k, s.expect("filled"))).collect()
+                } else {
+                    let mut dmap: DistHashMap<'_, K, V> =
+                        DistHashMap::with_tracker(ctx.comm, ctx.salt, ctx.tracker.clone());
+                    for (k, s) in acc {
+                        dmap.stage(k, s.expect("filled"));
+                    }
+                    dmap.flush(|a, v| {
+                        let prev = a.clone();
+                        *a = op(prev, v);
+                    })?;
+                    dmap.into_local().into_iter().collect()
+                };
+                let mut rows = owned;
+                rows.sort_by(|a, b| a.0.cmp(&b.0));
+                Ok(LocalData::Iter(Box::new(rows.into_iter())))
+            })
+        });
+        Stage {
+            exec,
+            node: self.wide("reduce_by_key", shuffles),
+            part: Partitioning::Keyed,
+            sorted: true,
+        }
+    }
+
+    /// Wide: land the data key-sorted in the owner-partitioned run
+    /// store — the output stays as out-of-core runs (not materialized),
+    /// which is what arms the merge-join fast path downstream.
+    pub fn sort(&self) -> Stage<K, V> {
+        let up = self.exec.clone();
+        let keyed = self.part == Partitioning::Keyed;
+        let shuffles = usize::from(!keyed);
+        let exec: Exec<K, V> = Arc::new(move |ctx: &mut ExecCtx<'_>| {
+            let data = (up.as_ref())(ctx)?;
+            ctx.record("sort", shuffles, move |ctx| {
+                Ok(LocalData::Runs(to_owner_runs(ctx, data, keyed)?))
+            })
+        });
+        Stage { exec, node: self.wide("sort", shuffles), part: Partitioning::Keyed, sorted: true }
+    }
+
+    /// Two-input equi-join with [`JoinStrategy::Auto`] selection:
+    /// merge-join when both sides are co-sorted runs, hash-join
+    /// otherwise. See [`Stage::join_with`].
+    pub fn join<V2>(&self, right: &Stage<K, V2>) -> Stage<K, (V, V2)>
+    where
+        V2: FastSerialize + Clone + Send + Sync + 'static,
+    {
+        self.join_with(right, JoinStrategy::Auto)
+    }
+
+    /// Two-input equi-join. Both sides repartition only if not already
+    /// co-partitioned (both keyed ⇒ zero shuffles: the plan salt makes
+    /// their shards co-resident by construction). Emits one output pair
+    /// per matching `(left, right)` value pair. The strategy is
+    /// resolved at plan time and shown by `explain()`.
+    pub fn join_with<V2>(&self, right: &Stage<K, V2>, strategy: JoinStrategy) -> Stage<K, (V, V2)>
+    where
+        V2: FastSerialize + Clone + Send + Sync + 'static,
+    {
+        let use_merge = match strategy {
+            JoinStrategy::Auto => self.sorted && right.sorted,
+            JoinStrategy::Merge => true,
+            JoinStrategy::Hash => false,
+        };
+        let label: &'static str = if use_merge { "join(merge)" } else { "join(hash)" };
+        let lkeyed = self.part == Partitioning::Keyed;
+        let rkeyed = right.part == Partitioning::Keyed;
+        let shuffles = usize::from(!lkeyed) + usize::from(!rkeyed);
+        let lexec = self.exec.clone();
+        let rexec = right.exec.clone();
+        let exec: Exec<K, (V, V2)> = Arc::new(move |ctx: &mut ExecCtx<'_>| {
+            let ldata = (lexec.as_ref())(ctx)?;
+            let rdata = (rexec.as_ref())(ctx)?;
+            ctx.record(label, shuffles, move |ctx| {
+                if use_merge {
+                    merge_join(ctx, ldata, rdata, lkeyed, rkeyed)
+                } else {
+                    hash_join(ctx, ldata, rdata, lkeyed, rkeyed)
+                }
+            })
+        });
+        Stage {
+            exec,
+            node: PlanNode {
+                op: label.to_string(),
+                fused: Vec::new(),
+                shuffles,
+                inputs: vec![self.node.clone(), right.node.clone()],
+            },
+            part: Partitioning::Keyed,
+            sorted: use_merge,
+        }
+    }
+
+    /// The plan this stage will execute, in execution order (inputs
+    /// before consumers, left join side before right), ending with the
+    /// `collect` materialization stage. Index-aligned with
+    /// [`DataflowOutput::stages`].
+    pub fn explain(&self) -> Explain {
+        fn flatten(node: &PlanNode, out: &mut Vec<ExplainStage>) {
+            for input in &node.inputs {
+                flatten(input, out);
+            }
+            out.push(ExplainStage {
+                op: node.op.clone(),
+                fused: node.fused.clone(),
+                shuffles: node.shuffles,
+            });
+        }
+        let mut stages = Vec::new();
+        flatten(&self.node, &mut stages);
+        stages.push(ExplainStage { op: "collect".to_string(), fused: Vec::new(), shuffles: 0 });
+        Explain { stages }
+    }
+
+    /// Execute the plan on a one-shot rank fleet built from `cluster`.
+    pub fn collect(&self, cluster: &ClusterConfig) -> Result<DataflowOutput<K, V>> {
+        self.collect_impl(cluster, None, None)
+    }
+
+    /// Execute on a caller-owned warm [`RankPool`] (multi-plan sessions
+    /// pay thread start-up once).
+    pub fn collect_on(&self, cluster: &ClusterConfig, pool: &RankPool) -> Result<DataflowOutput<K, V>> {
+        self.collect_impl(cluster, Some(pool), None)
+    }
+
+    /// Execute on an explicit rank subset of a warm pool — the seam the
+    /// concurrent [`crate::core::Scheduler`] dispatches through.
+    pub fn collect_placed(
+        &self,
+        cluster: &ClusterConfig,
+        pool: &RankPool,
+        ranks: &[usize],
+    ) -> Result<DataflowOutput<K, V>> {
+        self.collect_impl(cluster, Some(pool), Some(ranks))
+    }
+
+    fn collect_impl(
+        &self,
+        cluster: &ClusterConfig,
+        pool: Option<&RankPool>,
+        placement: Option<&[usize]>,
+    ) -> Result<DataflowOutput<K, V>> {
+        cluster.validate()?;
+        let wall_start = Instant::now();
+        let tcfg = cluster.trace();
+        let _tracing = crate::trace::enable_scope(tcfg.is_enabled());
+        if tcfg.is_enabled() {
+            crate::trace::job_start(crate::trace::DRIVER_RANK, 0, 0);
+        }
+        let ranks = cluster.ranks();
+        let tracker = PeakTracker::new();
+        let budget = cluster.spill_threshold_bytes();
+        let salt = cluster.seed ^ DATAFLOW_SALT;
+
+        let exec = &self.exec;
+        let rank_body = |comm: &Communicator| -> Result<(Vec<(K, V)>, Vec<RankStageStat>, u64)> {
+            let mut ctx = ExecCtx {
+                comm,
+                tracker: tracker.clone(),
+                budget,
+                salt,
+                stats: Vec::new(),
+                spilled: 0,
+            };
+            let data = (exec.as_ref())(&mut ctx)?;
+            let rows = ctx.record("collect", 0, |_ctx| data.into_rows())?;
+            Ok((rows, ctx.stats, ctx.spilled))
+        };
+        let out = match (pool, placement) {
+            (Some(pool), Some(subset)) => {
+                pool.ensure_models_on(cluster, subset)?;
+                pool.run_job_on(subset, rank_body)
+            }
+            (Some(pool), None) => {
+                pool.ensure_models(cluster)?;
+                pool.run_job(ranks, rank_body)
+            }
+            (None, _) => RankPool::new(Universe::from_cluster(cluster)).run_job(ranks, rank_body),
+        };
+        let (rank_results, clocks, traffic, rank_spans) =
+            (out.results, out.clocks, out.traffic, out.trace);
+
+        let mut rows: Vec<(K, V)> = Vec::new();
+        let mut stages: Vec<StageReport> = Vec::new();
+        let mut spilled = 0u64;
+        for (i, r) in rank_results.into_iter().enumerate() {
+            let (shard, stats, rank_spilled) = r.map_err(|e| anyhow!("rank {i} failed: {e:#}"))?;
+            spilled += rank_spilled;
+            rows.extend(shard);
+            if stages.is_empty() {
+                stages = stats
+                    .into_iter()
+                    .map(|s| StageReport {
+                        label: s.label,
+                        shuffles: s.shuffles,
+                        bytes: s.bytes,
+                        clock_ns: s.clock_ns,
+                    })
+                    .collect();
+            } else {
+                ensure!(
+                    stages.len() == stats.len(),
+                    "rank {i} recorded a different plan shape — non-SPMD plan"
+                );
+                for (acc, s) in stages.iter_mut().zip(stats) {
+                    acc.bytes += s.bytes;
+                    acc.clock_ns = acc.clock_ns.max(s.clock_ns);
+                }
+            }
+        }
+        // Deterministic driver-side order: key-sorted, stable within
+        // equal keys (rank order — itself deterministic per plan).
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let profile = cluster.deployment.profile();
+        let slowest = clocks.iter().max_by_key(|(clk, _, _)| *clk).copied().unwrap_or((0, 0, 0));
+        let stats = JobStats {
+            modeled_ms: slowest.0 as f64 / 1e6,
+            compute_ms: slowest.1 as f64 / 1e6,
+            net_ms: slowest.2 as f64 / 1e6,
+            startup_ms: profile.startup_ms as f64,
+            shuffle_bytes: traffic.bytes,
+            messages: traffic.messages,
+            remote_messages: traffic.remote_messages,
+            remote_bytes: traffic.remote_bytes,
+            peak_mem_bytes: tracker.peak_bytes(),
+            spilled_bytes: spilled,
+            combined_bytes: 0,
+            migrated_bytes: 0,
+            host_wall_ms: wall_start.elapsed().as_secs_f64() * 1e3,
+        };
+
+        if tcfg.is_enabled() {
+            crate::trace::span_manual(crate::trace::SpanKind::Job, 0, slowest.0, traffic.bytes);
+            let mut tr = crate::trace::JobTrace::merge([crate::trace::take(), rank_spans]);
+            tr.extend(crate::trace::collect_worker_spans());
+            if let Some(path) = tcfg.export_path() {
+                tr.export(path)?;
+            }
+            crate::trace::store_last(tr);
+        }
+        Ok(DataflowOutput { rows, stats, stages })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(ranks: usize) -> ClusterConfig {
+        ClusterConfig::builder().ranks(ranks).seed(7).build()
+    }
+
+    #[test]
+    fn fused_chain_matches_serial_reference_and_explain_shows_fusion() {
+        let rows: Vec<(u64, u64)> = (0..200).map(|i| (i, i * 3)).collect();
+        let plan = Stage::from_vec(rows.clone())
+            .map(|k, v| (k % 10, v))
+            .filter(|_k, v| v % 2 == 0)
+            .reduce_by_key(|a, b| a + b);
+
+        let ex = plan.explain();
+        assert_eq!(ex.stages.len(), 3, "input, reduce_by_key, collect");
+        assert_eq!(ex.stages[0].op, "input");
+        assert_eq!(ex.stages[0].fused, vec!["map".to_string(), "filter".to_string()]);
+        assert_eq!(ex.stages[1].op, "reduce_by_key");
+        assert_eq!(ex.total_shuffles(), 1, "one repartition boundary");
+
+        let out = plan.collect(&cluster(4)).unwrap();
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for (k, v) in rows {
+            let (k, v) = (k % 10, v);
+            if v % 2 == 0 {
+                *truth.entry(k).or_insert(0) += v;
+            }
+        }
+        let mut expect: Vec<(u64, u64)> = truth.into_iter().collect();
+        expect.sort();
+        assert_eq!(out.rows, expect);
+    }
+
+    #[test]
+    fn co_partitioned_group_by_is_shuffle_free() {
+        let rows: Vec<(u32, u64)> = (0..300).map(|i| (i % 7, u64::from(i))).collect();
+        let plan = Stage::from_vec(rows).reduce_by_key(|a, b| a + b).group_by();
+
+        let ex = plan.explain();
+        assert_eq!(ex.stages[2].op, "group_by");
+        assert_eq!(ex.stages[2].shuffles, 0, "keyed input ⇒ no repartition");
+        assert_eq!(ex.total_shuffles(), 1);
+
+        let out = plan.collect(&cluster(3)).unwrap();
+        assert_eq!(out.stages.len(), ex.stages.len(), "reports align with explain");
+        assert_eq!(out.stages[2].label, "group_by");
+        assert_eq!(out.stages[2].bytes, 0, "co-partitioned group_by must move zero bytes");
+        assert!(out.stages[1].bytes > 0, "the reduce repartition must move bytes");
+        assert_eq!(out.rows.len(), 7);
+        for (_k, vs) in &out.rows {
+            assert_eq!(vs.len(), 1, "grouping pre-reduced data: one value per key");
+        }
+    }
+
+    #[test]
+    fn hash_and_merge_join_agree_with_serial_reference() {
+        let left: Vec<(u32, u64)> = (0..120).map(|i| (i % 12, u64::from(i))).collect();
+        let right: Vec<(u32, String)> =
+            (0..12).filter(|i| i % 2 == 0).map(|i| (i, format!("r{i}"))).collect();
+        let mut serial: Vec<(u32, (u64, String))> = Vec::new();
+        for (k, v) in &left {
+            for (k2, v2) in &right {
+                if k == k2 {
+                    serial.push((*k, (*v, v2.clone())));
+                }
+            }
+        }
+        serial.sort();
+        let c = cluster(3);
+        for strat in [JoinStrategy::Hash, JoinStrategy::Merge] {
+            let l = Stage::from_vec(left.clone());
+            let r = Stage::from_vec(right.clone());
+            let mut rows = l.join_with(&r, strat).collect(&c).unwrap().rows;
+            rows.sort();
+            assert_eq!(rows, serial, "{strat:?} join must match the serial reference");
+        }
+    }
+
+    #[test]
+    fn auto_join_picks_merge_on_sorted_inputs_and_is_then_shuffle_free() {
+        let left: Vec<(u32, u64)> = (0..60).map(|i| (i % 6, u64::from(i))).collect();
+        let right: Vec<(u32, u64)> = (0..6).map(|i| (i, u64::from(i) * 100)).collect();
+
+        let unsorted = Stage::from_vec(left.clone()).join(&Stage::from_vec(right.clone()));
+        let uex = unsorted.explain();
+        assert_eq!(uex.stages[uex.stages.len() - 2].op, "join(hash)");
+        assert_eq!(uex.stages[uex.stages.len() - 2].shuffles, 2);
+
+        let sorted = Stage::from_vec(left.clone())
+            .sort()
+            .join(&Stage::from_vec(right.clone()).sort());
+        let sex = sorted.explain();
+        assert_eq!(sex.stages[sex.stages.len() - 2].op, "join(merge)");
+        assert_eq!(sex.stages[sex.stages.len() - 2].shuffles, 0, "both sides co-partitioned");
+
+        let c = cluster(2);
+        let out = sorted.collect(&c).unwrap();
+        let join_report = &out.stages[out.stages.len() - 2];
+        assert_eq!(join_report.label, "join(merge)");
+        assert_eq!(join_report.bytes, 0, "co-partitioned join must move zero bytes");
+
+        let mut a = unsorted.collect(&c).unwrap().rows;
+        let mut b = out.rows;
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "strategy must not change the result");
+        assert_eq!(a.len(), 60, "every left row matches exactly one right row");
+    }
+
+    #[test]
+    fn fused_filter_moves_strictly_fewer_bytes_than_materializing_plan() {
+        let rows: Vec<(u64, u64)> = (0..400).map(|i| (i, i)).collect();
+        let c = cluster(4);
+        // Fused: the filter runs before the one shuffle, so only
+        // surviving pairs cross the wire.
+        let fused =
+            Stage::from_vec(rows.clone()).filter(|k, _| k % 10 == 0).group_by().collect(&c).unwrap();
+        // Materializing equivalent: force a full repartition first
+        // (stage-by-stage execution), filter after.
+        let staged =
+            Stage::from_vec(rows).sort().filter(|k, _| k % 10 == 0).group_by().collect(&c).unwrap();
+        assert_eq!(fused.rows, staged.rows, "same answer either way");
+        assert!(
+            fused.stats.shuffle_bytes < staged.stats.shuffle_bytes,
+            "fusion must move strictly fewer bytes: fused {} vs staged {}",
+            fused.stats.shuffle_bytes,
+            staged.stats.shuffle_bytes
+        );
+    }
+
+    #[test]
+    fn repeat_collects_are_deterministic_and_pool_reuse_matches() {
+        let rows: Vec<(u32, u64)> = (0..150).map(|i| (i % 9, u64::from(i * i))).collect();
+        let lookup: Vec<(u32, u64)> = (0..9).map(|i| (i, u64::from(i) + 1)).collect();
+        let plan = Stage::from_vec(rows)
+            .filter(|_k, v| v % 3 != 0)
+            .join(&Stage::from_vec(lookup))
+            .reduce_by_key(|a, b| (a.0 + b.0, a.1.max(b.1)));
+        let c = cluster(3);
+        let a = plan.collect(&c).unwrap().rows;
+        let b = plan.collect(&c).unwrap().rows;
+        assert_eq!(a, b, "same plan, same cluster ⇒ same rows");
+
+        let pool = RankPool::from_config(&c);
+        let warm = plan.collect_on(&c, &pool).unwrap().rows;
+        assert_eq!(a, warm, "warm-pool execution must match one-shot");
+    }
+
+    #[test]
+    fn empty_input_produces_empty_output_across_wide_ops() {
+        let empty: Stage<u32, u64> = Stage::from_vec(Vec::new());
+        let c = cluster(2);
+        assert!(empty.group_by().collect(&c).unwrap().rows.is_empty());
+        assert!(empty.reduce_by_key(|a, b| a + b).collect(&c).unwrap().rows.is_empty());
+        let joined = empty.join(&Stage::from_vec(vec![(1u32, 2u64)]));
+        assert!(joined.collect(&c).unwrap().rows.is_empty());
+    }
+
+    #[test]
+    fn tiny_spill_budget_spills_and_stays_correct() {
+        let rows: Vec<(u64, u64)> = (0..500).map(|i| (i % 11, i)).collect();
+        let big = cluster(2);
+        let small = ClusterConfig::builder().ranks(2).seed(7).shuffle_buffer_bytes(256).build();
+        let plan = Stage::from_vec(rows).sort().group_by();
+        let in_core = plan.collect(&big).unwrap();
+        let out_of_core = plan.collect(&small).unwrap();
+        assert_eq!(in_core.rows, out_of_core.rows, "spilling must not change results");
+        assert_eq!(in_core.stats.spilled_bytes, 0);
+        assert!(out_of_core.stats.spilled_bytes > 0, "256-byte budget must spill");
+    }
+
+    #[test]
+    fn explain_renders_stages_fusion_and_boundaries() {
+        let plan = Stage::from_vec(vec![(1u32, 1u64)])
+            .map(|k, v| (k, v + 1))
+            .reduce_by_key(|a, b| a + b)
+            .group_by();
+        let text = plan.explain().to_string();
+        assert!(text.contains("plan: 4 stages, 1 shuffle(s)"), "got:\n{text}");
+        assert!(text.contains("fused[map]"), "got:\n{text}");
+        assert!(text.contains("group_by"), "got:\n{text}");
+        assert!(text.contains("(local)"), "got:\n{text}");
+    }
+}

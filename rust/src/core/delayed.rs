@@ -35,7 +35,7 @@ use crate::dist::ShardRouter;
 use crate::metrics::{MemoryScope, PeakTracker};
 use crate::mpi::Communicator;
 use crate::serial::FastSerialize;
-use crate::store::{GroupStream, RunSet, RunWriter};
+use crate::store::{GroupStream, GroupValues, RunSet, RunWriter};
 
 use super::scheduler::TaskFeed;
 use super::shuffle::{shuffle_runs, stage_sorted_runs};
@@ -76,21 +76,30 @@ where
         self.spilled_bytes
     }
 
-    /// Step 5's "later", out-of-core: stream `(key, values)` groups in
-    /// ascending key order, one group in memory at a time.
-    pub fn for_each_group(mut self, mut f: impl FnMut(K, Vec<V>)) -> Result<()> {
+    /// Step 5's "later", out-of-core: stream `(key, lazy values)`
+    /// groups in ascending key order. Values stream straight off the
+    /// merge — nothing is materialized unless `f` collects it.
+    pub fn for_each_group(
+        mut self,
+        mut f: impl FnMut(&K, &mut dyn Iterator<Item = V>),
+    ) -> Result<()> {
         if self.materialized {
             for (k, vs) in self.groups.drain(..) {
-                f(k, vs);
+                f(&k, &mut vs.into_iter());
             }
             return Ok(());
         }
         let Some(runs) = self.runs.take() else { return Ok(()) };
-        let mut stream = GroupStream::new(runs.into_merge()?);
-        while let Some((k, vs)) = stream.next_group()? {
-            f(k, vs);
-        }
-        Ok(())
+        GroupStream::new(runs.into_merge()?).for_each_group(f)
+    }
+
+    /// Compat shim for [`DelayedOutput::for_each_group`] with the
+    /// pre-PR-10 materialized `(K, Vec<V>)` callback shape.
+    pub fn for_each_group_vec(self, mut f: impl FnMut(K, Vec<V>)) -> Result<()>
+    where
+        K: Clone,
+    {
+        self.for_each_group(|k, vs| f(k.clone(), vs.collect()))
     }
 
     /// Materialize all groups in memory (the pre-out-of-core shape; use
@@ -134,12 +143,26 @@ where
 
     /// Apply the final reducer now — step 5's "immediately". Streams
     /// groups off the runs; only the reduced result is materialized.
-    pub fn reduce_now<R: Fn(&K, Vec<V>) -> V>(self, reduce: R) -> Result<HashMap<K, V>> {
+    pub fn reduce_now<R>(mut self, reduce: R) -> Result<HashMap<K, V>>
+    where
+        R: Fn(&K, &mut dyn Iterator<Item = V>) -> V,
+    {
         let mut out = HashMap::new();
-        self.for_each_group(|k, vs| {
-            let reduced = reduce(&k, vs);
-            out.insert(k, reduced);
-        })?;
+        if self.materialized {
+            for (k, vs) in self.groups.drain(..) {
+                let reduced = reduce(&k, &mut vs.into_iter());
+                out.insert(k, reduced);
+            }
+            return Ok(out);
+        }
+        let Some(runs) = self.runs.take() else { return Ok(out) };
+        let mut stream = GroupStream::new(runs.into_merge()?);
+        while let Some((key, first)) = stream.begin_group()? {
+            let mut vals = GroupValues::new(&mut stream, &key, first);
+            let reduced = reduce(&key, &mut vals);
+            vals.finish()?;
+            out.insert(key, reduced);
+        }
         Ok(out)
     }
 }
@@ -196,7 +219,7 @@ where
     K: FastSerialize + Hash + Eq + Ord + Send,
     V: FastSerialize + Send,
     M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
-    R: Fn(&K, Vec<V>) -> V + Sync,
+    R: Fn(&K, &mut dyn Iterator<Item = V>) -> V + Sync,
 {
     let output = delayed_rank_groups(comm, feed, map, salt, spill_budget, tracker)?;
     let spilled = output.spilled_bytes();
@@ -226,7 +249,8 @@ mod tests {
                     emit(w.to_string(), 1);
                 }
             };
-            let reduce = |_k: &String, vs: Vec<u64>| vs.into_iter().sum::<u64>();
+            let reduce =
+                |_k: &String, vs: &mut dyn Iterator<Item = u64>| vs.sum::<u64>();
             let tracker = PeakTracker::new();
             delayed_rank(c, &feed, &map, &reduce, 0, u64::MAX, &tracker).unwrap().0
         });
@@ -282,7 +306,7 @@ mod tests {
             let inspected: usize =
                 out.iter_groups().unwrap().map(|(_, vs)| vs.len()).sum();
             assert_eq!(inspected, 6);
-            out.reduce_now(|_, vs| vs.into_iter().sum::<u32>()).unwrap()
+            out.reduce_now(|_, vs| vs.sum::<u32>()).unwrap()
         });
         assert_eq!(results[0][&0u8], 2 + 4 + 6);
         assert_eq!(results[0][&1u8], 1 + 3 + 5);
@@ -296,7 +320,8 @@ mod tests {
         let feed = TaskFeed::new(&input, 2, 1, Scheduling::Static, None);
         let results = pool_run(2, |c| {
             let map = |i: &u32, emit: &mut dyn FnMut(u8, u32)| emit(0, *i);
-            let reduce = |_k: &u8, mut vs: Vec<u32>| {
+            let reduce = |_k: &u8, vs: &mut dyn Iterator<Item = u32>| {
+                let mut vs: Vec<u32> = vs.collect();
                 vs.sort_unstable();
                 vs[vs.len() / 2]
             };
@@ -319,7 +344,8 @@ mod tests {
                 let map = |i: &u32, emit: &mut dyn FnMut(u32, u64)| {
                     emit(i % 16, (*i as u64) * 3)
                 };
-                let reduce = |_k: &u32, vs: Vec<u64>| {
+                let reduce = |_k: &u32, vs: &mut dyn Iterator<Item = u64>| {
+                    let vs: Vec<u64> = vs.collect();
                     assert!(!vs.is_empty());
                     vs.into_iter().sum::<u64>()
                 };
@@ -353,7 +379,7 @@ mod tests {
             let out =
                 delayed_rank_groups(c, &feed, &map, 0, 256, &tracker).unwrap();
             let mut seen: Vec<(u32, usize)> = Vec::new();
-            out.for_each_group(|k, vs| seen.push((k, vs.len()))).unwrap();
+            out.for_each_group(|k, vs| seen.push((*k, vs.count()))).unwrap();
             seen
         });
         assert_eq!(visited[0].len(), 10);

@@ -112,18 +112,35 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         })
     }
 
-    /// Run classic (Hadoop-style) MapReduce.
+    /// Run classic (Hadoop-style) MapReduce. `reduce` streams each key's
+    /// value multiset as a lazy iterator straight off the grouped merge
+    /// — nothing is materialized unless the reducer collects it.
     pub fn run_classic<K, V, M, R>(&self, map: M, reduce: R) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: FastSerialize + Hash + Eq + Ord + Send,
+        V: FastSerialize + Send,
+        M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+        R: Fn(&K, &mut dyn Iterator<Item = V>) -> V + Sync,
+    {
+        let salt = self.salt();
+        let spill = self.cluster.spill_threshold_bytes();
+        self.execute(move |comm, feed, tracker| {
+            classic_rank(comm, feed, &map, &reduce, None, salt, spill, tracker)
+        })
+    }
+
+    /// [`MapReduceJob::run_classic`] with the pre-PR-10 materialized
+    /// `(K, Vec<V>)` reducer shape — a thin compat shim for callers that
+    /// genuinely need the whole group at once.
+    pub fn run_classic_vec<K, V, M, R>(&self, map: M, reduce: R) -> Result<JobResult<HashMap<K, V>>>
     where
         K: FastSerialize + Hash + Eq + Ord + Send,
         V: FastSerialize + Send,
         M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
         R: Fn(&K, Vec<V>) -> V + Sync,
     {
-        let salt = self.salt();
-        let spill = self.cluster.spill_threshold_bytes();
-        self.execute(move |comm, feed, tracker| {
-            classic_rank(comm, feed, &map, &reduce, None, salt, spill, tracker)
+        self.run_classic(map, move |k: &K, vs: &mut dyn Iterator<Item = V>| {
+            reduce(k, vs.collect())
         })
     }
 
@@ -144,7 +161,7 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         K: FastSerialize + Hash + Eq + Ord + Send,
         V: FastSerialize + Send,
         M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
-        R: Fn(&K, Vec<V>) -> V + Sync,
+        R: Fn(&K, &mut dyn Iterator<Item = V>) -> V + Sync,
     {
         let salt = self.salt();
         let spill = self.cluster.spill_threshold_bytes();
@@ -161,12 +178,26 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
         K: FastSerialize + Hash + Eq + Ord + Send,
         V: FastSerialize + Send,
         M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
-        R: Fn(&K, Vec<V>) -> V + Sync,
+        R: Fn(&K, &mut dyn Iterator<Item = V>) -> V + Sync,
     {
         let salt = self.salt();
         let spill = self.cluster.spill_threshold_bytes();
         self.execute(move |comm, feed, tracker| {
             delayed_rank(comm, feed, &map, &reduce, salt, spill, tracker)
+        })
+    }
+
+    /// [`MapReduceJob::run_delayed`] with the materialized `(K, Vec<V>)`
+    /// reducer shape — compat shim, see [`MapReduceJob::run_classic_vec`].
+    pub fn run_delayed_vec<K, V, M, R>(&self, map: M, reduce: R) -> Result<JobResult<HashMap<K, V>>>
+    where
+        K: FastSerialize + Hash + Eq + Ord + Send,
+        V: FastSerialize + Send,
+        M: Fn(&I, &mut dyn FnMut(K, V)) + Sync,
+        R: Fn(&K, Vec<V>) -> V + Sync,
+    {
+        self.run_delayed(map, move |k: &K, vs: &mut dyn Iterator<Item = V>| {
+            reduce(k, vs.collect())
         })
     }
 
@@ -188,12 +219,16 @@ impl<'i, I: Sync> MapReduceJob<'i, I> {
                 let cur = acc.clone();
                 *acc = op(cur, v);
             }),
-            ReductionMode::Classic => self.run_classic(map, move |_k: &K, vs: Vec<V>| {
-                vs.into_iter().reduce(op).expect("non-empty group")
-            }),
-            ReductionMode::Delayed => self.run_delayed(map, move |_k: &K, vs: Vec<V>| {
-                vs.into_iter().reduce(op).expect("non-empty group")
-            }),
+            ReductionMode::Classic => {
+                self.run_classic(map, move |_k: &K, vs: &mut dyn Iterator<Item = V>| {
+                    vs.reduce(op).expect("non-empty group")
+                })
+            }
+            ReductionMode::Delayed => {
+                self.run_delayed(map, move |_k: &K, vs: &mut dyn Iterator<Item = V>| {
+                    vs.reduce(op).expect("non-empty group")
+                })
+            }
         }
     }
 
@@ -474,13 +509,13 @@ mod tests {
         let input = wordcount_input(300);
         let cluster = ClusterConfig::builder().ranks(4).build();
         let raw = MapReduceJob::new(&cluster, &input)
-            .run_classic(wc_map, |_k, vs: Vec<u64>| vs.into_iter().sum())
+            .run_classic(wc_map, |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum())
             .unwrap();
         let combined = MapReduceJob::new(&cluster, &input)
             .run_classic_with_combiner(
                 wc_map,
                 |a: &mut u64, b: u64| *a += b,
-                |_k, vs: Vec<u64>| vs.into_iter().sum(),
+                |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum(),
             )
             .unwrap();
         assert_eq!(raw.result, combined.result);

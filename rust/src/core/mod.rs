@@ -17,13 +17,17 @@
 //!
 //! [`engine`] wraps a mode dispatch + metrics + result collection around
 //! the SPMD bodies; [`scheduler`] adds dynamic task claiming (data-skew
-//! mitigation) and fault-tolerant waves on top. [`iterative`] is the
+//! mitigation) and fault-tolerant waves on top. [`dataflow`] lifts the
+//! single-job surface into a typed multi-stage DAG: fused narrow
+//! chains, co-partitioning-aware wide operators, a two-input join, and
+//! an `explain()` plan introspection API. [`iterative`] is the
 //! in-memory iterative layer (M3R-style): per-key state pinned
 //! rank-local on a `BucketRouter`, delta-only waves, live elastic
 //! rebalancing.
 
 pub mod classic;
 pub mod context;
+pub mod dataflow;
 pub mod delayed;
 pub mod eager;
 pub mod engine;
@@ -35,6 +39,7 @@ pub mod scheduler;
 pub mod shuffle;
 
 pub use context::Emitter;
+pub use dataflow::{DataflowOutput, Explain, ExplainStage, JoinStrategy, Stage, StageReport};
 pub use delayed::DelayedOutput;
 pub use engine::MapReduceJob;
 pub use iterative::{

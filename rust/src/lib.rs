@@ -38,7 +38,9 @@ pub mod util;
 /// Most-used types, re-exported for `use blaze_rs::prelude::*`.
 pub mod prelude {
     pub use crate::cluster::{ClusterConfig, DeploymentKind};
-    pub use crate::core::{IterativeJob, JobConfig, JobResult, ReductionMode};
+    pub use crate::core::{
+        DataflowOutput, IterativeJob, JobConfig, JobResult, JoinStrategy, ReductionMode, Stage,
+    };
     pub use crate::dist::{BucketRouter, DistHashMap, DistVector};
     pub use crate::mpi::{Communicator, Rank, RankPool};
     pub use crate::serial::{Decoder, Encoder, FastSerialize};

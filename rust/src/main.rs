@@ -20,8 +20,8 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use blaze_rs::apps::{kmeans, linreg, matmul, pagerank, pi, wordcount};
-use blaze_rs::bench_harness::{run_figure, run_serve_bench, FigureId, ServeBenchConfig};
+use blaze_rs::apps::{analytics, kmeans, linreg, matmul, pagerank, pi, wordcount};
+use blaze_rs::bench_harness::{run_figure, run_serve_bench, DriveMode, FigureId, ServeBenchConfig};
 use blaze_rs::cluster::{ClusterConfig, DeploymentKind, ElasticCluster};
 use blaze_rs::core::ReductionMode;
 use blaze_rs::mpi::TransportKind;
@@ -131,10 +131,10 @@ fn run(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "blaze — HPC MapReduce (Blaze-style) reproduction\n\n\
-         USAGE:\n  blaze run --app <wordcount|kmeans|pi|matmul|linreg> [opts]\n  \
+         USAGE:\n  blaze run --app <wordcount|kmeans|pi|matmul|linreg|analytics> [opts]\n  \
          blaze bench-figure <id|all> [--quick] [--json-dir DIR]\n  \
          blaze serve-bench [--quick] [--jobs N] [--rps F] [--width W] \
-         [--transport mailbox|tcp|both] [--out BENCH_9.json]\n  \
+         [--concurrency N --think-ms F] [--transport mailbox|tcp|both] [--out BENCH_9.json]\n  \
          blaze inspect-artifacts [--dir artifacts]\n  \
          blaze cluster-info [--cluster FILE | --ranks N --deployment KIND]\n  \
          blaze trace --app <wordcount|pagerank> [--out FILE.json] [--ranks N] [opts]\n  \
@@ -145,7 +145,8 @@ fn print_usage() {
          use the AOT PJRT kernels (needs `make artifacts`)\n\n\
          APP OPTS:\n  wordcount: --lines N --vocab V\n  kmeans: --points N \
          --dims D --k K --iters I\n  pi: --samples N\n  matmul: --size N\n  \
-         linreg: --rows N --dims D --iters I --lr F\n\n\
+         linreg: --rows N --dims D --iters I --lr F\n  \
+         analytics: --customers N --orders N --min-total CENTS (dataflow DAG demo; prints explain())\n\n\
          FIGURES: fig8 fig9 fig10 fig11 fig12 fig13 ablation-reduction deployment pool-ablation \
          spill-crossover tree-ablation iterative-ablation"
     );
@@ -220,6 +221,31 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
             print_stats(&out.stats);
         }
+        "analytics" => {
+            let n_customers: usize = args.get_or("customers", 1_000)?;
+            let n_orders: usize = args.get_or("orders", 50_000)?;
+            let min_total: u64 = args.get_or("min-total", 10_000)?;
+            let (customers, orders) =
+                analytics::generate_tables(n_customers, n_orders, cluster.seed);
+            let plan = analytics::revenue_plan(&customers, &orders, min_total);
+            println!("{}", plan.explain());
+            let out = plan.collect(&cluster)?;
+            for (segment, cents) in &out.rows {
+                println!("analytics: {segment:<12} revenue ${}.{:02}", cents / 100, cents % 100);
+            }
+            for s in &out.stages {
+                println!(
+                    "  stage {:<16} shuffles={} bytes={} clock={:.2}ms",
+                    s.label,
+                    s.shuffles,
+                    s.bytes,
+                    s.clock_ns as f64 / 1e6
+                );
+            }
+            let truth = analytics::revenue_serial(&customers, &orders, min_total);
+            anyhow::ensure!(out.rows == truth, "dataflow result diverged from serial reference");
+            print_stats(&out.stats);
+        }
         "linreg" => {
             let n: usize = args.get_or("rows", 50_000)?;
             let d: usize = args.get_or("dims", 8)?;
@@ -275,10 +301,12 @@ fn cmd_bench_figure(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Sustained-load serving benchmark: an open-loop stream of mixed
-/// wordcount/pagerank jobs through the concurrent scheduler at a target
-/// request rate, once per transport, with stop-loss latency/failure
-/// gates. Writes the `BENCH_9.json` report (repo root by default).
+/// Sustained-load serving benchmark: a stream of mixed
+/// wordcount/pagerank jobs through the concurrent scheduler, once per
+/// transport, with stop-loss latency/failure gates. Open-loop (target
+/// request rate) by default; `--concurrency N [--think-ms F]` switches
+/// to a closed-loop fixed-concurrency driver. Writes the
+/// `BENCH_9.json` report (repo root by default).
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let mut cfg =
         if args.has("quick") { ServeBenchConfig::quick() } else { ServeBenchConfig::default() };
@@ -288,6 +316,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     cfg.seed = args.get_or("seed", cfg.seed)?;
     cfg.stop_failure_rate = args.get_or("stop-failure-rate", cfg.stop_failure_rate)?;
     cfg.stop_median_ms = args.get_or("stop-median-ms", cfg.stop_median_ms)?;
+    if let Some(c) = args.get("concurrency") {
+        let concurrency: usize = c.parse().context("--concurrency must be an integer")?;
+        let think_ms: f64 = args.get_or("think-ms", 0.0)?;
+        cfg.mode = DriveMode::Closed { concurrency, think_ms };
+    }
     if let Some(t) = args.get("transport") {
         cfg.transports = match t {
             "both" => TransportKind::ALL.to_vec(),
@@ -298,10 +331,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         cfg.sched = sched.parse()?;
     }
     let out = std::path::PathBuf::from(args.get("out").unwrap_or("BENCH_9.json"));
+    let drive = match cfg.mode {
+        DriveMode::Open => format!("open-loop at {} rps", cfg.offered_rps),
+        DriveMode::Closed { concurrency, think_ms } => {
+            format!("closed-loop with {concurrency} clients, {think_ms} ms think time")
+        }
+    };
     println!(
-        "# serve-bench: {} jobs/transport at {} rps on a {}-rank pool ({:?})",
+        "# serve-bench: {} jobs/transport, {} on a {}-rank pool ({:?})",
         cfg.jobs,
-        cfg.offered_rps,
+        drive,
         cfg.pool_width,
         cfg.transports.iter().map(|t| t.to_string()).collect::<Vec<_>>()
     );

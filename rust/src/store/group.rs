@@ -1,11 +1,19 @@
-//! [`GroupStream`]: turn a key-ordered pair stream into `(K, Vec<V>)`
-//! groups, one group in memory at a time — the out-of-core form of the
-//! paper's `(K, Iterable<V>)` contract (§III.D). Memory is bounded by
-//! the largest single group plus the merge's per-run block overhead,
-//! never by the dataset — and the one materialized group is **charged to
-//! the job's [`crate::metrics::PeakTracker`]** while it is out: a skewed
-//! hot key whose values dwarf the budget is real memory, and the modeled
-//! peak now says so (ROADMAP group-size accounting follow-up).
+//! [`GroupStream`]: turn a key-ordered pair stream into `(K, values)`
+//! groups — the out-of-core form of the paper's `(K, Iterable<V>)`
+//! contract (§III.D).
+//!
+//! The primary surface is **iterator-of-values**: [`GroupStream::begin_group`]
+//! opens the next group and hands back the owned key plus its first
+//! value; [`GroupValues`] then yields the remaining values lazily off
+//! the merge, so a group is never materialized unless the reducer
+//! itself collects it. Memory is bounded by the merge's per-run block
+//! overhead — not by the largest group, and never by the dataset.
+//!
+//! [`GroupStream::next_group`] is the thin `Vec`-collecting compat shim
+//! (the pre-PR-10 shape): it materializes one group at a time and
+//! **charges it to the job's [`crate::metrics::PeakTracker`]** while it
+//! is out — a skewed hot key whose values dwarf the budget is real
+//! memory, and the modeled peak says so.
 
 use std::sync::Arc;
 
@@ -17,13 +25,14 @@ use crate::serial::FastSerialize;
 use super::merge::KWayMerge;
 use super::run::pair_bytes;
 
-/// Streams key-ordered `(K, Vec<V>)` groups off a [`KWayMerge`].
+/// Streams key-ordered groups off a [`KWayMerge`].
 pub struct GroupStream<'f, K, V> {
     merge: KWayMerge<'f, K, V>,
     pending: Option<(K, V)>,
     tracker: Arc<PeakTracker>,
-    /// Charge for the most recently yielded group; released when the
-    /// next group replaces it (or on drop).
+    /// Charge for the most recently yielded materialized group; released
+    /// when the next group replaces it (or on drop). Lazy groups
+    /// ([`GroupValues`]) never charge — nothing is held.
     group_bytes: u64,
 }
 
@@ -37,20 +46,53 @@ where
         Self { merge, pending: None, tracker, group_bytes: 0 }
     }
 
-    /// Next `(key, values)` group in ascending key order; `None` at end.
-    /// The value multiset per key is complete — every run's values for
-    /// the key, in run order. The group's modeled bytes stay charged to
-    /// the tracker until the next call (callers hold the group at least
-    /// that long).
+    /// Open the next group: the owned key and its **first** value, or
+    /// `None` at end of stream. The remaining values stream through a
+    /// [`GroupValues`] cursor built from this stream, the key, and the
+    /// first value — see the loop in
+    /// [`crate::core::classic::classic_rank`] for the canonical shape:
+    ///
+    /// ```ignore
+    /// while let Some((key, first)) = stream.begin_group()? {
+    ///     let mut vals = GroupValues::new(&mut stream, &key, first);
+    ///     let reduced = reduce(&key, &mut vals);
+    ///     vals.finish()?; // drain the rest, surface deferred errors
+    /// }
+    /// ```
+    pub fn begin_group(&mut self) -> Result<Option<(K, V)>> {
+        match self.pending.take() {
+            Some(p) => Ok(Some(p)),
+            None => self.merge.next(),
+        }
+    }
+
+    /// Stream every group through `f` as `(key, lazy values)` — the
+    /// iterator-of-values surface. Values the callback does not consume
+    /// are drained and discarded before the next group opens; a merge
+    /// error surfaces after the offending callback returns.
+    pub fn for_each_group<F>(mut self, mut f: F) -> Result<()>
+    where
+        F: FnMut(&K, &mut dyn Iterator<Item = V>),
+    {
+        while let Some((key, first)) = self.begin_group()? {
+            let mut vals = GroupValues::new(&mut self, &key, first);
+            f(&key, &mut vals);
+            vals.finish()?;
+        }
+        Ok(())
+    }
+
+    /// Compat shim: next `(key, values)` group with the value multiset
+    /// **materialized** in a `Vec`, ascending key order, `None` at end.
+    /// The group's modeled bytes stay charged to the tracker until the
+    /// next call (callers hold the group at least that long). New code
+    /// should prefer [`GroupStream::begin_group`] / [`GroupValues`].
     pub fn next_group(&mut self) -> Result<Option<(K, Vec<V>)>> {
         self.tracker.free(self.group_bytes);
         self.group_bytes = 0;
-        let (key, first) = match self.pending.take() {
+        let (key, first) = match self.begin_group()? {
             Some(p) => p,
-            None => match self.merge.next()? {
-                Some(p) => p,
-                None => return Ok(None),
-            },
+            None => return Ok(None),
         };
         // Accumulate the charge on self as values arrive, so an error
         // mid-group still leaves Drop knowing exactly what to free.
@@ -83,23 +125,109 @@ impl<K, V> Drop for GroupStream<'_, K, V> {
     }
 }
 
+/// Lazy value cursor for one group: yields the group's values straight
+/// off the merge without materializing them. Built from the owned key
+/// that [`GroupStream::begin_group`] returned; the first pair beyond
+/// the group is parked back on the stream so the next `begin_group`
+/// call finds it. Merge errors are deferred (the `Iterator` contract
+/// has no `Result`) and surfaced by [`GroupValues::finish`].
+pub struct GroupValues<'s, 'f, K, V> {
+    stream: &'s mut GroupStream<'f, K, V>,
+    key: &'s K,
+    first: Option<V>,
+    done: bool,
+    err: Option<anyhow::Error>,
+}
+
+impl<'s, 'f, K, V> GroupValues<'s, 'f, K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    /// See [`GroupStream::begin_group`] for the calling convention.
+    pub fn new(stream: &'s mut GroupStream<'f, K, V>, key: &'s K, first: V) -> Self {
+        Self { stream, key, first: Some(first), done: false, err: None }
+    }
+
+    /// Drain any unconsumed values of this group (so the stream is
+    /// positioned at the next group boundary) and surface a merge error
+    /// deferred during iteration. Always call this before the next
+    /// [`GroupStream::begin_group`].
+    pub fn finish(mut self) -> Result<()> {
+        while self.next().is_some() {}
+        match self.err.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl<K, V> Iterator for GroupValues<'_, '_, K, V>
+where
+    K: FastSerialize + Ord,
+    V: FastSerialize,
+{
+    type Item = V;
+
+    fn next(&mut self) -> Option<V> {
+        if self.done {
+            return None;
+        }
+        if let Some(v) = self.first.take() {
+            return Some(v);
+        }
+        match self.stream.merge.next() {
+            Ok(Some((k, v))) => {
+                if k == *self.key {
+                    Some(v)
+                } else {
+                    self.stream.pending = Some((k, v));
+                    self.done = true;
+                    None
+                }
+            }
+            Ok(None) => {
+                self.done = true;
+                None
+            }
+            Err(e) => {
+                self.err = Some(e);
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::run::PAIR_OVERHEAD;
     use super::super::RunWriter;
     use super::*;
 
-    fn groups_of(budget: u64, pairs: &[(u64, u64)]) -> Vec<(u64, Vec<u64>)> {
+    fn stream_of(budget: u64, pairs: &[(u64, u64)]) -> GroupStream<'static, u64, u64> {
         let t = PeakTracker::new();
         let mut w: RunWriter<'_, u64, u64> = RunWriter::new(budget, t);
         for &(k, v) in pairs {
             w.push(k, v).unwrap();
         }
-        let mut gs = GroupStream::new(w.finish().unwrap().into_merge().unwrap());
+        GroupStream::new(w.finish().unwrap().into_merge().unwrap())
+    }
+
+    fn groups_of(budget: u64, pairs: &[(u64, u64)]) -> Vec<(u64, Vec<u64>)> {
+        let mut gs = stream_of(budget, pairs);
         let mut out = Vec::new();
         while let Some(g) = gs.next_group().unwrap() {
             out.push(g);
         }
+        out
+    }
+
+    /// Same content via the lazy iterator-of-values surface.
+    fn lazy_groups_of(budget: u64, pairs: &[(u64, u64)]) -> Vec<(u64, Vec<u64>)> {
+        let gs = stream_of(budget, pairs);
+        let mut out: Vec<(u64, Vec<u64>)> = Vec::new();
+        gs.for_each_group(|k, vs| out.push((*k, vs.collect()))).unwrap();
         out
     }
 
@@ -116,6 +244,53 @@ mod tests {
             let keys: Vec<u64> = groups.iter().map(|(k, _)| *k).collect();
             assert_eq!(keys, vec![0, 1, 2, 3], "ascending keys");
         }
+    }
+
+    #[test]
+    fn lazy_groups_are_byte_identical_to_materialized_groups() {
+        // The PR 10 pin: the iterator-of-values surface must yield the
+        // exact same groups (keys, value order, multiset) as the Vec
+        // shim, in-core and out-of-core.
+        let pairs: Vec<(u64, u64)> = (0..500).map(|i| ((i * 31) % 17, i)).collect();
+        for budget in [u64::MAX, 128] {
+            assert_eq!(groups_of(budget, &pairs), lazy_groups_of(budget, &pairs));
+        }
+    }
+
+    #[test]
+    fn partially_consumed_group_still_advances_to_the_next() {
+        // A reducer that takes only the first value must not corrupt the
+        // following group: finish() drains the rest.
+        let pairs: Vec<(u64, u64)> = (0..60).map(|i| (i % 3, i)).collect();
+        let gs = stream_of(64, &pairs);
+        let mut seen: Vec<(u64, u64)> = Vec::new();
+        gs.for_each_group(|k, vs| seen.push((*k, vs.take(1).count() as u64))).unwrap();
+        assert_eq!(seen, vec![(0, 1), (1, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn lazy_path_does_not_charge_the_group_to_the_tracker() {
+        // 2000 values under one hot key: the Vec shim charges the whole
+        // group; the lazy cursor holds one value at a time and must not.
+        let t = PeakTracker::new();
+        let mut w: RunWriter<'_, u64, u64> = RunWriter::new(512, t.clone());
+        for i in 0..2_000u64 {
+            w.push(7, i).unwrap();
+        }
+        let set = w.finish().unwrap();
+        let staging_peak = t.peak_bytes();
+        let merge_blocks = set.num_runs() as u64 * super::super::run::block_cap(512) as u64;
+        let gs = GroupStream::new(set.into_merge().unwrap());
+        let mut n = 0u64;
+        gs.for_each_group(|_, vs| n = vs.count() as u64).unwrap();
+        assert_eq!(n, 2_000);
+        let group_floor = 2_000 * (PAIR_OVERHEAD + 2);
+        assert!(
+            t.peak_bytes() < staging_peak + merge_blocks + group_floor / 4,
+            "lazy peak {} must stay near staging {staging_peak} + merge \
+             blocks {merge_blocks}, not grow by the {group_floor} B group",
+            t.peak_bytes()
+        );
     }
 
     #[test]
@@ -138,6 +313,7 @@ mod tests {
     #[test]
     fn empty_stream_yields_no_groups() {
         assert!(groups_of(64, &[]).is_empty());
+        assert!(lazy_groups_of(64, &[]).is_empty());
     }
 
     #[test]
@@ -179,8 +355,8 @@ mod tests {
 
     #[test]
     fn group_charge_rolls_from_group_to_group() {
-        // Streaming many small groups holds one group's charge at a
-        // time, not the sum of all groups.
+        // Streaming many small materialized groups holds one group's
+        // charge at a time, not the sum of all groups.
         let t = PeakTracker::new();
         let mut w: RunWriter<'_, u64, u64> = RunWriter::new(256, t.clone());
         for i in 0..1_000u64 {

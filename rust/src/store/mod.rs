@@ -54,7 +54,7 @@ pub use checkpoint::{
     CheckpointMeta, CheckpointStats, CheckpointStore, RestoredCheckpoint,
     CHECKPOINT_DISK_NS_PER_BYTE,
 };
-pub use group::GroupStream;
+pub use group::{GroupStream, GroupValues};
 pub use merge::{KWayMerge, RunCursor};
 pub use run::{block_cap, RunReader, RunSet, RunSpan, RunWriter, PAIR_OVERHEAD};
 

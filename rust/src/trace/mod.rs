@@ -70,6 +70,10 @@ pub enum SpanKind {
     Shuffle,
     ShuffleRound,
     Reduce,
+    /// One dataflow plan stage (see `core::dataflow`): narrow chains
+    /// fused into the stage's single pass, bytes = the stage's shuffle
+    /// traffic (0 for co-partitioned stages).
+    Stage,
     // core: iterative waves
     Wave,
     Contribute,
@@ -99,13 +103,14 @@ pub enum SpanKind {
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 28] = [
+    pub const ALL: [SpanKind; 29] = [
         SpanKind::Job,
         SpanKind::Map,
         SpanKind::Combine,
         SpanKind::Shuffle,
         SpanKind::ShuffleRound,
         SpanKind::Reduce,
+        SpanKind::Stage,
         SpanKind::Wave,
         SpanKind::Contribute,
         SpanKind::Flush,
@@ -138,6 +143,7 @@ impl SpanKind {
             SpanKind::Shuffle => "shuffle",
             SpanKind::ShuffleRound => "shuffle_round",
             SpanKind::Reduce => "reduce",
+            SpanKind::Stage => "stage",
             SpanKind::Wave => "wave",
             SpanKind::Contribute => "contribute",
             SpanKind::Flush => "flush",
@@ -172,6 +178,7 @@ impl SpanKind {
             | SpanKind::Shuffle
             | SpanKind::ShuffleRound
             | SpanKind::Reduce
+            | SpanKind::Stage
             | SpanKind::Wave
             | SpanKind::Contribute
             | SpanKind::Flush

@@ -1,0 +1,204 @@
+//! The dataflow-DAG acceptance suite (ISSUE 10): the
+//! filter→join→group_by analytics chain must run on BOTH transports
+//! (mailbox threads and real spawned `blaze worker` TCP processes)
+//! with results equal to a serial reference; `explain()` must show the
+//! map-chain fusion and exactly one shuffle per repartition boundary,
+//! pinned by modeled-traffic assertions (co-partitioned stages move
+//! zero bytes, repartitioning stages move more than zero); and the
+//! fused plan must move strictly fewer bytes than the stage-by-stage
+//! materializing equivalent. Hash-join and merge-join must agree with
+//! each other and with a nested-loop serial join on both transports.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use blaze_rs::apps::analytics;
+use blaze_rs::cluster::ClusterConfig;
+use blaze_rs::core::{JoinStrategy, Stage};
+use blaze_rs::mpi::{CollectiveAlgo, RankPool, TransportKind};
+use blaze_rs::util::testpool;
+
+const SEED: u64 = 0xDA7A;
+const WIDTH: usize = 4;
+
+fn worker_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_blaze")
+}
+
+/// One warm pool per transport, shared by every test in this file (a
+/// TCP pool is real worker processes — spawn one fleet, not one per
+/// test). Never dropped; workers exit on driver-socket EOF.
+fn pools() -> &'static [(TransportKind, RankPool)] {
+    static POOLS: OnceLock<Vec<(TransportKind, RankPool)>> = OnceLock::new();
+    POOLS.get_or_init(|| {
+        TransportKind::ALL
+            .iter()
+            .map(|&t| {
+                let bin = (t == TransportKind::Tcp).then(|| Path::new(worker_bin()));
+                (t, testpool::fleet(1, WIDTH, CollectiveAlgo::Star, t, bin))
+            })
+            .collect()
+    })
+}
+
+/// The cluster a plan believes it runs on — single node so any rank
+/// subset of the single-node fleet structurally matches.
+fn cluster(transport: TransportKind) -> ClusterConfig {
+    ClusterConfig::builder()
+        .nodes(1)
+        .slots_per_node(WIDTH)
+        .seed(SEED)
+        .transport(transport)
+        .worker_binary(worker_bin())
+        .build()
+}
+
+fn tables() -> &'static (Vec<(u32, String)>, Vec<(u32, u64)>) {
+    static T: OnceLock<(Vec<(u32, String)>, Vec<(u32, u64)>)> = OnceLock::new();
+    T.get_or_init(|| analytics::generate_tables(30, 400, SEED))
+}
+
+const MIN_TOTAL: u64 = 10_000;
+
+#[test]
+fn analytics_chain_matches_serial_on_both_transports() {
+    // The acceptance chain: filter → join → group_by, serial-checked and
+    // traffic-pinned per transport, then cross-checked between them.
+    let (customers, orders) = tables();
+    let truth = analytics::baskets_serial(customers, orders, MIN_TOTAL);
+    let mut per_transport = Vec::new();
+    for (t, pool) in pools() {
+        let plan = analytics::basket_plan(customers, orders, MIN_TOTAL);
+        let ex = plan.explain();
+        // Exactly one shuffle per repartition boundary: both join inputs
+        // repartition (arbitrary → keyed), nothing else does.
+        assert_eq!(ex.stages.len(), 5, "{t}: input+filter, input, join, group_by, collect");
+        assert_eq!(ex.stages[0].fused, vec!["filter".to_string()], "{t}: filter fused into scan");
+        assert_eq!(ex.stages[2].shuffles, 2, "{t}: join repartitions both sides");
+        assert_eq!(ex.stages[3].shuffles, 0, "{t}: group_by over co-partitioned join output");
+        assert_eq!(ex.total_shuffles(), 2, "{t}");
+
+        let out = plan.collect_on(&cluster(*t), pool).unwrap();
+        // Modeled-traffic pins: the declared boundaries are where bytes
+        // actually move, and ONLY there.
+        assert_eq!(out.stages.len(), 5, "{t}");
+        assert_eq!(out.stages[0].bytes, 0, "{t}: fused scan is rank-local");
+        assert!(out.stages[2].bytes > 0, "{t}: join shuffle must move bytes");
+        assert_eq!(out.stages[3].bytes, 0, "{t}: co-partitioned group_by moved bytes");
+        assert_eq!(out.stats.shuffle_bytes, out.stages.iter().map(|s| s.bytes).sum::<u64>(), "{t}");
+
+        let mut rows = out.rows;
+        for (_c, vs) in rows.iter_mut() {
+            vs.sort();
+        }
+        assert_eq!(rows, truth, "{t}: dataflow chain diverged from serial reference");
+        per_transport.push((*t, rows));
+    }
+    let (t0, first) = &per_transport[0];
+    for (t, rows) in &per_transport[1..] {
+        assert_eq!(rows, first, "{t} and {t0} disagree");
+    }
+}
+
+#[test]
+fn fused_plan_moves_strictly_fewer_bytes_than_materializing_stage_by_stage() {
+    // The JVM-era shape the paper's compiled pipeline eliminates:
+    // collect every stage to the driver, re-scatter, repeat. Same rows
+    // out, strictly more bytes moved (the group_by loses its
+    // co-partitioning at each materialization boundary).
+    let (customers, orders) = tables();
+    let (t, pool) = &pools()[0];
+    let c = cluster(*t);
+
+    let fused = analytics::basket_plan(customers, orders, MIN_TOTAL).collect_on(&c, pool).unwrap();
+
+    let filtered = Stage::from_vec(orders.clone())
+        .filter(|_cust, total| *total >= MIN_TOTAL)
+        .collect_on(&c, pool)
+        .unwrap();
+    let joined = Stage::from_vec(filtered.rows)
+        .join(&Stage::from_vec(customers.clone()))
+        .collect_on(&c, pool)
+        .unwrap();
+    let grouped = Stage::from_vec(joined.rows).group_by().collect_on(&c, pool).unwrap();
+
+    let sorted = |mut rows: Vec<(u32, Vec<(u64, String)>)>| {
+        for (_c, vs) in rows.iter_mut() {
+            vs.sort();
+        }
+        rows
+    };
+    assert_eq!(sorted(fused.rows), sorted(grouped.rows), "fused and staged rows diverge");
+
+    let staged_bytes =
+        filtered.stats.shuffle_bytes + joined.stats.shuffle_bytes + grouped.stats.shuffle_bytes;
+    assert!(
+        fused.stats.shuffle_bytes < staged_bytes,
+        "fused plan moved {} bytes, staged equivalent {} — fusion must win strictly",
+        fused.stats.shuffle_bytes,
+        staged_bytes
+    );
+    // And the gap is exactly the staged group_by's re-shuffle: the
+    // fused plan's group_by rides the join's partitioning for free.
+    assert!(grouped.stats.shuffle_bytes > 0, "staged group_by must repartition");
+}
+
+/// Nested-loop serial join, sorted by full pair (strategies may order
+/// equal-key matches differently).
+fn join_serial(left: &[(u32, u64)], right: &[(u32, String)]) -> Vec<(u32, (u64, String))> {
+    let mut out = Vec::new();
+    for (k, v) in left {
+        for (k2, v2) in right {
+            if k == k2 {
+                out.push((*k, (*v, v2.clone())));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[test]
+fn hash_and_merge_join_agree_with_serial_on_both_transports() {
+    let (customers, orders) = tables();
+    let truth = join_serial(orders, customers);
+    assert!(!truth.is_empty());
+    for (t, pool) in pools() {
+        let c = cluster(*t);
+        let mut got = Vec::new();
+        for strategy in [JoinStrategy::Hash, JoinStrategy::Merge] {
+            let out = Stage::from_vec(orders.clone())
+                .join_with(&Stage::from_vec(customers.clone()), strategy)
+                .collect_on(&c, pool)
+                .unwrap();
+            let mut rows = out.rows;
+            rows.sort();
+            assert_eq!(rows, truth, "{t}/{strategy:?} join diverged from serial");
+            got.push(rows);
+        }
+        assert_eq!(got[0], got[1], "{t}: hash and merge joins disagree");
+    }
+}
+
+#[test]
+fn merge_join_on_pre_sorted_inputs_is_shuffle_free() {
+    // sort() lands both sides as co-partitioned sorted runs; Auto then
+    // picks the merge-join and the join stage itself moves zero bytes —
+    // the payoff the sorted-run store exists for.
+    let (customers, orders) = tables();
+    let (t, pool) = &pools()[0];
+    let plan = Stage::from_vec(orders.clone())
+        .sort()
+        .join(&Stage::from_vec(customers.clone()).sort());
+    let ex = plan.explain();
+    // input, sort, input, sort, join(merge), collect.
+    assert_eq!(ex.stages[4].op, "join(merge)");
+    assert_eq!(ex.stages[4].shuffles, 0, "both sides already co-partitioned");
+    assert_eq!(ex.total_shuffles(), 2, "only the two sorts repartition");
+
+    let out = plan.collect_on(&cluster(*t), pool).unwrap();
+    assert_eq!(out.stages[4].bytes, 0, "merge join moved bytes");
+    let mut rows = out.rows;
+    rows.sort();
+    assert_eq!(rows, join_serial(orders, customers));
+}

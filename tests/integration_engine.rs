@@ -97,7 +97,7 @@ fn spill_path_exercised_under_tight_memory() {
         .build();
     let got = MapReduceJob::new(&cluster, &corpus)
         .with_mode(ReductionMode::Classic)
-        .run_classic(wc_map, |_k, vs: Vec<u64>| vs.into_iter().sum())
+        .run_classic(wc_map, |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum())
         .unwrap();
     assert_eq!(got.result, truth);
     assert!(got.stats.spilled_bytes > 0, "expected disk spill");
@@ -162,11 +162,11 @@ fn results_deterministic_across_runs() {
     };
     let a = MapReduceJob::new(&cluster, &corpus)
         .with_config(cfg.clone())
-        .run_delayed(wc_map, |_k, vs: Vec<u64>| vs.into_iter().sum())
+        .run_delayed(wc_map, |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum())
         .unwrap();
     let b = MapReduceJob::new(&cluster, &corpus)
         .with_config(cfg)
-        .run_delayed(wc_map, |_k, vs: Vec<u64>| vs.into_iter().sum())
+        .run_delayed(wc_map, |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum())
         .unwrap();
     assert_eq!(a.result, b.result);
     assert_eq!(a.stats.shuffle_bytes, b.stats.shuffle_bytes);
@@ -289,7 +289,7 @@ fn delayed_groups_survive_heavy_duplication() {
     let out = MapReduceJob::new(&cluster, &items)
         .run_delayed(
             |&i: &u32, emit: &mut dyn FnMut(u32, u32)| emit(i % 8, 1),
-            |_k, vs: Vec<u32>| vs.len() as u32,
+            |_k, vs: &mut dyn Iterator<Item = u32>| vs.count() as u32,
         )
         .unwrap();
     let mut sizes: Vec<u32> = out.result.values().copied().collect();

@@ -479,14 +479,14 @@ fn prop_classic_combiner_never_changes_the_result() {
                 ClusterConfig::builder().ranks(*ranks).shuffle_buffer_bytes(*budget).build();
             let raw = MapReduceJob::new(&cluster, lines)
                 .with_pool(&pool)
-                .run_classic(wc_map, |_k, vs: Vec<u64>| vs.into_iter().sum())
+                .run_classic(wc_map, |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum())
                 .unwrap();
             let combined = MapReduceJob::new(&cluster, lines)
                 .with_pool(&pool)
                 .run_classic_with_combiner(
                     wc_map,
                     |a: &mut u64, b: u64| *a += b,
-                    |_k, vs: Vec<u64>| vs.into_iter().sum(),
+                    |_k, vs: &mut dyn Iterator<Item = u64>| vs.sum(),
                 )
                 .unwrap();
             raw.result == combined.result && raw.stats.combined_bytes == 0
@@ -766,6 +766,114 @@ fn prop_coscheduled_jobs_never_overlap_rank_subsets() {
                         !a.overlaps(b) || a.ranks.iter().all(|r| !b.ranks.contains(r))
                     })
                 })
+        },
+    );
+}
+
+#[test]
+fn prop_random_dataflow_plans_match_serial_reference() {
+    // The ISSUE 10 satellite: random operator chains over random inputs
+    // through `core::dataflow` must produce exactly the rows a serial
+    // interpreter of the same plan produces, at any width — fusion,
+    // partitioning inference, and shuffle placement are invisible in
+    // the result. Shrinks toward shorter plans, smaller inputs, and
+    // width 1, so a regression reports a minimal witness.
+    use blaze_rs::core::Stage;
+    use blaze_rs::util::prop::for_all_shrink;
+
+    // Op codes 0..6: map, filter, flat_map, map_values, reduce_by_key,
+    // sort — the fixed closures below are the single source of truth
+    // for both the dataflow plan and the serial interpreter.
+    fn apply_plan(rows: &[(u32, u64)], ops: &[u64]) -> Stage<u32, u64> {
+        let mut s = Stage::from_vec(rows.to_vec());
+        for &op in ops {
+            s = match op {
+                0 => s.map(|k, v| (k.wrapping_mul(31) % 64, v ^ 0x5A)),
+                1 => s.filter(|k, _v| k % 3 != 0),
+                2 => s.flat_map(|k, v, emit| {
+                    emit(k, v);
+                    if v % 2 == 0 {
+                        emit((k + 1) % 64, v / 2);
+                    }
+                }),
+                3 => s.map_values(|v| v.wrapping_mul(3).wrapping_add(1)),
+                4 => s.reduce_by_key(u64::wrapping_add),
+                _ => s.sort(),
+            };
+        }
+        s
+    }
+    fn apply_serial(rows: &[(u32, u64)], ops: &[u64]) -> Vec<(u32, u64)> {
+        let mut rows = rows.to_vec();
+        for &op in ops {
+            rows = match op {
+                0 => rows.into_iter().map(|(k, v)| (k.wrapping_mul(31) % 64, v ^ 0x5A)).collect(),
+                1 => rows.into_iter().filter(|(k, _v)| k % 3 != 0).collect(),
+                2 => {
+                    let mut out = Vec::new();
+                    for (k, v) in rows {
+                        out.push((k, v));
+                        if v % 2 == 0 {
+                            out.push(((k + 1) % 64, v / 2));
+                        }
+                    }
+                    out
+                }
+                3 => rows
+                    .into_iter()
+                    .map(|(k, v)| (k, v.wrapping_mul(3).wrapping_add(1)))
+                    .collect(),
+                4 => {
+                    let mut acc: std::collections::BTreeMap<u32, u64> =
+                        std::collections::BTreeMap::new();
+                    for (k, v) in rows {
+                        let e = acc.entry(k).or_insert(0);
+                        *e = e.wrapping_add(v);
+                    }
+                    acc.into_iter().collect()
+                }
+                // sort only changes physical layout, never the multiset.
+                _ => rows,
+            };
+        }
+        rows.sort();
+        rows
+    }
+    for_all_shrink(
+        "random dataflow plan == serial interpreter of the same ops",
+        |r| {
+            let rows = vec_of(r, 40, |r| (r.below(64) as u32, r.next_u64() >> 32));
+            let ops = vec_of(r, 6, |r| r.below(6));
+            (rows, ops, 1 + r.below(4) as usize)
+        },
+        |(rows, ops, ranks)| {
+            let mut cands = Vec::new();
+            for i in 0..ops.len() {
+                let mut fewer = ops.clone();
+                fewer.remove(i);
+                cands.push((rows.clone(), fewer, *ranks));
+            }
+            if rows.len() > 1 {
+                cands.push((rows[..rows.len() / 2].to_vec(), ops.clone(), *ranks));
+            }
+            if *ranks > 1 {
+                cands.push((rows.clone(), ops.clone(), 1));
+            }
+            cands
+        },
+        |(rows, ops, ranks)| {
+            let cluster = ClusterConfig::builder().ranks(*ranks).seed(11).build();
+            let plan = apply_plan(rows, ops);
+            // Plan-shape sanity rides along: a single-input chain never
+            // needs more than one shuffle per wide op.
+            let wide = ops.iter().filter(|&&op| op >= 4).count();
+            if plan.explain().total_shuffles() > wide {
+                return false;
+            }
+            let out = plan.collect(&cluster).unwrap();
+            let mut got = out.rows;
+            got.sort();
+            got == apply_serial(rows, ops)
         },
     );
 }
